@@ -1,0 +1,85 @@
+//! Figure 2 (and 5–9): spectrum + residual analysis of PRETRAINED
+//! full-rank weights — the empirical motivation for SLTrain.
+//!
+//! Trains the tiny full-rank model, then for each attention/MLP weight:
+//! (a) singular value decay, (b) residual magnitudes after removing the
+//! best rank-r approximation, (c) the residual-magnitude CDF with the
+//! paper's 97% cut-off.
+//!
+//!   cargo bench --bench fig2_residual -- --steps 400
+
+use std::path::Path;
+
+use sltrain::analysis::ResidualReport;
+use sltrain::bench::{fmt, Table};
+use sltrain::coordinator::TrainConfig;
+use sltrain::data::Pipeline;
+use sltrain::linalg::Matrix;
+use sltrain::runtime::{Artifact, Runtime};
+use sltrain::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let a = Cli::new("fig2_residual", "Fig 2 residual analysis")
+        .opt("steps", "250", "full-rank pretraining steps")
+        .opt("rank-frac", "0.25", "rank cut as a fraction of width (paper: 128/512)")
+        .opt("csv", "results/fig2.csv", "output CSV (singular values)")
+        .parse_env();
+    let rt = Runtime::cpu()?;
+
+    println!("pretraining tiny_full for {} steps...", a.usize("steps"));
+    let mut art = Artifact::load(Path::new("artifacts/tiny_full"))?;
+    let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+    let cfg = TrainConfig {
+        steps: a.usize("steps"),
+        eval_every: 0,
+        eval_batches: 4,
+        log_every: 100,
+        ..Default::default()
+    };
+    // train and keep state by re-running with explicit loop
+    let mut state = art.init_state(&rt, 42)?;
+    let batch = art.entry("train_step")?.batch;
+    let seq = art.manifest.seq_len();
+    for step in 0..cfg.steps {
+        let toks = pipe.train.next_batch(batch, seq);
+        art.train_step(&rt, &mut state, step as i32, &toks)?;
+    }
+
+    let mut t = Table::new(
+        "Fig 2 — per-weight spectrum + residual stats (pretrained full-rank)",
+        &["weight", "shape", "top-r energy %", "resid max", "resid mean|.|", "p97 |resid|<="],
+    );
+    let mut csv = String::from("weight,index,sigma\n");
+    for spec in art.manifest.params.clone() {
+        if !(spec.name.starts_with("layers.") && spec.name.ends_with(".w")) {
+            continue;
+        }
+        let v = state.to_f32(&spec.name)?;
+        let m = Matrix::from_vec(spec.shape[0], spec.shape[1], v);
+        let cut = ((spec.shape[1] as f64 * a.f64("rank-frac")).round() as usize).max(1);
+        let rep = ResidualReport::compute(&m, cut);
+        t.row(vec![
+            spec.name.clone(),
+            format!("{}x{}", spec.shape[0], spec.shape[1]),
+            fmt(100.0 * rep.energy_in_top() as f64, 1),
+            fmt(rep.resid_max as f64, 4),
+            fmt(rep.resid_mean_abs as f64, 5),
+            fmt(rep.p97_threshold as f64, 4),
+        ]);
+        for (i, s) in rep.singular_values.iter().enumerate() {
+            csv.push_str(&format!("{},{},{}\n", spec.name, i, s));
+        }
+        // print the CDF for the last attention output (the paper's pick)
+        if spec.name.contains(&format!("layers.{}.attn.o", art.manifest.preset.n_layers - 1)) {
+            println!("\nCDF of |residual| for {} (paper Fig 2c):", spec.name);
+            for (thr, frac) in &rep.cdf {
+                println!("  |w| <= {:>8.4} : {:>5.1}%", thr, frac * 100.0);
+            }
+        }
+    }
+    t.print();
+    std::fs::create_dir_all("results")?;
+    std::fs::write(a.str("csv"), csv)?;
+    println!("\npaper shape: fast singular-value decay then a stable tail; residual\nmagnitudes small + smooth (97% under a small threshold) -> a RANDOM\nsupport can capture the residual (the SLTrain premise).");
+    Ok(())
+}

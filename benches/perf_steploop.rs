@@ -1,0 +1,95 @@
+//! §Perf bench: the L3 step-loop cost model.
+//!
+//! Compares the two execution paths per model scale:
+//!   literal  — host Literals in/out every step (simple, the default)
+//!   device   — device-resident params/opt via `execute_b_untupled`
+//!              (the patched xla crate): per-step host traffic is tokens
+//!              in + scalar loss out only.
+//! Also reports the pure data-pipeline rate (tokens/sec the loader can
+//! produce) to show L3 is never the bottleneck.
+//!
+//!   cargo bench --bench perf_steploop -- --steps 20
+
+use std::path::Path;
+
+use sltrain::bench::{fmt, Table};
+use sltrain::data::Pipeline;
+use sltrain::runtime::{Artifact, Runtime};
+use sltrain::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let a = Cli::new("perf_steploop", "literal vs device-resident step loop")
+        .opt("steps", "20", "measured steps per path")
+        .opt("configs", "tiny", "scale points")
+        .opt("csv", "results/perf_steploop.csv", "output CSV")
+        .parse_env();
+    let rt = Runtime::cpu()?;
+    let steps = a.usize("steps");
+
+    // data pipeline rate, standalone
+    let mut pipe0 = Pipeline::build(4096, 7);
+    let t0 = std::time::Instant::now();
+    let mut n = 0usize;
+    while t0.elapsed().as_secs_f64() < 0.5 {
+        pipe0.train.next_batch(8, 128);
+        n += 8 * 128;
+    }
+    let pipe_rate = n as f64 / t0.elapsed().as_secs_f64();
+    println!("data pipeline alone: {:.0} tokens/sec", pipe_rate);
+
+    let mut t = Table::new(
+        "§Perf — step-loop paths (tokens/sec, higher is better)",
+        &["config", "literal tok/s", "device tok/s", "speedup", "pipeline headroom"],
+    );
+    for cfgn in a.str("configs").split(',') {
+        let dir = format!("artifacts/{cfgn}_sltrain");
+        if !Path::new(&dir).exists() {
+            println!("[skip] {dir}");
+            continue;
+        }
+        let mut art = Artifact::load(Path::new(&dir))?;
+        let batch = art.entry("train_step")?.batch;
+        let seq = art.manifest.seq_len();
+        let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+
+        // literal path
+        let mut state = art.init_state(&rt, 42)?;
+        for w in 0..2 {
+            let toks = pipe.train.next_batch(batch, seq);
+            art.train_step(&rt, &mut state, w, &toks)?;
+        }
+        let t1 = std::time::Instant::now();
+        for s in 0..steps {
+            let toks = pipe.train.next_batch(batch, seq);
+            art.train_step(&rt, &mut state, 2 + s as i32, &toks)?;
+        }
+        let lit_tps = (steps * batch * seq) as f64 / t1.elapsed().as_secs_f64();
+
+        // device-resident path
+        let state2 = art.init_state(&rt, 42)?;
+        let mut dstate = art.to_device(&rt, &state2)?;
+        for w in 0..2 {
+            let toks = pipe.train.next_batch(batch, seq);
+            art.train_step_device(&rt, &mut dstate, w, &toks)?;
+        }
+        let t2 = std::time::Instant::now();
+        for s in 0..steps {
+            let toks = pipe.train.next_batch(batch, seq);
+            art.train_step_device(&rt, &mut dstate, 2 + s as i32, &toks)?;
+        }
+        let dev_tps = (steps * batch * seq) as f64 / t2.elapsed().as_secs_f64();
+
+        t.row(vec![
+            cfgn.to_string(),
+            fmt(lit_tps, 0),
+            fmt(dev_tps, 0),
+            fmt(dev_tps / lit_tps, 2),
+            format!("{:.0}x", pipe_rate / dev_tps.max(1.0)),
+        ]);
+        println!("  [{cfgn}] literal {lit_tps:.0} vs device {dev_tps:.0} tok/s");
+    }
+    t.print();
+    t.save_csv(&a.str("csv"))?;
+    println!("\ntarget: device path >= literal path; pipeline headroom >= 10x\n(L3 must never starve the executable).");
+    Ok(())
+}

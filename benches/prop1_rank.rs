@@ -1,0 +1,37 @@
+//! Proposition 1: BA + S is full rank w.h.p. once the uniform support
+//! density passes δ = Ω(log n / n). Monte-Carlo over a δ grid at several
+//! n, using the in-repo Jacobi SVD for the rank test.
+//!
+//!   cargo bench --bench prop1_rank -- --trials 30
+
+use sltrain::analysis::prop1::{critical_delta, full_rank_probability};
+use sltrain::bench::{fmt, Table};
+use sltrain::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let a = Cli::new("prop1_rank", "Proposition 1 Monte-Carlo verification")
+        .opt("trials", "15", "trials per (n, delta) cell")
+        .opt("rank", "4", "low-rank dimension r")
+        .opt("csv", "results/prop1.csv", "output CSV")
+        .parse_env();
+    let trials = a.usize("trials");
+    let r = a.usize("rank");
+
+    let mut t = Table::new(
+        &format!("Prop 1 — P[rank(BA+S) = n], r={r}, {trials} trials/cell"),
+        &["n", "delta*=2ln(n)/n", "0.25x", "0.5x", "1x", "2x", "4x"],
+    );
+    for n in [16usize, 32, 48] {
+        let crit = critical_delta(n);
+        let mut row = vec![n.to_string(), fmt(crit, 4)];
+        for mult in [0.25, 0.5, 1.0, 2.0, 4.0] {
+            let p = full_rank_probability(n, r, crit * mult, trials, 7 + n as u64);
+            row.push(fmt(p, 2));
+        }
+        t.row(row);
+    }
+    t.print();
+    t.save_csv(&a.str("csv"))?;
+    println!("\npaper shape: a sharp transition to P≈1 around the log(n)/n threshold —\nthe theoretical basis for tiny delta giving full-rank weights.");
+    Ok(())
+}

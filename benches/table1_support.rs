@@ -1,0 +1,250 @@
+//! Table 1: why a *random fixed* support works.
+//!
+//! Rows reproduced (on the tiny scale point):
+//!   Full-rank                 — trained dense baseline
+//!   Low-rank (L0)             — best rank-r truncation of the trained W
+//!   L0 + top sparse pruning   — add top-3%-|residual| entries, no training
+//!   L0 + random sparse pruning— add random-3% residual entries, no training
+//!   L0 + sparse training (top / random support) — freeze L0, train values
+//!
+//! Implementation: train `tiny_full`, snapshot the dense weights, build
+//! each variant in rust (SVD truncation + residual gathers), inject into
+//! the right artifact's state, and evaluate — supports are runtime
+//! inputs, so top-vs-random support is just a different i32 buffer.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Result;
+use sltrain::bench::{fmt, Table};
+use sltrain::coordinator::TrainConfig;
+use sltrain::coordinator::metrics::perplexity;
+use sltrain::data::Pipeline;
+use sltrain::linalg::{svd, Matrix};
+use sltrain::runtime::{lit_f32, lit_i32, Artifact, Runtime, State};
+use sltrain::util::cli::Cli;
+use sltrain::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let a = Cli::new("table1_support", "Table 1: random vs top sparsity")
+        .opt("pretrain-steps", "250", "full-rank pretraining steps")
+        .opt("sparse-steps", "80", "sparse-only training steps")
+        .opt("csv", "results/table1.csv", "output CSV")
+        .parse_env();
+    let rt = Runtime::cpu()?;
+
+    // 1. pretrain the full-rank reference
+    println!("[1/4] pretraining tiny_full for {} steps...", a.usize("pretrain-steps"));
+    let mut full = Artifact::load(Path::new("artifacts/tiny_full"))?;
+    let mut pipe = Pipeline::build(full.manifest.preset.vocab, 7);
+    let cfg = TrainConfig {
+        steps: a.usize("pretrain-steps"),
+        eval_every: 0,
+        eval_batches: 6,
+        log_every: 100,
+        ..Default::default()
+    };
+    let mut state = full.init_state(&rt, 42)?;
+    let valid = pipe.valid_set(6, full.entry("train_step")?.batch, full.manifest.seq_len());
+    for step in 0..cfg.steps {
+        let toks = pipe.train.next_batch(
+            full.entry("train_step")?.batch,
+            full.manifest.seq_len(),
+        );
+        full.train_step(&rt, &mut state, step as i32, &toks)?;
+    }
+    let base_loss = eval_mean(&rt, &mut full, &mut state, &valid)?;
+    println!("    full-rank eval ppl {:.2}", perplexity(base_loss));
+
+    // snapshot dense adapted weights
+    let rank = full.manifest.preset.rank;
+    let delta = full.manifest.preset.delta;
+    let weights: Vec<(String, Vec<usize>, Vec<f32>)> = full
+        .manifest
+        .params
+        .iter()
+        .filter(|t| t.name.starts_with("layers.") && t.name.ends_with(".w"))
+        .map(|t| {
+            let v = state.to_f32(&t.name).unwrap();
+            (t.name.clone(), t.shape.clone(), v)
+        })
+        .collect();
+
+    // 2. build variants + evaluate via weight injection into tiny_full
+    println!("[2/4] building L0 / pruning variants (rank {rank}, delta {delta})...");
+    let mut results: Vec<(String, f64)> = vec![("Full-rank".into(), perplexity(base_loss))];
+
+    // decompose every weight once
+    struct Dec {
+        name: String,
+        shape: Vec<usize>,
+        l0: Matrix,
+        resid: Matrix,
+        b: Matrix,
+        a: Matrix,
+    }
+    let mut decs = vec![];
+    for (name, shape, w) in &weights {
+        let m = Matrix::from_vec(shape[0], shape[1], w.clone());
+        let f = svd(&m);
+        let r = rank.min(f.s.len());
+        let mut bm = Matrix::zeros(shape[0], r);
+        for i in 0..shape[0] {
+            for j in 0..r {
+                bm[(i, j)] = f.u[(i, j)] * f.s[j];
+            }
+        }
+        let am = Matrix::from_fn(r, shape[1], |i, j| f.vt[(i, j)]);
+        let l0 = bm.matmul(&am);
+        let resid = m.sub(&l0);
+        decs.push(Dec { name: name.clone(), shape: shape.clone(), l0, resid, b: bm, a: am });
+    }
+
+    let eval_variant = |full: &mut Artifact,
+                        state: &mut State,
+                        f: &dyn Fn(&Dec) -> Matrix|
+     -> Result<f64> {
+        let rt_ref = &rt;
+        // inject modified weights, eval, then restore
+        let mut saved = HashMap::new();
+        for d in &decs {
+            saved.insert(d.name.clone(), state.to_f32(&d.name)?);
+            let w = f(d);
+            state.put(&d.name, lit_f32(&d.shape, &w.data)?);
+        }
+        let loss = eval_mean(rt_ref, full, state, &valid)?;
+        for d in &decs {
+            state.put(&d.name, lit_f32(&d.shape, &saved[&d.name])?);
+        }
+        Ok(loss)
+    };
+
+    // L0 only
+    let l0_loss = eval_variant(&mut full, &mut state, &|d| d.l0.clone())?;
+    results.push(("Low-rank (L0)".into(), perplexity(l0_loss)));
+
+    // helpers to choose supports over the residual
+    let top_support = |d: &Dec, nnz: usize| -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..d.resid.data.len() as u32).collect();
+        idx.sort_by(|&x, &y| {
+            d.resid.data[y as usize]
+                .abs()
+                .partial_cmp(&d.resid.data[x as usize].abs())
+                .unwrap()
+        });
+        let mut top: Vec<u32> = idx[..nnz].to_vec();
+        top.sort_unstable();
+        top
+    };
+    // deterministic per (layer, tag) so each weight gets its own support
+    let rand_support = |d: &Dec, nnz: usize, tag: u64| -> Vec<u32> {
+        let seed = d
+            .name
+            .bytes()
+            .fold(tag, |h, b| h.wrapping_mul(131).wrapping_add(b as u64));
+        let mut rng = Rng::new(seed);
+        rng.sample_without_replacement(d.resid.data.len() as u64, nnz)
+            .into_iter()
+            .map(|x| x as u32)
+            .collect()
+    };
+    let nnz_of = |d: &Dec| ((delta * d.resid.data.len() as f64).round() as usize).max(1);
+
+    // L0 + top / random sparse pruning (keep residual values at support)
+    for (label, random) in [("L0 + top sparse pruning", false), ("L0 + random sparse pruning", true)] {
+        let loss = eval_variant(&mut full, &mut state, &|d| {
+            let nnz = nnz_of(d);
+            let sup = if random {
+                rand_support(d, nnz, 11)
+            } else {
+                top_support(d, nnz)
+            };
+            let vals: Vec<f32> = sup.iter().map(|&i| d.resid.data[i as usize]).collect();
+            let mut w = d.l0.clone();
+            w.scatter_add(&sup, &vals);
+            w
+        })?;
+        results.push((label.into(), perplexity(loss)));
+    }
+
+    // 3. L0 + sparse TRAINING with top/random support (frozen low-rank)
+    println!("[3/4] sparse-only training (frozen L0)...");
+    let frozen_dir = Path::new("artifacts/tiny_sltrain_frozen");
+    if frozen_dir.exists() {
+        for (label, random) in [
+            ("L0 + sparse training (top support)", false),
+            ("L0 + sparse training (random support)", true),
+        ] {
+            let mut art = Artifact::load(frozen_dir)?;
+            let mut st = art.init_state(&rt, 42)?;
+            // inject L0 factors + chosen support (+ zero values) per layer
+            for d in &decs {
+                let base = d.name.trim_end_matches(".w");
+                st.put(&format!("{base}.B"), lit_f32(&[d.b.rows, d.b.cols], &d.b.data)?);
+                // undo the alpha/r scale the artifact applies to BA
+                let scale = (art.manifest.preset.alpha / art.manifest.preset.rank as f64) as f32;
+                let a_unscaled = d.a.scale(1.0 / scale);
+                st.put(
+                    &format!("{base}.A"),
+                    lit_f32(&[d.a.rows, d.a.cols], &a_unscaled.data)?,
+                );
+                let nnz_art = art
+                    .manifest
+                    .supports
+                    .get(&format!("{base}.idx"))
+                    .map(|s| s.nnz)
+                    .unwrap_or(nnz_of(d));
+                let sup = if random {
+                    rand_support(d, nnz_art, 101)
+                } else {
+                    top_support(d, nnz_art)
+                };
+                let sup_i32: Vec<i32> = sup.iter().map(|&x| x as i32).collect();
+                st.put(&format!("{base}.idx"), lit_i32(&[sup_i32.len()], &sup_i32)?);
+                st.put(&format!("{base}.vals"), lit_f32(&[sup_i32.len()], &vec![0.0; sup_i32.len()])?);
+            }
+            // also inject the non-adapted trained params (embed/head/norms)
+            for t in &full.manifest.params {
+                if !t.name.ends_with(".w") || !t.name.starts_with("layers.") {
+                    let v = state.to_f32(&t.name)?;
+                    st.put(&t.name, lit_f32(&t.shape, &v)?);
+                }
+            }
+            let mut pipe2 = Pipeline::build(art.manifest.preset.vocab, 7);
+            for step in 0..a.usize("sparse-steps") {
+                let toks = pipe2
+                    .train
+                    .next_batch(art.entry("train_step")?.batch, art.manifest.seq_len());
+                art.train_step(&rt, &mut st, step as i32, &toks)?;
+            }
+            let loss = eval_mean(&rt, &mut art, &mut st, &valid)?;
+            results.push((label.into(), perplexity(loss)));
+        }
+    } else {
+        println!("[skip] artifacts/tiny_sltrain_frozen missing — emit with --freeze-lowrank");
+    }
+
+    // 4. report
+    println!("[4/4] results");
+    let mut t = Table::new("Table 1 — pruning vs sparse training, random vs top support", &["variant", "ppl"]);
+    for (label, ppl) in &results {
+        t.row(vec![label.clone(), fmt(*ppl, 2)]);
+    }
+    t.print();
+    t.save_csv(&a.str("csv"))?;
+    println!("\npaper shape: pruning rows catastrophically worse than full-rank;\nsparse-TRAINING rows recover to within ~2x of full-rank; random ≈ top support.");
+    Ok(())
+}
+
+fn eval_mean(
+    rt: &Runtime,
+    art: &mut Artifact,
+    state: &mut State,
+    valid: &[Vec<i32>],
+) -> Result<f64> {
+    let mut total = 0.0;
+    for b in valid {
+        total += art.eval_loss(rt, state, b)? as f64;
+    }
+    Ok(total / valid.len() as f64)
+}

@@ -1,0 +1,51 @@
+//! Quickstart: pretrain a tiny LLaMA with SLTrain in under a minute.
+//!
+//!   make artifacts && cargo build --release
+//!   cargo run --release --example quickstart
+//!
+//! Loads the `tiny_sltrain` artifact (W = BA ⊕_I V on every linear),
+//! streams the synthetic corpus through the rust data pipeline, runs the
+//! AOT train-step, and prints the loss curve — no Python anywhere.
+
+use anyhow::Result;
+use sltrain::coordinator::{train, TrainConfig};
+use sltrain::data::Pipeline;
+use sltrain::runtime::{Artifact, Runtime};
+
+fn main() -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let dir = std::path::Path::new("artifacts/tiny_sltrain");
+    let mut art = Artifact::load(dir)?;
+    println!(
+        "model: {} ({} params: {:.2}M), method: {}, optimizer: {}",
+        art.manifest.preset.name,
+        art.manifest.params.len(),
+        art.manifest.n_params as f64 / 1e6,
+        art.manifest.method,
+        art.manifest.optimizer,
+    );
+
+    let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+    let cfg = TrainConfig {
+        steps: 100,
+        eval_every: 25,
+        eval_batches: 4,
+        log_every: 10,
+        ..Default::default()
+    };
+    let r = train(&rt, &mut art, &mut pipe, &cfg)?;
+
+    println!("\nloss curve (every 10 steps):");
+    for (step, loss) in r.train_curve.points.iter().step_by(10) {
+        let bar = "#".repeat((loss * 8.0) as usize);
+        println!("  {step:>4} {loss:>7.4} {bar}");
+    }
+    println!(
+        "\nfinal eval ppl {:.2} | {:.0} tok/s | sltrain params {:.2}M vs full-rank {:.2}M",
+        r.final_ppl,
+        r.tokens_per_sec,
+        art.manifest.n_params as f64 / 1e6,
+        art.manifest.preset.param_count("full") as f64 / 1e6,
+    );
+    Ok(())
+}

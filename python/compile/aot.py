@@ -1,0 +1,427 @@
+"""AOT lowering: JAX -> HLO *text* artifacts + manifest.json.
+
+Run once via `make artifacts`. For each (config, method) pair this emits
+
+  artifacts/<cfg>_<method>[_8bit]/
+    init.hlo.txt        (seed u32) -> (*params, *opt_state)
+    train_step.hlo.txt  (step i32, tokens i32[b,s], *consts, *params, *opt)
+                          -> (loss f32, *params, *opt)
+    eval_step.hlo.txt   (tokens, *consts, *params) -> loss
+    forward.hlo.txt     (tokens_fwd, *consts, *params) -> logits
+    merge.hlo.txt       (relora only) (seed i32, *params) -> (*params)
+    manifest.json       the contract the rust runtime programs against
+    <name>.support.bin  u32-LE sidecars with the fixed sparse supports
+
+HLO TEXT is the interchange format, not `.serialize()`: the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids);
+the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model as model_lib, optim
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_name(d):
+    return {
+        jnp.float32.dtype: "f32",
+        jnp.int32.dtype: "i32",
+        jnp.int8.dtype: "i8",
+        jnp.uint32.dtype: "u32",
+    }[jnp.dtype(d)]
+
+
+def build_bundle(cfg, method, batch, opt8bit=False, use_pallas=False,
+                 support_seed=42, lr=3e-3, warmup=100, total_steps=2000,
+                 wd=0.0, galore_refresh=200, freeze_lowrank=False,
+                 ft_freeze_base=False):
+    """Construct all entrypoint callables + specs for one artifact set.
+
+    freeze_lowrank: train ONLY the sparse values (paper Table 1's
+    "L0 + sparse training" rows — everything else held at init/injected).
+    ft_freeze_base: freeze embeddings + norms (fine-tuning setups,
+    Appendix G) so only adaptors (+head) update.
+    """
+    m = model_lib.build(cfg, method, support_seed, use_pallas)
+    if freeze_lowrank:
+        m.trainable = [n for n in m.trainable if n.endswith(".vals")]
+    if ft_freeze_base:
+        m.trainable = [
+            n for n in m.trainable
+            if n != "embed.w" and not n.endswith(".g")
+        ]
+    opt_kind = "galore" if method == "galore" else ("adam8bit" if opt8bit else "adam")
+    if method == "galore" and opt8bit:
+        opt_kind = "galore"  # paper's 8-bit GaLore quantizes moments too;
+        # we account it in mem/ but keep f32 states in-graph for clarity
+    pnames = m.param_names
+    cnames = m.const_names
+    pshapes = {n: m.shape_of(n) for n in pnames}
+    tshapes = {n: pshapes[n] for n in m.trainable}
+
+    ostate0 = optim.opt_init(opt_kind, tshapes, cfg.rank, seed=support_seed)
+    onames = sorted(ostate0.keys())
+    oshapes = {n: tuple(ostate0[n].shape) for n in onames}
+    odtypes = {n: ostate0[n].dtype for n in onames}
+
+    def init_fn(seed):
+        params = m.init_fn(jax.random.PRNGKey(seed))
+        ost = optim.opt_init(opt_kind, tshapes, cfg.rank, seed=support_seed)
+        return tuple(params[n] for n in pnames) + tuple(ost[n] for n in onames)
+
+    def _unpack(consts_list, params_list, opt_list=None):
+        consts = dict(zip(cnames, consts_list))
+        params = dict(zip(pnames, params_list))
+        ost = dict(zip(onames, opt_list)) if opt_list is not None else None
+        return consts, params, ost
+
+    def train_step(step, tokens, *rest):
+        consts_list = rest[: len(cnames)]
+        params_list = rest[len(cnames) : len(cnames) + len(pnames)]
+        opt_list = rest[len(cnames) + len(pnames) :]
+        consts, params, ost = _unpack(consts_list, params_list, opt_list)
+
+        def loss_of(tp):
+            full = dict(params)
+            full.update(tp)
+            return m.loss_fn(full, consts, tokens)
+
+        tparams = {n: params[n] for n in m.trainable}
+        loss, grads = jax.value_and_grad(loss_of)(tparams)
+        lr_t = optim.lr_schedule(step, lr, warmup, total_steps)
+        kw = dict(wd=wd)
+        if opt_kind == "galore":
+            kw["refresh_every"] = galore_refresh
+        new_t, new_o = optim.opt_update(
+            opt_kind, tparams, grads, ost, step, lr_t, cfg.rank, **kw
+        )
+        out_params = dict(params)
+        out_params.update(new_t)
+        return (loss,) + tuple(out_params[n] for n in pnames) + tuple(
+            new_o[n] for n in onames
+        )
+
+    def eval_step(tokens, *rest):
+        consts, params, _ = _unpack(rest[: len(cnames)], rest[len(cnames) :])
+        return (m.loss_fn(params, consts, tokens),)
+
+    def forward(tokens, *rest):
+        consts, params, _ = _unpack(rest[: len(cnames)], rest[len(cnames) :])
+        return (m.apply_fn(params, consts, tokens),)
+
+    merge_fn = None
+    if method == "relora":
+        merge_inner = model_lib.make_relora_merge(cfg)
+
+        def merge_fn(seed, *params_list):
+            params = dict(zip(pnames, params_list))
+            out = merge_inner(params, seed)
+            return tuple(out[n] for n in pnames)
+
+    return dict(
+        model=m, opt_kind=opt_kind, pnames=pnames, cnames=cnames,
+        onames=onames, pshapes=pshapes, oshapes=oshapes, odtypes=odtypes,
+        init_fn=init_fn, train_step=train_step, eval_step=eval_step,
+        forward=forward, merge_fn=merge_fn, batch=batch,
+        hyper=dict(lr=lr, warmup=warmup, total_steps=total_steps, wd=wd,
+                   galore_refresh=galore_refresh),
+    )
+
+
+def emit_bundle(cfg, method, out_dir, batch, fwd_batch=None, **kw):
+    b = build_bundle(cfg, method, batch, **kw)
+    m = b["model"]
+    os.makedirs(out_dir, exist_ok=True)
+    fwd_batch = fwd_batch or batch
+    s = cfg.seq_len
+
+    csds = [_sds(m.shape_of(n), jnp.int32) for n in b["cnames"]]
+    psds = [_sds(b["pshapes"][n]) for n in b["pnames"]]
+    osds = [_sds(b["oshapes"][n], b["odtypes"][n]) for n in b["onames"]]
+    tok = _sds((batch, s), jnp.int32)
+    tok_fwd = _sds((fwd_batch, s), jnp.int32)
+
+    entry = {}
+
+    def emit(name, fn, args, donate=()):
+        jitted = jax.jit(fn, donate_argnums=donate)
+        text = to_hlo_text(jitted.lower(*args))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        return fname
+
+    # donate params+opt in train_step so PJRT can alias in/out buffers
+    n_pre = 2 + len(csds)
+    donate = tuple(range(n_pre, n_pre + len(psds) + len(osds)))
+    entry["train_step"] = {
+        "file": emit(
+            "train_step", b["train_step"],
+            [_sds((), jnp.int32), tok] + csds + psds + osds, donate,
+        ),
+        "inputs": ["__step", "__tokens"] + b["cnames"] + b["pnames"]
+        + b["onames"],
+        "outputs": ["__loss"] + b["pnames"] + b["onames"],
+        "batch": batch,
+    }
+    entry["init"] = {
+        "file": emit("init", b["init_fn"], [_sds((), jnp.uint32)]),
+        "inputs": ["__seed"],
+        "outputs": b["pnames"] + b["onames"],
+    }
+    entry["eval_step"] = {
+        "file": emit("eval_step", b["eval_step"], [tok] + csds + psds),
+        "inputs": ["__tokens"] + b["cnames"] + b["pnames"],
+        "outputs": ["__loss"],
+        "batch": batch,
+    }
+    entry["forward"] = {
+        "file": emit("forward", b["forward"], [tok_fwd] + csds + psds),
+        "inputs": ["__tokens"] + b["cnames"] + b["pnames"],
+        "outputs": ["__logits"],
+        "batch": fwd_batch,
+    }
+    if b["merge_fn"] is not None:
+        entry["merge"] = {
+            "file": emit("merge", b["merge_fn"], [_sds((), jnp.int32)] + psds),
+            "inputs": ["__seed"] + b["pnames"],
+            "outputs": b["pnames"],
+        }
+
+    supports = {}
+    for n, idx in m.supports.items():
+        fname = n.replace("/", "_") + ".support.bin"
+        np.asarray(idx, dtype=np.uint32).tofile(os.path.join(out_dir, fname))
+        supports[n] = {"file": fname, "nnz": int(len(idx))}
+
+    manifest = {
+        "config": cfg.to_dict(),
+        "method": method,
+        "optimizer": {"type": b["opt_kind"], **b["hyper"]},
+        "batch": batch,
+        "fwd_batch": fwd_batch,
+        "n_params": m.n_params(),
+        "params": [
+            {
+                "name": n,
+                "shape": list(m.shape_of(n)),
+                "dtype": "f32",
+                "trainable": n in m.trainable,
+            }
+            for n in b["pnames"]
+        ],
+        "consts": [
+            {"name": n, "shape": list(m.shape_of(n)), "dtype": "i32"}
+            for n in b["cnames"]
+        ],
+        "opt_state": [
+            {
+                "name": n,
+                "shape": list(b["oshapes"][n]),
+                "dtype": _dtype_name(b["odtypes"][n]),
+            }
+            for n in b["onames"]
+        ],
+        "supports": supports,
+        "entrypoints": entry,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+# ------------------------------------------------- Fig 12 layer-stack bench
+
+
+def emit_mlp_stack(out_dir, depth, width, rank, delta, batch, kind,
+                   support_seed=7):
+    """N-layer feed-forward stack artifacts for the Appendix E (Fig 12)
+    layer-level memory/runtime comparison: kind in {ffn, lowrank, sltrain}.
+    Emits a fwd loss + SGD-step program over the stack."""
+    from .kernels import ref
+
+    os.makedirs(out_dir, exist_ok=True)
+    shapes = {}
+    supports = {}
+    for i in range(depth):
+        if kind == "ffn":
+            shapes[f"l{i}.w"] = (width, width)
+        else:
+            shapes[f"l{i}.B"] = (width, rank)
+            shapes[f"l{i}.A"] = (rank, width)
+            if kind == "sltrain":
+                nnz = max(1, int(round(delta * width * width)))
+                shapes[f"l{i}.vals"] = (nnz,)
+                supports[f"l{i}.idx"] = ref.random_support(
+                    support_seed + i, width, width, delta
+                )
+    pnames = sorted(shapes)
+    cnames = sorted(supports)
+
+    def apply(params, consts, x):
+        for i in range(depth):
+            if kind == "ffn":
+                x = x @ params[f"l{i}.w"]
+            elif kind == "lowrank":
+                x = ref.lowrank_linear(x, params[f"l{i}.B"], params[f"l{i}.A"])
+            else:
+                x = ref.sl_linear(
+                    x, params[f"l{i}.B"], params[f"l{i}.A"],
+                    consts[f"l{i}.idx"], params[f"l{i}.vals"],
+                )
+            x = jax.nn.relu(x)
+        return x
+
+    def step(x, *rest):
+        consts = dict(zip(cnames, rest[: len(cnames)]))
+        params = dict(zip(pnames, rest[len(cnames) :]))
+
+        def loss_of(p):
+            return jnp.mean(jnp.square(apply(p, consts, x)))
+
+        loss, g = jax.value_and_grad(loss_of)(params)
+        out = {n: params[n] - 1e-3 * g[n] for n in pnames}
+        return (loss,) + tuple(out[n] for n in pnames)
+
+    x = _sds((batch, width))
+    csds = [_sds(supports[n].shape, jnp.int32) for n in cnames]
+    psds = [_sds(shapes[n]) for n in pnames]
+    jitted = jax.jit(step)
+    text = to_hlo_text(jitted.lower(x, *csds, *psds))
+    fname = f"stack_{kind}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    sup = {}
+    for n, idx in supports.items():
+        sf = n.replace("/", "_") + ".support.bin"
+        np.asarray(idx, dtype=np.uint32).tofile(os.path.join(out_dir, sf))
+        sup[n] = {"file": sf, "nnz": int(len(idx))}
+    manifest = {
+        "kind": kind, "depth": depth, "width": width, "rank": rank,
+        "delta": delta, "batch": batch,
+        "params": [
+            {"name": n, "shape": list(shapes[n]), "dtype": "f32",
+             "trainable": True}
+            for n in pnames
+        ],
+        "consts": [
+            {"name": n, "shape": [sup[n]["nnz"]], "dtype": "i32"}
+            for n in cnames
+        ],
+        "supports": sup,
+        "entrypoints": {
+            "step": {
+                "file": fname,
+                "inputs": ["__x"] + cnames + pnames,
+                "outputs": ["__loss"] + pnames,
+                "batch": batch,
+            }
+        },
+    }
+    with open(os.path.join(out_dir, f"stack_{kind}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+DEFAULT_SETS = [
+    # (config, method, batch, opt8bit) — the minimum set `make artifacts`
+    # builds; benches request more via explicit flags.
+    ("tiny", "full", 8, False),
+    ("tiny", "lowrank", 8, False),
+    ("tiny", "sltrain", 8, False),
+    ("tiny", "relora", 8, False),
+    ("tiny", "galore", 8, False),
+    ("tiny", "sltrain", 8, True),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root")
+    ap.add_argument("--config", default=None, help="preset name (default: tiny set)")
+    ap.add_argument("--method", default=None, choices=configs.METHODS)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--fwd-batch", type=int, default=None)
+    ap.add_argument("--opt8bit", action="store_true")
+    ap.add_argument("--pallas", action="store_true",
+                    help="use the Pallas kernel path inside the model")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=100)
+    ap.add_argument("--total-steps", type=int, default=2000)
+    ap.add_argument("--support-seed", type=int, default=42)
+    ap.add_argument("--suffix", default="", help="artifact dir name suffix")
+    ap.add_argument("--delta", type=float, default=None, help="override sparsity")
+    ap.add_argument("--rank", type=int, default=None, help="override rank")
+    ap.add_argument("--freeze-lowrank", action="store_true",
+                    help="train only sparse values (Table 1 ablation)")
+    ap.add_argument("--ft-freeze-base", action="store_true",
+                    help="freeze embed+norms (fine-tuning, Appendix G)")
+    ap.add_argument("--mlp-stack", default=None,
+                    help="emit Fig-12 stack artifacts: depth,width,rank,delta,batch")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.mlp_stack:
+        depth, width, rank = [int(v) for v in args.mlp_stack.split(",")[:3]]
+        delta = float(args.mlp_stack.split(",")[3])
+        batch = int(args.mlp_stack.split(",")[4])
+        d = os.path.join(args.out, "mlp_stack")
+        for kind in ("ffn", "lowrank", "sltrain"):
+            emit_mlp_stack(d, depth, width, rank, delta, batch, kind)
+            print(f"emitted {d}/stack_{kind}")
+        return
+
+    sets = (
+        [(args.config, args.method, args.batch, args.opt8bit)]
+        if args.config and args.method
+        else DEFAULT_SETS
+    )
+    for cfg_name, method, batch, opt8 in sets:
+        cfg = configs.get(cfg_name)
+        if args.delta is not None or args.rank is not None:
+            import dataclasses
+
+            cfg = dataclasses.replace(
+                cfg,
+                delta=args.delta if args.delta is not None else cfg.delta,
+                rank=args.rank if args.rank is not None else cfg.rank,
+            )
+        tag = f"{cfg_name}_{method}" + ("_8bit" if opt8 else "") + args.suffix
+        out_dir = os.path.join(args.out, tag)
+        man = emit_bundle(
+            cfg, method, out_dir, batch, fwd_batch=args.fwd_batch,
+            opt8bit=opt8, use_pallas=args.pallas, lr=args.lr,
+            warmup=args.warmup, total_steps=args.total_steps,
+            support_seed=args.support_seed,
+            freeze_lowrank=args.freeze_lowrank,
+            ft_freeze_base=args.ft_freeze_base,
+        )
+        print(
+            f"emitted {tag}: {man['n_params']/1e6:.2f}M params, "
+            f"{len(man['params'])} tensors, opt={man['optimizer']['type']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 kernels: Pallas SLTrain linear (sl_linear) + pure-jnp oracle (ref)."""
+from . import ref  # noqa: F401
+from . import sl_linear  # noqa: F401

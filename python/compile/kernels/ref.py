@@ -1,0 +1,79 @@
+"""Pure-jnp correctness oracle for the SLTrain linear layer.
+
+This is the executable specification of the paper's Algorithm 1 and its
+gradient equations (eq. 2). Every Pallas kernel in `sl_linear.py` is
+checked against these functions by pytest (`python/tests/`), and the L2
+model can be built against either implementation (``use_pallas`` switch)
+so a kernel regression is always isolatable.
+
+Conventions (used across the whole repo):
+  x : [m, d_in]            activations, row-major batch
+  B : [d_in, r]            left low-rank factor   (zero-init in SLTrain)
+  A : [r, d_out]           right low-rank factor  (Kaiming-init)
+  idx : [nnz] int32        FIXED support, flat row-major into d_in*d_out
+  vals: [nnz] float        learned sparse values
+  scale : float            the paper's alpha/r balancing factor on B@A
+
+  W = scale * (B @ A)  ⊕_idx  vals          (scatter-add densify)
+  y = x @ W
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def densify(B, A, idx, vals, scale=1.0):
+    """Return the dense ``scale*(B@A) ⊕_idx vals`` matrix.
+
+    This is the transient matrix of Algorithm 1 line 4; the paper (and our
+    kernels) never *store* it for backprop — the oracle materializes it
+    for comparison purposes only.
+    """
+    d, p = B.shape[0], A.shape[1]
+    W = scale * (B @ A)
+    return W.reshape(-1).at[idx].add(vals, mode="drop").reshape(d, p)
+
+
+def sl_linear(x, B, A, idx, vals, scale=1.0):
+    """Forward of Algorithm 1: ``(scale*BA ⊕_idx vals) x``."""
+    return x @ densify(B, A, idx, vals, scale)
+
+
+def sl_linear_grads(x, B, A, idx, vals, dy, scale=1.0):
+    """Closed-form gradients of eq. (2), adapted to y = x @ W.
+
+    Returns (dx, dB, dA, dvals). Matches what jax.grad of `sl_linear`
+    produces, but — like the paper — never materializes the dense dW:
+
+      dB    = scale * x^T (dy A^T)      -- [d,r]   via [m,r] temp
+      dA    = scale * (x B)^T dy        -- [r,p]   via [m,r] temp
+      dvals = (x^T dy)_idx              -- gathered, chunked in kernels
+      dx    = dy W^T                    -- recomputes W (not stored)
+    """
+    p = A.shape[1]
+    rows, cols = idx // p, idx % p
+    dB = scale * (x.T @ (dy @ A.T))
+    dA = scale * ((x @ B).T @ dy)
+    dvals = jnp.sum(x[:, rows] * dy[:, cols], axis=0)
+    dx = dy @ densify(B, A, idx, vals, scale).T
+    return dx, dB, dA, dvals
+
+
+def lowrank_linear(x, B, A, scale=1.0):
+    """Baseline Low-Rank [24] layer: y = scale * x B A (no densify)."""
+    return scale * ((x @ B) @ A)
+
+
+def random_support(seed, d, p, delta):
+    """Uniform random support of the paper's Section 3.2: nnz = delta*d*p
+    distinct flat indices, sorted ascending. Takes an int seed and runs on
+    the numpy path — supports are chosen once at init and are *static*
+    constants baked into the lowered HLO (the paper's fixed-support
+    strategy made structural)."""
+    import numpy as np
+
+    nnz = max(1, int(round(delta * d * p)))
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(d * p, size=nnz, replace=False)
+    return np.sort(idx).astype(np.int32)

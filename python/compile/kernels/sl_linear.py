@@ -1,0 +1,276 @@
+"""Pallas kernels for the SLTrain linear layer (Algorithm 1).
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+CUDA implementation scatter-adds the sparse values into the dense ``BA``
+product in HBM. On TPU there are no HBM atomics; instead we exploit that
+the support is FIXED at init (the paper's central trick) and bucket the
+nnz entries by weight tile *at trace time*. Each grid step then:
+
+  1. computes its ``(bd, bp)`` tile of ``scale * B@A`` on the MXU
+     (``bd×r @ r×bp`` — both factors VMEM-resident for r ≤ 512),
+  2. scatter-adds its statically-padded segment of sparse values into the
+     VMEM tile (static-bound loop, no dynamic shapes),
+  3. either writes the tile out (``sl_densify``) or contracts it with the
+     activation tile immediately (``sl_matmul`` — the fused path, where
+     the densified W never round-trips to HBM at all).
+
+All kernels run under ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md). Correctness is pinned to ``ref.py`` by
+pytest; TPU efficiency is argued structurally in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 aligns with the MXU systolic array; small
+# shapes in tests shrink these via _tile().
+DEF_BD = 128
+DEF_BP = 128
+DEF_BM = 128
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def bucket_support(idx: np.ndarray, p: int, bd: int, bp: int, gd: int, gp: int):
+    """Trace-time bucketing of the fixed support by (bd, bp) weight tile.
+
+    ``idx`` is flat row-major into the ORIGINAL [d, p] matrix; ``gd, gp``
+    describe the (possibly padded) tile grid. Returns
+    (tile_local, tile_gather, cap) where, with ``nt = gd*gp`` tiles in
+    row-major tile order:
+      tile_local  : [nt, cap] int32 — flat index *within* the tile
+                    (row_local * bp + col_local), padded with -1
+      tile_gather : [nt, cap] int32 — position into ``vals`` to gather the
+                    runtime value from, padded with 0 (masked by -1s)
+      cap         : python int — max segment length over tiles (static)
+
+    This is pure numpy on the static support, so the result is a constant
+    folded into the lowered HLO — exactly the paper's "store only indices
+    and values" with the indices compiled away.
+    """
+    idx = np.asarray(idx)
+    rows, cols = idx // p, idx % p
+    tid = (rows // bd) * gp + (cols // bp)
+    local = (rows % bd) * bp + (cols % bp)
+    nt = gd * gp
+    order = np.argsort(tid, kind="stable")
+    tid_s, local_s = tid[order], local[order]
+    counts = np.bincount(tid_s, minlength=nt)
+    cap = max(1, int(counts.max()) if len(idx) else 1)
+    tile_local = np.full((nt, cap), -1, dtype=np.int32)
+    tile_gather = np.zeros((nt, cap), dtype=np.int32)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    for t in range(nt):
+        s, c = starts[t], counts[t]
+        tile_local[t, :c] = local_s[s : s + c]
+        tile_gather[t, :c] = order[s : s + c]
+    return tile_local, tile_gather, cap
+
+
+def _densify_kernel(B_ref, A_ref, tl_ref, tv_ref, o_ref, *, scale, bp):
+    """One (bd, bp) tile: MXU product + static-capacity sparse scatter."""
+    w = scale * jnp.dot(B_ref[...], A_ref[...], preferred_element_type=jnp.float32)
+    tl = tl_ref[...].reshape(-1)  # [cap] local flat idx, -1 padded
+    tv = tv_ref[...].reshape(-1)  # [cap] gathered values
+    add = jnp.where(tl >= 0, tv, 0.0)
+    w = w.reshape(-1).at[jnp.clip(tl, 0)].add(add).reshape(w.shape)
+    o_ref[...] = w.astype(o_ref.dtype)
+
+
+def sl_densify(B, A, idx, vals, scale=1.0, bd=DEF_BD, bp=DEF_BP):
+    """Dense ``scale*(B@A) ⊕_idx vals`` via the tiled Pallas kernel.
+
+    ``idx`` must be a static (numpy) array — it parameterizes the kernel.
+    """
+    d, p = B.shape[0], A.shape[1]
+    bd, bp = min(bd, d), min(bp, p)
+    Bp = _pad_to(B, bd, 0)
+    Ap = _pad_to(A, bp, 1)
+    dp_, pp_ = Bp.shape[0], Ap.shape[1]
+    gd, gp = dp_ // bd, pp_ // bp
+    # Decode with the TRUE p, bucket into the PADDED tile grid.
+    tile_local, tile_gather, cap = bucket_support(np.asarray(idx), p, bd, bp, gd, gp)
+    tl = jnp.asarray(tile_local.reshape(gd, gp, cap))
+    tv = jnp.take(vals, jnp.asarray(tile_gather.reshape(gd, gp, cap)), axis=0)
+
+    out = pl.pallas_call(
+        functools.partial(_densify_kernel, scale=scale, bp=bp),
+        grid=(gd, gp),
+        in_specs=[
+            pl.BlockSpec((bd, B.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((A.shape[0], bp), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1, cap), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, cap), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, bp), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dp_, pp_), B.dtype),
+        interpret=True,
+    )(Bp, Ap, tl, tv)
+    return out[:d, :p]
+
+
+def _matmul_kernel(x_ref, B_ref, A_ref, tl_ref, tv_ref, o_ref, *, scale, nk):
+    """Fused y += x_tile @ (BA ⊕ V)_tile; W tile lives only in VMEM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = scale * jnp.dot(B_ref[...], A_ref[...], preferred_element_type=jnp.float32)
+    tl = tl_ref[...].reshape(-1)
+    tv = tv_ref[...].reshape(-1)
+    add = jnp.where(tl >= 0, tv, 0.0)
+    w = w.reshape(-1).at[jnp.clip(tl, 0)].add(add).reshape(w.shape)
+    o_ref[...] += jnp.dot(
+        x_ref[...], w.astype(x_ref.dtype), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def sl_matmul(x, B, A, idx, vals, scale=1.0, bm=DEF_BM, bd=DEF_BD, bp=DEF_BP):
+    """Fused ``y = x @ (scale*BA ⊕_idx vals)``.
+
+    The densified W is built tile-by-tile in VMEM and contracted
+    immediately — it never exists in HBM (Algorithm 1's "never store it"
+    made structural). Grid is (m-tiles, p-tiles, d-tiles) with d as the
+    innermost reduction.
+    """
+    m, d = x.shape
+    p = A.shape[1]
+    bm, bd, bp = min(bm, m), min(bd, d), min(bp, p)
+    xp = _pad_to(_pad_to(x, bm, 0), bd, 1)
+    Bp = _pad_to(B, bd, 0)
+    Ap = _pad_to(A, bp, 1)
+    mp_, dp_, pp_ = xp.shape[0], Bp.shape[0], Ap.shape[1]
+    gm, gd, gp = mp_ // bm, dp_ // bd, pp_ // bp
+    tile_local, tile_gather, cap = bucket_support(np.asarray(idx), p, bd, bp, gd, gp)
+    tl = jnp.asarray(tile_local.reshape(gd, gp, cap))
+    tv = jnp.take(vals, jnp.asarray(tile_gather.reshape(gd, gp, cap)), axis=0)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, scale=scale, nk=gd),
+        grid=(gm, gp, gd),
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bd, B.shape[1]), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((A.shape[0], bp), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, 1, cap), lambda i, j, k: (k, j, 0)),
+            pl.BlockSpec((1, 1, cap), lambda i, j, k: (k, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bp), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp_, pp_), x.dtype),
+        interpret=True,
+    )(xp, Bp, Ap, tl, tv)
+    return out[:m, :p]
+
+
+def _dvals_kernel(x_ref, dy_ref, rows_ref, cols_ref, o_ref):
+    """dvals chunk: sum_m x[:, rows] * dy[:, cols] for one nnz chunk."""
+    rows = rows_ref[...].reshape(-1)
+    cols = cols_ref[...].reshape(-1)
+    xr = x_ref[...][:, rows]  # [m, chunk]
+    yc = dy_ref[...][:, cols]  # [m, chunk]
+    o_ref[...] = jnp.sum(xr * yc, axis=0).reshape(o_ref.shape)
+
+
+def sl_dvals(x, dy, idx, p, chunk=4096):
+    """Gathered ``(x^T dy)_idx`` without materializing the [d,p] gradient.
+
+    Chunked over nnz so the [m, chunk] gathers bound VMEM; this is the
+    eq. (2) ∇V term and the only gradient that touches the support.
+    """
+    idx = np.asarray(idx)
+    nnz = idx.shape[0]
+    chunk = min(chunk, max(1, nnz))
+    pad = (-nnz) % chunk
+    idx_p = np.concatenate([idx, np.zeros(pad, dtype=idx.dtype)]) if pad else idx
+    rows = jnp.asarray((idx_p // p).astype(np.int32).reshape(-1, chunk))
+    cols = jnp.asarray((idx_p % p).astype(np.int32).reshape(-1, chunk))
+    nchunks = rows.shape[0]
+
+    out = pl.pallas_call(
+        _dvals_kernel,
+        grid=(nchunks,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda c: (0, 0)),
+            pl.BlockSpec(dy.shape, lambda c: (0, 0)),
+            pl.BlockSpec((1, chunk), lambda c: (c, 0)),
+            pl.BlockSpec((1, chunk), lambda c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk), lambda c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((nchunks, chunk), x.dtype),
+        interpret=True,
+    )(x, dy, rows, cols)
+    return out.reshape(-1)[:nnz]
+
+
+def make_sl_linear(idx: np.ndarray, p: int, scale: float, use_pallas: bool = True):
+    """Build a differentiable SLTrain linear op for a FIXED support.
+
+    Returns ``f(x, B, A, vals) -> y`` with a custom VJP implementing
+    eq. (2): backward recomputes the densified W (never stored), computes
+    dB/dA through [m, r] temporaries, and dvals by chunked gather.
+
+    The support is captured statically (compile-time constant), matching
+    the paper's fixed-random-support strategy, so the returned op is
+    jit/lower-friendly with only (x, B, A, vals) as runtime operands.
+    """
+    idx = np.asarray(idx)
+    from . import ref
+
+    @jax.custom_vjp
+    def f(x, B, A, vals):
+        if use_pallas:
+            return sl_matmul(x, B, A, idx, vals, scale)
+        return ref.sl_linear(x, B, A, jnp.asarray(idx), vals, scale)
+
+    def fwd(x, B, A, vals):
+        return f(x, B, A, vals), (x, B, A, vals)
+
+    def bwd(res, dy):
+        x, B, A, vals = res
+        dB = scale * (x.T @ (dy @ A.T))
+        dA = scale * ((x @ B).T @ dy)
+        if use_pallas:
+            dvals = sl_dvals(x, dy, idx, p)
+            dx = sl_matmul(dy, A.T, B.T, _transpose_support(idx, B.shape[0], p), vals, scale)
+        else:
+            rows, cols = idx // p, idx % p
+            dvals = jnp.sum(x[:, rows] * dy[:, cols], axis=0)
+            dx = dy @ ref.densify(B, A, jnp.asarray(idx), vals, scale).T
+        return dx, dB, dA, dvals
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _transpose_support_cached(idx_bytes: bytes, d: int, p: int):
+    idx = np.frombuffer(idx_bytes, dtype=np.int32)
+    rows, cols = idx // p, idx % p
+    return (cols * d + rows).astype(np.int32)
+
+
+def _transpose_support(idx: np.ndarray, d: int, p: int) -> np.ndarray:
+    """Flat support of W^T given flat support of W ([d,p] row-major).
+
+    NOTE: the transposed support is *unsorted* relative to vals' order —
+    by design, so ``vals[k]`` still pairs with entry k. Used for the
+    dx = dy @ W^T recompute-path where W^T = (BA ⊕ V)^T = A^T B^T ⊕_T V.
+    """
+    idx = np.ascontiguousarray(np.asarray(idx, dtype=np.int32))
+    return _transpose_support_cached(idx.tobytes(), d, p)

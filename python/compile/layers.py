@@ -1,0 +1,175 @@
+"""LLaMA building blocks with pluggable weight parameterizations.
+
+Every linear layer in the transformer goes through `linear()`, which
+dispatches on the method under reproduction:
+
+  full     W                      (vanilla Adam baseline)
+  lowrank  scale * B A            (Kamalakara et al. [24])
+  sltrain  scale * B A ⊕_idx V    (the paper, Algorithm 1)
+  relora   W0 + scale * B A       (Lialin et al. [32]; W0 merged by L3)
+  galore   W                      (Zhao et al. [59]; projection in optim)
+
+The model is purely functional: parameters live in a flat
+``dict[str, Array]``, fixed sparse supports in a parallel ``consts``
+dict (fed by the rust runtime from sidecar files). Names are
+dot-paths, e.g. ``layers.3.attn.q.B``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels import sl_linear as slk
+
+
+# ------------------------------------------------------------------ linears
+
+
+def linear(method, params, consts, path, x, scale, use_pallas=False):
+    """Apply the `path` linear to x [..., d_in] under `method`."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if method in ("full", "galore"):
+        y = x2 @ params[f"{path}.w"]
+    elif method == "lowrank":
+        y = ref.lowrank_linear(x2, params[f"{path}.B"], params[f"{path}.A"], scale)
+    elif method == "relora":
+        y = x2 @ params[f"{path}.w0"] + ref.lowrank_linear(
+            x2, params[f"{path}.B"], params[f"{path}.A"], scale
+        )
+    elif method == "sltrain_ft":
+        # Appendix G fine-tuning: W = W0 + BA + S, W0 frozen
+        y = x2 @ params[f"{path}.w0"] + ref.sl_linear(
+            x2, params[f"{path}.B"], params[f"{path}.A"],
+            consts[f"{path}.idx"], params[f"{path}.vals"], scale,
+        )
+    elif method == "sltrain":
+        B, A, vals = params[f"{path}.B"], params[f"{path}.A"], params[f"{path}.vals"]
+        if use_pallas:
+            # static support: baked into the kernel at trace time
+            idx = np.asarray(consts[f"{path}.idx"])
+            f = slk.make_sl_linear(idx, A.shape[1], scale, use_pallas=True)
+            y = f(x2, B, A, vals)
+        else:
+            y = ref.sl_linear(x2, B, A, consts[f"{path}.idx"], vals, scale)
+    else:
+        raise ValueError(f"unknown method {method}")
+    return y.reshape(*lead, y.shape[-1])
+
+
+def linear_param_specs(method, path, d_in, d_out, rank, delta):
+    """(name, shape, kind) for one linear. kind: param | const."""
+    if method in ("full", "galore"):
+        return [(f"{path}.w", (d_in, d_out), "param")]
+    if method in ("lowrank", "relora"):
+        specs = [(f"{path}.B", (d_in, rank), "param"), (f"{path}.A", (rank, d_out), "param")]
+        if method == "relora":
+            specs.insert(0, (f"{path}.w0", (d_in, d_out), "param"))
+        return specs
+    if method in ("sltrain", "sltrain_ft"):
+        nnz = max(1, int(round(delta * d_in * d_out)))
+        specs = [
+            (f"{path}.B", (d_in, rank), "param"),
+            (f"{path}.A", (rank, d_out), "param"),
+            (f"{path}.vals", (nnz,), "param"),
+            (f"{path}.idx", (nnz,), "const"),
+        ]
+        if method == "sltrain_ft":
+            specs.insert(0, (f"{path}.w0", (d_in, d_out), "param"))
+        return specs
+    raise ValueError(method)
+
+
+def init_linear(method, path, d_in, d_out, rank, delta, key):
+    """Paper §3.3 init: Kaiming for A (and full W), zeros for B, uniform
+    [-1/sqrt(d_in), 1/sqrt(d_in)] for sparse values."""
+    out = {}
+    k1, k2, k3 = jax.random.split(key, 3)
+    kaiming = lambda k, shape: jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(
+        2.0 / shape[0]
+    )
+    if method in ("full", "galore"):
+        out[f"{path}.w"] = kaiming(k1, (d_in, d_out))
+        return out
+    if method in ("relora", "sltrain_ft"):
+        out[f"{path}.w0"] = kaiming(k3, (d_in, d_out))
+    if method in ("lowrank", "relora", "sltrain", "sltrain_ft"):
+        out[f"{path}.B"] = jnp.zeros((d_in, rank), jnp.float32)
+        out[f"{path}.A"] = kaiming(k1, (rank, d_out))
+        if method == "lowrank":
+            # pure low-rank training cannot start at BA=0 (no gradient to
+            # escape); use Kaiming B as in [24]
+            out[f"{path}.B"] = kaiming(k2, (d_in, rank))
+    if method in ("sltrain", "sltrain_ft"):
+        nnz = max(1, int(round(delta * d_in * d_out)))
+        bound = 1.0 / jnp.sqrt(d_in)
+        out[f"{path}.vals"] = jax.random.uniform(
+            k2, (nnz,), jnp.float32, -bound, bound
+        )
+    return out
+
+
+# ------------------------------------------------------------------ blocks
+
+
+def rmsnorm(x, g, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope_tables(seq_len, head_dim, theta):
+    pos = np.arange(seq_len, dtype=np.float32)
+    freqs = theta ** (-np.arange(0, head_dim, 2, dtype=np.float32) / head_dim)
+    ang = pos[:, None] * freqs[None, :]  # [s, hd/2]
+    return jnp.asarray(np.cos(ang)), jnp.asarray(np.sin(ang))
+
+
+def apply_rope(x, cos, sin):
+    """x: [b, s, h, hd] — rotate pairs (standard LLaMA RoPE)."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c, s = cos[None, :, None, :], sin[None, :, None, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def attention(method, params, consts, path, x, cfg, cos, sin, use_pallas=False):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    scale = cfg.scale if cfg.adapt_attn else 1.0
+    m = method if cfg.adapt_attn else "full"
+    q = linear(m, params, consts, f"{path}.q", x, scale, use_pallas)
+    k = linear(m, params, consts, f"{path}.k", x, scale, use_pallas)
+    v = linear(m, params, consts, f"{path}.v", x, scale, use_pallas)
+    q = apply_rope(q.reshape(b, s, h, hd), cos, sin)
+    k = apply_rope(k.reshape(b, s, h, hd), cos, sin)
+    v = v.reshape(b, s, h, hd)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(hd).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, jnp.finfo(x.dtype).min)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+    return linear(m, params, consts, f"{path}.o", o, scale, use_pallas)
+
+
+def mlp(method, params, consts, path, x, cfg, use_pallas=False):
+    scale = cfg.scale if cfg.adapt_mlp else 1.0
+    m = method if cfg.adapt_mlp else "full"
+    g = linear(m, params, consts, f"{path}.gate", x, scale, use_pallas)
+    u = linear(m, params, consts, f"{path}.up", x, scale, use_pallas)
+    h = jax.nn.silu(g) * u  # SwiGLU [44]
+    return linear(m, params, consts, f"{path}.down", h, scale, use_pallas)
+
+
+def block(method, params, consts, path, x, cfg, cos, sin, use_pallas=False):
+    # pre-normalization (LLaMA)
+    h = x + attention(
+        method, params, consts, f"{path}.attn",
+        rmsnorm(x, params[f"{path}.ln1.g"]), cfg, cos, sin, use_pallas,
+    )
+    return h + mlp(
+        method, params, consts, f"{path}.mlp",
+        rmsnorm(h, params[f"{path}.ln2.g"]), cfg, use_pallas,
+    )

@@ -1,0 +1,178 @@
+"""L2: the LLaMA-family model under all five weight parameterizations.
+
+`build(cfg, method)` returns a `ModelDef`: ordered parameter specs (the
+contract the rust runtime programs against via manifest.json), an init
+function, fixed sparse supports (sltrain), and pure functions for
+forward / loss. Everything here is build-time only: `aot.py` lowers the
+jitted functions to HLO text once, and rust executes them forever after.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from .configs import ModelConfig
+from .kernels import ref
+
+
+@dataclass
+class ModelDef:
+    cfg: ModelConfig
+    method: str
+    # ordered (name, shape, kind) — kind: param | const
+    specs: list
+    supports: dict  # name -> np.int32 flat support (sltrain only)
+    trainable: list  # param names receiving gradients
+    init_fn: Callable  # (key) -> params dict
+    apply_fn: Callable  # (params, consts, tokens) -> logits
+    loss_fn: Callable  # (params, consts, tokens) -> scalar mean CE
+
+    @property
+    def param_names(self):
+        return [n for n, _, k in self.specs if k == "param"]
+
+    @property
+    def const_names(self):
+        return [n for n, _, k in self.specs if k == "const"]
+
+    def shape_of(self, name):
+        return dict((n, s) for n, s, _ in self.specs)[name]
+
+    def n_params(self):
+        return sum(int(np.prod(s)) for n, s, k in self.specs if k == "param")
+
+
+def _linear_paths(cfg: ModelConfig):
+    """All adapted linears as (path, d_in, d_out)."""
+    out = []
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        if cfg.adapt_attn:
+            for nm in ("q", "k", "v", "o"):
+                out.append((f"{p}.attn.{nm}", cfg.d_model, cfg.d_model))
+        if cfg.adapt_mlp:
+            out.append((f"{p}.mlp.gate", cfg.d_model, cfg.d_ff))
+            out.append((f"{p}.mlp.up", cfg.d_model, cfg.d_ff))
+            out.append((f"{p}.mlp.down", cfg.d_ff, cfg.d_model))
+    return out
+
+
+def build(cfg: ModelConfig, method: str, support_seed: int = 42,
+          use_pallas: bool = False) -> ModelDef:
+    specs, supports = [], {}
+    # embeddings / head / norms are always full-rank trainable (paper §5.1:
+    # "the remaining parameters are updated with full-rank")
+    specs.append(("embed.w", (cfg.vocab, cfg.d_model), "param"))
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        specs.append((f"{p}.ln1.g", (cfg.d_model,), "param"))
+        specs.append((f"{p}.ln2.g", (cfg.d_model,), "param"))
+    specs.append(("lnf.g", (cfg.d_model,), "param"))
+    specs.append(("head.w", (cfg.d_model, cfg.vocab), "param"))
+
+    for j, (path, d_in, d_out) in enumerate(_linear_paths(cfg)):
+        for s in layers.linear_param_specs(method, path, d_in, d_out, cfg.rank, cfg.delta):
+            specs.append(s)
+        if method in ("sltrain", "sltrain_ft"):
+            # fixed uniform support, one independent seed per linear
+            supports[f"{path}.idx"] = ref.random_support(
+                support_seed * 100003 + j, d_in, d_out, cfg.delta
+            )
+
+    specs.sort(key=lambda s: s[0])
+    # relora: w0 is updated only through the merge artifact, not by grads
+    trainable = [n for n, _, k in specs if k == "param" and not n.endswith(".w0")]
+
+    def init_fn(key):
+        params = {}
+        keys = jax.random.split(key, 4 + len(_linear_paths(cfg)))
+        params["embed.w"] = (
+            jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02
+        )
+        params["head.w"] = (
+            jax.random.normal(keys[1], (cfg.d_model, cfg.vocab), jnp.float32)
+            * jnp.sqrt(2.0 / cfg.d_model)
+        )
+        params["lnf.g"] = jnp.ones((cfg.d_model,), jnp.float32)
+        for i in range(cfg.n_layers):
+            params[f"layers.{i}.ln1.g"] = jnp.ones((cfg.d_model,), jnp.float32)
+            params[f"layers.{i}.ln2.g"] = jnp.ones((cfg.d_model,), jnp.float32)
+        for j, (path, d_in, d_out) in enumerate(_linear_paths(cfg)):
+            params.update(
+                layers.init_linear(
+                    method, path, d_in, d_out, cfg.rank, cfg.delta, keys[4 + j]
+                )
+            )
+        return params
+
+    cos, sin = layers.rope_tables(cfg.seq_len, cfg.head_dim, cfg.rope_theta)
+
+    def apply_fn(params, consts, tokens):
+        """tokens: i32[b, s] -> logits f32[b, s, vocab]."""
+        x = jnp.take(params["embed.w"], tokens, axis=0)
+        s = tokens.shape[1]
+        c, sn = cos[:s], sin[:s]
+        for i in range(cfg.n_layers):
+            x = layers.block(
+                method, params, consts, f"layers.{i}", x, cfg, c, sn, use_pallas
+            )
+        x = layers.rmsnorm(x, params["lnf.g"])
+        return x @ params["head.w"]
+
+    def loss_fn(params, consts, tokens):
+        """Mean next-token cross-entropy (the paper's pretraining loss)."""
+        logits = apply_fn(params, consts, tokens[:, :-1])
+        targets = tokens[:, 1:]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    return ModelDef(cfg, method, specs, supports, trainable, init_fn, apply_fn, loss_fn)
+
+
+def make_relora_merge(cfg: ModelConfig):
+    """The ReLoRA restart (eq. 1): W0 <- W0 + scale*BA; B <- 0; A <- kaiming.
+
+    Lowered as its own artifact and invoked by the L3 restart scheduler
+    every T steps. The optimizer-state reset for (B, A) happens rust-side
+    (zeroing buffers), matching ReLoRA's "reinitialize the optimizer".
+    """
+
+    def merge(params, seed):
+        out = dict(params)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+        for j, (path, _, _) in enumerate(_linear_paths(cfg)):
+            B, A = params[f"{path}.B"], params[f"{path}.A"]
+            out[f"{path}.w0"] = params[f"{path}.w0"] + cfg.scale * (B @ A)
+            out[f"{path}.B"] = jnp.zeros_like(B)
+            k = jax.random.fold_in(key, j)
+            out[f"{path}.A"] = jax.random.normal(k, A.shape, jnp.float32) * jnp.sqrt(
+                2.0 / A.shape[0]
+            )
+        return out
+
+    return merge
+
+
+def sl_from_dense(W, idx, rank: int, mode: str = "resid"):
+    """Table-1 utility: best rank-r approx of a dense pretrained W plus the
+    residual gathered at `idx` (build-time host SVD). Returns (B, A, vals).
+
+    mode='resid' -> vals are the residual entries at idx (pruning rows of
+    Table 1); mode='zero' -> vals start at 0 (the "sparse training" rows).
+    """
+    U, S, Vt = np.linalg.svd(np.asarray(W), full_matrices=False)
+    B = U[:, :rank] * S[:rank]
+    A = Vt[:rank]
+    if mode == "zero":
+        vals = np.zeros(len(idx), np.float32)
+    else:
+        resid = np.asarray(W) - B @ A
+        vals = resid.reshape(-1)[np.asarray(idx)].astype(np.float32)
+    return B.astype(np.float32), A.astype(np.float32), vals

@@ -1,0 +1,265 @@
+"""Optimizers lowered into the train-step artifacts.
+
+Three families, matching the paper's experimental matrix:
+
+  adam      — the baseline optimizer for Full-Rank / Low-Rank / ReLoRA /
+              SLTrain (the paper stresses SLTrain is optimizer-agnostic).
+  adam8bit  — block-wise int8-quantized moments (Dettmers et al. [9]),
+              used for the 7B-scale rows (Table 4) and Fig 3.
+  galore    — Adam with the gradient of each adapted matrix projected to a
+              rank-k subspace (Zhao et al. [59]). The paper computes the
+              projector from a truncated SVD of G every T steps; LAPACK
+              custom-calls don't exist in the rust PJRT runtime, so we use
+              warm-started subspace iteration + Newton–Schulz
+              orthonormalization — pure matmuls, same top subspace
+              (substitution documented in DESIGN.md §3).
+
+All states are flat dicts keyed off the trainable parameter name, so the
+rust runtime can treat optimizer buffers exactly like parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QBLOCK = 256  # 8-bit quantization block size (as in bitsandbytes)
+
+
+def lr_schedule(step, base_lr, warmup, total):
+    """Linear warmup then cosine decay to 10% — the GaLore-repo schedule
+    the paper trains with."""
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+    cos = base_lr * (0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ------------------------------------------------------------------- Adam
+
+
+def adam_init(shapes):
+    """shapes: {name: shape} -> state {name.m, name.v}."""
+    st = {}
+    for n, s in shapes.items():
+        st[f"{n}.m"] = jnp.zeros(s, jnp.float32)
+        st[f"{n}.v"] = jnp.zeros(s, jnp.float32)
+    return st
+
+
+def adam_update(params, grads, state, step, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    new_p, new_s = dict(params), dict(state)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    for n, g in grads.items():
+        m = b1 * state[f"{n}.m"] + (1 - b1) * g
+        v = b2 * state[f"{n}.v"] + (1 - b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if wd:
+            upd = upd + wd * params[n]
+        new_p[n] = params[n] - lr * upd
+        new_s[f"{n}.m"] = m
+        new_s[f"{n}.v"] = v
+    return new_p, new_s
+
+
+# --------------------------------------------------------------- 8-bit Adam
+
+
+def _qshape(shape):
+    n = int(np.prod(shape))
+    nb = -(-n // QBLOCK)
+    return n, nb
+
+
+def quantize_blockwise(x):
+    """x flat f32 [n] (padded to QBLOCK) -> (int8 codes, f32 per-block absmax)."""
+    xb = x.reshape(-1, QBLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xb / safe * 127.0), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0]
+
+
+def dequantize_blockwise(q, scale):
+    xb = q.reshape(-1, QBLOCK).astype(jnp.float32) / 127.0
+    return (xb * scale[:, None]).reshape(-1)
+
+
+def adam8bit_init(shapes):
+    st = {}
+    for n, s in shapes.items():
+        _, nb = _qshape(s)
+        st[f"{n}.mq"] = jnp.zeros((nb * QBLOCK,), jnp.int8)
+        st[f"{n}.ms"] = jnp.zeros((nb,), jnp.float32)
+        st[f"{n}.vq"] = jnp.zeros((nb * QBLOCK,), jnp.int8)
+        st[f"{n}.vs"] = jnp.zeros((nb,), jnp.float32)
+    return st
+
+
+def adam8bit_update(params, grads, state, step, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    """Dequantize -> Adam moment update -> requantize, block-wise.
+
+    Second moment is quantized in sqrt-space to preserve dynamic range
+    (the [9] trick, simplified to linear-in-sqrt rather than dynamic-tree).
+    """
+    new_p, new_s = dict(params), dict(state)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    for n, g in grads.items():
+        shape = g.shape
+        npad = state[f"{n}.mq"].shape[0]
+        gf = jnp.pad(g.reshape(-1), (0, npad - g.size))
+        m = dequantize_blockwise(state[f"{n}.mq"], state[f"{n}.ms"])
+        v = jnp.square(dequantize_blockwise(state[f"{n}.vq"], state[f"{n}.vs"]))
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        upd = ((m / bc1) / (jnp.sqrt(v / bc2) + eps))[: g.size].reshape(shape)
+        if wd:
+            upd = upd + wd * params[n]
+        new_p[n] = params[n] - lr * upd
+        mq, ms = quantize_blockwise(m)
+        vq, vs = quantize_blockwise(jnp.sqrt(v))
+        new_s[f"{n}.mq"], new_s[f"{n}.ms"] = mq, ms
+        new_s[f"{n}.vq"], new_s[f"{n}.vs"] = vq, vs
+    return new_p, new_s
+
+
+# ------------------------------------------------------------------ GaLore
+
+
+def newton_schulz_invsqrt(S, iters=12, eps=1e-6):
+    """S^{-1/2} for SPD S [k,k] via coupled Newton–Schulz (pure matmuls)."""
+    k = S.shape[0]
+    I = jnp.eye(k, dtype=S.dtype)
+    S = S + eps * I
+    norm = jnp.sqrt(jnp.sum(jnp.square(S)))
+    Y = S / norm
+    Z = I
+    for _ in range(iters):
+        T = 0.5 * (3.0 * I - Z @ Y)
+        Y = Y @ T
+        Z = T @ Z
+    return Z / jnp.sqrt(norm)
+
+
+def orthonormalize(Y):
+    """Columns of Y -> orthonormal basis of span(Y): Y (YᵀY)^{-1/2}."""
+    return Y @ newton_schulz_invsqrt(Y.T @ Y)
+
+
+def subspace_iter(G, P_prev, iters=2):
+    """Warm-started subspace iteration for the top-k left singular vectors
+    of G [d,p] (k = P_prev.shape[1]). Replaces the paper's torch.svd."""
+    P = P_prev
+    for _ in range(iters):
+        P = orthonormalize(G @ (G.T @ P))
+    return P
+
+
+def galore_targets(param_shapes, rank):
+    """Which params get projected: 2D matrices from the adapted linears
+    (name 'layers.*.w'), exactly GaLore's target_modules behaviour."""
+    out = {}
+    for n, s in param_shapes.items():
+        if n.startswith("layers.") and n.endswith(".w") and len(s) == 2:
+            d, p = s
+            k = min(rank, d, p)
+            side = "left" if d <= p else "right"
+            out[n] = (side, k)
+    return out
+
+
+def galore_init(param_shapes, rank, seed=0):
+    """Adam moments in projected space + the projector P per target.
+    Non-target params carry plain Adam moments."""
+    st = {}
+    targets = galore_targets(param_shapes, rank)
+    key = jax.random.PRNGKey(seed)
+    for n, s in param_shapes.items():
+        if n in targets:
+            side, k = targets[n]
+            d, p = s
+            key, sub = jax.random.split(key)
+            if side == "left":
+                P0 = orthonormalize(jax.random.normal(sub, (d, k), jnp.float32))
+                ms = (k, p)
+            else:
+                P0 = orthonormalize(jax.random.normal(sub, (p, k), jnp.float32))
+                ms = (d, k)
+            st[f"{n}.P"] = P0
+            st[f"{n}.m"] = jnp.zeros(ms, jnp.float32)
+            st[f"{n}.v"] = jnp.zeros(ms, jnp.float32)
+        else:
+            st[f"{n}.m"] = jnp.zeros(s, jnp.float32)
+            st[f"{n}.v"] = jnp.zeros(s, jnp.float32)
+    return st
+
+
+def galore_update(
+    params, grads, state, step, lr, rank,
+    b1=0.9, b2=0.999, eps=1e-8, wd=0.0, refresh_every=200, gl_scale=0.25,
+):
+    """GaLore §2: moments live in the projected space; the weight update is
+    the projected-back Adam direction. P refreshed every `refresh_every`
+    steps (lax.cond so the artifact stays a single program)."""
+    new_p, new_s = dict(params), dict(state)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    targets = galore_targets({n: g.shape for n, g in grads.items()}, rank)
+    refresh = jnp.logical_or(step == 0, (step % refresh_every) == 0)
+    for n, g in grads.items():
+        if n in targets:
+            side, k = targets[n]
+            P_old = state[f"{n}.P"]
+            GG = g if side == "left" else g.T
+            P = jax.lax.cond(
+                refresh, lambda: subspace_iter(GG, P_old), lambda: P_old
+            )
+            gp = P.T @ g if side == "left" else g @ P
+            m = b1 * state[f"{n}.m"] + (1 - b1) * gp
+            v = b2 * state[f"{n}.v"] + (1 - b2) * jnp.square(gp)
+            upd_p = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            upd = P @ upd_p if side == "left" else upd_p @ P.T
+            upd = gl_scale * upd
+            if wd:
+                upd = upd + wd * params[n]
+            new_p[n] = params[n] - lr * upd
+            new_s[f"{n}.P"] = P
+            new_s[f"{n}.m"] = m
+            new_s[f"{n}.v"] = v
+        else:
+            m = b1 * state[f"{n}.m"] + (1 - b1) * g
+            v = b2 * state[f"{n}.v"] + (1 - b2) * jnp.square(g)
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if wd:
+                upd = upd + wd * params[n]
+            new_p[n] = params[n] - lr * upd
+            new_s[f"{n}.m"] = m
+            new_s[f"{n}.v"] = v
+    return new_p, new_s
+
+
+def opt_init(kind, shapes, rank=0, seed=0):
+    if kind == "adam":
+        return adam_init(shapes)
+    if kind == "adam8bit":
+        return adam8bit_init(shapes)
+    if kind == "galore":
+        return galore_init(shapes, rank, seed)
+    raise ValueError(kind)
+
+
+def opt_update(kind, params, grads, state, step, lr, rank=0, **kw):
+    if kind == "adam":
+        return adam_update(params, grads, state, step, lr, **kw)
+    if kind == "adam8bit":
+        return adam8bit_update(params, grads, state, step, lr, **kw)
+    if kind == "galore":
+        return galore_update(params, grads, state, step, lr, rank, **kw)
+    raise ValueError(kind)

@@ -1,0 +1,280 @@
+"""Kernel-vs-oracle tests: the CORE correctness signal for L1.
+
+Every Pallas kernel in `compile.kernels.sl_linear` is pinned to the
+pure-jnp oracle in `compile.kernels.ref`, across shape/tile/sparsity
+sweeps (hypothesis) and directed edge cases (empty-ish supports, single
+rows, non-divisible tiles, support on tile boundaries).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sl_linear as sl
+
+jax.config.update("jax_enable_x64", False)
+
+
+def mk(seed, d, r, p, m, delta, zero_b=False):
+    rng = np.random.default_rng(seed)
+    B = jnp.asarray(
+        np.zeros((d, r), np.float32)
+        if zero_b
+        else rng.normal(size=(d, r)).astype(np.float32)
+    )
+    A = jnp.asarray(rng.normal(size=(r, p)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    idx = ref.random_support(seed + 1, d, p, delta)
+    vals = jnp.asarray(rng.normal(size=(len(idx),)).astype(np.float32))
+    return x, B, A, idx, vals
+
+
+def assert_close(a, b, atol=2e-4, rtol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------- densify
+
+
+class TestDensify:
+    def test_basic(self):
+        x, B, A, idx, vals = mk(0, 32, 4, 48, 8, 0.05)
+        assert_close(
+            sl.sl_densify(B, A, idx, vals, 0.5, bd=16, bp=16),
+            ref.densify(B, A, jnp.asarray(idx), vals, 0.5),
+        )
+
+    def test_uneven_tiles(self):
+        x, B, A, idx, vals = mk(1, 33, 5, 47, 8, 0.07)
+        assert_close(
+            sl.sl_densify(B, A, idx, vals, 1.0, bd=16, bp=16),
+            ref.densify(B, A, jnp.asarray(idx), vals, 1.0),
+        )
+
+    def test_single_nnz(self):
+        rng = np.random.default_rng(3)
+        B = jnp.asarray(rng.normal(size=(16, 2)).astype(np.float32))
+        A = jnp.asarray(rng.normal(size=(2, 16)).astype(np.float32))
+        idx = np.asarray([255], np.int32)  # last entry, tile corner
+        vals = jnp.asarray([7.0], jnp.float32)
+        W = sl.sl_densify(B, A, idx, vals, 1.0, bd=8, bp=8)
+        assert_close(W, ref.densify(B, A, jnp.asarray(idx), vals, 1.0))
+
+    def test_saturated_support(self):
+        # delta=1.0: every entry in the support (scatter-add everywhere).
+        x, B, A, idx, vals = mk(4, 12, 3, 20, 4, 1.0)
+        assert len(idx) == 12 * 20
+        assert_close(
+            sl.sl_densify(B, A, idx, vals, 2.0, bd=8, bp=8),
+            ref.densify(B, A, jnp.asarray(idx), vals, 2.0),
+        )
+
+    def test_zero_b_is_pure_sparse(self):
+        # SLTrain init: B = 0 so W == S at step 0.
+        x, B, A, idx, vals = mk(5, 24, 4, 24, 4, 0.1, zero_b=True)
+        W = sl.sl_densify(B, A, idx, vals, 1.0, bd=16, bp=16)
+        dense = np.zeros(24 * 24, np.float32)
+        dense[np.asarray(idx)] += np.asarray(vals)
+        assert_close(W, dense.reshape(24, 24))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        d=st.integers(4, 70),
+        r=st.integers(1, 12),
+        p=st.integers(4, 70),
+        delta=st.floats(0.005, 0.3),
+        bd=st.sampled_from([8, 16, 32]),
+        bp=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_hypothesis_sweep(self, d, r, p, delta, bd, bp, seed):
+        x, B, A, idx, vals = mk(seed, d, r, p, 2, delta)
+        assert_close(
+            sl.sl_densify(B, A, idx, vals, 0.3, bd=bd, bp=bp),
+            ref.densify(B, A, jnp.asarray(idx), vals, 0.3),
+        )
+
+
+# ---------------------------------------------------------------- fused matmul
+
+
+class TestFusedMatmul:
+    def test_basic(self):
+        x, B, A, idx, vals = mk(10, 32, 4, 48, 8, 0.05)
+        assert_close(
+            sl.sl_matmul(x, B, A, idx, vals, 0.5, bm=4, bd=16, bp=16),
+            ref.sl_linear(x, B, A, jnp.asarray(idx), vals, 0.5),
+        )
+
+    def test_single_row(self):
+        x, B, A, idx, vals = mk(11, 40, 6, 24, 1, 0.05)
+        assert_close(
+            sl.sl_matmul(x, B, A, idx, vals, 1.0, bm=8, bd=8, bp=8),
+            ref.sl_linear(x, B, A, jnp.asarray(idx), vals, 1.0),
+        )
+
+    def test_reduction_across_many_d_tiles(self):
+        x, B, A, idx, vals = mk(12, 128, 8, 16, 4, 0.02)
+        assert_close(
+            sl.sl_matmul(x, B, A, idx, vals, 1.0, bm=4, bd=16, bp=16),
+            ref.sl_linear(x, B, A, jnp.asarray(idx), vals, 1.0),
+            atol=5e-4,
+            rtol=5e-4,
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 20),
+        d=st.integers(4, 60),
+        r=st.integers(1, 10),
+        p=st.integers(4, 60),
+        delta=st.floats(0.01, 0.25),
+        seed=st.integers(0, 10_000),
+    )
+    def test_hypothesis_sweep(self, m, d, r, p, delta, seed):
+        x, B, A, idx, vals = mk(seed, d, r, p, m, delta)
+        assert_close(
+            sl.sl_matmul(x, B, A, idx, vals, 0.7, bm=8, bd=16, bp=16),
+            ref.sl_linear(x, B, A, jnp.asarray(idx), vals, 0.7),
+            atol=5e-4,
+            rtol=5e-4,
+        )
+
+
+# ---------------------------------------------------------------- gradients
+
+
+class TestGradients:
+    def _check(self, seed, d, r, p, m, delta, use_pallas):
+        x, B, A, idx, vals = mk(seed, d, r, p, m, delta)
+        scale = 0.4
+        f = sl.make_sl_linear(idx, p, scale, use_pallas=use_pallas)
+
+        def loss(x, B, A, vals):
+            return jnp.sum(jnp.tanh(f(x, B, A, vals)))
+
+        def loss_ref(x, B, A, vals):
+            return jnp.sum(
+                jnp.tanh(ref.sl_linear(x, B, A, jnp.asarray(idx), vals, scale))
+            )
+
+        g = jax.grad(loss, argnums=(0, 1, 2, 3))(x, B, A, vals)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x, B, A, vals)
+        for a, b in zip(g, gr):
+            assert_close(a, b, atol=1e-3, rtol=1e-3)
+
+    def test_vjp_pallas(self):
+        self._check(20, 32, 4, 40, 6, 0.05, True)
+
+    def test_vjp_jnp_path(self):
+        self._check(21, 32, 4, 40, 6, 0.05, False)
+
+    def test_vjp_uneven(self):
+        self._check(22, 35, 5, 41, 7, 0.08, True)
+
+    def test_closed_form_matches_autodiff(self):
+        # eq. (2) formulas (ref.sl_linear_grads) vs jax.grad of the oracle.
+        x, B, A, idx, vals = mk(23, 28, 4, 36, 5, 0.06)
+        scale = 0.9
+        dy = jnp.ones((5, 36), jnp.float32)
+        dx, dB, dA, dv = ref.sl_linear_grads(
+            x, B, A, jnp.asarray(idx), vals, dy, scale
+        )
+
+        def loss(x, B, A, vals):
+            return jnp.sum(ref.sl_linear(x, B, A, jnp.asarray(idx), vals, scale))
+
+        gx, gB, gA, gv = jax.grad(loss, argnums=(0, 1, 2, 3))(x, B, A, vals)
+        assert_close(dx, gx)
+        assert_close(dB, gB)
+        assert_close(dA, gA)
+        assert_close(dv, gv)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        d=st.integers(8, 40),
+        r=st.integers(1, 8),
+        p=st.integers(8, 40),
+        m=st.integers(1, 8),
+        seed=st.integers(0, 1000),
+    )
+    def test_hypothesis_vjp(self, d, r, p, m, seed):
+        self._check(seed, d, r, p, m, 0.05, True)
+
+
+# ---------------------------------------------------------------- dvals kernel
+
+
+class TestDvals:
+    def test_chunked_equals_dense_gather(self):
+        x, B, A, idx, vals = mk(30, 24, 4, 32, 6, 0.15)
+        dy = jnp.asarray(
+            np.random.default_rng(31).normal(size=(6, 32)).astype(np.float32)
+        )
+        dv = sl.sl_dvals(x, dy, idx, 32, chunk=7)  # deliberately odd chunk
+        dW = x.T @ dy
+        expected = dW.reshape(-1)[jnp.asarray(idx)]
+        assert_close(dv, expected, atol=5e-4, rtol=5e-4)
+
+
+# ---------------------------------------------------------------- support utils
+
+
+class TestSupport:
+    def test_random_support_properties(self):
+        idx = ref.random_support(0, 50, 60, 0.1)
+        assert len(idx) == round(0.1 * 50 * 60)
+        assert len(np.unique(idx)) == len(idx)  # no duplicates
+        assert idx.min() >= 0 and idx.max() < 50 * 60
+        assert (np.diff(idx) > 0).all()  # sorted
+
+    def test_support_deterministic_by_seed(self):
+        a = ref.random_support(7, 30, 30, 0.05)
+        b = ref.random_support(7, 30, 30, 0.05)
+        c = ref.random_support(8, 30, 30, 0.05)
+        assert np.array_equal(a, b)
+        assert not np.array_equal(a, c)
+
+    def test_transpose_support_roundtrip(self):
+        d, p = 13, 17
+        idx = ref.random_support(3, d, p, 0.2)
+        t = sl._transpose_support(idx, d, p)
+        tt = sl._transpose_support(t, p, d)
+        assert np.array_equal(np.sort(tt), np.sort(idx))
+        # value pairing is preserved position-wise
+        assert np.array_equal(tt, idx)
+
+    def test_bucket_support_covers_all_entries(self):
+        d, p, bd, bp = 40, 56, 16, 16
+        gd, gp = -(-d // bd), -(-p // bp)
+        idx = ref.random_support(5, d, p, 0.1)
+        tl, tg, cap = sl.bucket_support(idx, p, bd, bp, gd, gp)
+        assert (tl >= -1).all()
+        n_placed = int((tl >= 0).sum())
+        assert n_placed == len(idx)
+        # every gather slot with a valid local index refers to a distinct val
+        gathered = tg[tl >= 0]
+        assert len(np.unique(gathered)) == len(idx)
+
+    def test_bucket_reconstructs_dense(self):
+        d, p, bd, bp = 24, 24, 8, 8
+        gd, gp = d // bd, p // bp
+        idx = ref.random_support(6, d, p, 0.15)
+        vals = np.random.default_rng(7).normal(size=len(idx)).astype(np.float32)
+        tl, tg, cap = sl.bucket_support(idx, p, bd, bp, gd, gp)
+        dense = np.zeros((d, p), np.float32)
+        for t in range(gd * gp):
+            ti, tj = t // gp, t % gp
+            for k in range(cap):
+                if tl[t, k] >= 0:
+                    rl, cl = tl[t, k] // bp, tl[t, k] % bp
+                    dense[ti * bd + rl, tj * bp + cl] += vals[tg[t, k]]
+        expected = np.zeros(d * p, np.float32)
+        np.add.at(expected, np.asarray(idx), vals)
+        np.testing.assert_allclose(dense, expected.reshape(d, p), atol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

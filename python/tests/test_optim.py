@@ -1,0 +1,172 @@
+"""Optimizer tests: Adam math, 8-bit quantization fidelity, GaLore
+projection (subspace-iteration vs true SVD subspace), LR schedule."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import optim
+
+
+def _quad_problem(n=16, seed=0):
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    params = {"w": jnp.zeros((n,), jnp.float32)}
+
+    def grads_of(p):
+        return {"w": p["w"] - target}
+
+    return params, grads_of, target
+
+
+class TestAdam:
+    def test_converges_on_quadratic(self):
+        params, grads_of, target = _quad_problem()
+        st_ = optim.adam_init({"w": (16,)})
+        for step in range(300):
+            params, st_ = optim.adam_update(
+                params, grads_of(params), st_, jnp.int32(step), 0.05
+            )
+        assert float(jnp.abs(params["w"] - target).max()) < 1e-2
+
+    def test_bias_correction_first_step(self):
+        # after one step with grad g, Adam moves ~lr*sign(g)
+        params = {"w": jnp.zeros((4,), jnp.float32)}
+        g = {"w": jnp.asarray([1.0, -2.0, 3.0, -4.0], jnp.float32)}
+        st_ = optim.adam_init({"w": (4,)})
+        p2, _ = optim.adam_update(params, g, st_, jnp.int32(0), 0.1)
+        np.testing.assert_allclose(
+            np.asarray(p2["w"]), -0.1 * np.sign(np.asarray(g["w"])), atol=1e-4
+        )
+
+    def test_weight_decay(self):
+        params = {"w": jnp.ones((4,), jnp.float32)}
+        g = {"w": jnp.zeros((4,), jnp.float32)}
+        st_ = optim.adam_init({"w": (4,)})
+        p2, _ = optim.adam_update(params, g, st_, jnp.int32(0), 0.1, wd=0.5)
+        assert float(p2["w"][0]) < 1.0
+
+
+class TestAdam8bit:
+    def test_quant_roundtrip_error(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(optim.QBLOCK * 4,)).astype(np.float32))
+        q, s = optim.quantize_blockwise(x)
+        xr = optim.dequantize_blockwise(q, s)
+        err = float(jnp.abs(x - xr).max())
+        scale = float(jnp.abs(x).max())
+        assert err <= scale / 127.0 + 1e-6
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 100), blocks=st.integers(1, 5))
+    def test_quant_roundtrip_hypothesis(self, seed, blocks):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(
+            rng.normal(size=(optim.QBLOCK * blocks,)).astype(np.float32) * 10
+        )
+        q, s = optim.quantize_blockwise(x)
+        xr = optim.dequantize_blockwise(q, s)
+        per_block_scale = np.abs(np.asarray(x)).reshape(blocks, -1).max(1)
+        err_b = np.abs(np.asarray(x - xr)).reshape(blocks, -1).max(1)
+        assert (err_b <= per_block_scale / 127.0 + 1e-6).all()
+
+    def test_converges_on_quadratic(self):
+        params, grads_of, target = _quad_problem(n=optim.QBLOCK)
+        st_ = optim.adam8bit_init({"w": (optim.QBLOCK,)})
+        for step in range(300):
+            params, st_ = optim.adam8bit_update(
+                params, grads_of(params), st_, jnp.int32(step), 0.05
+            )
+        # int8 moments: looser tolerance than f32 Adam
+        assert float(jnp.abs(params["w"] - target).max()) < 5e-2
+
+    def test_state_sizes(self):
+        st_ = optim.adam8bit_init({"w": (100,)})  # padded to one block
+        assert st_["w.mq"].shape == (optim.QBLOCK,)
+        assert st_["w.mq"].dtype == jnp.int8
+        assert st_["w.ms"].shape == (1,)
+
+
+class TestGaLore:
+    def test_newton_schulz_invsqrt(self):
+        rng = np.random.default_rng(2)
+        M = rng.normal(size=(6, 6)).astype(np.float32)
+        S = jnp.asarray(M @ M.T + 0.5 * np.eye(6, dtype=np.float32))
+        Z = optim.newton_schulz_invsqrt(S)
+        I_hat = Z @ S @ Z
+        np.testing.assert_allclose(np.asarray(I_hat), np.eye(6), atol=5e-2)
+
+    def test_orthonormalize(self):
+        rng = np.random.default_rng(3)
+        Y = jnp.asarray(rng.normal(size=(20, 5)).astype(np.float32))
+        Q = optim.orthonormalize(Y)
+        np.testing.assert_allclose(np.asarray(Q.T @ Q), np.eye(5), atol=5e-2)
+
+    def test_subspace_iteration_matches_svd(self):
+        # low-rank-dominated G: subspace iteration must find the top space
+        rng = np.random.default_rng(4)
+        U = np.linalg.qr(rng.normal(size=(30, 4)))[0]
+        V = np.linalg.qr(rng.normal(size=(20, 4)))[0]
+        G = (U * np.asarray([10, 8, 6, 4])) @ V.T + 0.01 * rng.normal(size=(30, 20))
+        G = jnp.asarray(G.astype(np.float32))
+        P0 = optim.orthonormalize(
+            jnp.asarray(rng.normal(size=(30, 4)).astype(np.float32))
+        )
+        P = optim.subspace_iter(G, P0, iters=4)
+        # principal angle check: ||U U^T P|| ~ 1 per column
+        overlap = np.linalg.norm(U.T @ np.asarray(P), axis=0)
+        assert (overlap > 0.98).all()
+
+    def test_targets_select_adapted_linears_only(self):
+        shapes = {
+            "layers.0.attn.q.w": (32, 32),
+            "embed.w": (256, 32),
+            "lnf.g": (32,),
+            "head.w": (32, 256),
+        }
+        t = optim.galore_targets(shapes, rank=8)
+        assert set(t) == {"layers.0.attn.q.w"}
+
+    def test_projected_state_is_small(self):
+        shapes = {"layers.0.attn.q.w": (64, 48)}
+        st_ = optim.galore_init(shapes, rank=8, seed=0)
+        assert st_["layers.0.attn.q.w.P"].shape == (48, 8)  # right side (d>p)
+        assert st_["layers.0.attn.q.w.m"].shape == (64, 8)
+
+    def test_galore_update_reduces_loss(self):
+        rng = np.random.default_rng(5)
+        target = jnp.asarray(rng.normal(size=(32, 24)).astype(np.float32))
+        params = {"layers.0.mlp.up.w": jnp.zeros((32, 24), jnp.float32)}
+        st_ = optim.galore_init({"layers.0.mlp.up.w": (32, 24)}, rank=8)
+        for step in range(200):
+            g = {"layers.0.mlp.up.w": params["layers.0.mlp.up.w"] - target}
+            params, st_ = optim.galore_update(
+                params, g, st_, jnp.int32(step), 0.05, rank=8, refresh_every=50
+            )
+        err = float(jnp.abs(params["layers.0.mlp.up.w"] - target).mean())
+        assert err < 0.5  # projected optimizer still makes clear progress
+
+
+class TestSchedule:
+    def test_warmup_then_decay(self):
+        lr0 = float(optim.lr_schedule(jnp.int32(0), 1.0, 10, 100))
+        lr_w = float(optim.lr_schedule(jnp.int32(5), 1.0, 10, 100))
+        lr_peak = float(optim.lr_schedule(jnp.int32(10), 1.0, 10, 100))
+        lr_end = float(optim.lr_schedule(jnp.int32(100), 1.0, 10, 100))
+        assert lr0 == 0.0
+        assert 0 < lr_w < lr_peak
+        assert abs(lr_peak - 1.0) < 1e-5
+        assert abs(lr_end - 0.1) < 1e-5
+
+    def test_monotone_decay_after_warmup(self):
+        vals = [
+            float(optim.lr_schedule(jnp.int32(s), 1.0, 10, 200))
+            for s in range(10, 200, 10)
+        ]
+        assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,12 @@
+//! Analysis tooling for the paper's Figures 2/5–11 and Proposition 1.
+//!
+//! Works off checkpoints (trained weights) or synthetic matrices, using
+//! the in-repo Jacobi SVD — no Python anywhere.
+
+pub mod prop1;
+pub mod residual;
+pub mod spectrum;
+
+pub use prop1::full_rank_probability;
+pub use residual::ResidualReport;
+pub use spectrum::SpectrumDecomp;

@@ -1,0 +1,67 @@
+//! Empirical verification of Proposition 1: for a uniform random support
+//! with δ = Ω(log n / n), BA + S is full rank with probability 1 - O(1/n).
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Monte-Carlo estimate of P[rank(BA + S) == n] over `trials` draws.
+pub fn full_rank_probability(n: usize, r: usize, delta: f64, trials: usize, seed: u64) -> f64 {
+    let rng = Rng::new(seed);
+    let mut full = 0usize;
+    for t in 0..trials {
+        let mut tr = rng.fork(t as u64 + 1);
+        let b = Matrix::random(n, r, &mut tr);
+        let a = Matrix::random(r, n, &mut tr);
+        let mut w = b.matmul(&a);
+        // support: each entry kept independently w.p. delta (the paper's
+        // Bernoulli model)
+        let mut idx = vec![];
+        let mut vals = vec![];
+        for i in 0..n * n {
+            if tr.f64() < delta {
+                idx.push(i as u32);
+                vals.push(tr.gaussian() as f32);
+            }
+        }
+        w.scatter_add(&idx, &vals);
+        if w.rank(1e-5) == n {
+            full += 1;
+        }
+    }
+    full as f64 / trials as f64
+}
+
+/// The paper's threshold: δ* = 2 log n / n.
+pub fn critical_delta(n: usize) -> f64 {
+    2.0 * (n as f64).ln() / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn above_threshold_is_full_rank_whp() {
+        let n = 24;
+        let delta = 2.0 * critical_delta(n); // comfortably above
+        let p = full_rank_probability(n, 2, delta, 20, 0);
+        assert!(p >= 0.9, "p = {p}");
+    }
+
+    #[test]
+    fn far_below_threshold_is_rank_deficient() {
+        let n = 24;
+        // essentially no sparse entries: rank ≈ r << n
+        let p = full_rank_probability(n, 2, 0.001, 10, 1);
+        assert!(p <= 0.2, "p = {p}");
+    }
+
+    #[test]
+    fn probability_increases_with_delta() {
+        let n = 20;
+        let lo = full_rank_probability(n, 2, 0.02, 15, 2);
+        let hi = full_rank_probability(n, 2, 0.5, 15, 2);
+        assert!(hi >= lo, "hi {hi} lo {lo}");
+        assert!(hi >= 0.95);
+    }
+}

@@ -1,0 +1,143 @@
+//! Mini-criterion: the bench harness used by every `benches/` binary
+//! (the vendored crate set has no criterion).
+//!
+//! Provides warmup + timed iterations with mean/σ/min, a Markdown-ish
+//! table printer so each bench binary prints the same rows/series as the
+//! paper's table or figure, and CSV export for the figure-shaped outputs.
+
+use std::time::Instant;
+
+use crate::coordinator::metrics::{stats, Stats};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub secs: Stats,
+}
+
+impl BenchResult {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.secs.mean * 1e3
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), iters, secs: stats(&samples) }
+}
+
+/// Fixed-width table printer: paper-style rows.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep);
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",") + "\n";
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: &str) -> anyhow::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        println!("[table saved to {path}]");
+        Ok(())
+    }
+}
+
+/// Format a float with sensible precision for table cells.
+pub fn fmt(v: f64, digits: usize) -> String {
+    format!("{:.*}", digits, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut acc = 0u64;
+        let r = bench("spin", 1, 5, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.secs.mean > 0.0);
+        assert!(r.secs.min <= r.secs.mean);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("Demo", &["method", "ppl"]);
+        t.row(vec!["sltrain".into(), "34.15".into()]);
+        t.row(vec!["full".into(), "34.06".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("method,ppl"));
+        assert!(csv.lines().count() == 3);
+        t.print(); // should not panic
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,208 @@
+//! Model / training configuration presets, mirroring `python/compile/configs.py`.
+//!
+//! The rust side needs the architectural shapes independently of the
+//! artifacts for two reasons: the Appendix-F memory estimator (which also
+//! covers the analytic-only `spec7b` and the paper's true 60M..1B dims),
+//! and sanity-checking manifests against expectations.
+
+use crate::util::json::Json;
+
+pub const METHODS: [&str; 5] = ["full", "lowrank", "sltrain", "relora", "galore"];
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelPreset {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub rank: usize,
+    pub delta: f64,
+    pub alpha: f64,
+    pub d_ff: usize,
+}
+
+/// LLaMA SwiGLU hidden size: 2/3 * 4d rounded up to a multiple of 64.
+fn ff(d: usize) -> usize {
+    ((8 * d / 3) + 63) / 64 * 64
+}
+
+impl ModelPreset {
+    fn new(
+        name: &str, vocab: usize, d: usize, layers: usize, heads: usize,
+        seq: usize, rank: usize, delta: f64, alpha: f64, d_ff: usize,
+    ) -> Self {
+        ModelPreset {
+            name: name.into(),
+            vocab,
+            d_model: d,
+            n_layers: layers,
+            n_heads: heads,
+            seq_len: seq,
+            rank,
+            delta,
+            alpha,
+            d_ff: if d_ff == 0 { ff(d) } else { d_ff },
+        }
+    }
+
+    /// All adapted linears as (path, d_in, d_out) — must match
+    /// `model._linear_paths` in python exactly.
+    pub fn linear_paths(&self) -> Vec<(String, usize, usize)> {
+        let mut out = vec![];
+        for i in 0..self.n_layers {
+            for nm in ["q", "k", "v", "o"] {
+                out.push((format!("layers.{i}.attn.{nm}"), self.d_model, self.d_model));
+            }
+            out.push((format!("layers.{i}.mlp.gate"), self.d_model, self.d_ff));
+            out.push((format!("layers.{i}.mlp.up"), self.d_model, self.d_ff));
+            out.push((format!("layers.{i}.mlp.down"), self.d_ff, self.d_model));
+        }
+        out
+    }
+
+    /// Parameters outside the adapted linears (embed, head, norms) —
+    /// always trained full-rank (paper §5.1).
+    pub fn base_params(&self) -> usize {
+        let embed = self.vocab * self.d_model;
+        let head = self.d_model * self.vocab;
+        let norms = (2 * self.n_layers + 1) * self.d_model;
+        embed + head + norms
+    }
+
+    pub fn nnz(&self, d_in: usize, d_out: usize) -> usize {
+        ((self.delta * d_in as f64 * d_out as f64).round() as usize).max(1)
+    }
+
+    /// Trainable parameter count per method (paper Table 2 "Param").
+    pub fn param_count(&self, method: &str) -> usize {
+        let base = self.base_params();
+        let linears = self.linear_paths();
+        let adapted: usize = linears
+            .iter()
+            .map(|(_, din, dout)| match method {
+                "full" | "galore" => din * dout,
+                "lowrank" => (din + dout) * self.rank,
+                "relora" => din * dout + (din + dout) * self.rank,
+                "sltrain" => (din + dout) * self.rank + self.nnz(*din, *dout),
+                _ => panic!("unknown method {method}"),
+            })
+            .sum();
+        base + adapted
+    }
+
+    pub fn from_manifest(man: &Json) -> anyhow::Result<Self> {
+        let c = man.req("config")?;
+        let get = |k: &str| -> anyhow::Result<f64> {
+            c.req(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("bad {k}"))
+        };
+        Ok(ModelPreset {
+            name: c.req("name")?.as_str().unwrap_or("?").to_string(),
+            vocab: get("vocab")? as usize,
+            d_model: get("d_model")? as usize,
+            n_layers: get("n_layers")? as usize,
+            n_heads: get("n_heads")? as usize,
+            seq_len: get("seq_len")? as usize,
+            rank: get("rank")? as usize,
+            delta: get("delta")?,
+            alpha: get("alpha")?,
+            d_ff: get("d_ff")? as usize,
+        })
+    }
+}
+
+/// The scaled presets (trained on this testbed) plus the paper's exact
+/// dimensions (analytic memory rows). Keep in sync with configs.py.
+pub fn preset(name: &str) -> Option<ModelPreset> {
+    let p = match name {
+        "tiny" => ModelPreset::new("tiny", 256, 64, 2, 2, 64, 16, 0.03, 32.0, 0),
+        "tiny2" => ModelPreset::new("tiny2", 512, 96, 3, 4, 64, 24, 0.03, 32.0, 0),
+        "s60m" => ModelPreset::new("s60m", 4096, 192, 4, 4, 128, 48, 0.03, 32.0, 0),
+        "s130m" => ModelPreset::new("s130m", 4096, 256, 6, 8, 128, 64, 0.03, 16.0, 0),
+        "s350m" => ModelPreset::new("s350m", 8192, 384, 8, 8, 192, 96, 0.03, 16.0, 0),
+        "s1b" => ModelPreset::new("s1b", 8192, 512, 10, 8, 256, 128, 0.03, 8.0, 0),
+        "e2e100m" => ModelPreset::new("e2e100m", 24576, 640, 14, 10, 256, 160, 0.03, 16.0, 0),
+        "spec7b" => {
+            ModelPreset::new("spec7b", 32000, 4096, 32, 32, 2048, 1024, 0.05, 8.0, 11008)
+        }
+        // the paper's ACTUAL training dims (for Appendix-F estimator rows)
+        "paper60m" => ModelPreset::new("paper60m", 32000, 512, 8, 8, 1024, 128, 0.03, 32.0, 1376),
+        "paper130m" => ModelPreset::new("paper130m", 32000, 768, 12, 12, 1024, 256, 0.03, 16.0, 2048),
+        "paper350m" => ModelPreset::new("paper350m", 32000, 1024, 24, 16, 1024, 256, 0.03, 16.0, 2736),
+        "paper1b" => ModelPreset::new("paper1b", 32000, 2048, 24, 32, 1024, 512, 0.03, 8.0, 5461),
+        _ => return None,
+    };
+    Some(p)
+}
+
+pub fn all_scaled() -> Vec<&'static str> {
+    vec!["tiny", "tiny2", "s60m", "s130m", "s350m", "s1b"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for n in ["tiny", "s60m", "s130m", "s350m", "s1b", "e2e100m", "spec7b"] {
+            assert!(preset(n).is_some(), "{n}");
+        }
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn param_ordering_matches_paper() {
+        // Table 2 ordering: lowrank < sltrain < full < relora; galore == full
+        for n in all_scaled() {
+            let p = preset(n).unwrap();
+            let c = |m: &str| p.param_count(m);
+            assert!(c("lowrank") < c("sltrain"), "{n}");
+            assert!(c("sltrain") < c("full"), "{n}");
+            assert!(c("full") < c("relora"), "{n}");
+            assert_eq!(c("full"), c("galore"), "{n}");
+        }
+    }
+
+    #[test]
+    fn sltrain_overhead_is_exactly_nnz() {
+        let p = preset("s60m").unwrap();
+        let extra = p.param_count("sltrain") - p.param_count("lowrank");
+        let expect: usize =
+            p.linear_paths().iter().map(|(_, i, o)| p.nnz(*i, *o)).sum();
+        assert_eq!(extra, expect);
+    }
+
+    #[test]
+    fn paper_dims_param_counts_are_plausible() {
+        // the paper reports 58.2M (60M), 134.11M, 367.97M, 1339.08M full-rank
+        let cases = [
+            ("paper60m", 58.2e6, 0.10),
+            ("paper130m", 134.11e6, 0.10),
+            ("paper350m", 367.97e6, 0.10),
+            ("paper1b", 1339.08e6, 0.10),
+        ];
+        for (name, expect, tol) in cases {
+            let p = preset(name).unwrap();
+            let got = p.param_count("full") as f64;
+            let rel = (got - expect).abs() / expect;
+            assert!(rel < tol, "{name}: got {got:.3e}, paper {expect:.3e}, rel {rel:.3}");
+        }
+    }
+
+    #[test]
+    fn e2e_preset_is_about_100m() {
+        let p = preset("e2e100m").unwrap();
+        let n = p.param_count("full") as f64;
+        assert!((80e6..130e6).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn ff_multiple_of_64() {
+        for d in [64, 192, 640, 1000] {
+            assert_eq!(ff(d) % 64, 0);
+            assert!(ff(d) >= 8 * d / 3);
+        }
+    }
+}

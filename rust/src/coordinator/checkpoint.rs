@@ -1,0 +1,224 @@
+//! Binary checkpoints: params + optimizer state + step counter.
+//!
+//! Format: `SLTCKPT1` magic, u64 header length, JSON header describing
+//! each tensor (name, shape, dtype, byte offset/length), then raw
+//! little-endian tensor data. Self-describing, so `analyze` subcommands
+//! can load checkpoints without the original manifest.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{lit_f32, lit_i32, Dtype, State};
+use crate::util::json::{num, obj, s, Json};
+
+const MAGIC: &[u8; 8] = b"SLTCKPT1";
+
+pub struct Checkpoint {
+    pub step: usize,
+    /// name -> (shape, dtype, raw bytes)
+    pub tensors: BTreeMap<String, (Vec<usize>, Dtype, Vec<u8>)>,
+}
+
+impl Checkpoint {
+    /// Snapshot the named tensors out of a runtime state.
+    pub fn from_state(state: &State, names: &[(String, Vec<usize>, Dtype)], step: usize) -> Result<Checkpoint> {
+        let mut tensors = BTreeMap::new();
+        for (name, shape, dtype) in names {
+            let lit = state.get(name)?;
+            let bytes = match dtype {
+                Dtype::F32 => {
+                    let v = lit.to_vec::<f32>().map_err(|e| anyhow!("{name}: {e}"))?;
+                    v.iter().flat_map(|x| x.to_le_bytes()).collect::<Vec<u8>>()
+                }
+                Dtype::I32 => {
+                    let v = lit.to_vec::<i32>().map_err(|e| anyhow!("{name}: {e}"))?;
+                    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+                }
+                Dtype::U32 => {
+                    let v = lit.to_vec::<u32>().map_err(|e| anyhow!("{name}: {e}"))?;
+                    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+                }
+                Dtype::I8 => {
+                    let v = lit.to_vec::<i8>().map_err(|e| anyhow!("{name}: {e}"))?;
+                    v.iter().map(|&x| x as u8).collect()
+                }
+            };
+            tensors.insert(name.clone(), (shape.clone(), *dtype, bytes));
+        }
+        Ok(Checkpoint { step, tensors })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut offset = 0u64;
+        let mut entries: Vec<Json> = vec![];
+        for (name, (shape, dtype, bytes)) in &self.tensors {
+            entries.push(obj(vec![
+                ("name", s(name)),
+                (
+                    "shape",
+                    Json::Arr(shape.iter().map(|&d| num(d as f64)).collect()),
+                ),
+                ("dtype", s(dtype_name(*dtype))),
+                ("offset", num(offset as f64)),
+                ("len", num(bytes.len() as f64)),
+            ]));
+            offset += bytes.len() as u64;
+        }
+        let header = obj(vec![
+            ("step", num(self.step as f64)),
+            ("tensors", Json::Arr(entries)),
+        ])
+        .to_string();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, (_, _, bytes)) in &self.tensors {
+            f.write_all(bytes)?;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let data = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if data.len() < 16 || &data[..8] != MAGIC {
+            bail!("{path:?}: not a SLTCKPT1 checkpoint");
+        }
+        let hlen = u64::from_le_bytes(data[8..16].try_into()?) as usize;
+        let header = std::str::from_utf8(&data[16..16 + hlen])?;
+        let v = Json::parse(header).map_err(|e| anyhow!("checkpoint header: {e}"))?;
+        let step = v.req("step")?.as_usize().unwrap_or(0);
+        let base = 16 + hlen;
+        let mut tensors = BTreeMap::new();
+        for e in v.req("tensors")?.as_arr().unwrap_or(&[]) {
+            let name = e.req("name")?.as_str().unwrap_or_default().to_string();
+            let shape: Vec<usize> = e
+                .req("shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            let dtype = Dtype::parse(e.req("dtype")?.as_str().unwrap_or("f32"))?;
+            let off = base + e.req("offset")?.as_usize().unwrap_or(0);
+            let len = e.req("len")?.as_usize().unwrap_or(0);
+            let bytes = data
+                .get(off..off + len)
+                .ok_or_else(|| anyhow!("checkpoint truncated at {name}"))?
+                .to_vec();
+            tensors.insert(name, (shape, dtype, bytes));
+        }
+        Ok(Checkpoint { step, tensors })
+    }
+
+    /// Materialize all tensors back into a runtime state.
+    pub fn restore_into(&self, state: &mut State) -> Result<()> {
+        for (name, (shape, dtype, bytes)) in &self.tensors {
+            match dtype {
+                Dtype::F32 => {
+                    let v: Vec<f32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    state.put(name, lit_f32(shape, &v)?);
+                }
+                Dtype::I32 | Dtype::U32 => {
+                    let v: Vec<i32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    state.put(name, lit_i32(shape, &v)?);
+                }
+                Dtype::I8 => {
+                    let v: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
+                    state.put(name, crate::runtime::lit_i8(shape, &v)?);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fetch one f32 tensor (analysis path).
+    pub fn tensor_f32(&self, name: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        let (shape, dtype, bytes) = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("checkpoint has no tensor {name:?}"))?;
+        if *dtype != Dtype::F32 {
+            bail!("{name} is not f32");
+        }
+        let v = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok((shape.clone(), v))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+fn dtype_name(d: Dtype) -> &'static str {
+    match d {
+        Dtype::F32 => "f32",
+        Dtype::I32 => "i32",
+        Dtype::I8 => "i8",
+        Dtype::U32 => "u32",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut state = State::new();
+        state.put("w", lit_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap());
+        state.put("idx", lit_i32(&[3], &[7, 8, 9]).unwrap());
+        let names = vec![
+            ("w".to_string(), vec![2, 3], Dtype::F32),
+            ("idx".to_string(), vec![3], Dtype::I32),
+        ];
+        let ck = Checkpoint::from_state(&state, &names, 42).unwrap();
+        let dir = std::env::temp_dir().join(format!("sltrain-ckpt-{}", std::process::id()));
+        let path = dir.join("test.ckpt");
+        ck.save(&path).unwrap();
+
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 42);
+        let (shape, w) = loaded.tensor_f32("w").unwrap();
+        assert_eq!(shape, vec![2, 3]);
+        assert_eq!(w, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+
+        let mut restored = State::new();
+        loaded.restore_into(&mut restored).unwrap();
+        assert_eq!(restored.to_f32("w").unwrap(), w);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join(format!("sltrain-ckpt2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let state = State::new();
+        let names = vec![("nope".to_string(), vec![1], Dtype::F32)];
+        assert!(Checkpoint::from_state(&state, &names, 0).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Training metrics: loss curves, EMA smoothing, perplexity, throughput
+//! accounting, and summary statistics shared with the bench harness.
+
+/// Exponential moving average (the loss smoother used in log lines).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Ema {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+pub fn perplexity(mean_ce: f64) -> f64 {
+    mean_ce.exp()
+}
+
+/// Mean / stddev / min / max over a sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn stats(xs: &[f64]) -> Stats {
+    if xs.is_empty() {
+        return Stats { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    Stats {
+        n: xs.len(),
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Tokens/second meter with monotonic accounting.
+#[derive(Debug)]
+pub struct Throughput {
+    start: std::time::Instant,
+    tokens: u64,
+}
+
+impl Throughput {
+    pub fn start() -> Throughput {
+        Throughput { start: std::time::Instant::now(), tokens: 0 }
+    }
+
+    pub fn add_tokens(&mut self, n: u64) {
+        self.tokens += n;
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / dt
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Records (step, value) curves and serializes them to CSV.
+#[derive(Debug, Default, Clone)]
+pub struct Curve {
+    pub points: Vec<(usize, f64)>,
+}
+
+impl Curve {
+    pub fn push(&mut self, step: usize, v: f64) {
+        self.points.push((step, v));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn to_csv(&self, header: &str) -> String {
+        let mut out = format!("step,{header}\n");
+        for (s, v) in &self.points {
+            out.push_str(&format!("{s},{v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_converges_to_constant() {
+        let mut e = Ema::new(0.2);
+        for _ in 0..200 {
+            e.update(5.0);
+        }
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_first_value_passthrough() {
+        let mut e = Ema::new(0.1);
+        assert_eq!(e.update(3.0), 3.0);
+    }
+
+    #[test]
+    fn stats_known() {
+        let s = stats(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        let v: f64 = 256.0;
+        assert!((perplexity(v.ln()) - v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn curve_csv() {
+        let mut c = Curve::default();
+        c.push(0, 3.5);
+        c.push(10, 2.75);
+        let csv = c.to_csv("loss");
+        assert!(csv.starts_with("step,loss\n0,3.5\n"));
+        assert_eq!(c.last(), Some(2.75));
+    }
+}

@@ -1,0 +1,8 @@
+//! L3 coordination: training loop, checkpoints, metrics, ReLoRA restarts.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use trainer::{train, TrainConfig, TrainResult};

@@ -1,0 +1,236 @@
+//! The training coordinator: the L3 event loop.
+//!
+//! Owns the whole run: data pipeline feeding, train-step execution,
+//! ReLoRA restart scheduling (the paper's eq. 1 baseline), periodic
+//! held-out evaluation (perplexity), metric/JSONL emission, throughput
+//! accounting, and checkpointing. Python is nowhere in this loop — the
+//! compute is the AOT artifact, everything else is rust.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::checkpoint::Checkpoint;
+use super::metrics::{perplexity, Curve, Ema, Throughput};
+use crate::data::Pipeline;
+use crate::runtime::{Artifact, Dtype, Runtime, State};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::logging::MetricsWriter;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    /// ReLoRA restart period (ignored unless the artifact method is relora)
+    pub relora_every: usize,
+    pub seed: u32,
+    pub metrics_path: Option<PathBuf>,
+    pub checkpoint_path: Option<PathBuf>,
+    pub checkpoint_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            eval_every: 50,
+            eval_batches: 4,
+            log_every: 10,
+            relora_every: 100,
+            seed: 42,
+            metrics_path: None,
+            checkpoint_path: None,
+            checkpoint_every: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub train_curve: Curve,
+    pub eval_curve: Curve,
+    pub final_eval_loss: f64,
+    pub final_ppl: f64,
+    pub tokens_per_sec: f64,
+    pub wall_secs: f64,
+    pub peak_rss_bytes: u64,
+    pub n_params: usize,
+    pub relora_merges: usize,
+}
+
+/// Run a full pretraining job for one artifact.
+pub fn train(
+    rt: &Runtime,
+    art: &mut Artifact,
+    pipe: &mut Pipeline,
+    cfg: &TrainConfig,
+) -> Result<TrainResult> {
+    let batch = art.entry("train_step")?.batch;
+    let seq = art.manifest.seq_len();
+    let method = art.manifest.method.clone();
+
+    let mut state = art.init_state(rt, cfg.seed)?;
+    let valid_set = pipe.valid_set(cfg.eval_batches, batch, seq);
+
+    let mut metrics = match &cfg.metrics_path {
+        Some(p) => Some(MetricsWriter::create(p)?),
+        None => None,
+    };
+
+    let mut train_curve = Curve::default();
+    let mut eval_curve = Curve::default();
+    let mut ema = Ema::new(0.1);
+    let mut thr = Throughput::start();
+    let mut peak_rss = crate::runtime::current_rss_bytes();
+    let mut relora_merges = 0usize;
+
+    for step in 0..cfg.steps {
+        let tokens = pipe.train.next_batch(batch, seq);
+        let loss = art.train_step(rt, &mut state, step as i32, &tokens)? as f64;
+        thr.add_tokens((batch * seq) as u64);
+        let smooth = ema.update(loss);
+        train_curve.push(step, loss);
+        peak_rss = peak_rss.max(crate::runtime::current_rss_bytes());
+
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            crate::info!(
+                "step {step:>5} loss {loss:.4} (ema {smooth:.4}) {:.0} tok/s",
+                thr.tokens_per_sec()
+            );
+            if let Some(w) = metrics.as_mut() {
+                w.emit(obj(vec![
+                    ("kind", s("train")),
+                    ("step", num(step as f64)),
+                    ("loss", num(loss)),
+                    ("ema", num(smooth)),
+                    ("tok_s", num(thr.tokens_per_sec())),
+                ]))?;
+            }
+        }
+
+        // ReLoRA restarts: merge low-rank adaptors into W0 + reset moments
+        if method == "relora"
+            && cfg.relora_every > 0
+            && step > 0
+            && step % cfg.relora_every == 0
+        {
+            art.relora_merge(rt, &mut state, step as i32)?;
+            relora_merges += 1;
+            crate::info!("relora merge at step {step} (#{relora_merges})");
+        }
+
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let ev = eval(rt, art, &mut state, &valid_set)?;
+            eval_curve.push(step + 1, ev);
+            crate::info!("eval @ {:>5}: loss {ev:.4} ppl {:.2}", step + 1, perplexity(ev));
+            if let Some(w) = metrics.as_mut() {
+                w.emit(obj(vec![
+                    ("kind", s("eval")),
+                    ("step", num((step + 1) as f64)),
+                    ("loss", num(ev)),
+                    ("ppl", num(perplexity(ev))),
+                ]))?;
+            }
+        }
+
+        if cfg.checkpoint_every > 0
+            && (step + 1) % cfg.checkpoint_every == 0
+        {
+            if let Some(p) = &cfg.checkpoint_path {
+                save_checkpoint(art, &state, step + 1, p)?;
+            }
+        }
+    }
+
+    let final_eval_loss = match eval_curve.last() {
+        Some(v) => v,
+        None => eval(rt, art, &mut state, &valid_set)?,
+    };
+    if let Some(p) = &cfg.checkpoint_path {
+        save_checkpoint(art, &state, cfg.steps, p)?;
+    }
+
+    Ok(TrainResult {
+        train_curve,
+        eval_curve,
+        final_eval_loss,
+        final_ppl: perplexity(final_eval_loss),
+        tokens_per_sec: thr.tokens_per_sec(),
+        wall_secs: thr.elapsed_secs(),
+        peak_rss_bytes: peak_rss,
+        n_params: art.manifest.n_params,
+        relora_merges,
+    })
+}
+
+/// Mean eval loss over a fixed validation set.
+pub fn eval(
+    rt: &Runtime,
+    art: &mut Artifact,
+    state: &mut State,
+    valid_set: &[Vec<i32>],
+) -> Result<f64> {
+    let mut total = 0.0;
+    for batch in valid_set {
+        total += art.eval_loss(rt, state, batch)? as f64;
+    }
+    Ok(total / valid_set.len().max(1) as f64)
+}
+
+/// Persist params (+ supports for self-containment) to a checkpoint.
+pub fn save_checkpoint(
+    art: &Artifact,
+    state: &State,
+    step: usize,
+    path: &PathBuf,
+) -> Result<()> {
+    let mut names: Vec<(String, Vec<usize>, Dtype)> = art
+        .manifest
+        .params
+        .iter()
+        .map(|t| (t.name.clone(), t.shape.clone(), t.dtype))
+        .collect();
+    for t in &art.manifest.consts {
+        names.push((t.name.clone(), t.shape.clone(), t.dtype));
+    }
+    Checkpoint::from_state(state, &names, step)?.save(path)?;
+    crate::info!("checkpoint @ {step} -> {path:?}");
+    Ok(())
+}
+
+/// One-call wrapper used by the bench binaries: load artifact, build the
+/// standard pipeline, train `steps`, return the result.
+pub fn quick_train(
+    rt: &Runtime,
+    artifact_dir: &std::path::Path,
+    steps: usize,
+    data_seed: u64,
+) -> Result<(TrainResult, crate::runtime::Manifest)> {
+    let mut art = Artifact::load(artifact_dir)?;
+    let mut pipe = Pipeline::build(art.manifest.preset.vocab, data_seed);
+    let cfg = TrainConfig {
+        steps,
+        eval_every: 0,
+        eval_batches: 4,
+        log_every: 0,
+        ..Default::default()
+    };
+    let r = train(rt, &mut art, &mut pipe, &cfg)?;
+    Ok((r, art.manifest.clone()))
+}
+
+/// Emit a one-line experiment summary (used by the bench binaries).
+pub fn summary_json(tag: &str, r: &TrainResult) -> Json {
+    obj(vec![
+        ("tag", s(tag)),
+        ("final_eval_loss", num(r.final_eval_loss)),
+        ("ppl", num(r.final_ppl)),
+        ("tokens_per_sec", num(r.tokens_per_sec)),
+        ("wall_secs", num(r.wall_secs)),
+        ("peak_rss_mb", num(r.peak_rss_bytes as f64 / 1e6)),
+        ("n_params", num(r.n_params as f64)),
+        ("relora_merges", num(r.relora_merges as f64)),
+    ])
+}

@@ -1,0 +1,258 @@
+//! Byte-level BPE tokenizer: train merges on a corpus sample, then
+//! encode/decode streams. This is the substrate the paper takes for
+//! granted (C4 ships pre-tokenized with the T5/LLaMA vocab); we build it
+//! so the whole pipeline — raw text to token ids — exists in the repo.
+//!
+//! Training: greedy highest-frequency pair merging over a word-frequency
+//! table (the GPT-2 algorithm, word-bounded so merges never cross
+//! whitespace). Encoding: longest-match merges per word with a cache.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// merge ranks: (left, right) -> rank (lower = earlier = higher prio)
+    ranks: HashMap<(u32, u32), u32>,
+    /// token id -> byte sequence
+    pub vocab: Vec<Vec<u8>>,
+    /// special: document separator token id (newline)
+    pub eod: u32,
+}
+
+impl Bpe {
+    pub const BYTE_VOCAB: usize = 256;
+
+    /// Train to `vocab_size` tokens on `text`.
+    pub fn train(text: &str, vocab_size: usize) -> Bpe {
+        assert!(vocab_size >= Self::BYTE_VOCAB);
+        // word frequency table; words keep a leading space (GPT-2 style)
+        let mut word_freq: HashMap<Vec<u32>, usize> = HashMap::new();
+        for line in text.split('\n') {
+            for (i, w) in line.split_whitespace().enumerate() {
+                let mut bytes: Vec<u32> = Vec::with_capacity(w.len() + 1);
+                if i > 0 {
+                    bytes.push(b' ' as u32);
+                }
+                bytes.extend(w.as_bytes().iter().map(|&b| b as u32));
+                *word_freq.entry(bytes).or_insert(0) += 1;
+            }
+        }
+        let mut vocab: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut ranks = HashMap::new();
+        let mut words: Vec<(Vec<u32>, usize)> = word_freq.into_iter().collect();
+        words.sort(); // deterministic order
+
+        while vocab.len() < vocab_size {
+            // count pairs
+            let mut pair_counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for (w, f) in &words {
+                for pair in w.windows(2) {
+                    *pair_counts.entry((pair[0], pair[1])).or_insert(0) += f;
+                }
+            }
+            let Some((&best, &cnt)) = pair_counts
+                .iter()
+                .max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = vocab.len() as u32;
+            let mut merged_bytes = vocab[best.0 as usize].clone();
+            merged_bytes.extend_from_slice(&vocab[best.1 as usize]);
+            vocab.push(merged_bytes);
+            ranks.insert(best, new_id - Self::BYTE_VOCAB as u32);
+            // apply merge to all words
+            for (w, _) in &mut words {
+                let mut out = Vec::with_capacity(w.len());
+                let mut i = 0;
+                while i < w.len() {
+                    if i + 1 < w.len() && (w[i], w[i + 1]) == best {
+                        out.push(new_id);
+                        i += 2;
+                    } else {
+                        out.push(w[i]);
+                        i += 1;
+                    }
+                }
+                *w = out;
+            }
+        }
+        Bpe { ranks, vocab, eod: b'\n' as u32 }
+    }
+
+    /// Encode text to token ids (applies merges in rank order per word).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 3);
+        for (li, line) in text.split('\n').enumerate() {
+            if li > 0 {
+                out.push(self.eod);
+            }
+            for (i, w) in line.split_whitespace().enumerate() {
+                let mut toks: Vec<u32> = Vec::with_capacity(w.len() + 1);
+                if i > 0 {
+                    toks.push(b' ' as u32);
+                }
+                toks.extend(w.as_bytes().iter().map(|&b| b as u32));
+                self.merge_word(&mut toks);
+                out.extend_from_slice(&toks);
+            }
+        }
+        out
+    }
+
+    fn merge_word(&self, toks: &mut Vec<u32>) {
+        loop {
+            // find the lowest-rank applicable pair
+            let mut best: Option<(u32, usize)> = None;
+            for i in 0..toks.len().saturating_sub(1) {
+                if let Some(&r) = self.ranks.get(&(toks[i], toks[i + 1])) {
+                    if best.map(|(br, _)| r < br).unwrap_or(true) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let Some((r, i)) = best else { break };
+            let merged = Self::BYTE_VOCAB as u32 + r;
+            toks.splice(i..i + 2, [merged]);
+        }
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id == self.eod {
+                bytes.push(b'\n');
+            } else {
+                bytes.extend_from_slice(&self.vocab[id as usize]);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    // ---- persistence (simple binary format) --------------------------
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut out: Vec<u8> = Vec::new();
+        out.extend((self.vocab.len() as u32).to_le_bytes());
+        for v in &self.vocab {
+            out.extend((v.len() as u32).to_le_bytes());
+            out.extend_from_slice(v);
+        }
+        out.extend((self.ranks.len() as u32).to_le_bytes());
+        let mut pairs: Vec<_> = self.ranks.iter().collect();
+        pairs.sort();
+        for (&(a, b), &r) in pairs {
+            out.extend(a.to_le_bytes());
+            out.extend(b.to_le_bytes());
+            out.extend(r.to_le_bytes());
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Bpe> {
+        let data = std::fs::read(path)?;
+        let mut i = 0usize;
+        let rd_u32 = |data: &[u8], i: &mut usize| -> anyhow::Result<u32> {
+            let v = u32::from_le_bytes(
+                data.get(*i..*i + 4)
+                    .ok_or_else(|| anyhow::anyhow!("truncated bpe file"))?
+                    .try_into()?,
+            );
+            *i += 4;
+            Ok(v)
+        };
+        let nv = rd_u32(&data, &mut i)? as usize;
+        let mut vocab = Vec::with_capacity(nv);
+        for _ in 0..nv {
+            let len = rd_u32(&data, &mut i)? as usize;
+            let v = data
+                .get(i..i + len)
+                .ok_or_else(|| anyhow::anyhow!("truncated bpe file"))?
+                .to_vec();
+            i += len;
+            vocab.push(v);
+        }
+        let nr = rd_u32(&data, &mut i)? as usize;
+        let mut ranks = HashMap::with_capacity(nr);
+        for _ in 0..nr {
+            let a = rd_u32(&data, &mut i)?;
+            let b = rd_u32(&data, &mut i)?;
+            let r = rd_u32(&data, &mut i)?;
+            ranks.insert((a, b), r);
+        }
+        Ok(Bpe { ranks, vocab, eod: b'\n' as u32 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "the cat sat on the mat\nthe cat ate the rat\nthe bat and the cat\n";
+
+    #[test]
+    fn roundtrip_exact() {
+        let bpe = Bpe::train(SAMPLE, 300);
+        let ids = bpe.encode(SAMPLE);
+        // decode normalizes whitespace runs to single spaces (split_whitespace)
+        let decoded = bpe.decode(&ids);
+        let norm = |s: &str| {
+            s.split('\n')
+                .map(|l| l.split_whitespace().collect::<Vec<_>>().join(" "))
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(norm(&decoded), norm(SAMPLE));
+    }
+
+    #[test]
+    fn merges_shrink_token_count() {
+        let base = Bpe::train(SAMPLE, 256); // no merges
+        let trained = Bpe::train(SAMPLE, 300);
+        let n_base = base.encode(SAMPLE).len();
+        let n_trained = trained.encode(SAMPLE).len();
+        assert!(n_trained < n_base, "{n_trained} !< {n_base}");
+    }
+
+    #[test]
+    fn vocab_size_respected() {
+        let bpe = Bpe::train(SAMPLE, 280);
+        assert!(bpe.vocab_size() <= 280);
+        assert!(bpe.vocab_size() > 256); // learned something
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let bpe = Bpe::train(SAMPLE, 300);
+        let ids = bpe.encode("the cat sat where no rat sat");
+        assert!(ids.iter().all(|&id| (id as usize) < bpe.vocab_size()));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let bpe = Bpe::train(SAMPLE, 290);
+        let dir = std::env::temp_dir().join(format!("sltrain-bpe-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tok.bin");
+        bpe.save(&path).unwrap();
+        let loaded = Bpe::load(&path).unwrap();
+        assert_eq!(bpe.encode(SAMPLE), loaded.encode(SAMPLE));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn handles_unseen_text() {
+        let bpe = Bpe::train(SAMPLE, 300);
+        let ids = bpe.encode("zzz qqq unseen words");
+        assert!(!ids.is_empty());
+        assert!(bpe.decode(&ids).contains("unseen"));
+    }
+}

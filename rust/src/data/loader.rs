@@ -1,0 +1,154 @@
+//! Deterministic token stream + batcher.
+//!
+//! The paper pretrains "without data repetition": the loader exposes an
+//! unbounded stream of fresh synthetic tokens, sharded so concurrent
+//! consumers (or multi-process runs) never see overlapping data, and a
+//! `Batcher` that packs the stream into `[batch, seq]` i32 matrices for
+//! the train-step artifact. Also supports a fixed held-out validation
+//! split, regenerated identically across runs for comparable perplexity.
+
+use super::bpe::Bpe;
+use super::synth::{CorpusConfig, SynthCorpus};
+
+/// Streams tokens generated on the fly: corpus text -> BPE ids, chunked
+/// so memory stays bounded regardless of how many tokens are consumed.
+pub struct TokenStream {
+    corpus: SynthCorpus,
+    bpe: Bpe,
+    shard: u64,
+    chunk_words: usize,
+    buf: Vec<u32>,
+    pos: usize,
+    chunk_idx: u64,
+    vocab_cap: u32,
+    pub tokens_served: u64,
+}
+
+impl TokenStream {
+    pub fn new(corpus: SynthCorpus, bpe: Bpe, shard: u64, vocab_cap: usize) -> Self {
+        TokenStream {
+            corpus,
+            bpe,
+            shard,
+            chunk_words: 8192,
+            buf: vec![],
+            pos: 0,
+            chunk_idx: 0,
+            vocab_cap: vocab_cap as u32,
+            tokens_served: 0,
+        }
+    }
+
+    fn refill(&mut self) {
+        // stream id mixes shard and chunk so shards never overlap
+        let stream_seed = self.shard.wrapping_mul(0x1_0000_0000) + self.chunk_idx;
+        let text = self.corpus.generate_text(self.chunk_words, stream_seed);
+        self.buf = self
+            .bpe
+            .encode(&text)
+            .into_iter()
+            .map(|t| t.min(self.vocab_cap - 1))
+            .collect();
+        self.pos = 0;
+        self.chunk_idx += 1;
+    }
+
+    pub fn next_token(&mut self) -> u32 {
+        if self.pos >= self.buf.len() {
+            self.refill();
+        }
+        let t = self.buf[self.pos];
+        self.pos += 1;
+        self.tokens_served += 1;
+        t
+    }
+
+    /// Fill a [batch, seq] row-major i32 buffer.
+    pub fn next_batch(&mut self, batch: usize, seq: usize) -> Vec<i32> {
+        (0..batch * seq).map(|_| self.next_token() as i32).collect()
+    }
+}
+
+/// Builds the standard (train, valid) pair used across all experiments:
+/// one corpus, one tokenizer trained on a held-out sample, train shard 0+
+/// and a DISJOINT validation shard (shard id u64::MAX/2).
+pub struct Pipeline {
+    pub train: TokenStream,
+    pub valid: TokenStream,
+    pub bpe_vocab: usize,
+}
+
+impl Pipeline {
+    pub fn build(vocab_cap: usize, seed: u64) -> Pipeline {
+        let cfg = CorpusConfig { seed, ..Default::default() };
+        let corpus = SynthCorpus::new(cfg);
+        // train the tokenizer on a fixed sample (build-time analog of the
+        // pretrained LLaMA tokenizer); target vocab = model vocab
+        let sample = corpus.generate_text(40_000, u64::MAX);
+        let bpe = Bpe::train(&sample, vocab_cap.min(8192).max(256));
+        let corpus2 = SynthCorpus::new(CorpusConfig { seed, ..Default::default() });
+        let train = TokenStream::new(corpus, bpe.clone(), 0, vocab_cap);
+        let valid = TokenStream::new(corpus2, bpe.clone(), u64::MAX / 2, vocab_cap);
+        Pipeline { train, valid, bpe_vocab: bpe.vocab_size() }
+    }
+
+    /// A fixed validation set: `n_batches` of [batch, seq], always equal
+    /// across runs (fresh stream from the valid shard).
+    pub fn valid_set(&mut self, n_batches: usize, batch: usize, seq: usize) -> Vec<Vec<i32>> {
+        (0..n_batches).map(|_| self.valid.next_batch(batch, seq)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pipeline() -> Pipeline {
+        Pipeline::build(256, 7)
+    }
+
+    #[test]
+    fn batches_have_right_shape_and_range() {
+        let mut p = pipeline();
+        let b = p.train.next_batch(4, 32);
+        assert_eq!(b.len(), 4 * 32);
+        assert!(b.iter().all(|&t| t >= 0 && (t as usize) < 256));
+    }
+
+    #[test]
+    fn stream_is_deterministic() {
+        let mut p1 = pipeline();
+        let mut p2 = pipeline();
+        assert_eq!(p1.train.next_batch(2, 16), p2.train.next_batch(2, 16));
+    }
+
+    #[test]
+    fn no_repetition_across_batches() {
+        let mut p = pipeline();
+        let a = p.train.next_batch(2, 64);
+        let b = p.train.next_batch(2, 64);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn shards_are_disjoint_streams() {
+        let mut p = pipeline();
+        let train_b = p.train.next_batch(2, 64);
+        let valid_b = p.valid.next_batch(2, 64);
+        assert_ne!(train_b, valid_b);
+    }
+
+    #[test]
+    fn valid_set_is_stable() {
+        let mut p1 = pipeline();
+        let mut p2 = pipeline();
+        assert_eq!(p1.valid_set(3, 2, 16), p2.valid_set(3, 2, 16));
+    }
+
+    #[test]
+    fn tokens_served_counts() {
+        let mut p = pipeline();
+        p.train.next_batch(2, 10);
+        assert_eq!(p.train.tokens_served, 20);
+    }
+}

@@ -1,0 +1,10 @@
+//! Data pipeline: synthetic C4 stand-in, byte-level BPE tokenizer,
+//! deterministic sharded token streams (see DESIGN.md §3 substitutions).
+
+pub mod bpe;
+pub mod loader;
+pub mod synth;
+
+pub use bpe::Bpe;
+pub use loader::{Pipeline, TokenStream};
+pub use synth::{CorpusConfig, SynthCorpus};

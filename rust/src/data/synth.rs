@@ -1,0 +1,185 @@
+//! Synthetic C4 stand-in: a Zipfian–Markov word-level corpus generator.
+//!
+//! The paper pretrains on C4 (web text). What the reproduction needs from
+//! the data is its *statistics*: a Zipfian unigram distribution, strong
+//! local (bigram) structure so models can actually reduce loss, document
+//! boundaries, and an unbounded no-repeat stream. We synthesize exactly
+//! that: a random vocabulary of letter-words, a sparse first-order Markov
+//! chain over them with Zipfian stationary behaviour, and documents of
+//! geometric length separated by a delimiter. Deterministic per seed.
+
+use crate::util::rng::{Rng, Zipf};
+
+pub struct CorpusConfig {
+    pub n_words: usize,     // distinct word types
+    pub zipf_s: f64,        // unigram skew (natural text ~1.0-1.2)
+    pub branch: usize,      // successors per word in the Markov chain
+    pub mean_doc_len: usize, // words per document (geometric)
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig { n_words: 2000, zipf_s: 1.07, branch: 24, mean_doc_len: 120, seed: 42 }
+    }
+}
+
+pub struct SynthCorpus {
+    words: Vec<String>,
+    /// chain[w] = list of (successor, weight)
+    chain: Vec<Vec<(usize, f64)>>,
+    zipf: Zipf,
+    cfg: CorpusConfig,
+}
+
+impl SynthCorpus {
+    pub fn new(cfg: CorpusConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed).fork(0xC0);
+        // vocabulary of distinct pronounceable-ish words
+        let mut words = Vec::with_capacity(cfg.n_words);
+        let mut seen = std::collections::HashSet::new();
+        let consonants = b"bcdfghjklmnprstvwz";
+        let vowels = b"aeiou";
+        while words.len() < cfg.n_words {
+            let syll = 1 + rng.below(3) as usize;
+            let mut w = String::new();
+            for _ in 0..syll {
+                w.push(consonants[rng.below(consonants.len() as u64) as usize] as char);
+                w.push(vowels[rng.below(vowels.len() as u64) as usize] as char);
+                if rng.f64() < 0.35 {
+                    w.push(consonants[rng.below(consonants.len() as u64) as usize] as char);
+                }
+            }
+            if seen.insert(w.clone()) {
+                words.push(w);
+            }
+        }
+        // sparse Markov chain: each word has `branch` preferred successors,
+        // drawn Zipf-biased so frequent words stay frequent (stationary
+        // distribution inherits the skew)
+        let zipf = Zipf::new(cfg.n_words, cfg.zipf_s);
+        let mut chain = Vec::with_capacity(cfg.n_words);
+        for _ in 0..cfg.n_words {
+            let mut succ = Vec::with_capacity(cfg.branch);
+            for _ in 0..cfg.branch {
+                let s = zipf.sample(&mut rng);
+                // quadratic decay: the first successor dominates, giving
+                // the strong bigram structure real text has
+                let w = 1.0 / ((1.0 + succ.len() as f64) * (1.0 + succ.len() as f64));
+                succ.push((s, w));
+            }
+            chain.push(succ);
+        }
+        SynthCorpus { words, chain, zipf, cfg }
+    }
+
+    /// Stream `n_words` of text into a String (words + doc delimiters).
+    pub fn generate_text(&self, n_words: usize, stream_seed: u64) -> String {
+        let mut rng = Rng::new(self.cfg.seed).fork(0xD0 ^ stream_seed);
+        let mut out = String::with_capacity(n_words * 6);
+        let mut cur = self.zipf.sample(&mut rng);
+        let mut doc_left = self.doc_len(&mut rng);
+        for i in 0..n_words {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(&self.words[cur]);
+            doc_left -= 1;
+            if doc_left == 0 {
+                out.push('\n');
+                cur = self.zipf.sample(&mut rng);
+                doc_left = self.doc_len(&mut rng);
+            } else {
+                // mostly follow the chain; sometimes jump (topic drift)
+                cur = if rng.f64() < 0.85 {
+                    let succ = &self.chain[cur];
+                    let weights: Vec<f64> = succ.iter().map(|(_, w)| *w).collect();
+                    succ[rng.categorical(&weights)].0
+                } else {
+                    self.zipf.sample(&mut rng)
+                };
+            }
+        }
+        out
+    }
+
+    fn doc_len(&self, rng: &mut Rng) -> usize {
+        // geometric with the configured mean, at least 8 words
+        let p = 1.0 / self.cfg.mean_doc_len as f64;
+        let mut n = 8;
+        while rng.f64() > p && n < 20 * self.cfg.mean_doc_len {
+            n += 1;
+        }
+        n
+    }
+
+    pub fn vocab_words(&self) -> &[String] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SynthCorpus {
+        SynthCorpus::new(CorpusConfig { n_words: 200, ..Default::default() })
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let c1 = small().generate_text(500, 0);
+        let c2 = small().generate_text(500, 0);
+        assert_eq!(c1, c2);
+        let c3 = small().generate_text(500, 1);
+        assert_ne!(c1, c3);
+    }
+
+    #[test]
+    fn unigram_distribution_is_skewed() {
+        let text = small().generate_text(20_000, 0);
+        let mut counts = std::collections::HashMap::new();
+        for w in text.split_whitespace() {
+            *counts.entry(w).or_insert(0usize) += 1;
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        // Zipf-ish: top word much more frequent than the 20th
+        assert!(freqs[0] > 4 * freqs[19.min(freqs.len() - 1)]);
+    }
+
+    #[test]
+    fn bigram_structure_exists() {
+        // Markov chain ⇒ conditional entropy < unigram entropy: check that
+        // the most common successor of the most common word is far above
+        // its unconditional frequency.
+        let text = small().generate_text(30_000, 0);
+        let toks: Vec<&str> = text.split_whitespace().collect();
+        let mut uni = std::collections::HashMap::new();
+        for w in &toks {
+            *uni.entry(*w).or_insert(0usize) += 1;
+        }
+        let top = *uni.iter().max_by_key(|(_, c)| **c).unwrap().0;
+        let mut succ = std::collections::HashMap::new();
+        let mut n_top = 0usize;
+        for w in toks.windows(2) {
+            if w[0] == top {
+                *succ.entry(w[1]).or_insert(0usize) += 1;
+                n_top += 1;
+            }
+        }
+        let (_, best) = succ.iter().max_by_key(|(_, c)| **c).unwrap();
+        let cond = *best as f64 / n_top as f64;
+        let uncond_best = *uni.values().max().unwrap() as f64 / toks.len() as f64;
+        assert!(
+            cond > 2.0 * uncond_best,
+            "cond {cond:.3} vs uncond {uncond_best:.3}"
+        );
+    }
+
+    #[test]
+    fn has_document_boundaries() {
+        let text = small().generate_text(5000, 0);
+        assert!(text.contains('\n'));
+    }
+}

@@ -1,0 +1,28 @@
+//! # sltrain — sparse plus low-rank pretraining, reproduced
+//!
+//! Rust + JAX + Pallas reproduction of *"SLTrain: a sparse plus low-rank
+//! approach for parameter and memory efficient pretraining"* (NeurIPS
+//! 2024). Three layers:
+//!
+//! * **L1** — Pallas kernels for the SLTrain linear layer
+//!   (`python/compile/kernels/`), verified against a pure-jnp oracle.
+//! * **L2** — the LLaMA-family model + optimizers in JAX
+//!   (`python/compile/`), AOT-lowered to HLO-text artifacts.
+//! * **L3** — this crate: the training coordinator, data pipeline,
+//!   memory estimator, analysis tooling, and the PJRT runtime that
+//!   executes the artifacts with Python nowhere on the hot path.
+//!
+//! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for the
+//! measured reproduction of every table and figure.
+
+pub mod analysis;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod mem;
+pub mod runtime;
+pub mod util;
+
+pub use util::json::Json;

@@ -1,0 +1,219 @@
+//! Dense linear algebra substrate (no external BLAS/LAPACK).
+//!
+//! Powers the paper's analysis experiments: SVD spectra of trained
+//! weights (Fig 2, 10, 11), residual-after-rank-r statistics, Prop-1
+//! rank verification, and GaLore cross-checks. One-sided Jacobi SVD is
+//! exact enough (1e-5) for every matrix size we analyze and has no
+//! dependencies.
+
+pub mod svd;
+
+pub use svd::{svd, Svd};
+
+/// Row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut crate::util::rng::Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.gaussian() as f32).collect();
+        Matrix { rows, cols, data }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Blocked matmul with a transposed-B inner loop (cache-friendly).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let bt = other.transpose();
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let b_row = &bt.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for l in 0..k {
+                    acc += a_row[l] * b_row[l];
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Scatter-add values at flat row-major indices (the ⊕ of Algorithm 1).
+    pub fn scatter_add(&mut self, idx: &[u32], vals: &[f32]) {
+        assert_eq!(idx.len(), vals.len());
+        for (&i, &v) in idx.iter().zip(vals) {
+            self.data[i as usize] += v;
+        }
+    }
+
+    /// Numerical rank: #singular values > tol * s_max.
+    pub fn rank(&self, tol: f32) -> usize {
+        let sv = svd(self).s;
+        let smax = sv.first().copied().unwrap_or(0.0);
+        if smax == 0.0 {
+            return 0;
+        }
+        sv.iter().filter(|&&s| s > tol * smax).count()
+    }
+
+    /// Best rank-r approximation via SVD (Table 1 / Fig 2 tooling).
+    pub fn truncate_rank(&self, r: usize) -> Matrix {
+        let Svd { u, s, vt } = svd(self);
+        let r = r.min(s.len());
+        // U_r diag(s_r) Vt_r
+        let mut us = Matrix::zeros(self.rows, r);
+        for i in 0..self.rows {
+            for j in 0..r {
+                us[(i, j)] = u[(i, j)] * s[j];
+            }
+        }
+        let vtr = Matrix::from_fn(r, self.cols, |i, j| vt[(i, j)]);
+        us.matmul(&vtr)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::random(5, 7, &mut rng);
+        let i7 = Matrix::eye(7);
+        let out = a.matmul(&i7);
+        assert!(a.sub(&out).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::random(4, 9, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn scatter_add_matches_dense() {
+        let mut m = Matrix::zeros(3, 4);
+        m.scatter_add(&[0, 5, 11], &[1.0, 2.0, 3.0]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(1, 1)], 2.0);
+        assert_eq!(m[(2, 3)], 3.0);
+        assert_eq!(m.data.iter().filter(|&&x| x != 0.0).count(), 3);
+    }
+
+    #[test]
+    fn rank_of_outer_product() {
+        let mut rng = Rng::new(2);
+        let b = Matrix::random(12, 3, &mut rng);
+        let a = Matrix::random(3, 10, &mut rng);
+        let low = b.matmul(&a);
+        assert_eq!(low.rank(1e-4), 3);
+    }
+
+    #[test]
+    fn truncate_rank_is_best_approx() {
+        let mut rng = Rng::new(3);
+        let b = Matrix::random(10, 2, &mut rng);
+        let a = Matrix::random(2, 8, &mut rng);
+        let low = b.matmul(&a);
+        // rank-2 truncation of a rank-2 matrix reproduces it
+        let t = low.truncate_rank(2);
+        assert!(low.sub(&t).max_abs() < 1e-3, "err {}", low.sub(&t).max_abs());
+    }
+}

@@ -1,0 +1,176 @@
+//! One-sided Jacobi SVD (Hestenes), f64 accumulation.
+//!
+//! Rotates column pairs of A until all pairs are orthogonal; then
+//! singular values are column norms, U the normalized columns, and V the
+//! accumulated rotations. Cost O(m n^2) per sweep, a handful of sweeps —
+//! fine for the d ≤ 2k weight matrices the analysis benches decompose.
+//! For rows < cols we factor the transpose and swap U/V.
+
+use super::Matrix;
+
+pub struct Svd {
+    pub u: Matrix,  // [m, k]
+    pub s: Vec<f32>, // k = min(m, n), descending
+    pub vt: Matrix, // [k, n]
+}
+
+pub fn svd(a: &Matrix) -> Svd {
+    if a.rows < a.cols {
+        let t = svd(&a.transpose());
+        return Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() };
+    }
+    let m = a.rows;
+    let n = a.cols;
+    // work in f64 for accumulation
+    let mut u: Vec<f64> = a.data.iter().map(|&x| x as f64).collect(); // [m, n] col-updated
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let max_sweeps = 60;
+    let eps = 1e-12;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n.saturating_sub(1) {
+            for q in (p + 1)..n {
+                // alpha = ||a_p||^2, beta = ||a_q||^2, gamma = a_p . a_q
+                let (mut alpha, mut beta, mut gamma) = (0.0f64, 0.0, 0.0);
+                for i in 0..m {
+                    let ap = u[i * n + p];
+                    let aq = u[i * n + q];
+                    alpha += ap * ap;
+                    beta += aq * aq;
+                    gamma += ap * aq;
+                }
+                if gamma.abs() <= eps * (alpha * beta).sqrt() || gamma == 0.0 {
+                    continue;
+                }
+                off += gamma.abs() / (alpha * beta).sqrt().max(1e-300);
+                // Jacobi rotation zeroing gamma
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let ap = u[i * n + p];
+                    let aq = u[i * n + q];
+                    u[i * n + p] = c * ap - s * aq;
+                    u[i * n + q] = s * ap + c * aq;
+                }
+                for i in 0..n {
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = c * vp - s * vq;
+                    v[i * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-10 {
+            break;
+        }
+    }
+
+    // singular values = column norms; sort descending with permutation
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm: f64 = (0..m).map(|i| u[i * n + j] * u[i * n + j]).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut um = Matrix::zeros(m, n);
+    let mut vtm = Matrix::zeros(n, n);
+    let mut s_out = Vec::with_capacity(n);
+    for (k, &(norm, j)) in sv.iter().enumerate() {
+        s_out.push(norm as f32);
+        let inv = if norm > 1e-300 { 1.0 / norm } else { 0.0 };
+        for i in 0..m {
+            um[(i, k)] = (u[i * n + j] * inv) as f32;
+        }
+        for i in 0..n {
+            vtm[(k, i)] = v[i * n + j] as f32;
+        }
+    }
+    Svd { u: um, s: s_out, vt: vtm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(f: &Svd) -> Matrix {
+        let k = f.s.len();
+        let mut us = Matrix::zeros(f.u.rows, k);
+        for i in 0..f.u.rows {
+            for j in 0..k {
+                us[(i, j)] = f.u[(i, j)] * f.s[j];
+            }
+        }
+        us.matmul(&f.vt)
+    }
+
+    #[test]
+    fn reconstructs_random_tall() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::random(20, 8, &mut rng);
+        let f = svd(&a);
+        let err = a.sub(&reconstruct(&f)).max_abs();
+        assert!(err < 1e-4, "err {err}");
+    }
+
+    #[test]
+    fn reconstructs_random_wide() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::random(6, 15, &mut rng);
+        let f = svd(&a);
+        let err = a.sub(&reconstruct(&f)).max_abs();
+        assert!(err < 1e-4, "err {err}");
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::random(12, 12, &mut rng);
+        let f = svd(&a);
+        assert!(f.s.windows(2).all(|w| w[0] >= w[1] - 1e-6));
+        assert!(f.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn u_and_v_orthonormal() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::random(10, 7, &mut rng);
+        let f = svd(&a);
+        let utu = f.u.transpose().matmul(&f.u);
+        let vvt = f.vt.matmul(&f.vt.transpose());
+        for i in 0..7 {
+            for j in 0..7 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((utu[(i, j)] - expect).abs() < 1e-4, "UtU[{i},{j}]");
+                assert!((vvt[(i, j)] - expect).abs() < 1e-4, "VVt[{i},{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Matrix::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, -5.0, 0.0, 0.0, 0.0, 1.0]);
+        let f = svd(&a);
+        assert!((f.s[0] - 5.0).abs() < 1e-5);
+        assert!((f.s[1] - 3.0).abs() < 1e-5);
+        assert!((f.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rank_deficient_tail_is_zero() {
+        let mut rng = Rng::new(4);
+        let b = Matrix::random(10, 2, &mut rng);
+        let c = Matrix::random(2, 9, &mut rng);
+        let a = b.matmul(&c);
+        let f = svd(&a);
+        assert!(f.s[2] < 1e-4 * f.s[0], "s2 {} s0 {}", f.s[2], f.s[0]);
+    }
+}

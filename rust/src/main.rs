@@ -1,0 +1,363 @@
+//! `sltrain` — the L3 launcher.
+//!
+//! Subcommands:
+//!   train         pretrain from an artifact dir (the paper's main loop)
+//!   estimate-mem  Appendix-F memory tables for any preset × method
+//!   analyze       Fig-2/10/11 spectrum + residual analysis of a checkpoint
+//!   data          inspect / dump the synthetic corpus + tokenizer
+//!   throughput    Table-3 style tokens/sec measurement
+//!   inference     Table-5 style forward-only memory + throughput
+//!   prop1         Monte-Carlo check of Proposition 1
+//!
+//! Examples:
+//!   sltrain train --artifact artifacts/tiny_sltrain --steps 200
+//!   sltrain estimate-mem --config paper60m
+//!   sltrain analyze --checkpoint runs/tiny/ckpt.bin --layer layers.0.attn.o
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use sltrain::analysis::{full_rank_probability, ResidualReport, SpectrumDecomp};
+use sltrain::bench::{fmt, Table};
+use sltrain::config::{preset, METHODS};
+use sltrain::coordinator::{train, Checkpoint, TrainConfig};
+use sltrain::data::{CorpusConfig, Pipeline, SynthCorpus};
+use sltrain::linalg::Matrix;
+use sltrain::mem::{estimate, MemEstimate, MemOptions};
+use sltrain::runtime::{Artifact, Runtime};
+use sltrain::util::cli::Cli;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { vec![] } else { argv[1..].to_vec() };
+    let result = match cmd {
+        "train" => cmd_train(&rest),
+        "estimate-mem" => cmd_estimate_mem(&rest),
+        "analyze" => cmd_analyze(&rest),
+        "data" => cmd_data(&rest),
+        "throughput" => cmd_throughput(&rest),
+        "inference" => cmd_inference(&rest),
+        "prop1" => cmd_prop1(&rest),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+sltrain — sparse plus low-rank pretraining (NeurIPS 2024), reproduced
+
+subcommands:
+  train         pretrain from an artifact dir
+  estimate-mem  Appendix-F memory tables (any preset x method)
+  analyze       spectrum/residual analysis of a checkpoint
+  data          synthetic corpus + tokenizer inspection
+  throughput    training tokens/sec (Table 3)
+  inference     forward-only memory + tokens/sec (Table 5)
+  prop1         Monte-Carlo verification of Proposition 1
+  help          this message
+
+run `sltrain <subcommand> --help` for flags
+";
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let a = Cli::new("sltrain train", "pretrain from an AOT artifact bundle")
+        .req("artifact", "artifact directory (manifest.json + *.hlo.txt)")
+        .opt("steps", "200", "optimizer steps")
+        .opt("eval-every", "50", "evaluation period (0 = only final)")
+        .opt("eval-batches", "4", "validation batches per evaluation")
+        .opt("log-every", "10", "train-loss log period")
+        .opt("relora-every", "100", "ReLoRA restart period (relora artifacts)")
+        .opt("seed", "42", "init + data seed")
+        .opt("data-seed", "7", "synthetic corpus seed")
+        .opt("metrics", "", "JSONL metrics output path")
+        .opt("checkpoint", "", "checkpoint output path")
+        .opt("checkpoint-every", "0", "checkpoint period (0 = end only)")
+        .parse(argv);
+
+    let rt = Runtime::cpu()?;
+    let dir = PathBuf::from(a.str("artifact"));
+    let mut art = Artifact::load(&dir)?;
+    sltrain::info!(
+        "loaded {} / {} ({:.2}M params, optimizer {}) on {}",
+        art.manifest.preset.name,
+        art.manifest.method,
+        art.manifest.n_params as f64 / 1e6,
+        art.manifest.optimizer,
+        rt.platform()
+    );
+    let mut pipe = Pipeline::build(art.manifest.preset.vocab, a.u64("data-seed"));
+    let cfg = TrainConfig {
+        steps: a.usize("steps"),
+        eval_every: a.usize("eval-every"),
+        eval_batches: a.usize("eval-batches"),
+        log_every: a.usize("log-every"),
+        relora_every: a.usize("relora-every"),
+        seed: a.u64("seed") as u32,
+        metrics_path: non_empty(a.str("metrics")).map(PathBuf::from),
+        checkpoint_path: non_empty(a.str("checkpoint")).map(PathBuf::from),
+        checkpoint_every: a.usize("checkpoint-every"),
+    };
+    let r = train(&rt, &mut art, &mut pipe, &cfg)?;
+    println!(
+        "final: eval loss {:.4} ppl {:.2} | {:.0} tok/s | {:.1}s | peak rss {:.0} MB",
+        r.final_eval_loss,
+        r.final_ppl,
+        r.tokens_per_sec,
+        r.wall_secs,
+        r.peak_rss_bytes as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_estimate_mem(argv: &[String]) -> Result<()> {
+    let a = Cli::new("sltrain estimate-mem", "Appendix-F memory estimator")
+        .opt("config", "paper60m", "preset (paper60m/paper130m/paper350m/paper1b/spec7b/...)")
+        .opt("method", "", "single method (default: all)")
+        .switch("eight-bit", "int8 optimizer moments")
+        .switch("per-layer", "per-layer weight updates")
+        .parse(argv);
+    let p = preset(&a.str("config"))
+        .ok_or_else(|| anyhow!("unknown preset {:?}", a.str("config")))?;
+    let opts = MemOptions { eight_bit: a.flag("eight-bit"), per_layer: a.flag("per-layer") };
+    let methods: Vec<&str> = match a.get("method") {
+        Some(m) if !m.is_empty() => vec![Box::leak(m.to_string().into_boxed_str())],
+        _ => METHODS.to_vec(),
+    };
+    let mut t = Table::new(
+        &format!("Memory estimate — {} (Appendix F model)", p.name),
+        &["method", "params(M)", "param mem(G)", "optim mem(G)", "total(G)", "train w/ grads(G)"],
+    );
+    for m in methods {
+        let e = estimate(&p, m, opts);
+        t.row(vec![
+            m.to_string(),
+            fmt(e.total_params() / 1e6, 2),
+            fmt(MemEstimate::gb(e.param_bytes), 3),
+            fmt(MemEstimate::gb(e.optim_bytes), 3),
+            fmt(MemEstimate::gb(e.table2_bytes()), 3),
+            fmt(MemEstimate::gb(e.train_bytes()), 3),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_analyze(argv: &[String]) -> Result<()> {
+    let a = Cli::new("sltrain analyze", "spectrum/residual analysis of a checkpoint")
+        .req("checkpoint", "checkpoint path (from train --checkpoint)")
+        .opt("layer", "", "weight name prefix (default: all adapted linears)")
+        .opt("rank-cut", "0", "rank for the residual split (0 = preset rank)")
+        .opt("csv", "", "write singular values CSV here")
+        .parse(argv);
+    let ck = Checkpoint::load(Path::new(&a.str("checkpoint")))?;
+    let filter = a.str("layer");
+    let mut any = false;
+    let mut csv = String::from("tensor,index,sigma,lowrank,sparse\n");
+    // group tensors by linear path
+    let mut paths: BTreeMap<String, ()> = BTreeMap::new();
+    for n in ck.names() {
+        if let Some(base) = n.strip_suffix(".B") {
+            paths.insert(base.to_string(), ());
+        }
+        if let Some(base) = n.strip_suffix(".w") {
+            if base.starts_with("layers.") {
+                paths.insert(base.to_string(), ());
+            }
+        }
+    }
+    for (base, _) in paths {
+        if !filter.is_empty() && !base.starts_with(&filter) {
+            continue;
+        }
+        any = true;
+        if ck.tensors.contains_key(&format!("{base}.w")) {
+            // full-rank weight: Fig-2 residual analysis
+            let (shape, w) = ck.tensor_f32(&format!("{base}.w"))?;
+            let m = Matrix::from_vec(shape[0], shape[1], w);
+            let cut = if a.usize("rank-cut") > 0 { a.usize("rank-cut") } else { shape[1] / 4 };
+            let rep = ResidualReport::compute(&m, cut);
+            rep.print(&base);
+            for (i, s) in rep.singular_values.iter().enumerate() {
+                csv.push_str(&format!("{base},{i},{s},,\n"));
+            }
+        } else {
+            // SLTrain weight: Fig-10/11 decomposition
+            let (bs, b) = ck.tensor_f32(&format!("{base}.B"))?;
+            let (as_, av) = ck.tensor_f32(&format!("{base}.A"))?;
+            let bm = Matrix::from_vec(bs[0], bs[1], b);
+            let am = Matrix::from_vec(as_[0], as_[1], av);
+            if let Ok((_, vals)) = ck.tensor_f32(&format!("{base}.vals")) {
+                let (_, idx_f) = ck
+                    .tensors
+                    .get(&format!("{base}.idx"))
+                    .map(|(s, _, bytes)| {
+                        let v: Vec<u32> = bytes
+                            .chunks_exact(4)
+                            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                            .collect();
+                        (s.clone(), v)
+                    })
+                    .ok_or_else(|| anyhow!("{base}: missing idx in checkpoint"))?;
+                let dec = SpectrumDecomp::compute(&bm, &am, &idx_f, &vals, 1.0);
+                dec.print(&base);
+                for i in 0..dec.sigma.len() {
+                    csv.push_str(&format!(
+                        "{base},{i},{},{},{}\n",
+                        dec.sigma[i], dec.lowrank_contrib[i], dec.sparse_contrib[i]
+                    ));
+                }
+            } else {
+                let w = bm.matmul(&am);
+                let rep = ResidualReport::compute(&w, bs[1]);
+                rep.print(&base);
+            }
+        }
+    }
+    if !any {
+        bail!("no matching weights in checkpoint (filter {filter:?})");
+    }
+    if let Some(path) = non_empty(a.str("csv")) {
+        std::fs::write(&path, csv)?;
+        println!("[csv saved to {path}]");
+    }
+    Ok(())
+}
+
+fn cmd_data(argv: &[String]) -> Result<()> {
+    let a = Cli::new("sltrain data", "synthetic corpus / tokenizer inspection")
+        .opt("seed", "7", "corpus seed")
+        .opt("words", "200", "words of sample text to show")
+        .opt("vocab", "256", "tokenizer vocab size")
+        .opt("dump", "", "write N tokens to this file as i32-LE")
+        .opt("dump-tokens", "100000", "token count for --dump")
+        .parse(argv);
+    let corpus = SynthCorpus::new(CorpusConfig { seed: a.u64("seed"), ..Default::default() });
+    let sample = corpus.generate_text(a.usize("words"), 0);
+    println!("--- corpus sample (seed {}) ---\n{}\n", a.u64("seed"), &sample);
+    let mut pipe = Pipeline::build(a.usize("vocab"), a.u64("seed"));
+    println!("tokenizer vocab: {}", pipe.bpe_vocab);
+    let batch = pipe.train.next_batch(1, 32);
+    println!("first 32 train tokens: {batch:?}");
+    if let Some(path) = non_empty(a.str("dump")) {
+        let n = a.usize("dump-tokens");
+        let toks = pipe.train.next_batch(1, n);
+        let bytes: Vec<u8> = toks.iter().flat_map(|t| t.to_le_bytes()).collect();
+        std::fs::write(&path, bytes)?;
+        println!("dumped {n} tokens to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_throughput(argv: &[String]) -> Result<()> {
+    let a = Cli::new("sltrain throughput", "Table-3 training throughput")
+        .req("artifact", "artifact directory")
+        .opt("steps", "30", "measured steps (after 3 warmup)")
+        .opt("seed", "42", "seed")
+        .parse(argv);
+    let rt = Runtime::cpu()?;
+    let mut art = Artifact::load(Path::new(&a.str("artifact")))?;
+    let batch = art.entry("train_step")?.batch;
+    let seq = art.manifest.seq_len();
+    let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+    let mut state = art.init_state(&rt, a.u64("seed") as u32)?;
+    for w in 0..3 {
+        let toks = pipe.train.next_batch(batch, seq);
+        art.train_step(&rt, &mut state, w, &toks)?;
+    }
+    let t0 = std::time::Instant::now();
+    let steps = a.usize("steps");
+    for s in 0..steps {
+        let toks = pipe.train.next_batch(batch, seq);
+        art.train_step(&rt, &mut state, 3 + s as i32, &toks)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let tok_s = (steps * batch * seq) as f64 / dt;
+    println!(
+        "{} / {}: {:.0} tokens/sec ({} steps, batch {batch}, seq {seq}, {:.2}s)",
+        art.manifest.preset.name, art.manifest.method, tok_s, steps, dt
+    );
+    Ok(())
+}
+
+fn cmd_inference(argv: &[String]) -> Result<()> {
+    let a = Cli::new("sltrain inference", "Table-5 forward-only memory + throughput")
+        .req("artifact", "artifact directory")
+        .opt("iters", "20", "forward passes to time")
+        .opt("seed", "42", "seed")
+        .parse(argv);
+    let rt = Runtime::cpu()?;
+    let mut art = Artifact::load(Path::new(&a.str("artifact")))?;
+    let batch = art.entry("forward")?.batch;
+    let seq = art.manifest.seq_len();
+    let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+    let mut state = art.init_state(&rt, a.u64("seed") as u32)?;
+    // drop optimizer state: inference holds params only (paper Table 5)
+    let opt_names: Vec<String> =
+        art.manifest.opt_state.iter().map(|t| t.name.clone()).collect();
+    for n in &opt_names {
+        state.tensors.remove(n);
+    }
+    let rss0 = sltrain::runtime::current_rss_bytes();
+    let toks = pipe.valid.next_batch(batch, seq);
+    art.forward(&rt, &mut state, &toks)?; // compile+warm
+    let t0 = std::time::Instant::now();
+    for _ in 0..a.usize("iters") {
+        art.forward(&rt, &mut state, &toks)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let tok_s = (a.usize("iters") * batch * seq) as f64 / dt;
+    let rss1 = sltrain::runtime::current_rss_bytes();
+    println!(
+        "{} / {}: inference {:.0} tokens/sec | params {:.1} MB | rss {:.0}->{:.0} MB",
+        art.manifest.preset.name,
+        art.manifest.method,
+        tok_s,
+        art.manifest.params.iter().map(|t| t.numel() * 4).sum::<usize>() as f64 / 1e6,
+        rss0 as f64 / 1e6,
+        rss1 as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_prop1(argv: &[String]) -> Result<()> {
+    let a = Cli::new("sltrain prop1", "Monte-Carlo check of Proposition 1")
+        .opt("n", "48", "matrix size")
+        .opt("rank", "4", "low-rank dimension")
+        .opt("trials", "30", "Monte-Carlo trials per delta")
+        .opt("seed", "0", "seed")
+        .parse(argv);
+    let n = a.usize("n");
+    let crit = sltrain::analysis::prop1::critical_delta(n);
+    let mut t = Table::new(
+        &format!("Prop 1: P[BA+S full rank], n={n} (critical delta = {crit:.4})"),
+        &["delta", "delta/critical", "P[full rank]"],
+    );
+    for mult in [0.1, 0.5, 1.0, 2.0, 4.0] {
+        let delta = crit * mult;
+        let p = full_rank_probability(n, a.usize("rank"), delta, a.usize("trials"), a.u64("seed"));
+        t.row(vec![fmt(delta, 4), fmt(mult, 1), fmt(p, 3)]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn non_empty(s: String) -> Option<String> {
+    if s.is_empty() {
+        None
+    } else {
+        Some(s)
+    }
+}

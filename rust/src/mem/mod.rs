@@ -1,0 +1,254 @@
+//! Appendix-F memory estimator: parameter + optimizer-state accounting
+//! for every method, reproducing Tables 2/4/8/9/10 and the Fig-3 model.
+//!
+//! Conventions follow the paper exactly: bfloat16 storage (2 bytes per
+//! float), int64 sparse indices (8 bytes), 1G = 1e9 bytes, optimizer
+//! state = Adam first+second moments over *trainable* parameters.
+//! Verified against the paper's own published breakdowns in unit tests
+//! (GaLore 60M optimizer = 78.20M moments + 3.67M projection, SLTrain
+//! 60M = 32.78M base + 10M low-rank + 0.76M sparse, ...).
+
+use crate::config::ModelPreset;
+
+pub const BF16: f64 = 2.0;
+pub const INT64: f64 = 8.0;
+pub const INT8: f64 = 1.0;
+pub const QBLOCK: f64 = 256.0; // 8-bit Adam block size (scale overhead)
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemEstimate {
+    /// counts, in units of parameters (not bytes)
+    pub base_params: f64,
+    pub adapted_params: f64,
+    pub sparse_params: f64,
+    pub optim_moment_params: f64,
+    pub optim_proj_params: f64, // galore P
+    /// bytes
+    pub param_bytes: f64,
+    pub optim_bytes: f64,
+    pub grad_bytes: f64,
+}
+
+impl MemEstimate {
+    pub fn total_params(&self) -> f64 {
+        self.base_params + self.adapted_params + self.sparse_params
+    }
+
+    /// Paper Table 2 "Mem": parameter + optimizer state only.
+    pub fn table2_bytes(&self) -> f64 {
+        self.param_bytes + self.optim_bytes
+    }
+
+    /// Fig-3 style training footprint: params + grads + optimizer.
+    pub fn train_bytes(&self) -> f64 {
+        self.param_bytes + self.optim_bytes + self.grad_bytes
+    }
+
+    pub fn gb(bytes: f64) -> f64 {
+        bytes / 1e9
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemOptions {
+    /// quantize Adam moments to int8 (Dettmers et al. [9])
+    pub eight_bit: bool,
+    /// per-layer weight updates (Lv et al. [36]): gradient storage shrinks
+    /// to the largest single layer instead of the full model
+    pub per_layer: bool,
+}
+
+/// Estimate memory for (preset, method). Mirrors Appendix F line by line.
+pub fn estimate(p: &ModelPreset, method: &str, opts: MemOptions) -> MemEstimate {
+    let mut e = MemEstimate::default();
+    e.base_params = p.base_params() as f64;
+    let linears = p.linear_paths();
+
+    // ---- parameter memory -------------------------------------------
+    let mut trainable = e.base_params;
+    let mut layer_trainables: Vec<f64> = vec![e.base_params]; // for per-layer grads
+    for (_, din, dout) in &linears {
+        let (din, dout) = (*din as f64, *dout as f64);
+        let lr_params = (din + dout) * p.rank as f64;
+        let nnz = p.nnz(din as usize, dout as usize) as f64;
+        match method {
+            "full" | "galore" => {
+                e.adapted_params += din * dout;
+                trainable += din * dout;
+                layer_trainables.push(din * dout);
+            }
+            "lowrank" => {
+                e.adapted_params += lr_params;
+                trainable += lr_params;
+                layer_trainables.push(lr_params);
+            }
+            "relora" => {
+                // stores W0 (frozen between merges) + adaptors
+                e.adapted_params += din * dout + lr_params;
+                trainable += lr_params;
+                layer_trainables.push(lr_params);
+            }
+            "sltrain" => {
+                e.adapted_params += lr_params;
+                e.sparse_params += nnz;
+                trainable += lr_params + nnz;
+                layer_trainables.push(lr_params + nnz);
+            }
+            _ => panic!("unknown method {method}"),
+        }
+    }
+    if method == "relora" {
+        // Appendix F: ReLoRA stores the original parameters AND adaptor
+        // copies "for other parameters" — the base params appear twice
+        // (60M: 58.2M originals + 44.5M adaptors ⇒ 102.77M total).
+        e.adapted_params += e.base_params;
+    }
+    e.param_bytes = (e.base_params + e.adapted_params + e.sparse_params) * BF16
+        + e.sparse_params * INT64; // sltrain stores indices in int64
+
+    // ---- optimizer state --------------------------------------------
+    if method == "galore" {
+        // moments live in the projected space for adapted matrices
+        let mut moments = 2.0 * e.base_params;
+        let mut proj = 0.0;
+        for (_, din, dout) in &linears {
+            let (d, q) = (*din as f64, *dout as f64);
+            let r = p.rank as f64;
+            moments += 2.0 * r * d.max(q);
+            proj += d.min(q) * r;
+        }
+        e.optim_moment_params = moments;
+        e.optim_proj_params = proj;
+    } else {
+        e.optim_moment_params = 2.0 * trainable;
+    }
+    let moment_bytes_per = if opts.eight_bit {
+        INT8 + BF16 / QBLOCK // int8 code + amortized per-block scale
+    } else {
+        BF16
+    };
+    e.optim_bytes =
+        e.optim_moment_params * moment_bytes_per + e.optim_proj_params * BF16;
+
+    // ---- gradient memory (Fig 3 model) --------------------------------
+    let grad_params = if opts.per_layer {
+        layer_trainables.iter().cloned().fold(0.0, f64::max)
+    } else {
+        trainable
+    };
+    e.grad_bytes = grad_params * BF16;
+    e
+}
+
+/// One row of the Table-8 style breakdown, formatted in paper units.
+pub fn breakdown_row(p: &ModelPreset, method: &str, opts: MemOptions) -> String {
+    let e = estimate(p, method, opts);
+    format!(
+        "{:<10} {:>9.2}M params ({:>7.2}M base, {:>7.2}M adapted, {:>6.2}M sparse) | param {:>6.2}G optim {:>6.2}G total {:>6.2}G",
+        method,
+        e.total_params() / 1e6,
+        e.base_params / 1e6,
+        e.adapted_params / 1e6,
+        e.sparse_params / 1e6,
+        MemEstimate::gb(e.param_bytes),
+        MemEstimate::gb(e.optim_bytes),
+        MemEstimate::gb(e.table2_bytes()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    fn p60() -> ModelPreset {
+        preset("paper60m").unwrap()
+    }
+
+    #[test]
+    fn galore_60m_matches_paper_appendix_f() {
+        // paper: moments 78.20M, projection 3.67M, optimizer 0.16G
+        let e = estimate(&p60(), "galore", MemOptions::default());
+        let moments_m = e.optim_moment_params / 1e6;
+        let proj_m = e.optim_proj_params / 1e6;
+        assert!((moments_m - 78.20).abs() < 2.0, "moments {moments_m}");
+        assert!((proj_m - 3.67).abs() < 0.3, "proj {proj_m}");
+        let optim_g = MemEstimate::gb(e.optim_bytes);
+        assert!((optim_g - 0.16).abs() < 0.02, "optim {optim_g}");
+    }
+
+    #[test]
+    fn sltrain_60m_matches_paper_appendix_f() {
+        // paper: 32.78M base + 10M low-rank + 0.76M sparse; param 0.09G,
+        // optim 0.17G
+        let e = estimate(&p60(), "sltrain", MemOptions::default());
+        assert!((e.base_params / 1e6 - 32.78).abs() < 1.5, "base {}", e.base_params / 1e6);
+        assert!((e.adapted_params / 1e6 - 10.0).abs() < 0.5, "lr {}", e.adapted_params / 1e6);
+        assert!((e.sparse_params / 1e6 - 0.76).abs() < 0.05, "sp {}", e.sparse_params / 1e6);
+        assert!((MemEstimate::gb(e.param_bytes) - 0.09).abs() < 0.01);
+        assert!((MemEstimate::gb(e.optim_bytes) - 0.17).abs() < 0.02);
+    }
+
+    #[test]
+    fn full_rank_60m_matches_paper() {
+        // paper: 0.12G params, 0.23G optimizer
+        let e = estimate(&p60(), "full", MemOptions::default());
+        assert!((MemEstimate::gb(e.param_bytes) - 0.12).abs() < 0.01);
+        assert!((MemEstimate::gb(e.optim_bytes) - 0.23).abs() < 0.02);
+    }
+
+    #[test]
+    fn method_memory_ordering_table2() {
+        // Table 2: lowrank < sltrain < galore < full at every scale;
+        // ReLoRA sits above full at 60M (0.36 vs 0.35) but below it at 1B
+        // (6.34 vs 8.04) because its optimizer state stays adaptor-sized.
+        for name in ["paper60m", "paper130m", "paper1b"] {
+            let p = preset(name).unwrap();
+            let t = |m: &str| estimate(&p, m, MemOptions::default()).table2_bytes();
+            assert!(t("lowrank") < t("sltrain"), "{name}");
+            assert!(t("sltrain") < t("galore"), "{name}");
+            assert!(t("galore") < t("full"), "{name}");
+            assert!(t("relora") > t("sltrain"), "{name}");
+        }
+        let p60 = preset("paper60m").unwrap();
+        let p1b = preset("paper1b").unwrap();
+        let t = |p: &ModelPreset, m: &str| estimate(p, m, MemOptions::default()).table2_bytes();
+        assert!(t(&p60, "relora") > t(&p60, "full"));
+        assert!(t(&p1b, "relora") < t(&p1b, "full"));
+    }
+
+    #[test]
+    fn table2_absolute_totals_match_paper_1b() {
+        // paper 1B row: full 8.04G, lowrank 3.66G, galore 4.76G, sltrain 4.16G
+        let p = preset("paper1b").unwrap();
+        let t = |m: &str| MemEstimate::gb(estimate(&p, m, MemOptions::default()).table2_bytes());
+        assert!((t("full") - 8.04).abs() < 0.15, "full {}", t("full"));
+        assert!((t("lowrank") - 3.66).abs() < 0.15, "lowrank {}", t("lowrank"));
+        assert!((t("galore") - 4.76).abs() < 0.15, "galore {}", t("galore"));
+        assert!((t("sltrain") - 4.16).abs() < 0.15, "sltrain {}", t("sltrain"));
+    }
+
+    #[test]
+    fn eight_bit_and_per_layer_reduce_memory() {
+        let p = preset("spec7b").unwrap();
+        let base = estimate(&p, "sltrain", MemOptions::default());
+        let q8 = estimate(&p, "sltrain", MemOptions { eight_bit: true, per_layer: false });
+        let q8pl = estimate(&p, "sltrain", MemOptions { eight_bit: true, per_layer: true });
+        assert!(q8.optim_bytes < base.optim_bytes * 0.6);
+        assert!(q8pl.grad_bytes < base.grad_bytes * 0.2);
+        assert!(q8pl.train_bytes() < base.train_bytes());
+    }
+
+    #[test]
+    fn sltrain_7b_vs_galore_memory_reduction() {
+        // Table 4: 8-bit SLTrain 46G vs 8-bit GaLore 62G per GPU (26% cut).
+        // Our model excludes activations, so compare the reduction RATIO of
+        // the param+optim+grad footprint instead of absolute gigabytes.
+        let p = preset("spec7b").unwrap();
+        let o = MemOptions { eight_bit: true, per_layer: false };
+        let sl = estimate(&p, "sltrain", o).train_bytes();
+        let gl = estimate(&p, "galore", o).train_bytes();
+        let cut = 1.0 - sl / gl;
+        assert!(cut > 0.15 && cut < 0.60, "7b sltrain vs galore cut = {cut:.2}");
+    }
+}

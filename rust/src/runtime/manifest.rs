@@ -1,0 +1,223 @@
+//! manifest.json schema: the contract between `python/compile/aot.py`
+//! and the rust runtime. Parsed with the in-repo JSON parser.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelPreset;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    I8,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "i8" => Dtype::I8,
+            "u32" => Dtype::U32,
+            other => return Err(anyhow!("unknown dtype {other:?}")),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 | Dtype::U32 => 4,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub trainable: bool,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str().unwrap_or_default().to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("shape not array"))?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: Dtype::parse(v.req("dtype")?.as_str().unwrap_or("f32"))?,
+            trainable: v.get("trainable").and_then(|t| t.as_bool()).unwrap_or(false),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Entrypoint {
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub batch: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct SupportSpec {
+    pub file: String,
+    pub nnz: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub method: String,
+    pub optimizer: String,
+    pub batch: usize,
+    pub n_params: usize,
+    pub preset: ModelPreset,
+    pub params: Vec<TensorSpec>,
+    pub consts: Vec<TensorSpec>,
+    pub opt_state: Vec<TensorSpec>,
+    pub supports: BTreeMap<String, SupportSpec>,
+    pub entrypoints: BTreeMap<String, Entrypoint>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not array"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect()
+        };
+        let mut entrypoints = BTreeMap::new();
+        for (name, e) in v
+            .req("entrypoints")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("entrypoints not object"))?
+        {
+            let names = |key: &str| -> Result<Vec<String>> {
+                Ok(e.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} not array"))?
+                    .iter()
+                    .map(|s| s.as_str().unwrap_or_default().to_string())
+                    .collect())
+            };
+            entrypoints.insert(
+                name.clone(),
+                Entrypoint {
+                    file: e.req("file")?.as_str().unwrap_or_default().to_string(),
+                    inputs: names("inputs")?,
+                    outputs: names("outputs")?,
+                    batch: e.get("batch").and_then(|b| b.as_usize()).unwrap_or(0),
+                },
+            );
+        }
+        let mut supports = BTreeMap::new();
+        if let Some(sup) = v.get("supports").and_then(|s| s.as_obj()) {
+            for (name, s) in sup {
+                supports.insert(
+                    name.clone(),
+                    SupportSpec {
+                        file: s.req("file")?.as_str().unwrap_or_default().to_string(),
+                        nnz: s.req("nnz")?.as_usize().unwrap_or(0),
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            method: v.req("method")?.as_str().unwrap_or_default().to_string(),
+            optimizer: v
+                .req("optimizer")?
+                .req("type")?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            batch: v.req("batch")?.as_usize().unwrap_or(0),
+            n_params: v.req("n_params")?.as_usize().unwrap_or(0),
+            preset: ModelPreset::from_manifest(&v)?,
+            params: specs("params")?,
+            consts: specs("consts")?,
+            opt_state: specs("opt_state")?,
+            supports,
+            entrypoints,
+        })
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.preset.seq_len
+    }
+
+    /// Total parameter count (sanity check vs n_params).
+    pub fn count_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Bytes of live training state as the runtime holds it (f32 host).
+    pub fn state_bytes(&self) -> usize {
+        let p: usize = self.params.iter().map(|t| t.numel() * t.dtype.size_bytes()).sum();
+        let o: usize =
+            self.opt_state.iter().map(|t| t.numel() * t.dtype.size_bytes()).sum();
+        let c: usize = self.consts.iter().map(|t| t.numel() * t.dtype.size_bytes()).sum();
+        p + o + c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"name":"tiny","vocab":256,"d_model":64,"n_layers":2,
+                 "n_heads":2,"seq_len":64,"rank":16,"delta":0.03,
+                 "alpha":32.0,"d_ff":192,"rope_theta":10000.0,
+                 "adapt_attn":true,"adapt_mlp":true},
+      "method": "sltrain",
+      "optimizer": {"type":"adam","lr":0.003},
+      "batch": 8, "fwd_batch": 8, "n_params": 80000,
+      "params": [{"name":"embed.w","shape":[256,64],"dtype":"f32","trainable":true}],
+      "consts": [{"name":"layers.0.attn.q.idx","shape":[123],"dtype":"i32"}],
+      "opt_state": [{"name":"embed.w.m","shape":[256,64],"dtype":"f32"}],
+      "supports": {"layers.0.attn.q.idx":{"file":"q.support.bin","nnz":123}},
+      "entrypoints": {
+        "train_step": {"file":"train_step.hlo.txt",
+          "inputs":["__step","__tokens","layers.0.attn.q.idx","embed.w","embed.w.m"],
+          "outputs":["__loss","embed.w","embed.w.m"],"batch":8}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.method, "sltrain");
+        assert_eq!(m.optimizer, "adam");
+        assert_eq!(m.preset.d_model, 64);
+        assert_eq!(m.params[0].numel(), 256 * 64);
+        assert_eq!(m.consts[0].dtype, Dtype::I32);
+        assert_eq!(m.supports["layers.0.attn.q.idx"].nnz, 123);
+        let e = &m.entrypoints["train_step"];
+        assert_eq!(e.inputs.len(), 5);
+        assert_eq!(e.outputs[0], "__loss");
+        assert_eq!(m.seq_len(), 64);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        assert!(Dtype::parse("f64").is_err());
+        assert_eq!(Dtype::parse("i8").unwrap().size_bytes(), 1);
+    }
+}

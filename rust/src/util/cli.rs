@@ -1,0 +1,249 @@
+//! Declarative CLI flag parsing (no `clap` in the vendor set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! args, defaults, and an auto-generated `--help`. Used by `main.rs`,
+//! every example, and every bench binary.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+    required: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} missing (declare a default?)"))
+            .clone()
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_num(name)
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_num(name)
+    }
+
+    pub fn i64(&self, name: &str) -> i64 {
+        self.parse_num(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse_num(name)
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, name: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name);
+        raw.parse().unwrap_or_else(|e| {
+            eprintln!("bad value for --{name}: {raw:?} ({e})");
+            std::process::exit(2);
+        })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+pub struct Cli {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.into(), about: about.into(), specs: vec![] }
+    }
+
+    /// Flag taking a value, with default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_bool: false,
+            required: false,
+        });
+        self
+    }
+
+    /// Flag taking a value, required.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_bool: false,
+            required: true,
+        });
+        self
+    }
+
+    /// Boolean switch.
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_bool: true,
+            required: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nflags:\n", self.program, self.about);
+        for s in &self.specs {
+            let kind = if s.is_bool {
+                String::new()
+            } else if let Some(d) = &s.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            out.push_str(&format!("  --{}{}\n      {}\n", s.name, kind, s.help));
+        }
+        out
+    }
+
+    pub fn parse(self, argv: &[String]) -> Args {
+        match self.try_parse(argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn parse_env(self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&argv)
+    }
+
+    pub fn try_parse(self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for s in &self.specs {
+            if let Some(d) = &s.default {
+                args.values.insert(s.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            // cargo-bench harness flags: accept and ignore
+            if a == "--bench" || a == "--test" {
+                i += 1;
+                continue;
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.is_bool {
+                    args.bools.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    args.values.insert(name, v);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for s in &self.specs {
+            if s.required && !args.values.contains_key(&s.name) {
+                return Err(format!("missing required --{}\n\n{}", s.name, self.usage()));
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Cli::new("t", "")
+            .opt("steps", "100", "")
+            .opt("config", "tiny", "")
+            .switch("verbose", "")
+            .try_parse(&argv("--steps 250 --verbose"))
+            .unwrap();
+        assert_eq!(a.usize("steps"), 250);
+        assert_eq!(a.str("config"), "tiny");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positional() {
+        let a = Cli::new("t", "")
+            .opt("lr", "0.1", "")
+            .try_parse(&argv("--lr=0.003 ckpt.bin"))
+            .unwrap();
+        assert!((a.f64("lr") - 0.003).abs() < 1e-12);
+        assert_eq!(a.positional(), &["ckpt.bin".to_string()]);
+    }
+
+    #[test]
+    fn required_missing_errors() {
+        let r = Cli::new("t", "").req("out", "").try_parse(&argv(""));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let r = Cli::new("t", "").try_parse(&argv("--nope 1"));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Leveled stderr logger + JSONL metric emitter.
+//!
+//! The trainer writes one JSON object per step/eval event to a metrics
+//! file; benches and EXPERIMENTS.md are generated from those streams.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use super::json::Json;
+
+pub const ERROR: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(INFO);
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn enabled(level: u8) -> bool {
+    level <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: u8, msg: &str) {
+    if enabled(level) {
+        let tag = match level {
+            ERROR => "ERROR",
+            WARN => "WARN ",
+            INFO => "INFO ",
+            _ => "DEBUG",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::INFO, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::WARN, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::DEBUG, &format!($($arg)*)) };
+}
+
+/// Append-only JSONL sink for structured metrics.
+pub struct MetricsWriter {
+    out: BufWriter<File>,
+}
+
+impl MetricsWriter {
+    pub fn create<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(MetricsWriter { out: BufWriter::new(File::create(path)?) })
+    }
+
+    pub fn emit(&mut self, mut record: Json) -> anyhow::Result<()> {
+        if let Json::Obj(m) = &mut record {
+            let ts = SystemTime::now().duration_since(UNIX_EPOCH)?.as_secs_f64();
+            m.insert("ts".into(), Json::Num(ts));
+        }
+        writeln!(self.out, "{}", record.to_string())?;
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj};
+
+    #[test]
+    fn metrics_writer_emits_parseable_lines() {
+        let dir = std::env::temp_dir().join(format!("sltrain-log-{}", std::process::id()));
+        let path = dir.join("m.jsonl");
+        let mut w = MetricsWriter::create(&path).unwrap();
+        w.emit(obj(vec![("step", num(1.0)), ("loss", num(3.5))])).unwrap();
+        w.emit(obj(vec![("step", num(2.0)), ("loss", num(3.1))])).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("ts").is_some());
+            assert!(v.get("loss").is_some());
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,6 @@
+//! Shared substrates: JSON, RNG, CLI parsing, logging/metrics.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;

