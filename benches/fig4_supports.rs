@@ -5,11 +5,12 @@
 
 use std::path::Path;
 
+use sltrain::backend::xla_backend::XlaBackend;
+use sltrain::backend::Backend;
 use sltrain::bench::{fmt, Table};
 use sltrain::coordinator::metrics::stats;
 use sltrain::coordinator::{train, TrainConfig};
 use sltrain::data::Pipeline;
-use sltrain::runtime::{Artifact, Runtime};
 use sltrain::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
@@ -17,7 +18,6 @@ fn main() -> anyhow::Result<()> {
         .opt("steps", "80", "steps per run")
         .opt("csv", "results/fig4.csv", "output CSV")
         .parse_env();
-    let rt = Runtime::cpu()?;
     let steps = a.usize("steps");
 
     let mut curves = vec![];
@@ -28,8 +28,8 @@ fn main() -> anyhow::Result<()> {
             println!("[skip] {dir}");
             continue;
         }
-        let mut art = Artifact::load(Path::new(&dir))?;
-        let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+        let mut be = XlaBackend::open(Path::new(&dir))?;
+        let mut pipe = Pipeline::build(be.preset().vocab, 7);
         let cfg = TrainConfig {
             steps,
             eval_every: (steps / 5).max(1),
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
             log_every: 0,
             ..Default::default()
         };
-        let r = train(&rt, &mut art, &mut pipe, &cfg)?;
+        let r = train(&mut be, &mut pipe, &cfg)?;
         println!("  support seed {seed}: final ppl {:.2}", r.final_ppl);
         finals.push(r.final_ppl);
         curves.push((seed, r.eval_curve));

@@ -1,29 +1,39 @@
 //! Table 2 + Figure 1: validation perplexity, parameter count and
-//! estimated memory for all five methods at two scale points.
+//! estimated memory for the methods at two scale points.
 //!
 //! The paper's claim to reproduce (shape, not absolute numbers):
 //!   Low-Rank ≫ everything (worst PPL); SLTrain ≈ Full-Rank ≈ GaLore;
 //!   ReLoRA in between; SLTrain's params/memory close to Low-Rank.
 //!
+//! Engine-agnostic: runs on the pure-rust native backend by default (no
+//! artifacts needed — full/lowrank/sltrain columns), or on AOT artifact
+//! bundles with `--backend xla` (adds relora/galore, needs the `xla`
+//! cargo feature and `make artifacts`).
+//!
 //!   cargo bench --bench table2_main -- --steps 300
+//!   cargo bench --bench table2_main --features xla -- --backend xla
 
+use std::path::Path;
+
+use sltrain::backend::{self, BackendSpec};
 use sltrain::bench::{fmt, Table};
+use sltrain::config::preset;
 use sltrain::coordinator::trainer::quick_train;
 use sltrain::mem::{estimate, MemEstimate, MemOptions};
-use sltrain::runtime::Runtime;
 use sltrain::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
     let a = Cli::new("table2_main", "Table 2 / Fig 1 reproduction")
+        .opt("backend", "native", "engine: native | xla")
         .opt("steps", "120", "train steps per cell")
         .opt("configs", "tiny", "comma-separated scale points")
         .opt("csv", "results/table2.csv", "output CSV")
         .parse_env();
-    let rt = Runtime::cpu()?;
     let steps = a.usize("steps");
+    let engine = a.str("backend");
 
     let mut t = Table::new(
-        &format!("Table 2 (scaled) — {} steps, synthetic C4", steps),
+        &format!("Table 2 (scaled) — {} steps, synthetic C4, {} backend", steps, engine),
         &["config", "method", "ppl", "param(M)", "est mem(G)", "tok/s"],
     );
     let mut fig1 = Table::new(
@@ -33,14 +43,34 @@ fn main() -> anyhow::Result<()> {
 
     for cfg_name in a.str("configs").split(',') {
         for method in ["full", "lowrank", "relora", "galore", "sltrain"] {
-            let dir = format!("artifacts/{cfg_name}_{method}");
-            let path = std::path::Path::new(&dir);
-            if !path.exists() {
-                println!("[skip] {dir} (not emitted)");
-                continue;
-            }
-            let (r, man) = quick_train(&rt, path, steps, 7)?;
-            let e = estimate(&man.preset, method, MemOptions::default());
+            let spec = match engine.as_str() {
+                "xla" => {
+                    let dir = format!("artifacts/{cfg_name}_{method}");
+                    if !Path::new(&dir).exists() {
+                        println!("[skip] {dir} (not emitted)");
+                        continue;
+                    }
+                    BackendSpec::Xla { artifact_dir: dir.into() }
+                }
+                _ => {
+                    if matches!(method, "relora" | "galore") {
+                        println!("[skip] {cfg_name}/{method} (xla-only method)");
+                        continue;
+                    }
+                    let p = preset(cfg_name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown preset {cfg_name:?}"))?;
+                    BackendSpec::Native {
+                        preset: p,
+                        method: method.to_string(),
+                        batch: 8,
+                        lr: 3e-3,
+                        total_steps: steps.max(1),
+                    }
+                }
+            };
+            let mut be = backend::open(spec)?;
+            let r = quick_train(be.as_mut(), steps, 7)?;
+            let e = estimate(be.preset(), method, MemOptions::default());
             let mem_gb = MemEstimate::gb(e.table2_bytes());
             t.row(vec![
                 cfg_name.to_string(),

@@ -2,49 +2,76 @@
 //! GaLore. Paper shape: SLTrain within a few % of full-rank (its cost is
 //! the sparse scatter/gather), GaLore ≈ full-rank.
 //!
+//! Engine-agnostic: the native backend (default) measures the pure-rust
+//! step loop with no artifacts; `--backend xla` measures the AOT/PJRT
+//! path (needs the `xla` cargo feature and `make artifacts`).
+//!
 //!   cargo bench --bench table3_throughput -- --steps 30
+//!   cargo bench --bench table3_throughput --features xla -- --backend xla
 
 use std::path::Path;
 
+use sltrain::backend::{self, Backend, BackendSpec};
 use sltrain::bench::{fmt, Table};
+use sltrain::config::preset;
 use sltrain::data::Pipeline;
-use sltrain::runtime::{Artifact, Runtime};
 use sltrain::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
     let a = Cli::new("table3_throughput", "Table 3 training throughput")
+        .opt("backend", "native", "engine: native | xla")
         .opt("steps", "30", "measured steps (after 3 warmup)")
         .opt("config", "tiny", "scale point")
         .opt("csv", "results/table3.csv", "output CSV")
         .parse_env();
-    let rt = Runtime::cpu()?;
     let cfgn = a.str("config");
+    let engine = a.str("backend");
 
     let mut t = Table::new(
-        &format!("Table 3 — tokens/sec, {} (CPU PJRT)", cfgn),
+        &format!("Table 3 — tokens/sec, {} ({} backend)", cfgn, engine),
         &["method", "tok/s", "rel. to full", "step ms"],
     );
     let mut full_tps = 0.0f64;
     for method in ["full", "galore", "sltrain"] {
-        let dir = format!("artifacts/{cfgn}_{method}");
-        if !Path::new(&dir).exists() {
-            println!("[skip] {dir}");
-            continue;
-        }
-        let mut art = Artifact::load(Path::new(&dir))?;
-        let batch = art.entry("train_step")?.batch;
-        let seq = art.manifest.seq_len();
-        let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
-        let mut state = art.init_state(&rt, 42)?;
+        let spec = match engine.as_str() {
+            "xla" => {
+                let dir = format!("artifacts/{cfgn}_{method}");
+                if !Path::new(&dir).exists() {
+                    println!("[skip] {dir}");
+                    continue;
+                }
+                BackendSpec::Xla { artifact_dir: dir.into() }
+            }
+            _ => {
+                if method == "galore" {
+                    println!("[skip] {cfgn}/{method} (xla-only method)");
+                    continue;
+                }
+                let p = preset(&cfgn)
+                    .ok_or_else(|| anyhow::anyhow!("unknown preset {cfgn:?}"))?;
+                BackendSpec::Native {
+                    preset: p,
+                    method: method.to_string(),
+                    batch: 8,
+                    lr: 3e-3,
+                    total_steps: 2000,
+                }
+            }
+        };
+        let mut be: Box<dyn Backend> = backend::open(spec)?;
+        be.init_state(42)?;
+        let batch = be.batch_size();
+        let seq = be.seq_len();
+        let mut pipe = Pipeline::build(be.preset().vocab, 7);
         for w in 0..3 {
             let toks = pipe.train.next_batch(batch, seq);
-            art.train_step(&rt, &mut state, w, &toks)?;
+            be.train_step(w, &toks)?;
         }
         let steps = a.usize("steps");
         let t0 = std::time::Instant::now();
         for s in 0..steps {
             let toks = pipe.train.next_batch(batch, seq);
-            art.train_step(&rt, &mut state, 3 + s as i32, &toks)?;
+            be.train_step(3 + s as i32, &toks)?;
         }
         let dt = t0.elapsed().as_secs_f64();
         let tps = (steps * batch * seq) as f64 / dt;

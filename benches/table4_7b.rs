@@ -11,11 +11,11 @@
 
 use std::path::Path;
 
+use sltrain::backend::xla_backend::XlaBackend;
 use sltrain::bench::{fmt, Table};
 use sltrain::config::preset;
 use sltrain::coordinator::trainer::quick_train;
 use sltrain::mem::{estimate, MemEstimate, MemOptions};
-use sltrain::runtime::Runtime;
 use sltrain::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
@@ -52,7 +52,6 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- measured 8-bit dynamics at s60m ----
-    let rt = Runtime::cpu()?;
     let steps = a.usize("steps");
     let mut t2 = Table::new(
         &format!("Table 4 (measured, s60m, {steps} steps) — 8-bit Adam fidelity"),
@@ -66,7 +65,8 @@ fn main() -> anyhow::Result<()> {
             println!("[skip] {dir}");
             continue;
         }
-        let (r, _) = quick_train(&rt, Path::new(dir), steps, 7)?;
+        let mut be = XlaBackend::open(Path::new(dir))?;
+        let r = quick_train(&mut be, steps, 7)?;
         t2.row(vec![label.into(), fmt(r.final_ppl, 2), fmt(r.tokens_per_sec, 0)]);
         println!("  [{label}] ppl {:.2}", r.final_ppl);
     }

@@ -6,10 +6,10 @@
 
 use std::path::Path;
 
+use sltrain::backend::xla_backend::XlaBackend;
 use sltrain::bench::{fmt, Table};
 use sltrain::coordinator::trainer::quick_train;
 use sltrain::mem::{estimate, MemEstimate, MemOptions};
-use sltrain::runtime::Runtime;
 use sltrain::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
@@ -17,7 +17,6 @@ fn main() -> anyhow::Result<()> {
         .opt("steps", "100", "train steps per cell")
         .opt("csv", "results/table6.csv", "output CSV")
         .parse_env();
-    let rt = Runtime::cpu()?;
     let steps = a.usize("steps");
 
     // artifact suffix -> (r, delta) description
@@ -39,7 +38,9 @@ fn main() -> anyhow::Result<()> {
             println!("[skip] {dir}");
             continue;
         }
-        let (r, man) = quick_train(&rt, Path::new(dir), steps, 7)?;
+        let mut be = XlaBackend::open(Path::new(dir))?;
+        let r = quick_train(&mut be, steps, 7)?;
+        let man = be.manifest();
         let method = man.method.as_str();
         let e = estimate(&man.preset, method, MemOptions::default());
         t.row(vec![

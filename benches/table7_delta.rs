@@ -6,9 +6,9 @@
 
 use std::path::Path;
 
+use sltrain::backend::xla_backend::XlaBackend;
 use sltrain::bench::{fmt, Table};
 use sltrain::coordinator::trainer::quick_train;
-use sltrain::runtime::Runtime;
 use sltrain::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
@@ -16,7 +16,6 @@ fn main() -> anyhow::Result<()> {
         .opt("steps", "120", "train steps per cell")
         .opt("csv", "results/table7.csv", "output CSV")
         .parse_env();
-    let rt = Runtime::cpu()?;
     let steps = a.usize("steps");
 
     let cells: Vec<(&str, &str)> = vec![
@@ -35,7 +34,8 @@ fn main() -> anyhow::Result<()> {
             println!("[skip] {dir}");
             continue;
         }
-        let (r, _man) = quick_train(&rt, Path::new(dir), steps, 7)?;
+        let mut be = XlaBackend::open(Path::new(dir))?;
+        let r = quick_train(&mut be, steps, 7)?;
         let params_m = r.n_params as f64 / 1e6;
         if label == "Full-Rank" {
             full_params = params_m;

@@ -1,41 +1,55 @@
-//! End-to-end driver: pretrain the ~100M-parameter `e2e100m` LLaMA with
-//! SLTrain for a few hundred steps on the synthetic corpus, logging the
-//! loss curve, checkpointing, and reporting throughput + memory. This is
-//! the deliverable-(e2e) run recorded in EXPERIMENTS.md.
+//! End-to-end driver: pretrain a LLaMA with SLTrain for a few hundred
+//! steps on the synthetic corpus, logging the loss curve, checkpointing,
+//! and reporting throughput + memory. This is the deliverable-(e2e) run
+//! recorded in EXPERIMENTS.md.
 //!
-//!   make artifacts-extended
 //!   cargo run --release --example pretrain_e2e -- --steps 300
+//!   # xla build: make artifacts-extended, then
+//!   cargo run --release --features xla --example pretrain_e2e -- \
+//!       --backend xla --artifact artifacts/e2e100m_sltrain
 //!
-//! All three layers compose here: the Pallas-verified SLTrain linear math
-//! (L1) inside the JAX-lowered train step (L2) driven by the rust
-//! coordinator, data pipeline and checkpointing (L3).
+//! Defaults to the pure-rust native backend on the `tiny2` preset (no
+//! artifacts needed); the xla backend runs the JAX-lowered ~100M-param
+//! artifact with the Pallas-verified SLTrain linear math inside.
 
 use anyhow::Result;
+use sltrain::backend::{self, BackendSpec};
 use sltrain::coordinator::{train, TrainConfig};
 use sltrain::data::Pipeline;
 use sltrain::mem::{estimate, MemEstimate, MemOptions};
-use sltrain::runtime::{Artifact, Runtime};
 use sltrain::util::cli::Cli;
 
 fn main() -> Result<()> {
-    let a = Cli::new("pretrain_e2e", "~100M-param SLTrain pretraining run")
-        .opt("artifact", "artifacts/e2e100m_sltrain", "artifact dir")
+    let a = Cli::new("pretrain_e2e", "end-to-end SLTrain pretraining run")
+        .opt("backend", "native", "engine: native | xla")
+        .opt("artifact", "", "artifact dir (xla backend)")
+        .opt("config", "tiny2", "model preset (native backend)")
         .opt("steps", "300", "optimizer steps")
         .opt("eval-every", "50", "eval period")
-        .opt("out", "runs/e2e100m", "output dir (metrics + checkpoint)")
+        .opt("out", "runs/pretrain_e2e", "output dir (metrics + checkpoint)")
         .parse_env();
 
-    let rt = Runtime::cpu()?;
-    let mut art = Artifact::load(std::path::Path::new(&a.str("artifact")))?;
-    let p = &art.manifest.preset;
+    let steps = a.usize("steps");
+    let spec = BackendSpec::from_flags(
+        &a.str("backend"),
+        &a.str("artifact"),
+        &a.str("config"),
+        "sltrain",
+        8,
+        3e-3,
+        steps.max(1),
+    )?;
+    let mut be = backend::open(spec)?;
+    let p = be.preset().clone();
     println!(
-        "=== e2e pretraining: {} | {:.1}M params (full-rank equivalent {:.1}M) ===",
+        "=== e2e pretraining: {} [{}] | {:.1}M params (full-rank equivalent {:.1}M) ===",
         p.name,
-        art.manifest.n_params as f64 / 1e6,
+        be.kind(),
+        be.n_params() as f64 / 1e6,
         p.param_count("full") as f64 / 1e6
     );
-    let est = estimate(p, "sltrain", MemOptions::default());
-    let est_full = estimate(p, "full", MemOptions::default());
+    let est = estimate(&p, "sltrain", MemOptions::default());
+    let est_full = estimate(&p, "full", MemOptions::default());
     println!(
         "estimated train memory (bf16 model): sltrain {:.3}G vs full-rank {:.3}G ({:.0}% cut)",
         MemEstimate::gb(est.table2_bytes()),
@@ -47,7 +61,7 @@ fn main() -> Result<()> {
     std::fs::create_dir_all(&out)?;
     let mut pipe = Pipeline::build(p.vocab, 7);
     let cfg = TrainConfig {
-        steps: a.usize("steps"),
+        steps,
         eval_every: a.usize("eval-every"),
         eval_batches: 2,
         log_every: 5,
@@ -55,7 +69,7 @@ fn main() -> Result<()> {
         checkpoint_path: Some(out.join("final.ckpt")),
         ..Default::default()
     };
-    let r = train(&rt, &mut art, &mut pipe, &cfg)?;
+    let r = train(be.as_mut(), &mut pipe, &cfg)?;
 
     println!("\n=== loss curve ===");
     for (step, loss) in r.train_curve.points.iter().step_by(10) {
@@ -74,7 +88,11 @@ fn main() -> Result<()> {
     );
     std::fs::write(
         out.join("summary.json"),
-        sltrain::coordinator::trainer::summary_json("e2e100m_sltrain", &r).to_string(),
+        sltrain::coordinator::trainer::summary_json(
+            &format!("{}_sltrain_{}", p.name, be.kind()),
+            &r,
+        )
+        .to_string(),
     )?;
     println!("metrics: {:?}", out.join("metrics.jsonl"));
     Ok(())

@@ -1,39 +1,57 @@
-//! Quickstart: pretrain a tiny LLaMA with SLTrain in under a minute.
+//! Quickstart: pretrain a tiny LLaMA with SLTrain in under a minute —
+//! no artifacts, no XLA, no Python.
 //!
-//!   make artifacts && cargo build --release
 //!   cargo run --release --example quickstart
 //!
-//! Loads the `tiny_sltrain` artifact (W = BA ⊕_I V on every linear),
-//! streams the synthetic corpus through the rust data pipeline, runs the
-//! AOT train-step, and prints the loss curve — no Python anywhere.
+//! Builds the pure-rust native backend (W = scale·BA ⊕_I V on every
+//! linear, Adam over {B, A, V}), streams the synthetic corpus through
+//! the rust data pipeline, and prints the loss curve. Pass
+//! `--backend xla --artifact artifacts/tiny_sltrain` (with the `xla`
+//! cargo feature) to run the same loop on an AOT artifact bundle.
 
 use anyhow::Result;
+use sltrain::backend::{self, BackendSpec};
 use sltrain::coordinator::{train, TrainConfig};
 use sltrain::data::Pipeline;
-use sltrain::runtime::{Artifact, Runtime};
+use sltrain::util::cli::Cli;
 
 fn main() -> Result<()> {
-    let rt = Runtime::cpu()?;
-    let dir = std::path::Path::new("artifacts/tiny_sltrain");
-    let mut art = Artifact::load(dir)?;
+    let a = Cli::new("quickstart", "tiny SLTrain pretraining, artifact-free")
+        .opt("backend", "native", "engine: native | xla")
+        .opt("artifact", "", "artifact dir (xla backend)")
+        .opt("config", "tiny", "model preset (native backend)")
+        .opt("method", "sltrain", "weight parameterization (native backend)")
+        .opt("steps", "100", "optimizer steps")
+        .parse_env();
+    let steps = a.usize("steps");
+    let spec = BackendSpec::from_flags(
+        &a.str("backend"),
+        &a.str("artifact"),
+        &a.str("config"),
+        &a.str("method"),
+        8,
+        3e-3,
+        steps.max(1),
+    )?;
+    let mut be = backend::open(spec)?;
     println!(
-        "model: {} ({} params: {:.2}M), method: {}, optimizer: {}",
-        art.manifest.preset.name,
-        art.manifest.params.len(),
-        art.manifest.n_params as f64 / 1e6,
-        art.manifest.method,
-        art.manifest.optimizer,
+        "model: {} ({:.2}M params), method: {}, backend: {}, optimizer: {}",
+        be.preset().name,
+        be.n_params() as f64 / 1e6,
+        be.method(),
+        be.kind(),
+        be.optimizer(),
     );
 
-    let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+    let mut pipe = Pipeline::build(be.preset().vocab, 7);
     let cfg = TrainConfig {
-        steps: 100,
+        steps,
         eval_every: 25,
         eval_batches: 4,
         log_every: 10,
         ..Default::default()
     };
-    let r = train(&rt, &mut art, &mut pipe, &cfg)?;
+    let r = train(be.as_mut(), &mut pipe, &cfg)?;
 
     println!("\nloss curve (every 10 steps):");
     for (step, loss) in r.train_curve.points.iter().step_by(10) {
@@ -41,11 +59,12 @@ fn main() -> Result<()> {
         println!("  {step:>4} {loss:>7.4} {bar}");
     }
     println!(
-        "\nfinal eval ppl {:.2} | {:.0} tok/s | sltrain params {:.2}M vs full-rank {:.2}M",
+        "\nfinal eval ppl {:.2} | {:.0} tok/s | {} params {:.2}M vs full-rank {:.2}M",
         r.final_ppl,
         r.tokens_per_sec,
-        art.manifest.n_params as f64 / 1e6,
-        art.manifest.preset.param_count("full") as f64 / 1e6,
+        be.method(),
+        r.n_params as f64 / 1e6,
+        be.preset().param_count("full") as f64 / 1e6,
     );
     Ok(())
 }

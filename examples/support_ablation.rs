@@ -7,11 +7,12 @@
 //!   cargo run --release --example support_ablation -- --steps 150
 
 use anyhow::Result;
+use sltrain::backend::xla_backend::XlaBackend;
+use sltrain::backend::Backend;
 use sltrain::bench::{fmt, Table};
-use sltrain::coordinator::{train, TrainConfig};
 use sltrain::coordinator::metrics::stats;
+use sltrain::coordinator::{train, TrainConfig};
 use sltrain::data::Pipeline;
-use sltrain::runtime::{Artifact, Runtime};
 use sltrain::util::cli::Cli;
 
 fn main() -> Result<()> {
@@ -19,7 +20,6 @@ fn main() -> Result<()> {
         .opt("steps", "150", "steps per run")
         .opt("root", "artifacts", "artifacts root")
         .parse_env();
-    let rt = Runtime::cpu()?;
     let steps = a.usize("steps");
 
     let mut finals = vec![];
@@ -31,8 +31,8 @@ fn main() -> Result<()> {
             println!("[skip] {dir} not emitted — run `make bench-artifacts` first");
             continue;
         }
-        let mut art = Artifact::load(path)?;
-        let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
+        let mut be = XlaBackend::open(path)?;
+        let mut pipe = Pipeline::build(be.preset().vocab, 7);
         let cfg = TrainConfig {
             steps,
             eval_every: steps / 3,
@@ -40,7 +40,7 @@ fn main() -> Result<()> {
             log_every: 0,
             ..Default::default()
         };
-        let r = train(&rt, &mut art, &mut pipe, &cfg)?;
+        let r = train(&mut be, &mut pipe, &cfg)?;
         println!("support seed {seed}: final eval ppl {:.2}", r.final_ppl);
         finals.push(r.final_ppl);
         curves.push((seed, r.eval_curve));

@@ -1,0 +1,238 @@
+//! Execution backends: the seam between SLTrain's method logic and the
+//! engine that runs the compute.
+//!
+//! The training coordinator (`coordinator::trainer`), the CLI and the
+//! bench harness all program against `dyn Backend` — the execution
+//! contract a pretraining run actually needs: state init, one optimizer
+//! step, held-out loss, a raw forward, the ReLoRA restart hook, and
+//! enough state introspection to checkpoint and analyze. Two
+//! implementations exist:
+//!
+//! * [`native::NativeBackend`] — a pure-rust transformer trainer built on
+//!   `linalg::Matrix` + `linalg::sparse`, with full forward/backward and
+//!   Adam over {B, A, S-values}. Needs no artifacts, no XLA, no Python:
+//!   the deterministic reference the AOT path is parity-tested against.
+//! * `xla_backend::XlaBackend` (cargo feature `xla`) — a thin adapter
+//!   over the AOT/PJRT machinery in `runtime::pjrt`, executing the
+//!   HLO-text artifact bundles emitted by `python/compile/aot.py`.
+//!
+//! Selection is data-driven via [`BackendSpec`] (the `--backend
+//! {xla,native}` CLI flag), so every consumer from `main.rs` down to the
+//! bench binaries is engine-agnostic.
+
+pub mod native;
+
+#[cfg(feature = "xla")]
+pub mod xla_backend;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::config::{preset, ModelPreset};
+use crate::runtime::Dtype;
+
+/// One named tensor of backend state, in the interchange layout shared
+/// with checkpoints and artifact sidecars (little-endian raw bytes).
+#[derive(Debug, Clone)]
+pub struct StateTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub bytes: Vec<u8>,
+}
+
+impl StateTensor {
+    pub fn f32(name: &str, shape: Vec<usize>, data: &[f32]) -> StateTensor {
+        StateTensor {
+            name: name.to_string(),
+            shape,
+            dtype: Dtype::F32,
+            bytes: data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        }
+    }
+
+    pub fn i32(name: &str, shape: Vec<usize>, data: &[i32]) -> StateTensor {
+        StateTensor {
+            name: name.to_string(),
+            shape,
+            dtype: Dtype::I32,
+            bytes: data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        }
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("{}: not f32", self.name);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != Dtype::I32 && self.dtype != Dtype::U32 {
+            bail!("{}: not i32/u32", self.name);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// The execution contract of one pretraining run.
+///
+/// A backend owns its model/optimizer state after `init_state`; the
+/// coordinator shuttles only token batches in and scalar losses out —
+/// exactly the host traffic pattern of the AOT artifact path, so a
+/// pure-rust engine and a PJRT engine are interchangeable behind it.
+pub trait Backend {
+    /// Short engine tag ("native", "xla") for logs and summaries.
+    fn kind(&self) -> &'static str;
+
+    /// Weight parameterization under training (config::METHODS).
+    fn method(&self) -> &str;
+
+    /// Architectural shape of the model being trained.
+    fn preset(&self) -> &ModelPreset;
+
+    /// Rows per train-step token batch.
+    fn batch_size(&self) -> usize;
+
+    /// Rows per forward-entrypoint batch (may differ from train batch).
+    fn forward_batch_size(&self) -> usize {
+        self.batch_size()
+    }
+
+    /// Optimizer family driving `train_step`.
+    fn optimizer(&self) -> &str {
+        "adam"
+    }
+
+    fn seq_len(&self) -> usize {
+        self.preset().seq_len
+    }
+
+    /// Trainable parameter count (paper Table 2 "Param").
+    fn n_params(&self) -> usize;
+
+    /// Initialize parameters, optimizer state and sparse supports.
+    fn init_state(&mut self, seed: u32) -> Result<()>;
+
+    /// One optimizer step on a [batch, seq] row-major token batch.
+    /// Returns the scalar training loss.
+    fn train_step(&mut self, step: i32, tokens: &[i32]) -> Result<f32>;
+
+    /// Held-out loss on one batch (no state mutation).
+    fn eval_loss(&mut self, tokens: &[i32]) -> Result<f32>;
+
+    /// Forward pass returning logits [batch, seq, vocab] flattened.
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// ReLoRA restart hook (merge adaptors + reset their moments).
+    fn merge(&mut self, seed: i32) -> Result<()> {
+        let _ = seed;
+        bail!("{} backend has no merge/restart entrypoint", self.kind())
+    }
+
+    /// Drop optimizer moments (Table-5 inference footprint).
+    fn drop_optimizer_state(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Snapshot persistent state (params + fixed supports) for
+    /// checkpointing and analysis.
+    fn state_tensors(&self) -> Result<Vec<StateTensor>>;
+
+    /// Restore state previously captured by `state_tensors` (resume /
+    /// parity tooling). Unknown names error; missing names are left at
+    /// their initialized values.
+    fn load_state_tensors(&mut self, tensors: &[StateTensor]) -> Result<()>;
+}
+
+/// Data-driven backend selection: everything the CLI / bench flags say.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// AOT artifact bundle executed through PJRT (feature `xla`).
+    Xla { artifact_dir: PathBuf },
+    /// Pure-rust engine: preset + method + run hyperparameters.
+    Native {
+        preset: ModelPreset,
+        method: String,
+        batch: usize,
+        lr: f32,
+        /// lr-schedule horizon (mirrors aot.py's total_steps default).
+        total_steps: usize,
+    },
+}
+
+impl BackendSpec {
+    /// Build a spec from the shared CLI flag set. `backend` is "xla" or
+    /// "native"; `artifact` is required for xla, `config`/`method` for
+    /// native.
+    pub fn from_flags(
+        backend: &str,
+        artifact: &str,
+        config: &str,
+        method: &str,
+        batch: usize,
+        lr: f64,
+        total_steps: usize,
+    ) -> Result<BackendSpec> {
+        match backend {
+            "xla" => {
+                if artifact.is_empty() {
+                    bail!("--backend xla needs --artifact <dir>");
+                }
+                Ok(BackendSpec::Xla { artifact_dir: PathBuf::from(artifact) })
+            }
+            "native" => {
+                if !artifact.is_empty() {
+                    bail!(
+                        "--artifact is an xla-backend flag; pass --backend xla \
+                         (or drop --artifact)"
+                    );
+                }
+                let p = preset(config)
+                    .ok_or_else(|| anyhow::anyhow!("unknown preset {config:?}"))?;
+                Ok(BackendSpec::Native {
+                    preset: p,
+                    method: method.to_string(),
+                    batch: batch.max(1),
+                    lr: lr as f32,
+                    total_steps: total_steps.max(1),
+                })
+            }
+            other => bail!("unknown backend {other:?} (expected xla | native)"),
+        }
+    }
+}
+
+/// Open the backend a spec describes. The xla arm fails at runtime (not
+/// compile time) when the crate was built without the `xla` feature, so
+/// every binary stays artifact-free by default.
+pub fn open(spec: BackendSpec) -> Result<Box<dyn Backend>> {
+    match spec {
+        BackendSpec::Xla { artifact_dir } => open_xla(artifact_dir),
+        BackendSpec::Native { preset, method, batch, lr, total_steps } => Ok(Box::new(
+            native::NativeBackend::build(preset, &method, batch, lr, total_steps)?,
+        )),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn open_xla(artifact_dir: PathBuf) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(xla_backend::XlaBackend::open(&artifact_dir)?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn open_xla(artifact_dir: PathBuf) -> Result<Box<dyn Backend>> {
+    bail!(
+        "backend xla requested for {artifact_dir:?}, but this build has no XLA \
+         support — rebuild with `--features xla`, or use --backend native"
+    )
+}

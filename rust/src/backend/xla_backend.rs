@@ -1,0 +1,183 @@
+//! XlaBackend: the AOT/PJRT execution engine behind the `Backend` trait.
+//!
+//! A thin adapter over `runtime::pjrt` — the artifact bundle owns the
+//! compute (init / train_step / eval_step / forward / merge entrypoints
+//! lowered from JAX), this type owns the host-resident literal state and
+//! translates between the trait's interchange types and `xla::Literal`s.
+//! Only compiled with the `xla` cargo feature.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{Backend, StateTensor};
+use crate::config::ModelPreset;
+use crate::runtime::{lit_f32, lit_i32, lit_i8, Artifact, Dtype, Runtime, State, TensorSpec};
+
+pub struct XlaBackend {
+    rt: Runtime,
+    art: Artifact,
+    state: Option<State>,
+}
+
+impl XlaBackend {
+    /// Load an artifact bundle and bring up the PJRT CPU client.
+    pub fn open(dir: &Path) -> Result<XlaBackend> {
+        let rt = Runtime::cpu()?;
+        let art = Artifact::load(dir)?;
+        Ok(XlaBackend { rt, art, state: None })
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        &self.art.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    /// Persistent tensor specs: params + fixed supports (consts).
+    fn persistent_specs(&self) -> Vec<TensorSpec> {
+        let mut specs = self.art.manifest.params.clone();
+        specs.extend(self.art.manifest.consts.iter().cloned());
+        specs
+    }
+
+    fn spec_to_tensor(&self, state: &State, spec: &TensorSpec) -> Result<StateTensor> {
+        let lit = state.get(&spec.name)?;
+        let bytes: Vec<u8> = match spec.dtype {
+            Dtype::F32 => {
+                let v = lit.to_vec::<f32>().map_err(|e| anyhow!("{}: {e}", spec.name))?;
+                v.iter().flat_map(|x| x.to_le_bytes()).collect()
+            }
+            Dtype::I32 => {
+                let v = lit.to_vec::<i32>().map_err(|e| anyhow!("{}: {e}", spec.name))?;
+                v.iter().flat_map(|x| x.to_le_bytes()).collect()
+            }
+            Dtype::U32 => {
+                let v = lit.to_vec::<u32>().map_err(|e| anyhow!("{}: {e}", spec.name))?;
+                v.iter().flat_map(|x| x.to_le_bytes()).collect()
+            }
+            Dtype::I8 => {
+                let v = lit.to_vec::<i8>().map_err(|e| anyhow!("{}: {e}", spec.name))?;
+                v.iter().map(|&x| x as u8).collect()
+            }
+        };
+        Ok(StateTensor { name: spec.name.clone(), shape: spec.shape.clone(), dtype: spec.dtype, bytes })
+    }
+}
+
+impl Backend for XlaBackend {
+    fn kind(&self) -> &'static str {
+        "xla"
+    }
+
+    fn method(&self) -> &str {
+        &self.art.manifest.method
+    }
+
+    fn preset(&self) -> &ModelPreset {
+        &self.art.manifest.preset
+    }
+
+    fn batch_size(&self) -> usize {
+        self.art.manifest.batch
+    }
+
+    fn forward_batch_size(&self) -> usize {
+        self.art.entry("forward").map(|e| e.batch).unwrap_or_else(|_| self.batch_size())
+    }
+
+    fn optimizer(&self) -> &str {
+        &self.art.manifest.optimizer
+    }
+
+    fn n_params(&self) -> usize {
+        self.art.manifest.n_params
+    }
+
+    fn init_state(&mut self, seed: u32) -> Result<()> {
+        let state = self.art.init_state(&self.rt, seed)?;
+        self.state = Some(state);
+        Ok(())
+    }
+
+    fn train_step(&mut self, step: i32, tokens: &[i32]) -> Result<f32> {
+        let state = self.state.as_mut().ok_or_else(|| anyhow!("init_state not called"))?;
+        self.art.train_step(&self.rt, state, step, tokens)
+    }
+
+    fn eval_loss(&mut self, tokens: &[i32]) -> Result<f32> {
+        let state = self.state.as_mut().ok_or_else(|| anyhow!("init_state not called"))?;
+        self.art.eval_loss(&self.rt, state, tokens)
+    }
+
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let state = self.state.as_mut().ok_or_else(|| anyhow!("init_state not called"))?;
+        self.art.forward(&self.rt, state, tokens)
+    }
+
+    fn merge(&mut self, seed: i32) -> Result<()> {
+        let state = self.state.as_mut().ok_or_else(|| anyhow!("init_state not called"))?;
+        self.art.relora_merge(&self.rt, state, seed)
+    }
+
+    fn drop_optimizer_state(&mut self) -> Result<()> {
+        let state = self.state.as_mut().ok_or_else(|| anyhow!("init_state not called"))?;
+        for spec in &self.art.manifest.opt_state {
+            state.tensors.remove(&spec.name);
+        }
+        Ok(())
+    }
+
+    fn state_tensors(&self) -> Result<Vec<StateTensor>> {
+        let state = self.state.as_ref().ok_or_else(|| anyhow!("init_state not called"))?;
+        self.persistent_specs().iter().map(|s| self.spec_to_tensor(state, s)).collect()
+    }
+
+    fn load_state_tensors(&mut self, tensors: &[StateTensor]) -> Result<()> {
+        let known: std::collections::HashSet<&str> = self
+            .art
+            .manifest
+            .params
+            .iter()
+            .chain(&self.art.manifest.consts)
+            .chain(&self.art.manifest.opt_state)
+            .map(|s| s.name.as_str())
+            .collect();
+        let state = self.state.as_mut().ok_or_else(|| anyhow!("init_state not called"))?;
+        for t in tensors {
+            if !known.contains(t.name.as_str()) {
+                bail!("{}: not a tensor of this artifact", t.name);
+            }
+            let lit = match t.dtype {
+                Dtype::F32 => {
+                    let v: Vec<f32> = t
+                        .bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    lit_f32(&t.shape, &v)?
+                }
+                Dtype::I32 | Dtype::U32 => {
+                    let v: Vec<i32> = t
+                        .bytes
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    lit_i32(&t.shape, &v)?
+                }
+                Dtype::I8 => {
+                    let v: Vec<i8> = t.bytes.iter().map(|&b| b as i8).collect();
+                    lit_i8(&t.shape, &v)?
+                }
+            };
+            let n: usize = t.shape.iter().product();
+            if n * t.dtype.size_bytes() != t.bytes.len() {
+                bail!("{}: byte length mismatch", t.name);
+            }
+            state.put(&t.name, lit);
+        }
+        Ok(())
+    }
+}

@@ -11,7 +11,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::runtime::{lit_f32, lit_i32, Dtype, State};
+use crate::backend::StateTensor;
+use crate::runtime::Dtype;
 use crate::util::json::{num, obj, s, Json};
 
 const MAGIC: &[u8; 8] = b"SLTCKPT1";
@@ -23,32 +24,27 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Snapshot the named tensors out of a runtime state.
-    pub fn from_state(state: &State, names: &[(String, Vec<usize>, Dtype)], step: usize) -> Result<Checkpoint> {
-        let mut tensors = BTreeMap::new();
-        for (name, shape, dtype) in names {
-            let lit = state.get(name)?;
-            let bytes = match dtype {
-                Dtype::F32 => {
-                    let v = lit.to_vec::<f32>().map_err(|e| anyhow!("{name}: {e}"))?;
-                    v.iter().flat_map(|x| x.to_le_bytes()).collect::<Vec<u8>>()
-                }
-                Dtype::I32 => {
-                    let v = lit.to_vec::<i32>().map_err(|e| anyhow!("{name}: {e}"))?;
-                    v.iter().flat_map(|x| x.to_le_bytes()).collect()
-                }
-                Dtype::U32 => {
-                    let v = lit.to_vec::<u32>().map_err(|e| anyhow!("{name}: {e}"))?;
-                    v.iter().flat_map(|x| x.to_le_bytes()).collect()
-                }
-                Dtype::I8 => {
-                    let v = lit.to_vec::<i8>().map_err(|e| anyhow!("{name}: {e}"))?;
-                    v.iter().map(|&x| x as u8).collect()
-                }
-            };
-            tensors.insert(name.clone(), (shape.clone(), *dtype, bytes));
-        }
-        Ok(Checkpoint { step, tensors })
+    /// Snapshot a backend's interchange tensors (the engine-agnostic
+    /// path: any `Backend::state_tensors` output checkpoints this way).
+    pub fn from_tensors(tensors: Vec<StateTensor>, step: usize) -> Checkpoint {
+        let tensors = tensors
+            .into_iter()
+            .map(|t| (t.name, (t.shape, t.dtype, t.bytes)))
+            .collect();
+        Checkpoint { step, tensors }
+    }
+
+    /// Back to interchange tensors (`Backend::load_state_tensors` input).
+    pub fn to_state_tensors(&self) -> Vec<StateTensor> {
+        self.tensors
+            .iter()
+            .map(|(name, (shape, dtype, bytes))| StateTensor {
+                name: name.clone(),
+                shape: shape.clone(),
+                dtype: *dtype,
+                bytes: bytes.clone(),
+            })
+            .collect()
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -118,33 +114,6 @@ impl Checkpoint {
         Ok(Checkpoint { step, tensors })
     }
 
-    /// Materialize all tensors back into a runtime state.
-    pub fn restore_into(&self, state: &mut State) -> Result<()> {
-        for (name, (shape, dtype, bytes)) in &self.tensors {
-            match dtype {
-                Dtype::F32 => {
-                    let v: Vec<f32> = bytes
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
-                    state.put(name, lit_f32(shape, &v)?);
-                }
-                Dtype::I32 | Dtype::U32 => {
-                    let v: Vec<i32> = bytes
-                        .chunks_exact(4)
-                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
-                    state.put(name, lit_i32(shape, &v)?);
-                }
-                Dtype::I8 => {
-                    let v: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
-                    state.put(name, crate::runtime::lit_i8(shape, &v)?);
-                }
-            }
-        }
-        Ok(())
-    }
-
     /// Fetch one f32 tensor (analysis path).
     pub fn tensor_f32(&self, name: &str) -> Result<(Vec<usize>, Vec<f32>)> {
         let (shape, dtype, bytes) = self
@@ -179,17 +148,18 @@ fn dtype_name(d: Dtype) -> &'static str {
 mod tests {
     use super::*;
 
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sltrain-ckpt-{tag}-{}", std::process::id()))
+    }
+
     #[test]
     fn save_load_roundtrip() {
-        let mut state = State::new();
-        state.put("w", lit_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap());
-        state.put("idx", lit_i32(&[3], &[7, 8, 9]).unwrap());
-        let names = vec![
-            ("w".to_string(), vec![2, 3], Dtype::F32),
-            ("idx".to_string(), vec![3], Dtype::I32),
+        let tensors = vec![
+            StateTensor::f32("w", vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            StateTensor::i32("idx", vec![3], &[7, 8, 9]),
         ];
-        let ck = Checkpoint::from_state(&state, &names, 42).unwrap();
-        let dir = std::env::temp_dir().join(format!("sltrain-ckpt-{}", std::process::id()));
+        let ck = Checkpoint::from_tensors(tensors, 42);
+        let dir = tmp_dir("rt");
         let path = dir.join("test.ckpt");
         ck.save(&path).unwrap();
 
@@ -198,27 +168,57 @@ mod tests {
         let (shape, w) = loaded.tensor_f32("w").unwrap();
         assert_eq!(shape, vec![2, 3]);
         assert_eq!(w, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let back = loaded.to_state_tensors();
+        assert_eq!(back.len(), 2);
+        let by_name = |n: &str| back.iter().find(|t| t.name == n).unwrap();
+        assert_eq!(by_name("w").to_f32().unwrap(), w);
+        assert_eq!(by_name("idx").to_i32().unwrap(), vec![7, 8, 9]);
+        std::fs::remove_dir_all(dir).ok();
+    }
 
-        let mut restored = State::new();
-        loaded.restore_into(&mut restored).unwrap();
-        assert_eq!(restored.to_f32("w").unwrap(), w);
+    /// Bit-identical round-trip for every dtype the interchange format
+    /// carries, including non-finite f32 payloads and raw i8 moments.
+    #[test]
+    fn roundtrip_is_bit_identical_per_dtype() {
+        let f32_bits: Vec<f32> = vec![0.0, -0.0, 1.5e-39, f32::INFINITY, f32::NAN, -7.25];
+        let i32_vals: Vec<i32> = vec![i32::MIN, -1, 0, 1, i32::MAX];
+        let i8_bytes: Vec<u8> = vec![0, 1, 127, 128, 255];
+        let tensors = vec![
+            StateTensor::f32("a.f32", vec![2, 3], &f32_bits),
+            StateTensor::i32("b.i32", vec![5], &i32_vals),
+            StateTensor {
+                name: "c.i8".into(),
+                shape: vec![5],
+                dtype: Dtype::I8,
+                bytes: i8_bytes.clone(),
+            },
+        ];
+        let want: Vec<Vec<u8>> = tensors.iter().map(|t| t.bytes.clone()).collect();
+        let dir = tmp_dir("dtype");
+        let path = dir.join("dtypes.ckpt");
+        Checkpoint::from_tensors(tensors, 7).save(&path).unwrap();
+
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 7);
+        for (i, name) in ["a.f32", "b.i32", "c.i8"].iter().enumerate() {
+            let (_, dtype, bytes) = &loaded.tensors[*name];
+            assert_eq!(bytes, &want[i], "{name} bytes drifted");
+            match i {
+                0 => assert_eq!(*dtype, Dtype::F32),
+                1 => assert_eq!(*dtype, Dtype::I32),
+                _ => assert_eq!(*dtype, Dtype::I8),
+            }
+        }
         std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]
     fn rejects_garbage_file() {
-        let dir = std::env::temp_dir().join(format!("sltrain-ckpt2-{}", std::process::id()));
+        let dir = tmp_dir("junk");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("junk.ckpt");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_dir_all(dir).ok();
-    }
-
-    #[test]
-    fn missing_tensor_errors() {
-        let state = State::new();
-        let names = vec![("nope".to_string(), vec![1], Dtype::F32)];
-        assert!(Checkpoint::from_state(&state, &names, 0).is_err());
     }
 }

@@ -3,8 +3,9 @@
 //! Owns the whole run: data pipeline feeding, train-step execution,
 //! ReLoRA restart scheduling (the paper's eq. 1 baseline), periodic
 //! held-out evaluation (perplexity), metric/JSONL emission, throughput
-//! accounting, and checkpointing. Python is nowhere in this loop — the
-//! compute is the AOT artifact, everything else is rust.
+//! accounting, and checkpointing. The compute engine is fully abstract:
+//! everything here goes through `dyn Backend`, so the same loop drives
+//! the AOT/PJRT path and the pure-rust native path unchanged.
 
 use std::path::PathBuf;
 
@@ -12,8 +13,8 @@ use anyhow::Result;
 
 use super::checkpoint::Checkpoint;
 use super::metrics::{perplexity, Curve, Ema, Throughput};
+use crate::backend::Backend;
 use crate::data::Pipeline;
-use crate::runtime::{Artifact, Dtype, Runtime, State};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::logging::MetricsWriter;
 
@@ -23,7 +24,7 @@ pub struct TrainConfig {
     pub eval_every: usize,
     pub eval_batches: usize,
     pub log_every: usize,
-    /// ReLoRA restart period (ignored unless the artifact method is relora)
+    /// ReLoRA restart period (ignored unless the method is relora)
     pub relora_every: usize,
     pub seed: u32,
     pub metrics_path: Option<PathBuf>,
@@ -60,18 +61,17 @@ pub struct TrainResult {
     pub relora_merges: usize,
 }
 
-/// Run a full pretraining job for one artifact.
+/// Run a full pretraining job on one backend.
 pub fn train(
-    rt: &Runtime,
-    art: &mut Artifact,
+    backend: &mut dyn Backend,
     pipe: &mut Pipeline,
     cfg: &TrainConfig,
 ) -> Result<TrainResult> {
-    let batch = art.entry("train_step")?.batch;
-    let seq = art.manifest.seq_len();
-    let method = art.manifest.method.clone();
+    let batch = backend.batch_size();
+    let seq = backend.seq_len();
+    let method = backend.method().to_string();
 
-    let mut state = art.init_state(rt, cfg.seed)?;
+    backend.init_state(cfg.seed)?;
     let valid_set = pipe.valid_set(cfg.eval_batches, batch, seq);
 
     let mut metrics = match &cfg.metrics_path {
@@ -85,10 +85,13 @@ pub fn train(
     let mut thr = Throughput::start();
     let mut peak_rss = crate::runtime::current_rss_bytes();
     let mut relora_merges = 0usize;
+    // set when the in-loop periodic save already covered the final step,
+    // so the post-loop save doesn't write the same checkpoint twice
+    let mut saved_at_final_step = false;
 
     for step in 0..cfg.steps {
         let tokens = pipe.train.next_batch(batch, seq);
-        let loss = art.train_step(rt, &mut state, step as i32, &tokens)? as f64;
+        let loss = backend.train_step(step as i32, &tokens)? as f64;
         thr.add_tokens((batch * seq) as u64);
         let smooth = ema.update(loss);
         train_curve.push(step, loss);
@@ -116,13 +119,13 @@ pub fn train(
             && step > 0
             && step % cfg.relora_every == 0
         {
-            art.relora_merge(rt, &mut state, step as i32)?;
+            backend.merge(step as i32)?;
             relora_merges += 1;
             crate::info!("relora merge at step {step} (#{relora_merges})");
         }
 
         if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-            let ev = eval(rt, art, &mut state, &valid_set)?;
+            let ev = eval(backend, &valid_set)?;
             eval_curve.push(step + 1, ev);
             crate::info!("eval @ {:>5}: loss {ev:.4} ppl {:.2}", step + 1, perplexity(ev));
             if let Some(w) = metrics.as_mut() {
@@ -135,21 +138,22 @@ pub fn train(
             }
         }
 
-        if cfg.checkpoint_every > 0
-            && (step + 1) % cfg.checkpoint_every == 0
-        {
+        if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
             if let Some(p) = &cfg.checkpoint_path {
-                save_checkpoint(art, &state, step + 1, p)?;
+                save_checkpoint(backend, step + 1, p)?;
+                saved_at_final_step = step + 1 == cfg.steps;
             }
         }
     }
 
     let final_eval_loss = match eval_curve.last() {
         Some(v) => v,
-        None => eval(rt, art, &mut state, &valid_set)?,
+        None => eval(backend, &valid_set)?,
     };
     if let Some(p) = &cfg.checkpoint_path {
-        save_checkpoint(art, &state, cfg.steps, p)?;
+        if !saved_at_final_step {
+            save_checkpoint(backend, cfg.steps, p)?;
+        }
     }
 
     Ok(TrainResult {
@@ -160,56 +164,36 @@ pub fn train(
         tokens_per_sec: thr.tokens_per_sec(),
         wall_secs: thr.elapsed_secs(),
         peak_rss_bytes: peak_rss,
-        n_params: art.manifest.n_params,
+        n_params: backend.n_params(),
         relora_merges,
     })
 }
 
 /// Mean eval loss over a fixed validation set.
-pub fn eval(
-    rt: &Runtime,
-    art: &mut Artifact,
-    state: &mut State,
-    valid_set: &[Vec<i32>],
-) -> Result<f64> {
+pub fn eval(backend: &mut dyn Backend, valid_set: &[Vec<i32>]) -> Result<f64> {
     let mut total = 0.0;
     for batch in valid_set {
-        total += art.eval_loss(rt, state, batch)? as f64;
+        total += backend.eval_loss(batch)? as f64;
     }
     Ok(total / valid_set.len().max(1) as f64)
 }
 
-/// Persist params (+ supports for self-containment) to a checkpoint.
-pub fn save_checkpoint(
-    art: &Artifact,
-    state: &State,
-    step: usize,
-    path: &PathBuf,
-) -> Result<()> {
-    let mut names: Vec<(String, Vec<usize>, Dtype)> = art
-        .manifest
-        .params
-        .iter()
-        .map(|t| (t.name.clone(), t.shape.clone(), t.dtype))
-        .collect();
-    for t in &art.manifest.consts {
-        names.push((t.name.clone(), t.shape.clone(), t.dtype));
-    }
-    Checkpoint::from_state(state, &names, step)?.save(path)?;
+/// Persist the backend's durable state (params + supports) to a
+/// self-contained checkpoint.
+pub fn save_checkpoint(backend: &dyn Backend, step: usize, path: &PathBuf) -> Result<()> {
+    Checkpoint::from_tensors(backend.state_tensors()?, step).save(path)?;
     crate::info!("checkpoint @ {step} -> {path:?}");
     Ok(())
 }
 
-/// One-call wrapper used by the bench binaries: load artifact, build the
-/// standard pipeline, train `steps`, return the result.
+/// One-call wrapper used by the bench binaries: build the standard
+/// pipeline for the backend's vocab, train `steps`, return the result.
 pub fn quick_train(
-    rt: &Runtime,
-    artifact_dir: &std::path::Path,
+    backend: &mut dyn Backend,
     steps: usize,
     data_seed: u64,
-) -> Result<(TrainResult, crate::runtime::Manifest)> {
-    let mut art = Artifact::load(artifact_dir)?;
-    let mut pipe = Pipeline::build(art.manifest.preset.vocab, data_seed);
+) -> Result<TrainResult> {
+    let mut pipe = Pipeline::build(backend.preset().vocab, data_seed);
     let cfg = TrainConfig {
         steps,
         eval_every: 0,
@@ -217,8 +201,7 @@ pub fn quick_train(
         log_every: 0,
         ..Default::default()
     };
-    let r = train(rt, &mut art, &mut pipe, &cfg)?;
-    Ok((r, art.manifest.clone()))
+    train(backend, &mut pipe, &cfg)
 }
 
 /// Emit a one-line experiment summary (used by the bench binaries).

@@ -9,13 +9,17 @@
 //! * **L2** — the LLaMA-family model + optimizers in JAX
 //!   (`python/compile/`), AOT-lowered to HLO-text artifacts.
 //! * **L3** — this crate: the training coordinator, data pipeline,
-//!   memory estimator, analysis tooling, and the PJRT runtime that
-//!   executes the artifacts with Python nowhere on the hot path.
+//!   memory estimator, analysis tooling, and two execution backends
+//!   behind one `backend::Backend` trait — the pure-rust `native`
+//!   engine (no artifacts, no XLA; the default), and the PJRT runtime
+//!   that executes the AOT artifacts (cargo feature `xla`) with Python
+//!   nowhere on the hot path.
 //!
 //! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for the
 //! measured reproduction of every table and figure.
 
 pub mod analysis;
+pub mod backend;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -6,8 +6,10 @@
 //! exact enough (1e-5) for every matrix size we analyze and has no
 //! dependencies.
 
+pub mod sparse;
 pub mod svd;
 
+pub use sparse::SparseSupport;
 pub use svd::{svd, Svd};
 
 /// Row-major f32 matrix.
@@ -64,18 +66,28 @@ impl Matrix {
     /// Blocked matmul with a transposed-B inner loop (cache-friendly).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let bt = other.transpose();
+        self.matmul_transb(&other.transpose())
+    }
+
+    /// `self @ bt^T` with `bt` already transposed ([n, k] for a [m, k]
+    /// self). Callers that multiply by the same matrix repeatedly (or
+    /// that naturally hold B^T, like every `dy @ W^T` in backprop) hoist
+    /// the transpose out of the hot loop instead of paying a fresh
+    /// re-layout on every `matmul` call.
+    pub fn matmul_transb(&self, bt: &Matrix) -> Matrix {
+        assert_eq!(self.cols, bt.cols, "matmul_transb inner-dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, bt.rows);
         let mut out = Matrix::zeros(m, n);
         for i in 0..m {
             let a_row = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (j, o) in out_row.iter_mut().enumerate() {
                 let b_row = &bt.data[j * k..(j + 1) * k];
                 let mut acc = 0.0f32;
                 for l in 0..k {
                     acc += a_row[l] * b_row[l];
                 }
-                out[(i, j)] = acc;
+                *o = acc;
             }
         }
         out
@@ -138,8 +150,9 @@ impl Matrix {
                 us[(i, j)] = u[(i, j)] * s[j];
             }
         }
-        let vtr = Matrix::from_fn(r, self.cols, |i, j| vt[(i, j)]);
-        us.matmul(&vtr)
+        // copy V_r out transposed once and skip matmul's internal re-layout
+        let vr = Matrix::from_fn(self.cols, r, |i, j| vt[(j, i)]);
+        us.matmul_transb(&vr)
     }
 }
 
@@ -178,6 +191,18 @@ mod tests {
         let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
         let c = a.matmul(&b);
         assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_transb_matches_matmul() {
+        let mut rng = Rng::new(9);
+        let a = Matrix::random(6, 5, &mut rng);
+        let b = Matrix::random(5, 8, &mut rng);
+        let via_plain = a.matmul(&b);
+        let via_transb = a.matmul_transb(&b.transpose());
+        assert!(via_plain.sub(&via_transb).max_abs() < 1e-6);
+        assert_eq!(via_transb.rows, 6);
+        assert_eq!(via_transb.cols, 8);
     }
 
     #[test]

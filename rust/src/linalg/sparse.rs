@@ -1,0 +1,247 @@
+//! Fixed-support sparse kernels for the native SLTrain backend.
+//!
+//! SLTrain's sparse factor S never changes support: `idx` is chosen once
+//! at init (paper §3.2) and only the values are learned. That makes the
+//! support a build-once structure — we keep the paper's flat row-major
+//! COO indices (the interchange format of the artifact sidecars and
+//! checkpoints) and derive a CSR row partition from them once, so the
+//! per-step kernels are straight loops with no searching:
+//!
+//!   * `spmm`          y  += x @ S        (forward sparse contribution)
+//!   * `spmm_t`        dx += dy @ S^T     (backward input gradient)
+//!   * `scatter_grad`  dvals = (x^T dy) gathered at the support — the
+//!                     paper's eq. (2) sparse gradient, never
+//!                     materializing the dense d_in × d_out matrix
+//!   * `fused_effective`  W = scale·(B@A) ⊕_idx vals  (Algorithm 1 line 4)
+
+use super::Matrix;
+use crate::util::rng::Rng;
+
+/// A fixed sparse support over a `d_in × d_out` matrix: sorted flat
+/// row-major COO indices plus the derived CSR row partition.
+#[derive(Debug, Clone)]
+pub struct SparseSupport {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Flat row-major indices, sorted ascending, distinct.
+    pub idx: Vec<u32>,
+    /// Column of each nonzero (idx % d_out), aligned with `idx`.
+    cols: Vec<u32>,
+    /// CSR row pointer: nonzeros of row i live in row_ptr[i]..row_ptr[i+1].
+    row_ptr: Vec<usize>,
+}
+
+impl SparseSupport {
+    /// Build from sorted-distinct flat indices (the sidecar/checkpoint
+    /// format). Panics on out-of-range or unsorted input.
+    pub fn new(d_in: usize, d_out: usize, idx: Vec<u32>) -> SparseSupport {
+        assert!(d_out > 0 && d_in > 0, "empty support shape");
+        let bound = (d_in * d_out) as u32;
+        assert!(idx.iter().all(|&i| i < bound), "support index out of range");
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "support not sorted-distinct");
+        let cols: Vec<u32> = idx.iter().map(|&i| i % d_out as u32).collect();
+        let mut row_ptr = vec![0usize; d_in + 1];
+        for &i in &idx {
+            row_ptr[i as usize / d_out + 1] += 1;
+        }
+        for r in 0..d_in {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        SparseSupport { d_in, d_out, idx, cols, row_ptr }
+    }
+
+    /// Uniform random support with `nnz = max(1, round(delta·d_in·d_out))`
+    /// distinct entries — the paper's fixed-support strategy, mirroring
+    /// `ref.random_support` on the python side.
+    pub fn random(d_in: usize, d_out: usize, delta: f64, rng: &mut Rng) -> SparseSupport {
+        let total = d_in * d_out;
+        let nnz = ((delta * total as f64).round() as usize).clamp(1, total);
+        let idx: Vec<u32> = rng
+            .sample_without_replacement(total as u64, nnz)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        SparseSupport::new(d_in, d_out, idx)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Scatter-add the values into a dense [d_in, d_out] matrix (the ⊕).
+    pub fn densify_into(&self, w: &mut Matrix, vals: &[f32]) {
+        assert_eq!((w.rows, w.cols), (self.d_in, self.d_out));
+        assert_eq!(vals.len(), self.nnz());
+        w.scatter_add(&self.idx, vals);
+    }
+
+    /// Fused `scale·(B @ A) ⊕_idx vals` — the transient dense weight of
+    /// Algorithm 1, built in one pass for consumers that want it
+    /// materialized (inference, analysis, parity checks).
+    pub fn fused_effective(&self, b: &Matrix, a: &Matrix, vals: &[f32], scale: f32) -> Matrix {
+        assert_eq!(b.rows, self.d_in);
+        assert_eq!(a.cols, self.d_out);
+        let mut w = b.matmul(a);
+        if scale != 1.0 {
+            for x in &mut w.data {
+                *x *= scale;
+            }
+        }
+        self.densify_into(&mut w, vals);
+        w
+    }
+
+    /// `y += x @ S` for x [n, d_in]: the forward sparse contribution.
+    /// CSR traversal — each nonzero touches one x column and one y column.
+    pub fn spmm_add(&self, x: &Matrix, vals: &[f32], y: &mut Matrix) {
+        assert_eq!(x.cols, self.d_in, "spmm x width");
+        assert_eq!((y.rows, y.cols), (x.rows, self.d_out), "spmm y shape");
+        assert_eq!(vals.len(), self.nnz());
+        for n in 0..x.rows {
+            let x_row = &x.data[n * self.d_in..(n + 1) * self.d_in];
+            let y_row = &mut y.data[n * self.d_out..(n + 1) * self.d_out];
+            for i in 0..self.d_in {
+                let xv = x_row[i];
+                if xv == 0.0 {
+                    continue;
+                }
+                for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                    y_row[self.cols[k] as usize] += xv * vals[k];
+                }
+            }
+        }
+    }
+
+    /// `y = x @ S` (fresh output).
+    pub fn spmm(&self, x: &Matrix, vals: &[f32]) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, self.d_out);
+        self.spmm_add(x, vals, &mut y);
+        y
+    }
+
+    /// `dx += dy @ S^T` for dy [n, d_out]: the backward input gradient.
+    pub fn spmm_t_add(&self, dy: &Matrix, vals: &[f32], dx: &mut Matrix) {
+        assert_eq!(dy.cols, self.d_out, "spmm_t dy width");
+        assert_eq!((dx.rows, dx.cols), (dy.rows, self.d_in), "spmm_t dx shape");
+        assert_eq!(vals.len(), self.nnz());
+        for n in 0..dy.rows {
+            let dy_row = &dy.data[n * self.d_out..(n + 1) * self.d_out];
+            let dx_row = &mut dx.data[n * self.d_in..(n + 1) * self.d_in];
+            for i in 0..self.d_in {
+                let mut acc = 0.0f32;
+                for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                    acc += dy_row[self.cols[k] as usize] * vals[k];
+                }
+                dx_row[i] += acc;
+            }
+        }
+    }
+
+    /// `dy @ S^T` (fresh output).
+    pub fn spmm_t(&self, dy: &Matrix, vals: &[f32]) -> Matrix {
+        let mut dx = Matrix::zeros(dy.rows, self.d_in);
+        self.spmm_t_add(dy, vals, &mut dx);
+        dx
+    }
+
+    /// Sparse value gradient of eq. (2): `dvals[k] = (x^T dy)[idx[k]]`
+    /// computed as `Σ_n x[n, row_k] · dy[n, col_k]` — the dense d_in×d_out
+    /// gradient is never formed.
+    pub fn scatter_grad(&self, x: &Matrix, dy: &Matrix) -> Vec<f32> {
+        assert_eq!(x.cols, self.d_in);
+        assert_eq!(dy.cols, self.d_out);
+        assert_eq!(x.rows, dy.rows);
+        let mut dvals = vec![0.0f32; self.nnz()];
+        for i in 0..self.d_in {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let c = self.cols[k] as usize;
+                let mut acc = 0.0f32;
+                for n in 0..x.rows {
+                    acc += x.data[n * self.d_in + i] * dy.data[n * self.d_out + c];
+                }
+                dvals[k] = acc;
+            }
+        }
+        dvals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(seed: u64, d_in: usize, d_out: usize, delta: f64) -> (SparseSupport, Vec<f32>, Rng) {
+        let mut rng = Rng::new(seed);
+        let sup = SparseSupport::random(d_in, d_out, delta, &mut rng);
+        let vals: Vec<f32> = (0..sup.nnz()).map(|_| rng.gaussian() as f32).collect();
+        (sup, vals, rng)
+    }
+
+    #[test]
+    fn random_support_is_sorted_distinct_in_range() {
+        let (sup, _, _) = fixture(0, 13, 9, 0.1);
+        assert_eq!(sup.nnz(), (0.1f64 * 13.0 * 9.0).round() as usize);
+        assert!(sup.idx.windows(2).all(|w| w[0] < w[1]));
+        assert!(sup.idx.iter().all(|&i| (i as usize) < 13 * 9));
+    }
+
+    #[test]
+    fn csr_rows_partition_the_support() {
+        let (sup, _, _) = fixture(1, 7, 11, 0.2);
+        let mut count = 0;
+        for i in 0..sup.d_in {
+            for k in sup.row_ptr[i]..sup.row_ptr[i + 1] {
+                assert_eq!(sup.idx[k] as usize / sup.d_out, i);
+                count += 1;
+            }
+        }
+        assert_eq!(count, sup.nnz());
+    }
+
+    #[test]
+    fn spmm_matches_densify_then_matmul() {
+        let (sup, vals, mut rng) = fixture(2, 10, 6, 0.15);
+        let x = Matrix::random(4, 10, &mut rng);
+        let mut dense = Matrix::zeros(10, 6);
+        sup.densify_into(&mut dense, &vals);
+        let want = x.matmul(&dense);
+        let got = sup.spmm(&x, &vals);
+        assert!(want.sub(&got).max_abs() < 1e-5);
+    }
+
+    #[test]
+    fn spmm_t_matches_dense_transpose() {
+        let (sup, vals, mut rng) = fixture(3, 8, 12, 0.1);
+        let dy = Matrix::random(5, 12, &mut rng);
+        let mut dense = Matrix::zeros(8, 12);
+        sup.densify_into(&mut dense, &vals);
+        let want = dy.matmul_transb(&dense);
+        let got = sup.spmm_t(&dy, &vals);
+        assert!(want.sub(&got).max_abs() < 1e-5);
+    }
+
+    #[test]
+    fn scatter_grad_matches_dense_gather() {
+        let (sup, _, mut rng) = fixture(4, 9, 7, 0.2);
+        let x = Matrix::random(6, 9, &mut rng);
+        let dy = Matrix::random(6, 7, &mut rng);
+        let dense = x.transpose().matmul(&dy);
+        let got = sup.scatter_grad(&x, &dy);
+        for (k, &i) in sup.idx.iter().enumerate() {
+            let want = dense.data[i as usize];
+            assert!((got[k] - want).abs() < 1e-4, "nnz {k}: {} vs {want}", got[k]);
+        }
+    }
+
+    #[test]
+    fn fused_effective_matches_parts() {
+        let (sup, vals, mut rng) = fixture(5, 10, 8, 0.1);
+        let b = Matrix::random(10, 3, &mut rng);
+        let a = Matrix::random(3, 8, &mut rng);
+        let scale = 1.75f32;
+        let w = sup.fused_effective(&b, &a, &vals, scale);
+        let mut want = b.matmul(&a).scale(scale);
+        sup.densify_into(&mut want, &vals);
+        assert!(w.sub(&want).max_abs() < 1e-5);
+    }
+}

@@ -1,7 +1,7 @@
 //! `sltrain` — the L3 launcher.
 //!
 //! Subcommands:
-//!   train         pretrain from an artifact dir (the paper's main loop)
+//!   train         pretrain (native pure-rust engine, or an AOT artifact)
 //!   estimate-mem  Appendix-F memory tables for any preset × method
 //!   analyze       Fig-2/10/11 spectrum + residual analysis of a checkpoint
 //!   data          inspect / dump the synthetic corpus + tokenizer
@@ -9,8 +9,15 @@
 //!   inference     Table-5 style forward-only memory + throughput
 //!   prop1         Monte-Carlo check of Proposition 1
 //!
+//! The compute-bearing subcommands take `--backend {native,xla}`.
+//! `native` (the default) needs no artifacts and no XLA: the full
+//! sparse+low-rank trainer runs on the in-crate linalg kernels. `xla`
+//! executes an AOT artifact bundle through PJRT and requires both
+//! `--artifact` and a build with the `xla` cargo feature.
+//!
 //! Examples:
-//!   sltrain train --artifact artifacts/tiny_sltrain --steps 200
+//!   sltrain train --backend native --config tiny --steps 200
+//!   sltrain train --backend xla --artifact artifacts/tiny_sltrain
 //!   sltrain estimate-mem --config paper60m
 //!   sltrain analyze --checkpoint runs/tiny/ckpt.bin --layer layers.0.attn.o
 
@@ -20,14 +27,14 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Result};
 
 use sltrain::analysis::{full_rank_probability, ResidualReport, SpectrumDecomp};
+use sltrain::backend::{self, BackendSpec};
 use sltrain::bench::{fmt, Table};
 use sltrain::config::{preset, METHODS};
 use sltrain::coordinator::{train, Checkpoint, TrainConfig};
 use sltrain::data::{CorpusConfig, Pipeline, SynthCorpus};
 use sltrain::linalg::Matrix;
 use sltrain::mem::{estimate, MemEstimate, MemOptions};
-use sltrain::runtime::{Artifact, Runtime};
-use sltrain::util::cli::Cli;
+use sltrain::util::cli::{Args, Cli};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -60,7 +67,7 @@ const HELP: &str = "\
 sltrain — sparse plus low-rank pretraining (NeurIPS 2024), reproduced
 
 subcommands:
-  train         pretrain from an artifact dir
+  train         pretrain (--backend native needs no artifacts)
   estimate-mem  Appendix-F memory tables (any preset x method)
   analyze       spectrum/residual analysis of a checkpoint
   data          synthetic corpus + tokenizer inspection
@@ -72,33 +79,67 @@ subcommands:
 run `sltrain <subcommand> --help` for flags
 ";
 
-fn cmd_train(argv: &[String]) -> Result<()> {
-    let a = Cli::new("sltrain train", "pretrain from an AOT artifact bundle")
-        .req("artifact", "artifact directory (manifest.json + *.hlo.txt)")
-        .opt("steps", "200", "optimizer steps")
-        .opt("eval-every", "50", "evaluation period (0 = only final)")
-        .opt("eval-batches", "4", "validation batches per evaluation")
-        .opt("log-every", "10", "train-loss log period")
-        .opt("relora-every", "100", "ReLoRA restart period (relora artifacts)")
-        .opt("seed", "42", "init + data seed")
-        .opt("data-seed", "7", "synthetic corpus seed")
-        .opt("metrics", "", "JSONL metrics output path")
-        .opt("checkpoint", "", "checkpoint output path")
-        .opt("checkpoint-every", "0", "checkpoint period (0 = end only)")
-        .parse(argv);
+/// The shared `--backend` flag set of the compute-bearing subcommands.
+fn backend_flags(c: Cli) -> Cli {
+    c.opt("backend", "auto", "engine: native | xla | auto (xla iff --artifact given)")
+        .opt("artifact", "", "artifact directory (xla backend)")
+        .opt("config", "tiny", "model preset (native backend)")
+        .opt("method", "sltrain", "weight parameterization (native backend)")
+        .opt("batch", "8", "train batch rows (native backend)")
+        .opt("lr", "0.003", "base learning rate (native backend)")
+        .opt("total-steps", "2000", "lr-schedule horizon (native backend)")
+}
 
-    let rt = Runtime::cpu()?;
-    let dir = PathBuf::from(a.str("artifact"));
-    let mut art = Artifact::load(&dir)?;
+fn backend_spec(a: &Args) -> Result<BackendSpec> {
+    let artifact = a.str("artifact");
+    let chosen = match a.str("backend").as_str() {
+        "auto" => {
+            if artifact.is_empty() {
+                "native".to_string()
+            } else {
+                "xla".to_string()
+            }
+        }
+        other => other.to_string(),
+    };
+    BackendSpec::from_flags(
+        &chosen,
+        &artifact,
+        &a.str("config"),
+        &a.str("method"),
+        a.usize("batch"),
+        a.f64("lr"),
+        a.usize("total-steps"),
+    )
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let a = backend_flags(Cli::new(
+        "sltrain train",
+        "pretrain with the native engine or an AOT artifact bundle",
+    ))
+    .opt("steps", "200", "optimizer steps")
+    .opt("eval-every", "50", "evaluation period (0 = only final)")
+    .opt("eval-batches", "4", "validation batches per evaluation")
+    .opt("log-every", "10", "train-loss log period")
+    .opt("relora-every", "100", "ReLoRA restart period (relora artifacts)")
+    .opt("seed", "42", "init + data seed")
+    .opt("data-seed", "7", "synthetic corpus seed")
+    .opt("metrics", "", "JSONL metrics output path")
+    .opt("checkpoint", "", "checkpoint output path")
+    .opt("checkpoint-every", "0", "checkpoint period (0 = end only)")
+    .parse(argv);
+
+    let mut be = backend::open(backend_spec(&a)?)?;
     sltrain::info!(
-        "loaded {} / {} ({:.2}M params, optimizer {}) on {}",
-        art.manifest.preset.name,
-        art.manifest.method,
-        art.manifest.n_params as f64 / 1e6,
-        art.manifest.optimizer,
-        rt.platform()
+        "backend {} | {} / {} ({:.2}M params, optimizer {})",
+        be.kind(),
+        be.preset().name,
+        be.method(),
+        be.n_params() as f64 / 1e6,
+        be.optimizer()
     );
-    let mut pipe = Pipeline::build(art.manifest.preset.vocab, a.u64("data-seed"));
+    let mut pipe = Pipeline::build(be.preset().vocab, a.u64("data-seed"));
     let cfg = TrainConfig {
         steps: a.usize("steps"),
         eval_every: a.usize("eval-every"),
@@ -110,7 +151,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         checkpoint_path: non_empty(a.str("checkpoint")).map(PathBuf::from),
         checkpoint_every: a.usize("checkpoint-every"),
     };
-    let r = train(&rt, &mut art, &mut pipe, &cfg)?;
+    let r = train(be.as_mut(), &mut pipe, &cfg)?;
     println!(
         "final: eval loss {:.4} ppl {:.2} | {:.0} tok/s | {:.1}s | peak rss {:.0} MB",
         r.final_eval_loss,
@@ -262,70 +303,71 @@ fn cmd_data(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_throughput(argv: &[String]) -> Result<()> {
-    let a = Cli::new("sltrain throughput", "Table-3 training throughput")
-        .req("artifact", "artifact directory")
+    let a = backend_flags(Cli::new("sltrain throughput", "Table-3 training throughput"))
         .opt("steps", "30", "measured steps (after 3 warmup)")
         .opt("seed", "42", "seed")
         .parse(argv);
-    let rt = Runtime::cpu()?;
-    let mut art = Artifact::load(Path::new(&a.str("artifact")))?;
-    let batch = art.entry("train_step")?.batch;
-    let seq = art.manifest.seq_len();
-    let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
-    let mut state = art.init_state(&rt, a.u64("seed") as u32)?;
+    let mut be = backend::open(backend_spec(&a)?)?;
+    be.init_state(a.u64("seed") as u32)?;
+    let batch = be.batch_size();
+    let seq = be.seq_len();
+    let mut pipe = Pipeline::build(be.preset().vocab, 7);
     for w in 0..3 {
         let toks = pipe.train.next_batch(batch, seq);
-        art.train_step(&rt, &mut state, w, &toks)?;
+        be.train_step(w, &toks)?;
     }
     let t0 = std::time::Instant::now();
     let steps = a.usize("steps");
     for s in 0..steps {
         let toks = pipe.train.next_batch(batch, seq);
-        art.train_step(&rt, &mut state, 3 + s as i32, &toks)?;
+        be.train_step(3 + s as i32, &toks)?;
     }
     let dt = t0.elapsed().as_secs_f64();
     let tok_s = (steps * batch * seq) as f64 / dt;
     println!(
-        "{} / {}: {:.0} tokens/sec ({} steps, batch {batch}, seq {seq}, {:.2}s)",
-        art.manifest.preset.name, art.manifest.method, tok_s, steps, dt
+        "{} / {} [{}]: {:.0} tokens/sec ({} steps, batch {batch}, seq {seq}, {:.2}s)",
+        be.preset().name,
+        be.method(),
+        be.kind(),
+        tok_s,
+        steps,
+        dt
     );
     Ok(())
 }
 
 fn cmd_inference(argv: &[String]) -> Result<()> {
-    let a = Cli::new("sltrain inference", "Table-5 forward-only memory + throughput")
-        .req("artifact", "artifact directory")
-        .opt("iters", "20", "forward passes to time")
-        .opt("seed", "42", "seed")
-        .parse(argv);
-    let rt = Runtime::cpu()?;
-    let mut art = Artifact::load(Path::new(&a.str("artifact")))?;
-    let batch = art.entry("forward")?.batch;
-    let seq = art.manifest.seq_len();
-    let mut pipe = Pipeline::build(art.manifest.preset.vocab, 7);
-    let mut state = art.init_state(&rt, a.u64("seed") as u32)?;
+    let a = backend_flags(Cli::new(
+        "sltrain inference",
+        "Table-5 forward-only memory + throughput",
+    ))
+    .opt("iters", "20", "forward passes to time")
+    .opt("seed", "42", "seed")
+    .parse(argv);
+    let mut be = backend::open(backend_spec(&a)?)?;
+    be.init_state(a.u64("seed") as u32)?;
+    let batch = be.forward_batch_size();
+    let seq = be.seq_len();
+    let mut pipe = Pipeline::build(be.preset().vocab, 7);
     // drop optimizer state: inference holds params only (paper Table 5)
-    let opt_names: Vec<String> =
-        art.manifest.opt_state.iter().map(|t| t.name.clone()).collect();
-    for n in &opt_names {
-        state.tensors.remove(n);
-    }
+    be.drop_optimizer_state()?;
     let rss0 = sltrain::runtime::current_rss_bytes();
     let toks = pipe.valid.next_batch(batch, seq);
-    art.forward(&rt, &mut state, &toks)?; // compile+warm
+    be.forward(&toks)?; // compile+warm
     let t0 = std::time::Instant::now();
     for _ in 0..a.usize("iters") {
-        art.forward(&rt, &mut state, &toks)?;
+        be.forward(&toks)?;
     }
     let dt = t0.elapsed().as_secs_f64();
     let tok_s = (a.usize("iters") * batch * seq) as f64 / dt;
     let rss1 = sltrain::runtime::current_rss_bytes();
     println!(
-        "{} / {}: inference {:.0} tokens/sec | params {:.1} MB | rss {:.0}->{:.0} MB",
-        art.manifest.preset.name,
-        art.manifest.method,
+        "{} / {} [{}]: inference {:.0} tokens/sec | params {:.1} MB | rss {:.0}->{:.0} MB",
+        be.preset().name,
+        be.method(),
+        be.kind(),
         tok_s,
-        art.manifest.params.iter().map(|t| t.numel() * 4).sum::<usize>() as f64 / 1e6,
+        be.n_params() as f64 * 4.0 / 1e6,
         rss0 as f64 / 1e6,
         rss1 as f64 / 1e6,
     );

@@ -1,0 +1,406 @@
+//! PJRT execution: load HLO-text artifacts, compile once, execute forever.
+//!
+//! This is the only module in the crate that touches the `xla` crate, and
+//! it only exists when the `xla` cargo feature is enabled. It follows the
+//! reference wiring of /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`, with
+//! tuple-root outputs decomposed per the manifest's output name list.
+//!
+//! State (params + optimizer buffers + fixed sparse supports) lives here
+//! as `xla::Literal`s keyed by tensor name, so the training loop shuttles
+//! only token batches and scalars per step.
+
+use super::{Dtype, Entrypoint, Manifest, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compile {path:?}: {e}"))
+    }
+}
+
+/// Host-resident tensor state: name -> Literal.
+pub struct State {
+    pub tensors: HashMap<String, xla::Literal>,
+}
+
+impl State {
+    pub fn new() -> State {
+        State { tensors: HashMap::new() }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&xla::Literal> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("state missing tensor {name:?}"))
+    }
+
+    pub fn put(&mut self, name: &str, lit: xla::Literal) {
+        self.tensors.insert(name.to_string(), lit);
+    }
+
+    /// Copy a tensor out as f32 (for checkpoints / analysis).
+    pub fn to_f32(&self, name: &str) -> Result<Vec<f32>> {
+        Ok(self.get(name)?.to_vec::<f32>().map_err(|e| anyhow!("{name}: {e}"))?)
+    }
+}
+
+impl Default for State {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ------------------------------------------------------------- literals
+
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_f32 shape {shape:?} != len {}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("{e}"))?)
+}
+
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_i32 shape {shape:?} != len {}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("{e}"))?)
+}
+
+/// i8 literals: `i8` implements ArrayElement but not NativeType, so go
+/// through create_from_shape + copy_raw_from instead of vec1.
+pub fn lit_i8(shape: &[usize], data: &[i8]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_i8 shape {shape:?} != len {}", data.len());
+    }
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S8, shape);
+    lit.copy_raw_from(data).map_err(|e| anyhow!("{e}"))?;
+    Ok(lit)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_scalar_u32(v: u32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn zeros_like_spec(spec: &TensorSpec) -> Result<xla::Literal> {
+    let n: usize = spec.shape.iter().product();
+    match spec.dtype {
+        Dtype::F32 => lit_f32(&spec.shape, &vec![0.0; n]),
+        Dtype::I32 => lit_i32(&spec.shape, &vec![0; n]),
+        Dtype::I8 => lit_i8(&spec.shape, &vec![0i8; n]),
+        Dtype::U32 => {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(&vec![0u32; n]).reshape(&dims).map_err(|e| anyhow!("{e}"))?)
+        }
+    }
+}
+
+// ------------------------------------------------------------- artifact
+
+/// A loaded artifact bundle: manifest + lazily compiled executables.
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Artifact {
+    pub fn load(dir: &Path) -> Result<Artifact> {
+        let man_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {man_path:?}"))?;
+        let manifest = Manifest::parse(&text)?;
+        Ok(Artifact { dir: dir.to_path_buf(), manifest, execs: HashMap::new() })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entrypoint> {
+        self.manifest
+            .entrypoints
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact has no entrypoint {name:?}"))
+    }
+
+    /// Compile (and cache) an entrypoint's executable.
+    pub fn compile(&mut self, rt: &Runtime, name: &str) -> Result<()> {
+        if self.execs.contains_key(name) {
+            return Ok(());
+        }
+        let file = self.entry(name)?.file.clone();
+        let exe = rt.compile_file(&self.dir.join(&file))?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entrypoint. `extra` supplies the __-prefixed inputs;
+    /// everything else is pulled from `state` by name. Outputs named in
+    /// the manifest are written back to `state`; __-outputs are returned.
+    pub fn run(
+        &mut self,
+        rt: &Runtime,
+        name: &str,
+        state: &mut State,
+        extra: &HashMap<String, xla::Literal>,
+    ) -> Result<HashMap<String, xla::Literal>> {
+        self.compile(rt, name)?;
+        let entry = self.entry(name)?.clone();
+        let exe = self.execs.get(name).expect("compiled above");
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(entry.inputs.len());
+        for n in &entry.inputs {
+            if let Some(l) = extra.get(n) {
+                inputs.push(l);
+            } else {
+                inputs.push(state.get(n)?);
+            }
+        }
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+        let outs = tuple.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        if outs.len() != entry.outputs.len() {
+            bail!(
+                "{name}: {} outputs but manifest lists {}",
+                outs.len(),
+                entry.outputs.len()
+            );
+        }
+        let mut special = HashMap::new();
+        for (out_name, lit) in entry.outputs.iter().zip(outs) {
+            if out_name.starts_with("__") {
+                special.insert(out_name.clone(), lit);
+            } else {
+                state.put(out_name, lit);
+            }
+        }
+        Ok(special)
+    }
+
+    /// Load the fixed sparse supports from sidecar files into state (i32).
+    pub fn load_supports(&self, state: &mut State) -> Result<()> {
+        for (name, sup) in &self.manifest.supports {
+            let raw = std::fs::read(self.dir.join(&sup.file))
+                .with_context(|| format!("support {name}"))?;
+            if raw.len() != sup.nnz * 4 {
+                bail!("support {name}: {} bytes for nnz {}", raw.len(), sup.nnz);
+            }
+            let idx: Vec<i32> = raw
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as i32)
+                .collect();
+            state.put(name, lit_i32(&[sup.nnz], &idx)?);
+        }
+        Ok(())
+    }
+
+    /// Run init: fills params + optimizer state, then loads supports.
+    pub fn init_state(&mut self, rt: &Runtime, seed: u32) -> Result<State> {
+        let mut state = State::new();
+        let mut extra = HashMap::new();
+        extra.insert("__seed".to_string(), lit_scalar_u32(seed));
+        self.run(rt, "init", &mut state, &extra)?;
+        self.load_supports(&mut state)?;
+        Ok(state)
+    }
+
+    /// One optimizer step. Returns the scalar loss.
+    pub fn train_step(
+        &mut self,
+        rt: &Runtime,
+        state: &mut State,
+        step: i32,
+        tokens: &[i32],
+    ) -> Result<f32> {
+        let entry = self.entry("train_step")?;
+        let (b, s) = (entry.batch, self.manifest.seq_len());
+        if tokens.len() != b * s {
+            bail!("train_step expects {}x{} tokens, got {}", b, s, tokens.len());
+        }
+        let mut extra = HashMap::new();
+        extra.insert("__step".to_string(), lit_scalar_i32(step));
+        extra.insert("__tokens".to_string(), lit_i32(&[b, s], tokens)?);
+        let out = self.run(rt, "train_step", state, &extra)?;
+        let loss = out
+            .get("__loss")
+            .ok_or_else(|| anyhow!("train_step returned no __loss"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e}"))?[0];
+        Ok(loss)
+    }
+
+    /// Validation loss on one batch (no state mutation).
+    pub fn eval_loss(&mut self, rt: &Runtime, state: &mut State, tokens: &[i32]) -> Result<f32> {
+        let entry = self.entry("eval_step")?;
+        let (b, s) = (entry.batch, self.manifest.seq_len());
+        if tokens.len() != b * s {
+            bail!("eval_step expects {}x{} tokens, got {}", b, s, tokens.len());
+        }
+        let mut extra = HashMap::new();
+        extra.insert("__tokens".to_string(), lit_i32(&[b, s], tokens)?);
+        let out = self.run(rt, "eval_step", state, &extra)?;
+        Ok(out["__loss"].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0])
+    }
+
+    /// Forward pass returning logits [b, s, vocab] flattened.
+    pub fn forward(&mut self, rt: &Runtime, state: &mut State, tokens: &[i32]) -> Result<Vec<f32>> {
+        let entry = self.entry("forward")?;
+        let (b, s) = (entry.batch, self.manifest.seq_len());
+        if tokens.len() != b * s {
+            bail!("forward expects {}x{} tokens, got {}", b, s, tokens.len());
+        }
+        let mut extra = HashMap::new();
+        extra.insert("__tokens".to_string(), lit_i32(&[b, s], tokens)?);
+        let out = self.run(rt, "forward", state, &extra)?;
+        Ok(out["__logits"].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?)
+    }
+
+    /// ReLoRA restart: merge BA into W0 (artifact) + reset B/A moments.
+    pub fn relora_merge(&mut self, rt: &Runtime, state: &mut State, seed: i32) -> Result<()> {
+        let mut extra = HashMap::new();
+        extra.insert("__seed".to_string(), lit_scalar_i32(seed));
+        self.run(rt, "merge", state, &extra)?;
+        // optimizer reset for the re-initialized adaptors
+        let opt_specs: Vec<TensorSpec> = self.manifest.opt_state.clone();
+        for spec in &opt_specs {
+            let base = spec
+                .name
+                .rsplit_once('.')
+                .map(|(b, _)| b)
+                .unwrap_or(&spec.name);
+            if base.ends_with(".B") || base.ends_with(".A") {
+                state.put(&spec.name, zeros_like_spec(spec)?);
+            }
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------- device-resident loop
+
+/// Device-resident training state: name -> PjRtBuffer. The §Perf fast
+/// path: parameters and optimizer state stay on the PJRT device between
+/// steps (the patched `execute_b_untupled` returns one buffer per output
+/// leaf), so the per-step host traffic is just tokens in + loss out,
+/// instead of a full round-trip of every parameter through Literals.
+pub struct DeviceState {
+    pub bufs: HashMap<String, xla::PjRtBuffer>,
+}
+
+impl Artifact {
+    /// Upload all state tensors as device buffers.
+    pub fn to_device(&self, rt: &Runtime, state: &State) -> Result<DeviceState> {
+        let mut bufs = HashMap::new();
+        for (name, lit) in &state.tensors {
+            let buf = rt
+                .client
+                .buffer_from_host_literal(None, lit)
+                .map_err(|e| anyhow!("upload {name}: {e}"))?;
+            bufs.insert(name.clone(), buf);
+        }
+        Ok(DeviceState { bufs })
+    }
+
+    /// Download device buffers back into a host state (checkpoints/analysis).
+    pub fn to_host(&self, dstate: &DeviceState) -> Result<State> {
+        let mut state = State::new();
+        for (name, buf) in &dstate.bufs {
+            state.put(name, buf.to_literal_sync().map_err(|e| anyhow!("{name}: {e}"))?);
+        }
+        Ok(state)
+    }
+
+    /// One optimizer step with device-resident state. Only the token batch
+    /// crosses host→device and only the scalar loss crosses device→host.
+    pub fn train_step_device(
+        &mut self,
+        rt: &Runtime,
+        dstate: &mut DeviceState,
+        step: i32,
+        tokens: &[i32],
+    ) -> Result<f32> {
+        self.compile(rt, "train_step")?;
+        let entry = self.entry("train_step")?.clone();
+        let (b, s) = (entry.batch, self.manifest.seq_len());
+        if tokens.len() != b * s {
+            bail!("train_step expects {}x{} tokens, got {}", b, s, tokens.len());
+        }
+        let step_buf = rt
+            .client
+            .buffer_from_host_buffer(&[step], &[], None)
+            .map_err(|e| anyhow!("{e}"))?;
+        let tok_buf = rt
+            .client
+            .buffer_from_host_buffer(tokens, &[b, s], None)
+            .map_err(|e| anyhow!("{e}"))?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(entry.inputs.len());
+        for n in &entry.inputs {
+            match n.as_str() {
+                "__step" => inputs.push(&step_buf),
+                "__tokens" => inputs.push(&tok_buf),
+                other => inputs.push(
+                    dstate
+                        .bufs
+                        .get(other)
+                        .ok_or_else(|| anyhow!("device state missing {other}"))?,
+                ),
+            }
+        }
+        let exe = self.execs.get("train_step").expect("compiled above");
+        let mut result = exe
+            .execute_b_untupled::<&xla::PjRtBuffer>(&inputs)
+            .map_err(|e| anyhow!("execute_b_untupled: {e}"))?;
+        let outs = std::mem::take(&mut result[0]);
+        if outs.len() != entry.outputs.len() {
+            bail!(
+                "untupled execute: {} outputs vs {} in manifest",
+                outs.len(),
+                entry.outputs.len()
+            );
+        }
+        let mut loss = 0.0f32;
+        for (name, buf) in entry.outputs.iter().zip(outs) {
+            if name == "__loss" {
+                loss = buf
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("{e}"))?
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("{e}"))?[0];
+            } else {
+                dstate.bufs.insert(name.clone(), buf);
+            }
+        }
+        Ok(loss)
+    }
+}
