@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         .opt("backend", "native", "engine: native | xla")
         .opt("steps", "120", "train steps per cell")
         .opt("configs", "tiny", "comma-separated scale points")
+        .opt("threads", "0", "native step-loop worker threads (0 = auto)")
         .opt("csv", "results/table2.csv", "output CSV")
         .parse_env();
     let steps = a.usize("steps");
@@ -65,6 +66,7 @@ fn main() -> anyhow::Result<()> {
                         batch: 8,
                         lr: 3e-3,
                         total_steps: steps.max(1),
+                        threads: a.usize("threads"),
                     }
                 }
             };

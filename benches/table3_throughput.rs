@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         .opt("backend", "native", "engine: native | xla")
         .opt("steps", "30", "measured steps (after 3 warmup)")
         .opt("config", "tiny", "scale point")
+        .opt("threads", "0", "native step-loop worker threads (0 = auto)")
         .opt("csv", "results/table3.csv", "output CSV")
         .parse_env();
     let cfgn = a.str("config");
@@ -55,6 +56,7 @@ fn main() -> anyhow::Result<()> {
                     batch: 8,
                     lr: 3e-3,
                     total_steps: 2000,
+                    threads: a.usize("threads"),
                 }
             }
         };

@@ -27,6 +27,7 @@ fn main() -> Result<()> {
         .opt("steps", "300", "optimizer steps")
         .opt("eval-every", "50", "eval period")
         .opt("out", "runs/pretrain_e2e", "output dir (metrics + checkpoint)")
+        .opt("threads", "0", "step-loop worker threads (native backend, 0 = auto)")
         .parse_env();
 
     let steps = a.usize("steps");
@@ -38,6 +39,7 @@ fn main() -> Result<()> {
         8,
         3e-3,
         steps.max(1),
+        a.usize("threads"),
     )?;
     let mut be = backend::open(spec)?;
     let p = be.preset().clone();

@@ -22,6 +22,7 @@ fn main() -> Result<()> {
         .opt("config", "tiny", "model preset (native backend)")
         .opt("method", "sltrain", "weight parameterization (native backend)")
         .opt("steps", "100", "optimizer steps")
+        .opt("threads", "0", "step-loop worker threads (native backend, 0 = auto)")
         .parse_env();
     let steps = a.usize("steps");
     let spec = BackendSpec::from_flags(
@@ -32,6 +33,7 @@ fn main() -> Result<()> {
         8,
         3e-3,
         steps.max(1),
+        a.usize("threads"),
     )?;
     let mut be = backend::open(spec)?;
     println!(

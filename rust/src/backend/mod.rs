@@ -167,6 +167,10 @@ pub enum BackendSpec {
         lr: f32,
         /// lr-schedule horizon (mirrors aot.py's total_steps default).
         total_steps: usize,
+        /// Worker threads for the step loop (0 = auto: SLTRAIN_THREADS
+        /// env, else available parallelism). Losses are bit-identical
+        /// for every thread count.
+        threads: usize,
     },
 }
 
@@ -182,6 +186,7 @@ impl BackendSpec {
         batch: usize,
         lr: f64,
         total_steps: usize,
+        threads: usize,
     ) -> Result<BackendSpec> {
         match backend {
             "xla" => {
@@ -205,6 +210,7 @@ impl BackendSpec {
                     batch: batch.max(1),
                     lr: lr as f32,
                     total_steps: total_steps.max(1),
+                    threads,
                 })
             }
             other => bail!("unknown backend {other:?} (expected xla | native)"),
@@ -218,8 +224,8 @@ impl BackendSpec {
 pub fn open(spec: BackendSpec) -> Result<Box<dyn Backend>> {
     match spec {
         BackendSpec::Xla { artifact_dir } => open_xla(artifact_dir),
-        BackendSpec::Native { preset, method, batch, lr, total_steps } => Ok(Box::new(
-            native::NativeBackend::build(preset, &method, batch, lr, total_steps)?,
+        BackendSpec::Native { preset, method, batch, lr, total_steps, threads } => Ok(Box::new(
+            native::NativeBackend::build(preset, &method, batch, lr, total_steps, threads)?,
         )),
     }
 }

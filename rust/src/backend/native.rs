@@ -16,7 +16,22 @@
 //! gradient: the sparse contribution flows through `SparseSupport::spmm`
 //! / `spmm_t`, and the sparse value gradient is gathered straight off
 //! the support (`scatter_grad`, eq. 2). Every `dy @ W^T`-shaped product
-//! uses `Matrix::matmul_transb` with the transpose hoisted.
+//! uses the transpose-hoisted `matmul_transb` path.
+//!
+//! **Execution model.** The step loop is multi-core: one
+//! `linalg::parallel::ThreadPool` (the `--threads` flag; 0 = auto)
+//! drives row-panel-parallel blocked matmuls, the per-(batch, head)
+//! attention loops, and the row-partitioned sparse kernels. Every
+//! parallel region runs independent tasks with fixed f32 reduction
+//! order, so losses are bit-identical across runs *and* across thread
+//! counts; `--threads 1` spawns nothing and is the serial engine.
+//!
+//! **Parameter interning.** Parameters live in an id-indexed
+//! `Vec<PTensor>`; every per-linear handle (`ParamId`, `LinId`) is
+//! interned once at `init_state`, so the step loop does plain vector
+//! indexing — no `format!("{path}.B")` string rebuilding, no map
+//! lookups. A name table is kept only for the state interchange
+//! (checkpoints, parity tooling).
 //!
 //! No artifacts, no XLA, no Python: this backend is the deterministic
 //! reference the AOT/PJRT path is parity-tested against, and the engine
@@ -28,6 +43,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::{Backend, StateTensor};
 use crate::config::ModelPreset;
+use crate::linalg::parallel::{resolve_threads, ThreadPool};
 use crate::linalg::{Matrix, SparseSupport};
 use crate::util::rng::Rng;
 
@@ -94,6 +110,58 @@ impl PTensor {
     }
 }
 
+// ------------------------------------------------------------- handles
+//
+// Interned once at init_state: the step loop addresses every parameter
+// by dense index, never by name.
+
+/// Index into the parameter store (`params` / `adam_m` / `adam_v`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ParamId(usize);
+
+/// Index into the per-linear tables (`lins` / `lin_paths` / xb cache),
+/// in `preset.linear_paths()` order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct LinId(usize);
+
+#[derive(Debug, Clone, Copy)]
+struct SparseHandle {
+    vals: ParamId,
+    /// Index into `supports` / `support_paths`.
+    sup: usize,
+}
+
+/// The parameterization of one adapted linear.
+#[derive(Debug, Clone, Copy)]
+enum LinKind {
+    Full { w: ParamId },
+    Factored { b: ParamId, a: ParamId, sparse: Option<SparseHandle> },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct LayerHandles {
+    ln1_g: ParamId,
+    ln2_g: ParamId,
+    q: LinId,
+    k: LinId,
+    v: LinId,
+    o: LinId,
+    gate: LinId,
+    up: LinId,
+    down: LinId,
+}
+
+#[derive(Debug, Clone)]
+struct ModelHandles {
+    embed: ParamId,
+    head: ParamId,
+    lnf_g: ParamId,
+    layers: Vec<LayerHandles>,
+}
+
+/// Linears per layer in `linear_paths()` order (q,k,v,o,gate,up,down).
+const LINS_PER_LAYER: usize = 7;
+
 // ----------------------------------------------------- forward caches
 
 struct BlockCache {
@@ -119,8 +187,6 @@ struct BlockCache {
     u: Matrix,
     /// silu(g_pre) ⊙ u: the input of the down linear.
     h: Matrix,
-    /// x @ B per factored linear path (reused by the backward pass).
-    xb: BTreeMap<String, Matrix>,
 }
 
 struct FwdCache {
@@ -128,13 +194,28 @@ struct FwdCache {
     bsz: usize,
     t: usize,
     blocks: Vec<BlockCache>,
+    /// x @ B per factored linear, indexed by LinId (backward reuse).
+    xb: Vec<Option<Matrix>>,
     xhatf: Matrix,
     rf: Vec<f32>,
     /// Gained final-norm output: the input of the head matmul.
     xnf: Matrix,
 }
 
-type Grads = BTreeMap<String, Vec<f32>>;
+/// Per-parameter gradient accumulators, indexed by ParamId (empty =
+/// not yet touched).
+type Grads = Vec<Vec<f32>>;
+
+fn acc_grad(grads: &mut Grads, id: ParamId, g: &[f32]) {
+    let slot = &mut grads[id.0];
+    if slot.is_empty() {
+        slot.extend_from_slice(g);
+    } else {
+        for (a, b) in slot.iter_mut().zip(g) {
+            *a += b;
+        }
+    }
+}
 
 // ------------------------------------------------------------ backend
 
@@ -146,15 +227,25 @@ pub struct NativeBackend {
     total_steps: usize,
     /// The paper's alpha/r balancing factor on B@A.
     scale: f32,
-    params: BTreeMap<String, PTensor>,
-    adam_m: BTreeMap<String, Vec<f32>>,
-    adam_v: BTreeMap<String, Vec<f32>>,
-    /// Fixed sparse supports keyed by linear path (sltrain only).
-    supports: BTreeMap<String, SparseSupport>,
+    /// Interned parameter store; `ParamId` indexes all three vectors.
+    params: Vec<PTensor>,
+    param_names: Vec<String>,
+    adam_m: Vec<Vec<f32>>,
+    adam_v: Vec<Vec<f32>>,
+    /// Name -> id, kept only for the state interchange.
+    name_to_id: BTreeMap<String, usize>,
+    /// Per-linear parameter handles, `LinId`-indexed.
+    lins: Vec<LinKind>,
+    lin_paths: Vec<String>,
+    /// Fixed sparse supports (sltrain only), `SparseHandle::sup`-indexed.
+    supports: Vec<SparseSupport>,
+    support_paths: Vec<String>,
+    handles: Option<ModelHandles>,
     /// RoPE tables, [seq_len * head_dim/2] row-major.
     rope_cos: Vec<f32>,
     rope_sin: Vec<f32>,
-    initialized: bool,
+    /// Worker pool driving matmuls, attention heads and sparse kernels.
+    pool: ThreadPool,
 }
 
 impl NativeBackend {
@@ -164,6 +255,7 @@ impl NativeBackend {
         batch: usize,
         lr: f32,
         total_steps: usize,
+        threads: usize,
     ) -> Result<NativeBackend> {
         if !matches!(method, "full" | "lowrank" | "sltrain") {
             bail!("native backend supports full | lowrank | sltrain (got {method:?})");
@@ -197,50 +289,70 @@ impl NativeBackend {
             lr,
             total_steps: total_steps.max(1),
             scale,
-            params: BTreeMap::new(),
-            adam_m: BTreeMap::new(),
-            adam_v: BTreeMap::new(),
-            supports: BTreeMap::new(),
+            params: Vec::new(),
+            param_names: Vec::new(),
+            adam_m: Vec::new(),
+            adam_v: Vec::new(),
+            name_to_id: BTreeMap::new(),
+            lins: Vec::new(),
+            lin_paths: Vec::new(),
+            supports: Vec::new(),
+            support_paths: Vec::new(),
+            handles: None,
             rope_cos,
             rope_sin,
-            initialized: false,
+            pool: ThreadPool::new(resolve_threads(threads)),
         })
+    }
+
+    /// Resolved worker count of the step loop's pool.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     fn head_dim(&self) -> usize {
         self.preset.d_model / self.preset.n_heads
     }
 
-    fn param(&self, name: &str) -> Result<&PTensor> {
-        self.params.get(name).ok_or_else(|| anyhow!("native state missing tensor {name:?}"))
+    fn mat(&self, id: ParamId) -> &Matrix {
+        self.params[id.0].mat()
     }
 
-    fn param_mat(&self, name: &str) -> Result<&Matrix> {
-        Ok(self.param(name)?.mat())
+    fn vec1(&self, id: ParamId) -> &[f32] {
+        self.params[id.0].vec()
     }
 
-    fn param_vec(&self, name: &str) -> Result<&[f32]> {
-        Ok(self.param(name)?.vec())
-    }
-
-    fn ensure_init(&self) -> Result<()> {
-        if !self.initialized {
-            bail!("backend state not initialized (call init_state first)");
-        }
-        Ok(())
+    fn handles(&self) -> Result<&ModelHandles> {
+        self.handles
+            .as_ref()
+            .ok_or_else(|| anyhow!("backend state not initialized (call init_state first)"))
     }
 
     // -------------------------------------------------------- init
 
+    fn intern(&mut self, name: String, t: PTensor) -> ParamId {
+        let id = self.params.len();
+        self.name_to_id.insert(name.clone(), id);
+        self.param_names.push(name);
+        self.params.push(t);
+        ParamId(id)
+    }
+
     /// Paper §3.3 init, mirroring python `model.init_fn` / `init_linear`:
     /// embed N(0, 0.02), head Kaiming, norm gains 1, per-linear Kaiming A
     /// (+ Kaiming B for lowrank, zero B + uniform ±1/√d_in values for
-    /// sltrain), and one independent uniform support per linear.
+    /// sltrain), and one independent uniform support per linear. All
+    /// parameter handles are interned here, once.
     fn init_params(&mut self, seed: u32) {
         let p = self.preset.clone();
         let root = Rng::new(seed as u64);
         self.params.clear();
+        self.param_names.clear();
+        self.name_to_id.clear();
+        self.lins.clear();
+        self.lin_paths.clear();
         self.supports.clear();
+        self.support_paths.clear();
 
         let gauss_mat = |rng: &mut Rng, rows: usize, cols: usize, std: f32| {
             let mut m = Matrix::zeros(rows, cols);
@@ -251,156 +363,157 @@ impl NativeBackend {
         };
 
         let mut r_embed = root.fork(1);
-        self.params.insert(
+        let embed = self.intern(
             "embed.w".into(),
             PTensor::Mat(gauss_mat(&mut r_embed, p.vocab, p.d_model, 0.02)),
         );
         let mut r_head = root.fork(2);
         let head_std = (2.0f32 / p.d_model as f32).sqrt();
-        self.params.insert(
+        let head = self.intern(
             "head.w".into(),
             PTensor::Mat(gauss_mat(&mut r_head, p.d_model, p.vocab, head_std)),
         );
-        self.params.insert("lnf.g".into(), PTensor::Vec1(vec![1.0; p.d_model]));
+        let lnf_g = self.intern("lnf.g".into(), PTensor::Vec1(vec![1.0; p.d_model]));
+        let mut ln1_ids = Vec::with_capacity(p.n_layers);
+        let mut ln2_ids = Vec::with_capacity(p.n_layers);
         for i in 0..p.n_layers {
-            self.params
-                .insert(format!("layers.{i}.ln1.g"), PTensor::Vec1(vec![1.0; p.d_model]));
-            self.params
-                .insert(format!("layers.{i}.ln2.g"), PTensor::Vec1(vec![1.0; p.d_model]));
+            let g = vec![1.0; p.d_model];
+            ln1_ids.push(self.intern(format!("layers.{i}.ln1.g"), PTensor::Vec1(g.clone())));
+            ln2_ids.push(self.intern(format!("layers.{i}.ln2.g"), PTensor::Vec1(g)));
         }
 
         for (j, (path, d_in, d_out)) in p.linear_paths().into_iter().enumerate() {
             let base = root.fork(1000 + j as u64);
             let kaiming_in = (2.0f32 / d_in as f32).sqrt();
             let kaiming_r = (2.0f32 / p.rank as f32).sqrt();
-            match self.method.as_str() {
+            let kind = match self.method.as_str() {
                 "full" => {
                     let mut r1 = base.fork(1);
-                    self.params.insert(
+                    let w = self.intern(
                         format!("{path}.w"),
                         PTensor::Mat(gauss_mat(&mut r1, d_in, d_out, kaiming_in)),
                     );
+                    LinKind::Full { w }
                 }
                 "lowrank" => {
                     // lowrank cannot start at BA = 0 (no gradient to
                     // escape); Kaiming B as in [24]
                     let mut r1 = base.fork(1);
                     let mut r2 = base.fork(2);
-                    self.params.insert(
+                    let b = self.intern(
                         format!("{path}.B"),
                         PTensor::Mat(gauss_mat(&mut r2, d_in, p.rank, kaiming_in)),
                     );
-                    self.params.insert(
+                    let a = self.intern(
                         format!("{path}.A"),
                         PTensor::Mat(gauss_mat(&mut r1, p.rank, d_out, kaiming_r)),
                     );
+                    LinKind::Factored { b, a, sparse: None }
                 }
                 "sltrain" => {
                     let mut r1 = base.fork(1);
                     let mut r2 = base.fork(2);
-                    self.params.insert(
-                        format!("{path}.B"),
-                        PTensor::Mat(Matrix::zeros(d_in, p.rank)),
-                    );
-                    self.params.insert(
+                    let b = self
+                        .intern(format!("{path}.B"), PTensor::Mat(Matrix::zeros(d_in, p.rank)));
+                    let a = self.intern(
                         format!("{path}.A"),
                         PTensor::Mat(gauss_mat(&mut r1, p.rank, d_out, kaiming_r)),
                     );
                     let mut r_sup = base.fork(3);
                     let sup = SparseSupport::random(d_in, d_out, p.delta, &mut r_sup);
                     let bound = 1.0f32 / (d_in as f32).sqrt();
-                    let vals: Vec<f32> =
+                    let vals_data: Vec<f32> =
                         (0..sup.nnz()).map(|_| r2.range_f32(-bound, bound)).collect();
-                    self.params.insert(format!("{path}.vals"), PTensor::Vec1(vals));
-                    self.supports.insert(path.clone(), sup);
+                    let vals = self.intern(format!("{path}.vals"), PTensor::Vec1(vals_data));
+                    let sup_idx = self.supports.len();
+                    self.supports.push(sup);
+                    self.support_paths.push(path.clone());
+                    LinKind::Factored { b, a, sparse: Some(SparseHandle { vals, sup: sup_idx }) }
                 }
                 _ => unreachable!("validated in build"),
-            }
+            };
+            self.lins.push(kind);
+            self.lin_paths.push(path);
         }
 
-        self.adam_m.clear();
-        self.adam_v.clear();
-        for (name, t) in &self.params {
-            self.adam_m.insert(name.clone(), vec![0.0; t.numel()]);
-            self.adam_v.insert(name.clone(), vec![0.0; t.numel()]);
-        }
-        self.initialized = true;
+        self.adam_m = self.params.iter().map(|t| vec![0.0; t.numel()]).collect();
+        self.adam_v = self.params.iter().map(|t| vec![0.0; t.numel()]).collect();
+        let layers = (0..p.n_layers)
+            .map(|l| {
+                let b = l * LINS_PER_LAYER;
+                LayerHandles {
+                    ln1_g: ln1_ids[l],
+                    ln2_g: ln2_ids[l],
+                    q: LinId(b),
+                    k: LinId(b + 1),
+                    v: LinId(b + 2),
+                    o: LinId(b + 3),
+                    gate: LinId(b + 4),
+                    up: LinId(b + 5),
+                    down: LinId(b + 6),
+                }
+            })
+            .collect();
+        self.handles = Some(ModelHandles { embed, head, lnf_g, layers });
     }
 
     // ----------------------------------------------------- linears
 
-    /// Apply the `path` linear to x [n, d_in]. Returns (y, x@B cache).
-    fn linear_fwd(&self, path: &str, x: &Matrix) -> Result<(Matrix, Option<Matrix>)> {
-        match self.method.as_str() {
-            "full" => {
-                let w = self.param_mat(&format!("{path}.w"))?;
-                Ok((x.matmul(w), None))
-            }
-            "lowrank" | "sltrain" => {
-                let b = self.param_mat(&format!("{path}.B"))?;
-                let a = self.param_mat(&format!("{path}.A"))?;
-                let xb = x.matmul(b);
-                let mut y = xb.matmul(a);
+    /// Apply the `lin` linear to x [n, d_in]. Returns (y, x@B cache).
+    fn linear_fwd(&self, lin: LinId, x: &Matrix) -> (Matrix, Option<Matrix>) {
+        match self.lins[lin.0] {
+            LinKind::Full { w } => (x.matmul_par(self.mat(w), &self.pool), None),
+            LinKind::Factored { b, a, sparse } => {
+                let xb = x.matmul_par(self.mat(b), &self.pool);
+                let mut y = xb.matmul_par(self.mat(a), &self.pool);
                 for v in &mut y.data {
                     *v *= self.scale;
                 }
-                if self.method == "sltrain" {
-                    let sup = self
-                        .supports
-                        .get(path)
-                        .ok_or_else(|| anyhow!("missing support for {path}"))?;
-                    let vals = self.param_vec(&format!("{path}.vals"))?;
-                    sup.spmm_add(x, vals, &mut y);
+                if let Some(sh) = sparse {
+                    self.supports[sh.sup].spmm_add_par(x, self.vec1(sh.vals), &mut y, &self.pool);
                 }
-                Ok((y, Some(xb)))
+                (y, Some(xb))
             }
-            m => bail!("unsupported method {m:?}"),
         }
     }
 
-    /// Backward of the `path` linear: accumulates parameter grads into
+    /// Backward of the `lin` linear: accumulates parameter grads into
     /// `grads` and returns dL/dx. `xt` is the transposed input (hoisted
     /// by the caller — q/k/v and gate/up share one transpose).
     fn linear_bwd(
         &self,
-        path: &str,
+        lin: LinId,
         xt: &Matrix,
         x: &Matrix,
         xb: Option<&Matrix>,
         dy: &Matrix,
         grads: &mut Grads,
-    ) -> Result<Matrix> {
-        match self.method.as_str() {
-            "full" => {
-                let w = self.param_mat(&format!("{path}.w"))?;
-                let dw = xt.matmul(dy);
-                acc_grad(grads, &format!("{path}.w"), &dw.data);
-                Ok(dy.matmul_transb(w))
+    ) -> Matrix {
+        match self.lins[lin.0] {
+            LinKind::Full { w } => {
+                let dw = xt.matmul_par(dy, &self.pool);
+                acc_grad(grads, w, &dw.data);
+                dy.matmul_transb_par(self.mat(w), &self.pool)
             }
-            "lowrank" | "sltrain" => {
-                let b = self.param_mat(&format!("{path}.B"))?;
-                let a = self.param_mat(&format!("{path}.A"))?;
-                let xb = xb.ok_or_else(|| anyhow!("{path}: missing x@B cache"))?;
+            LinKind::Factored { b, a, sparse } => {
+                let xb = xb.unwrap_or_else(|| {
+                    panic!("{}: missing x@B cache", self.lin_paths[lin.0])
+                });
                 // eq. (2): the dense d_in × d_out gradient is never formed
-                let dy_at = dy.matmul_transb(a); // [n, r]
-                let db = xt.matmul(&dy_at).scale(self.scale);
-                let da = xb.transpose().matmul(dy).scale(self.scale);
-                acc_grad(grads, &format!("{path}.B"), &db.data);
-                acc_grad(grads, &format!("{path}.A"), &da.data);
-                let mut dx = dy_at.matmul_transb(b).scale(self.scale);
-                if self.method == "sltrain" {
-                    let sup = self
-                        .supports
-                        .get(path)
-                        .ok_or_else(|| anyhow!("missing support for {path}"))?;
-                    let vals = self.param_vec(&format!("{path}.vals"))?;
-                    let dvals = sup.scatter_grad(x, dy);
-                    acc_grad(grads, &format!("{path}.vals"), &dvals);
-                    sup.spmm_t_add(dy, vals, &mut dx);
+                let dy_at = dy.matmul_transb_par(self.mat(a), &self.pool); // [n, r]
+                let db = xt.matmul_par(&dy_at, &self.pool).scale(self.scale);
+                let da = xb.transpose().matmul_par(dy, &self.pool).scale(self.scale);
+                acc_grad(grads, b, &db.data);
+                acc_grad(grads, a, &da.data);
+                let mut dx = dy_at.matmul_transb_par(self.mat(b), &self.pool).scale(self.scale);
+                if let Some(sh) = sparse {
+                    let sup = &self.supports[sh.sup];
+                    let dvals = sup.scatter_grad_par(x, dy, &self.pool);
+                    acc_grad(grads, sh.vals, &dvals);
+                    sup.spmm_t_add_par(dy, self.vec1(sh.vals), &mut dx, &self.pool);
                 }
-                Ok(dx)
+                dx
             }
-            m => bail!("unsupported method {m:?}"),
         }
     }
 
@@ -409,7 +522,7 @@ impl NativeBackend {
     /// Full cached forward over `tokens` ([bsz, t] row-major). Returns
     /// logits [bsz*t, vocab] plus everything the backward pass needs.
     fn forward_cached(&self, tokens: &[i32], bsz: usize, t: usize) -> Result<(Matrix, FwdCache)> {
-        self.ensure_init()?;
+        let h = self.handles()?.clone();
         let p = &self.preset;
         let (d, nh, hd) = (p.d_model, p.n_heads, self.head_dim());
         let half = hd / 2;
@@ -421,7 +534,7 @@ impl NativeBackend {
             bail!("sequence {t} exceeds preset seq_len {}", p.seq_len);
         }
 
-        let embed = self.param_mat("embed.w")?;
+        let embed = self.mat(h.embed);
         let mut x = Matrix::zeros(n, d);
         for (i, &tok) in tokens.iter().enumerate() {
             let tok = tok as usize;
@@ -433,86 +546,85 @@ impl NativeBackend {
 
         let attn_scale = 1.0f32 / (hd as f32).sqrt();
         let mut blocks = Vec::with_capacity(p.n_layers);
-        for l in 0..p.n_layers {
-            let pfx = format!("layers.{l}");
-            let mut xb_cache = BTreeMap::new();
-            let mut stash = |path: String, xb: Option<Matrix>| {
-                if let Some(m) = xb {
-                    xb_cache.insert(path, m);
-                }
-            };
-
-            let g1 = self.param_vec(&format!("{pfx}.ln1.g"))?;
+        let mut xb_cache: Vec<Option<Matrix>> = vec![None; self.lins.len()];
+        for lh in &h.layers {
+            let g1 = self.vec1(lh.ln1_g);
             let (xn1, xhat1, r1) = rmsnorm_fwd(&x, g1);
 
-            let (mut q, xb) = self.linear_fwd(&format!("{pfx}.attn.q"), &xn1)?;
-            stash(format!("{pfx}.attn.q"), xb);
-            let (mut k, xb) = self.linear_fwd(&format!("{pfx}.attn.k"), &xn1)?;
-            stash(format!("{pfx}.attn.k"), xb);
-            let (v, xb) = self.linear_fwd(&format!("{pfx}.attn.v"), &xn1)?;
-            stash(format!("{pfx}.attn.v"), xb);
+            let (mut q, xb) = self.linear_fwd(lh.q, &xn1);
+            xb_cache[lh.q.0] = xb;
+            let (mut k, xb) = self.linear_fwd(lh.k, &xn1);
+            xb_cache[lh.k.0] = xb;
+            let (v, xb) = self.linear_fwd(lh.v, &xn1);
+            xb_cache[lh.v.0] = xb;
 
-            let mut attn_cat = Matrix::zeros(n, d);
-            let mut probs = Vec::with_capacity(bsz * nh);
-            for bi in 0..bsz {
-                for h in 0..nh {
-                    let mut q_h = head_slice(&q, bi, h, t, hd);
-                    let mut k_h = head_slice(&k, bi, h, t, hd);
-                    let v_h = head_slice(&v, bi, h, t, hd);
-                    self.rope_head(&mut q_h, half, false);
-                    self.rope_head(&mut k_h, half, false);
-                    // causal scores + row softmax
-                    let mut s = q_h.matmul_transb(&k_h);
-                    for i in 0..t {
-                        let row = &mut s.data[i * t..(i + 1) * t];
-                        let mut mx = f32::NEG_INFINITY;
-                        for (j, val) in row.iter_mut().enumerate() {
-                            if j > i {
-                                *val = 0.0;
-                            } else {
-                                *val *= attn_scale;
-                                mx = mx.max(*val);
-                            }
-                        }
-                        let mut sum = 0.0f32;
-                        for (j, val) in row.iter_mut().enumerate() {
-                            if j > i {
-                                *val = 0.0;
-                            } else {
-                                *val = (*val - mx).exp();
-                                sum += *val;
-                            }
-                        }
-                        for val in row.iter_mut() {
-                            *val /= sum;
+            // one independent task per (batch, head): rope, causal
+            // softmax, attn-weighted values — written back serially so
+            // every output region has exactly one writer
+            let heads = self.pool.map(bsz * nh, |ai| {
+                let (bi, hi) = (ai / nh, ai % nh);
+                let mut q_h = head_slice(&q, bi, hi, t, hd);
+                let mut k_h = head_slice(&k, bi, hi, t, hd);
+                let v_h = head_slice(&v, bi, hi, t, hd);
+                self.rope_head(&mut q_h, half, false);
+                self.rope_head(&mut k_h, half, false);
+                // causal scores + row softmax
+                let mut s = q_h.matmul_transb(&k_h);
+                for i in 0..t {
+                    let row = &mut s.data[i * t..(i + 1) * t];
+                    let mut mx = f32::NEG_INFINITY;
+                    for (j, val) in row.iter_mut().enumerate() {
+                        if j > i {
+                            *val = 0.0;
+                        } else {
+                            *val *= attn_scale;
+                            mx = mx.max(*val);
                         }
                     }
-                    let out_h = s.matmul(&v_h);
-                    head_write(&mut attn_cat, &out_h, bi, h, t, hd);
-                    // cache post-rope q/k for the backward pass
-                    head_write(&mut q, &q_h, bi, h, t, hd);
-                    head_write(&mut k, &k_h, bi, h, t, hd);
-                    probs.push(s);
+                    let mut sum = 0.0f32;
+                    for (j, val) in row.iter_mut().enumerate() {
+                        if j > i {
+                            *val = 0.0;
+                        } else {
+                            *val = (*val - mx).exp();
+                            sum += *val;
+                        }
+                    }
+                    for val in row.iter_mut() {
+                        *val /= sum;
+                    }
                 }
+                let out_h = s.matmul(&v_h);
+                (q_h, k_h, s, out_h)
+            });
+            let mut attn_cat = Matrix::zeros(n, d);
+            let mut probs = Vec::with_capacity(bsz * nh);
+            for (ai, (q_h, k_h, s, out_h)) in heads.into_iter().enumerate() {
+                let (bi, hi) = (ai / nh, ai % nh);
+                head_write(&mut attn_cat, &out_h, bi, hi, t, hd);
+                // cache post-rope q/k for the backward pass
+                head_write(&mut q, &q_h, bi, hi, t, hd);
+                head_write(&mut k, &k_h, bi, hi, t, hd);
+                probs.push(s);
             }
 
-            let (o_out, xb) = self.linear_fwd(&format!("{pfx}.attn.o"), &attn_cat)?;
-            stash(format!("{pfx}.attn.o"), xb);
+            let (o_out, xb) = self.linear_fwd(lh.o, &attn_cat);
+            xb_cache[lh.o.0] = xb;
             let x_mid = x.add(&o_out);
 
-            let g2 = self.param_vec(&format!("{pfx}.ln2.g"))?;
+            let g2 = self.vec1(lh.ln2_g);
             let (xn2, xhat2, r2) = rmsnorm_fwd(&x_mid, g2);
-            let (g_pre, xb) = self.linear_fwd(&format!("{pfx}.mlp.gate"), &xn2)?;
-            stash(format!("{pfx}.mlp.gate"), xb);
-            let (u, xb) = self.linear_fwd(&format!("{pfx}.mlp.up"), &xn2)?;
-            stash(format!("{pfx}.mlp.up"), xb);
+            let (g_pre, xb) = self.linear_fwd(lh.gate, &xn2);
+            xb_cache[lh.gate.0] = xb;
+            let (u, xb) = self.linear_fwd(lh.up, &xn2);
+            xb_cache[lh.up.0] = xb;
             let mut h_act = Matrix::zeros(n, p.d_ff);
             for i in 0..h_act.data.len() {
                 let g = g_pre.data[i];
                 h_act.data[i] = g * sigmoid(g) * u.data[i];
             }
-            let (d_out, xb) = self.linear_fwd(&format!("{pfx}.mlp.down"), &h_act)?;
-            stash(format!("{pfx}.mlp.down"), xb);
+            let (d_out, xb) = self.linear_fwd(lh.down, &h_act);
+            xb_cache[lh.down.0] = xb;
             let x_out = x_mid.add(&d_out);
 
             blocks.push(BlockCache {
@@ -530,16 +642,15 @@ impl NativeBackend {
                 g_pre,
                 u,
                 h: h_act,
-                xb: xb_cache,
             });
             x = x_out;
         }
 
-        let gf = self.param_vec("lnf.g")?;
+        let gf = self.vec1(h.lnf_g);
         let (xnf, xhatf, rf) = rmsnorm_fwd(&x, gf);
-        let logits = xnf.matmul(self.param_mat("head.w")?);
+        let logits = xnf.matmul_par(self.mat(h.head), &self.pool);
         let cache =
-            FwdCache { tokens: tokens.to_vec(), bsz, t, blocks, xhatf, rf, xnf };
+            FwdCache { tokens: tokens.to_vec(), bsz, t, blocks, xb: xb_cache, xhatf, rf, xnf };
         Ok((logits, cache))
     }
 
@@ -564,35 +675,36 @@ impl NativeBackend {
     // ---------------------------------------------------- backward
 
     fn backward(&self, cache: &FwdCache, dlogits: &Matrix) -> Result<Grads> {
+        let h = self.handles()?.clone();
         let p = &self.preset;
         let (d, nh, hd) = (p.d_model, p.n_heads, self.head_dim());
         let (bsz, t) = (cache.bsz, cache.t);
         let attn_scale = 1.0f32 / (hd as f32).sqrt();
         let half = hd / 2;
-        let mut grads: Grads = BTreeMap::new();
+        let mut grads: Grads = vec![Vec::new(); self.params.len()];
 
         // head + final norm
-        let head = self.param_mat("head.w")?;
-        let dhead = cache.xnf.transpose().matmul(dlogits);
-        acc_grad(&mut grads, "head.w", &dhead.data);
-        let dxnf = dlogits.matmul_transb(head);
-        let gf = self.param_vec("lnf.g")?;
+        let head = self.mat(h.head);
+        let dhead = cache.xnf.transpose().matmul_par(dlogits, &self.pool);
+        acc_grad(&mut grads, h.head, &dhead.data);
+        let dxnf = dlogits.matmul_transb_par(head, &self.pool);
+        let gf = self.vec1(h.lnf_g);
         let mut dgf = vec![0.0f32; d];
         let mut dx = rmsnorm_bwd(&dxnf, &cache.xhatf, &cache.rf, gf, &mut dgf);
-        acc_grad(&mut grads, "lnf.g", &dgf);
+        acc_grad(&mut grads, h.lnf_g, &dgf);
 
         for (l, blk) in cache.blocks.iter().enumerate().rev() {
-            let pfx = format!("layers.{l}");
+            let lh = h.layers[l];
             // ---- mlp branch: x_out = x_mid + down(silu(gate)·up)
             let h_t = blk.h.transpose();
             let dh = self.linear_bwd(
-                &format!("{pfx}.mlp.down"),
+                lh.down,
                 &h_t,
                 &blk.h,
-                blk.xb.get(&format!("{pfx}.mlp.down")),
+                cache.xb[lh.down.0].as_ref(),
                 &dx,
                 &mut grads,
-            )?;
+            );
             let mut dg_pre = Matrix::zeros(dh.rows, dh.cols);
             let mut du = Matrix::zeros(dh.rows, dh.cols);
             for i in 0..dh.data.len() {
@@ -603,113 +715,119 @@ impl NativeBackend {
             }
             let xn2_t = blk.xn2.transpose();
             let mut dxn2 = self.linear_bwd(
-                &format!("{pfx}.mlp.gate"),
+                lh.gate,
                 &xn2_t,
                 &blk.xn2,
-                blk.xb.get(&format!("{pfx}.mlp.gate")),
+                cache.xb[lh.gate.0].as_ref(),
                 &dg_pre,
                 &mut grads,
-            )?;
+            );
             add_into(
                 &mut dxn2,
                 &self.linear_bwd(
-                    &format!("{pfx}.mlp.up"),
+                    lh.up,
                     &xn2_t,
                     &blk.xn2,
-                    blk.xb.get(&format!("{pfx}.mlp.up")),
+                    cache.xb[lh.up.0].as_ref(),
                     &du,
                     &mut grads,
-                )?,
+                ),
             );
-            let g2 = self.param_vec(&format!("{pfx}.ln2.g"))?;
+            let g2 = self.vec1(lh.ln2_g);
             let mut dg2 = vec![0.0f32; d];
             let dnorm2 = rmsnorm_bwd(&dxn2, &blk.xhat2, &blk.r2, g2, &mut dg2);
-            acc_grad(&mut grads, &format!("{pfx}.ln2.g"), &dg2);
+            acc_grad(&mut grads, lh.ln2_g, &dg2);
             let dx_mid = dx.add(&dnorm2);
 
             // ---- attention branch: x_mid = x_in + o(attn)
             let cat_t = blk.attn_cat.transpose();
             let dcat = self.linear_bwd(
-                &format!("{pfx}.attn.o"),
+                lh.o,
                 &cat_t,
                 &blk.attn_cat,
-                blk.xb.get(&format!("{pfx}.attn.o")),
+                cache.xb[lh.o.0].as_ref(),
                 &dx_mid,
                 &mut grads,
-            )?;
+            );
+            // per-(batch, head) softmax/rope backward, one task each
+            let head_grads = self.pool.map(bsz * nh, |ai| {
+                let (bi, hi) = (ai / nh, ai % nh);
+                let dout_h = head_slice(&dcat, bi, hi, t, hd);
+                let q_h = head_slice(&blk.q, bi, hi, t, hd);
+                let k_h = head_slice(&blk.k, bi, hi, t, hd);
+                let v_h = head_slice(&blk.v, bi, hi, t, hd);
+                let probs = &blk.probs[bi * nh + hi];
+                let dp = dout_h.matmul_transb(&v_h);
+                let dv_h = probs.transpose().matmul(&dout_h);
+                // softmax backward; masked entries have prob 0
+                let mut ds = Matrix::zeros(t, t);
+                for i in 0..t {
+                    let prow = &probs.data[i * t..(i + 1) * t];
+                    let dprow = &dp.data[i * t..(i + 1) * t];
+                    let dot: f32 = prow.iter().zip(dprow).map(|(a, b)| a * b).sum();
+                    for j in 0..=i {
+                        ds.data[i * t + j] = prow[j] * (dprow[j] - dot);
+                    }
+                }
+                let mut dq_h = ds.matmul(&k_h).scale(attn_scale);
+                let mut dk_h = ds.transpose().matmul(&q_h).scale(attn_scale);
+                self.rope_head(&mut dq_h, half, true);
+                self.rope_head(&mut dk_h, half, true);
+                (dq_h, dk_h, dv_h)
+            });
             let mut dq = Matrix::zeros(bsz * t, d);
             let mut dk = Matrix::zeros(bsz * t, d);
             let mut dv = Matrix::zeros(bsz * t, d);
-            for bi in 0..bsz {
-                for h in 0..nh {
-                    let dout_h = head_slice(&dcat, bi, h, t, hd);
-                    let q_h = head_slice(&blk.q, bi, h, t, hd);
-                    let k_h = head_slice(&blk.k, bi, h, t, hd);
-                    let v_h = head_slice(&blk.v, bi, h, t, hd);
-                    let probs = &blk.probs[bi * nh + h];
-                    let dp = dout_h.matmul_transb(&v_h);
-                    let dv_h = probs.transpose().matmul(&dout_h);
-                    // softmax backward; masked entries have prob 0
-                    let mut ds = Matrix::zeros(t, t);
-                    for i in 0..t {
-                        let prow = &probs.data[i * t..(i + 1) * t];
-                        let dprow = &dp.data[i * t..(i + 1) * t];
-                        let dot: f32 =
-                            prow.iter().zip(dprow).map(|(a, b)| a * b).sum();
-                        for j in 0..=i {
-                            ds.data[i * t + j] = prow[j] * (dprow[j] - dot);
-                        }
-                    }
-                    let mut dq_h = ds.matmul(&k_h).scale(attn_scale);
-                    let mut dk_h = ds.transpose().matmul(&q_h).scale(attn_scale);
-                    self.rope_head(&mut dq_h, half, true);
-                    self.rope_head(&mut dk_h, half, true);
-                    head_write_add(&mut dq, &dq_h, bi, h, t, hd);
-                    head_write_add(&mut dk, &dk_h, bi, h, t, hd);
-                    head_write_add(&mut dv, &dv_h, bi, h, t, hd);
-                }
+            for (ai, (dq_h, dk_h, dv_h)) in head_grads.into_iter().enumerate() {
+                let (bi, hi) = (ai / nh, ai % nh);
+                head_write_add(&mut dq, &dq_h, bi, hi, t, hd);
+                head_write_add(&mut dk, &dk_h, bi, hi, t, hd);
+                head_write_add(&mut dv, &dv_h, bi, hi, t, hd);
             }
             let xn1_t = blk.xn1.transpose();
             let mut dxn1 = self.linear_bwd(
-                &format!("{pfx}.attn.q"),
+                lh.q,
                 &xn1_t,
                 &blk.xn1,
-                blk.xb.get(&format!("{pfx}.attn.q")),
+                cache.xb[lh.q.0].as_ref(),
                 &dq,
                 &mut grads,
-            )?;
+            );
             add_into(
                 &mut dxn1,
                 &self.linear_bwd(
-                    &format!("{pfx}.attn.k"),
+                    lh.k,
                     &xn1_t,
                     &blk.xn1,
-                    blk.xb.get(&format!("{pfx}.attn.k")),
+                    cache.xb[lh.k.0].as_ref(),
                     &dk,
                     &mut grads,
-                )?,
+                ),
             );
             add_into(
                 &mut dxn1,
                 &self.linear_bwd(
-                    &format!("{pfx}.attn.v"),
+                    lh.v,
                     &xn1_t,
                     &blk.xn1,
-                    blk.xb.get(&format!("{pfx}.attn.v")),
+                    cache.xb[lh.v.0].as_ref(),
                     &dv,
                     &mut grads,
-                )?,
+                ),
             );
-            let g1 = self.param_vec(&format!("{pfx}.ln1.g"))?;
+            let g1 = self.vec1(lh.ln1_g);
             let mut dg1 = vec![0.0f32; d];
             let dnorm1 = rmsnorm_bwd(&dxn1, &blk.xhat1, &blk.r1, g1, &mut dg1);
-            acc_grad(&mut grads, &format!("{pfx}.ln1.g"), &dg1);
+            acc_grad(&mut grads, lh.ln1_g, &dg1);
             dx = dx_mid.add(&dnorm1);
         }
 
-        // embedding scatter
-        let embed_numel = self.param("embed.w")?.numel();
-        let ge = grads.entry("embed.w".into()).or_insert_with(|| vec![0.0; embed_numel]);
+        // embedding scatter (serial: token collisions share rows)
+        let embed_numel = self.params[h.embed.0].numel();
+        let ge = &mut grads[h.embed.0];
+        if ge.is_empty() {
+            ge.resize(embed_numel, 0.0);
+        }
         for (i, &tok) in cache.tokens.iter().enumerate() {
             let tok = tok as usize;
             for j in 0..d {
@@ -754,20 +872,22 @@ impl NativeBackend {
     }
 
     fn adam_apply(&mut self, step: i32, grads: &Grads) -> Result<()> {
+        if self.adam_m.len() != self.params.len() || self.adam_v.len() != self.params.len() {
+            bail!("optimizer state dropped or uninitialized");
+        }
         let lr_t = self.lr_at(step);
         let t = step.max(0) as f32 + 1.0;
         let bc1 = 1.0 - ADAM_B1.powf(t);
         let bc2 = 1.0 - ADAM_B2.powf(t);
-        for (name, g) in grads {
-            let p = self
-                .params
-                .get_mut(name)
-                .ok_or_else(|| anyhow!("gradient for unknown tensor {name:?}"))?
-                .data_mut();
-            let m = self.adam_m.get_mut(name).ok_or_else(|| anyhow!("no moment m {name:?}"))?;
-            let v = self.adam_v.get_mut(name).ok_or_else(|| anyhow!("no moment v {name:?}"))?;
+        for (idx, g) in grads.iter().enumerate() {
+            if g.is_empty() {
+                continue;
+            }
+            let p = self.params[idx].data_mut();
+            let m = &mut self.adam_m[idx];
+            let v = &mut self.adam_v[idx];
             if g.len() != p.len() {
-                bail!("{name}: grad numel {} != param {}", g.len(), p.len());
+                bail!("{}: grad numel {} != param {}", self.param_names[idx], g.len(), p.len());
             }
             for i in 0..p.len() {
                 m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
@@ -805,7 +925,7 @@ impl Backend for NativeBackend {
             // the instantiated sum in tests)
             return self.preset.param_count(&self.method);
         }
-        self.params.values().map(|t| t.numel()).sum()
+        self.params.iter().map(|t| t.numel()).sum()
     }
 
     fn init_state(&mut self, seed: u32) -> Result<()> {
@@ -814,19 +934,19 @@ impl Backend for NativeBackend {
     }
 
     fn train_step(&mut self, step: i32, tokens: &[i32]) -> Result<f32> {
-        self.ensure_init()?;
+        self.handles()?;
         let (loss, grads) = self.loss_and_grads(tokens)?;
         self.adam_apply(step, &grads)?;
         Ok(loss as f32)
     }
 
     fn eval_loss(&mut self, tokens: &[i32]) -> Result<f32> {
-        self.ensure_init()?;
+        self.handles()?;
         Ok(self.loss_only(tokens, self.batch)? as f32)
     }
 
     fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        self.ensure_init()?;
+        self.handles()?;
         let t = self.preset.seq_len;
         if tokens.len() % t != 0 {
             bail!("forward expects a multiple of seq_len {t} tokens");
@@ -843,12 +963,17 @@ impl Backend for NativeBackend {
     }
 
     fn state_tensors(&self) -> Result<Vec<StateTensor>> {
-        self.ensure_init()?;
+        self.handles()?;
         let mut out = Vec::with_capacity(self.params.len() + self.supports.len());
-        for (name, t) in &self.params {
+        // name order (the interchange contract of the old map layout)
+        for (name, &id) in &self.name_to_id {
+            let t = &self.params[id];
             out.push(StateTensor::f32(name, t.shape(), t.data()));
         }
-        for (path, sup) in &self.supports {
+        let mut sups: Vec<(&String, &SparseSupport)> =
+            self.support_paths.iter().zip(&self.supports).collect();
+        sups.sort_by(|a, b| a.0.cmp(b.0));
+        for (path, sup) in sups {
             let idx: Vec<i32> = sup.idx.iter().map(|&i| i as i32).collect();
             out.push(StateTensor::i32(&format!("{path}.idx"), vec![sup.nnz()], &idx));
         }
@@ -856,18 +981,20 @@ impl Backend for NativeBackend {
     }
 
     fn load_state_tensors(&mut self, tensors: &[StateTensor]) -> Result<()> {
-        self.ensure_init()?;
+        self.handles()?;
         // Stage and validate everything BEFORE mutating, so a mismatched
         // or corrupt checkpoint leaves the backend untouched (and support
         // indices never reach SparseSupport::new's panicking asserts).
-        let mut staged_supports: Vec<(String, SparseSupport)> = Vec::new();
-        let mut staged_params: Vec<(&str, Vec<f32>)> = Vec::new();
+        let mut staged_supports: Vec<(usize, SparseSupport)> = Vec::new();
+        let mut staged_params: Vec<(usize, Vec<f32>)> = Vec::new();
         for st in tensors {
             if let Some(path) = st.name.strip_suffix(".idx") {
-                let sup = self
-                    .supports
-                    .get(path)
+                let si = self
+                    .support_paths
+                    .iter()
+                    .position(|p| p == path)
                     .ok_or_else(|| anyhow!("unknown support {:?}", st.name))?;
+                let sup = &self.supports[si];
                 let idx: Vec<u32> = st.to_i32()?.iter().map(|&i| i as u32).collect();
                 let bound = (sup.d_in * sup.d_out) as u32;
                 if !idx.windows(2).all(|w| w[0] < w[1]) {
@@ -876,39 +1003,49 @@ impl Backend for NativeBackend {
                 if idx.iter().any(|&i| i >= bound) {
                     bail!("{}: support index out of range {bound}", st.name);
                 }
-                staged_supports
-                    .push((path.to_string(), SparseSupport::new(sup.d_in, sup.d_out, idx)));
+                staged_supports.push((si, SparseSupport::new(sup.d_in, sup.d_out, idx)));
             } else {
                 let data = st.to_f32()?;
-                let p = self
-                    .params
+                let &id = self
+                    .name_to_id
                     .get(&st.name)
                     .ok_or_else(|| anyhow!("unknown tensor {:?}", st.name))?;
-                if p.numel() != data.len() {
-                    bail!("{}: numel {} != expected {}", st.name, data.len(), p.numel());
+                if self.params[id].numel() != data.len() {
+                    bail!(
+                        "{}: numel {} != expected {}",
+                        st.name,
+                        data.len(),
+                        self.params[id].numel()
+                    );
                 }
-                staged_params.push((st.name.as_str(), data));
+                staged_params.push((id, data));
             }
         }
         // cross-check: each reloaded support must agree with the values
         // tensor that will accompany it (staged if present, current else)
-        for (path, sup) in &staged_supports {
-            let vals_name = format!("{path}.vals");
+        for (si, sup) in &staged_supports {
+            let vals_name = format!("{}.vals", self.support_paths[*si]);
+            let vals_id = self.name_to_id.get(&vals_name).copied().ok_or_else(|| {
+                anyhow!("{}: support without values tensor", self.support_paths[*si])
+            })?;
             let vals_len = staged_params
                 .iter()
-                .find(|(n, _)| *n == vals_name)
+                .find(|(id, _)| *id == vals_id)
                 .map(|(_, d)| d.len())
-                .or_else(|| self.params.get(&vals_name).map(|p| p.numel()))
-                .ok_or_else(|| anyhow!("{path}: support without values tensor"))?;
+                .unwrap_or_else(|| self.params[vals_id].numel());
             if vals_len != sup.nnz() {
-                bail!("{path}: support nnz {} != values len {vals_len}", sup.nnz());
+                bail!(
+                    "{}: support nnz {} != values len {vals_len}",
+                    self.support_paths[*si],
+                    sup.nnz()
+                );
             }
         }
-        for (path, sup) in staged_supports {
-            self.supports.insert(path, sup);
+        for (si, sup) in staged_supports {
+            self.supports[si] = sup;
         }
-        for (name, data) in staged_params {
-            self.params.get_mut(name).expect("validated above").data_mut().copy_from_slice(&data);
+        for (id, data) in staged_params {
+            self.params[id].data_mut().copy_from_slice(&data);
         }
         Ok(())
     }
@@ -999,19 +1136,6 @@ fn add_into(dst: &mut Matrix, src: &Matrix) {
     }
 }
 
-fn acc_grad(grads: &mut Grads, name: &str, g: &[f32]) {
-    match grads.get_mut(name) {
-        Some(acc) => {
-            for (a, b) in acc.iter_mut().zip(g) {
-                *a += b;
-            }
-        }
-        None => {
-            grads.insert(name.to_string(), g.to_vec());
-        }
-    }
-}
-
 /// Next-token split of a [bsz, seq] batch: inputs drop the last column,
 /// targets drop the first. Returns (inputs, targets, seq-1).
 fn split_next_token(tokens: &[i32], bsz: usize, seq: usize) -> Result<(Vec<i32>, Vec<i32>, usize)> {
@@ -1095,10 +1219,14 @@ mod tests {
         }
     }
 
-    fn micro_backend(method: &str, seed: u32) -> NativeBackend {
-        let mut be = NativeBackend::build(micro_preset(), method, 2, 3e-3, 100).unwrap();
+    fn micro_backend_threads(method: &str, seed: u32, threads: usize) -> NativeBackend {
+        let mut be = NativeBackend::build(micro_preset(), method, 2, 3e-3, 100, threads).unwrap();
         be.init_state(seed).unwrap();
         be
+    }
+
+    fn micro_backend(method: &str, seed: u32) -> NativeBackend {
+        micro_backend_threads(method, seed, 2)
     }
 
     fn random_tokens(be: &NativeBackend, seed: u64) -> Vec<i32> {
@@ -1117,9 +1245,12 @@ mod tests {
             let mut be = micro_backend(method, 3);
             let tokens = random_tokens(&be, 11);
             let (_, grads) = be.loss_and_grads(&tokens).unwrap();
-            let names: Vec<String> = grads.keys().cloned().collect();
-            for name in names {
-                let g = &grads[&name];
+            for pid in 0..grads.len() {
+                let g = &grads[pid];
+                if g.is_empty() {
+                    continue;
+                }
+                let name = be.param_names[pid].clone();
                 let (idx, &ga) = g
                     .iter()
                     .enumerate()
@@ -1129,12 +1260,12 @@ mod tests {
                     continue; // too small to measure through f32 noise
                 }
                 let h = 1e-2f32;
-                let orig = be.params.get(&name).unwrap().data()[idx];
-                be.params.get_mut(&name).unwrap().data_mut()[idx] = orig + h;
+                let orig = be.params[pid].data()[idx];
+                be.params[pid].data_mut()[idx] = orig + h;
                 let lp = be.loss_only(&tokens, be.batch).unwrap();
-                be.params.get_mut(&name).unwrap().data_mut()[idx] = orig - h;
+                be.params[pid].data_mut()[idx] = orig - h;
                 let lm = be.loss_only(&tokens, be.batch).unwrap();
-                be.params.get_mut(&name).unwrap().data_mut()[idx] = orig;
+                be.params[pid].data_mut()[idx] = orig;
                 let gn = ((lp - lm) / (2.0 * h as f64)) as f32;
                 let rel = (ga - gn).abs() / gn.abs().max(ga.abs()).max(1e-4);
                 assert!(
@@ -1170,6 +1301,25 @@ mod tests {
             runs.push(losses);
         }
         assert_eq!(runs[0], runs[1], "same seed must reproduce bit-identical losses");
+    }
+
+    /// The parallelism contract: the pool partitions independent tasks
+    /// only, so losses are bit-identical across *different* thread
+    /// counts, not just across runs at a fixed one.
+    #[test]
+    fn losses_bit_identical_across_thread_counts() {
+        let mut runs = vec![];
+        for threads in [1usize, 2, 3] {
+            let mut be = micro_backend_threads("sltrain", 5, threads);
+            let tokens = random_tokens(&be, 9);
+            let mut losses = vec![];
+            for step in 0..3 {
+                losses.push(be.train_step(step, &tokens).unwrap());
+            }
+            runs.push(losses);
+        }
+        assert_eq!(runs[0], runs[1], "1 vs 2 threads");
+        assert_eq!(runs[0], runs[2], "1 vs 3 threads");
     }
 
     #[test]
@@ -1225,7 +1375,7 @@ mod tests {
         assert!((be.lr_at(5) - be.lr).abs() / be.lr < 1e-3);
         assert!((be.lr_at(10_000) - 0.1 * be.lr).abs() < 1e-6);
         // at the aot.py-default horizon the warmup is exactly 100 steps
-        let long = NativeBackend::build(micro_preset(), "full", 2, 3e-3, 2000).unwrap();
+        let long = NativeBackend::build(micro_preset(), "full", 2, 3e-3, 2000, 1).unwrap();
         assert_eq!(long.warmup_steps(), 100.0);
     }
 }

@@ -15,15 +15,17 @@ use crate::config::ModelPreset;
 use crate::runtime::{lit_f32, lit_i32, lit_i8, Artifact, Dtype, Runtime, State, TensorSpec};
 
 pub struct XlaBackend {
-    rt: Runtime,
+    /// Process-shared PJRT CPU client (one bring-up per process, not
+    /// per artifact open — bench loops sweep many artifacts).
+    rt: std::sync::Arc<Runtime>,
     art: Artifact,
     state: Option<State>,
 }
 
 impl XlaBackend {
-    /// Load an artifact bundle and bring up the PJRT CPU client.
+    /// Load an artifact bundle onto the shared PJRT CPU client.
     pub fn open(dir: &Path) -> Result<XlaBackend> {
-        let rt = Runtime::cpu()?;
+        let rt = Runtime::cpu_shared()?;
         let art = Artifact::load(dir)?;
         Ok(XlaBackend { rt, art, state: None })
     }
@@ -63,7 +65,12 @@ impl XlaBackend {
                 v.iter().map(|&x| x as u8).collect()
             }
         };
-        Ok(StateTensor { name: spec.name.clone(), shape: spec.shape.clone(), dtype: spec.dtype, bytes })
+        Ok(StateTensor {
+            name: spec.name.clone(),
+            shape: spec.shape.clone(),
+            dtype: spec.dtype,
+            bytes,
+        })
     }
 }
 

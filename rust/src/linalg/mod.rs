@@ -6,9 +6,11 @@
 //! exact enough (1e-5) for every matrix size we analyze and has no
 //! dependencies.
 
+pub mod parallel;
 pub mod sparse;
 pub mod svd;
 
+pub use parallel::ThreadPool;
 pub use sparse::SparseSupport;
 pub use svd::{svd, Svd};
 
@@ -63,10 +65,13 @@ impl Matrix {
         t
     }
 
-    /// Blocked matmul with a transposed-B inner loop (cache-friendly).
+    /// Register-blocked matmul over packed column panels of B
+    /// (cache-friendly, autovectorizable microkernel). Per output
+    /// element the f32 accumulation order is the plain `l = 0..k` dot
+    /// product, so results are bit-identical to a naive triple loop.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        self.matmul_transb(&other.transpose())
+        gemm(self, &pack_b(other), None)
     }
 
     /// `self @ bt^T` with `bt` already transposed ([n, k] for a [m, k]
@@ -76,21 +81,22 @@ impl Matrix {
     /// re-layout on every `matmul` call.
     pub fn matmul_transb(&self, bt: &Matrix) -> Matrix {
         assert_eq!(self.cols, bt.cols, "matmul_transb inner-dim mismatch");
-        let (m, k, n) = (self.rows, self.cols, bt.rows);
-        let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            let out_row = &mut out.data[i * n..(i + 1) * n];
-            for (j, o) in out_row.iter_mut().enumerate() {
-                let b_row = &bt.data[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for l in 0..k {
-                    acc += a_row[l] * b_row[l];
-                }
-                *o = acc;
-            }
-        }
-        out
+        gemm(self, &pack_bt(bt), None)
+    }
+
+    /// `matmul`, row-panel parallel over the pool. Bit-identical to the
+    /// serial version for every thread count: output rows are written by
+    /// exactly one task and no reduction crosses a task boundary.
+    pub fn matmul_par(&self, other: &Matrix, pool: &ThreadPool) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        gemm(self, &pack_b(other), Some(pool))
+    }
+
+    /// `matmul_transb`, row-panel parallel over the pool (bit-identical
+    /// to the serial version for every thread count).
+    pub fn matmul_transb_par(&self, bt: &Matrix, pool: &ThreadPool) -> Matrix {
+        assert_eq!(self.cols, bt.cols, "matmul_transb inner-dim mismatch");
+        gemm(self, &pack_bt(bt), Some(pool))
     }
 
     pub fn add(&self, other: &Matrix) -> Matrix {
@@ -156,6 +162,139 @@ impl Matrix {
     }
 }
 
+// ----------------------------------------------------- blocked GEMM core
+//
+// GEBP-style kernel: B is packed once into zero-padded column panels of
+// width NR; the microkernel keeps an MR x NR accumulator tile in
+// registers and streams the panel, so the inner loop is NR independent
+// FMA lanes (SIMD across the panel) with no loop-carried dependency
+// chain. Crucially each accumulator sums `a[i, l] * b[l, j]` for
+// `l = 0..k` sequentially — the exact order of the naive dot product —
+// so blocking, padding and row-panel threading change performance, not
+// a single output bit.
+
+/// Microkernel tile height (output rows in registers).
+const MR: usize = 4;
+/// Packed panel width (output cols per panel; SIMD-friendly multiple).
+const NR: usize = 8;
+
+/// B packed into `ceil(n / NR)` zero-padded column panels; panel `p`
+/// stores `B[l, p*NR + jj]` at `data[p*k*NR + l*NR + jj]`.
+struct PackedB {
+    data: Vec<f32>,
+    k: usize,
+    n: usize,
+}
+
+/// Pack a row-major [k, n] matrix (panel rows are contiguous reads).
+#[allow(clippy::needless_range_loop)]
+fn pack_b(b: &Matrix) -> PackedB {
+    let (k, n) = (b.rows, b.cols);
+    let panels = n.div_ceil(NR).max(1);
+    let mut data = vec![0.0f32; panels * k * NR];
+    for p in 0..panels {
+        let j0 = p * NR;
+        let w = NR.min(n - j0.min(n));
+        if w == 0 {
+            continue;
+        }
+        let dst = &mut data[p * k * NR..(p + 1) * k * NR];
+        for l in 0..k {
+            dst[l * NR..l * NR + w].copy_from_slice(&b.data[l * n + j0..l * n + j0 + w]);
+        }
+    }
+    PackedB { data, k, n }
+}
+
+/// Pack an already-transposed [n, k] matrix (per-panel transpose).
+#[allow(clippy::needless_range_loop)]
+fn pack_bt(bt: &Matrix) -> PackedB {
+    let (n, k) = (bt.rows, bt.cols);
+    let panels = n.div_ceil(NR).max(1);
+    let mut data = vec![0.0f32; panels * k * NR];
+    for p in 0..panels {
+        let j0 = p * NR;
+        let w = NR.min(n - j0.min(n));
+        let dst = &mut data[p * k * NR..(p + 1) * k * NR];
+        for jj in 0..w {
+            let src = &bt.data[(j0 + jj) * k..(j0 + jj + 1) * k];
+            for l in 0..k {
+                dst[l * NR + jj] = src[l];
+            }
+        }
+    }
+    PackedB { data, k, n }
+}
+
+/// Compute output rows [r0, r1) of `a @ B` into `out` (row r0 at offset
+/// 0, row-major, width `pb.n`).
+#[allow(clippy::needless_range_loop)]
+fn gemm_rows(a: &[f32], k: usize, pb: &PackedB, r0: usize, r1: usize, out: &mut [f32]) {
+    let n = pb.n;
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    debug_assert_eq!(pb.k, k);
+    let panels = n.div_ceil(NR).max(1);
+    let mut i0 = r0;
+    while i0 < r1 {
+        let mr = MR.min(r1 - i0);
+        for p in 0..panels {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            let panel = &pb.data[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [[0.0f32; NR]; MR];
+            if mr == MR {
+                let a0 = &a[i0 * k..(i0 + 1) * k];
+                let a1 = &a[(i0 + 1) * k..(i0 + 2) * k];
+                let a2 = &a[(i0 + 2) * k..(i0 + 3) * k];
+                let a3 = &a[(i0 + 3) * k..(i0 + 4) * k];
+                for l in 0..k {
+                    let bl: &[f32; NR] = panel[l * NR..l * NR + NR].try_into().unwrap();
+                    let av = [a0[l], a1[l], a2[l], a3[l]];
+                    for ii in 0..MR {
+                        for jj in 0..NR {
+                            acc[ii][jj] += av[ii] * bl[jj];
+                        }
+                    }
+                }
+            } else {
+                for l in 0..k {
+                    let bl: &[f32; NR] = panel[l * NR..l * NR + NR].try_into().unwrap();
+                    for ii in 0..mr {
+                        let av = a[(i0 + ii) * k + l];
+                        for jj in 0..NR {
+                            acc[ii][jj] += av * bl[jj];
+                        }
+                    }
+                }
+            }
+            for ii in 0..mr {
+                let row_off = (i0 - r0 + ii) * n + j0;
+                out[row_off..row_off + w].copy_from_slice(&acc[ii][..w]);
+            }
+        }
+        i0 += mr;
+    }
+}
+
+/// `a @ B` over a packed B; row panels go across the pool when given.
+fn gemm(a: &Matrix, pb: &PackedB, pool: Option<&ThreadPool>) -> Matrix {
+    let (m, n) = (a.rows, pb.n);
+    let mut out = Matrix::zeros(m, n);
+    match pool {
+        Some(pool) if pool.threads() > 1 && m > MR => {
+            // at most `threads` chunks, aligned to microkernel tiles
+            let chunk_rows = m.div_ceil(pool.threads()).div_ceil(MR) * MR;
+            parallel::par_chunks_mut(pool, &mut out.data, chunk_rows * n, |ci, chunk| {
+                let r0 = ci * chunk_rows;
+                let r1 = (r0 + chunk_rows).min(m);
+                gemm_rows(&a.data, a.cols, pb, r0, r1, chunk);
+            });
+        }
+        _ => gemm_rows(&a.data, a.cols, pb, 0, m, &mut out.data),
+    }
+    out
+}
+
 impl std::ops::Index<(usize, usize)> for Matrix {
     type Output = f32;
     #[inline]
@@ -203,6 +342,54 @@ mod tests {
         assert!(via_plain.sub(&via_transb).max_abs() < 1e-6);
         assert_eq!(via_transb.rows, 6);
         assert_eq!(via_transb.cols, 8);
+    }
+
+    /// Naive triple-loop reference (the pre-blocking kernel).
+    fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows);
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f32;
+                for l in 0..a.cols {
+                    acc += a[(i, l)] * b[(l, j)];
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matmul_bitwise_matches_naive_on_ragged_shapes() {
+        let mut rng = Rng::new(17);
+        // shapes straddling the MR=4 / NR=8 tile edges, incl. k % NR != 0
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 9, 17), (13, 31, 6), (8, 2, 24)] {
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let want = matmul_naive(&a, &b);
+            let got = a.matmul(&b);
+            assert_eq!(want.data, got.data, "matmul {m}x{k}x{n} not bit-identical");
+            let got_t = a.matmul_transb(&b.transpose());
+            assert_eq!(want.data, got_t.data, "matmul_transb {m}x{k}x{n} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_bitwise_matches_serial() {
+        let mut rng = Rng::new(23);
+        let pool = ThreadPool::new(3);
+        for (m, k, n) in [(11, 7, 5), (32, 16, 24), (2, 3, 2)] {
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let serial = a.matmul(&b);
+            assert_eq!(serial.data, a.matmul_par(&b, &pool).data, "{m}x{k}x{n}");
+            assert_eq!(
+                serial.data,
+                a.matmul_transb_par(&b.transpose(), &pool).data,
+                "transb {m}x{k}x{n}"
+            );
+        }
     }
 
     #[test]

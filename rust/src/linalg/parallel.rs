@@ -1,0 +1,405 @@
+//! A small reusable worker pool for the native backend's hot loops.
+//!
+//! std-only (no rayon/crossbeam in the vendor set): N-1 persistent
+//! worker threads plus the submitting thread cooperatively drain an
+//! atomic task counter. Three properties the training engine relies on:
+//!
+//! * **Determinism.** The pool only ever runs *independent* tasks —
+//!   every task writes its own disjoint output region and any f32
+//!   reduction happens entirely inside one task in a fixed order. Which
+//!   thread runs which task therefore cannot change a single bit of the
+//!   result: the native engine produces bit-identical losses for every
+//!   thread count, not just for a fixed one (tested in
+//!   `tests/properties.rs`).
+//! * **Zero overhead at one thread.** A pool built with `threads == 1`
+//!   spawns nothing and `run` degenerates to an inline `for` loop, so
+//!   `--threads 1` is the pre-pool engine, instruction for instruction.
+//! * **No nesting surprises.** A `run` issued from inside a pool task
+//!   (e.g. a parallel matmul called from a parallel attention head)
+//!   executes inline on that worker instead of deadlocking on the pool.
+//!
+//! Safety note: `run` erases the task closure's lifetime to hand it to
+//! the persistent workers. This is sound because `run` does not return
+//! — and does not *unwind* — until every worker has checked in as
+//! finished with the job: the submitter's own task drain runs under
+//! `catch_unwind`, worker tasks run under `catch_unwind` (a panicking
+//! task poisons the job, which the submitter re-raises after the
+//! barrier), and concurrent submissions from different threads are
+//! serialized on an internal mutex. So the borrow outlives every
+//! dereference on every path.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+thread_local! {
+    /// True on pool worker threads: nested `run` calls go inline.
+    static IN_POOL: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+/// Resolve a requested thread count: `0` means "auto" — the
+/// `SLTRAIN_THREADS` env var if set, else the machine's available
+/// parallelism. Always at least 1.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var("SLTRAIN_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Lifetime-erased pointer to the current job's task closure.
+struct RawTask(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared calls are fine) and the pool
+// guarantees it outlives all worker accesses (see `run`).
+unsafe impl Send for RawTask {}
+unsafe impl Sync for RawTask {}
+
+struct Job {
+    task: RawTask,
+    /// Next task index to claim.
+    next: AtomicUsize,
+    total: usize,
+    /// Workers that have not yet finished with this job.
+    running: AtomicUsize,
+    /// Set when any task panicked; the submitter re-raises it.
+    panicked: AtomicBool,
+}
+
+struct PoolState {
+    job: Option<Arc<Job>>,
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// A fixed-size pool of persistent worker threads. The submitting
+/// thread participates in every job, so a pool of `threads == T` uses
+/// exactly T threads of compute and spawns T-1 workers.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Serializes concurrent `run` calls from different threads (one
+    /// job slot exists; a second submitter must wait its turn).
+    submit: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// Build a pool. `threads` is clamped to at least 1; a 1-thread
+    /// pool spawns no workers and runs everything inline.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { job: None, epoch: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut workers = Vec::new();
+        for w in 1..threads {
+            let sh = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("sltrain-pool-{w}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn pool worker");
+            workers.push(handle);
+        }
+        ThreadPool { shared, workers, threads, submit: Mutex::new(()) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), .., f(n-1)` across the pool and return once all
+    /// have completed. Tasks must be independent: `f` is called
+    /// concurrently for distinct indices. Runs inline when the pool has
+    /// one thread, when `n <= 1`, or when called from a pool worker.
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        if self.workers.is_empty() || n == 1 || IN_POOL.with(|c| c.get()) {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let obj: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: only the lifetime is erased; `run` blocks below until
+        // every worker has finished dereferencing the pointer.
+        let raw = RawTask(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(obj)
+                as *const (dyn Fn(usize) + Sync)
+        });
+        let job = Arc::new(Job {
+            task: raw,
+            next: AtomicUsize::new(0),
+            total: n,
+            running: AtomicUsize::new(self.workers.len()),
+            panicked: AtomicBool::new(false),
+        });
+        // one job slot: serialize submitters from different threads
+        let submit_guard = self.submit.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job.clone());
+            self.shared.work_cv.notify_all();
+        }
+        // The submitting thread drains tasks too. While it does, mark it
+        // as in-pool so a nested `run` from inside one of its tasks goes
+        // inline instead of clobbering the active job. The drain runs
+        // under catch_unwind so a panicking task cannot unwind past the
+        // wait-for-workers barrier below (the closure must stay alive
+        // until no worker can still dereference it).
+        IN_POOL.with(|c| c.set(true));
+        let my_result = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        }));
+        IN_POOL.with(|c| c.set(false));
+        if my_result.is_err() {
+            // stop handing out task indices so workers finish promptly
+            job.next.fetch_max(n, Ordering::Relaxed);
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while job.running.load(Ordering::Acquire) != 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        drop(submit_guard);
+        if let Err(payload) = my_result {
+            resume_unwind(payload);
+        }
+        if job.panicked.load(Ordering::Acquire) {
+            panic!("a pool task panicked (see worker output above)");
+        }
+    }
+
+    /// Run `f` over `0..n` and collect the results in index order.
+    pub fn map<R: Send, F: Fn(usize) -> R + Sync>(&self, n: usize, f: F) -> Vec<R> {
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(None);
+        }
+        {
+            let slots = SendPtr(out.as_mut_ptr());
+            self.run(n, |i| {
+                // SAFETY: each task writes only slot i; slots outlive run()
+                unsafe {
+                    *slots.get().add(i) = Some(f(i));
+                }
+            });
+        }
+        out.into_iter().map(|r| r.expect("pool task did not run")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    IN_POOL.with(|c| c.set(true));
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(j) = &st.job {
+                    if st.epoch != last_epoch {
+                        last_epoch = st.epoch;
+                        break j.clone();
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.total {
+                break;
+            }
+            // SAFETY: the submitter keeps the closure alive until
+            // `running` hits zero (below).
+            let task = unsafe { &*job.task.0 };
+            // a panicking task must not kill the worker (the submitter
+            // would deadlock waiting for its check-in): poison the job
+            // and let the submitter re-raise after the barrier
+            if catch_unwind(AssertUnwindSafe(|| task(i))).is_err() {
+                job.panicked.store(true, Ordering::Release);
+                job.next.fetch_max(job.total, Ordering::Relaxed);
+            }
+        }
+        if job.running.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _guard = shared.state.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// A raw pointer wrapper that lets pool tasks write disjoint regions of
+/// one buffer. The *user* guarantees disjointness; the helpers below
+/// encapsulate the common safe patterns.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// Split `data` into contiguous chunks of `chunk_len` (last one may be
+/// shorter) and run `f(chunk_index, chunk)` over the pool. Each task
+/// owns exactly one chunk, so this is a safe wrapper.
+pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    pool: &ThreadPool,
+    data: &mut [T],
+    chunk_len: usize,
+    f: F,
+) {
+    let len = data.len();
+    if len == 0 {
+        return;
+    }
+    let chunk_len = chunk_len.max(1);
+    let n_chunks = len.div_ceil(chunk_len);
+    let base = SendPtr(data.as_mut_ptr());
+    pool.run(n_chunks, |ci| {
+        let start = ci * chunk_len;
+        let end = (start + chunk_len).min(len);
+        // SAFETY: chunks [start, end) are disjoint across ci and within
+        // bounds; the borrow of `data` outlives pool.run.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.get().add(start), end - start) };
+        f(ci, chunk);
+    });
+}
+
+/// Evenly partition `n` items over the pool: returns the per-task chunk
+/// length so that at most `threads` tasks are created.
+pub fn chunk_len_for(pool: &ThreadPool, n: usize) -> usize {
+    n.div_ceil(pool.threads().max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_covers_every_index_once() {
+        for threads in [1, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+            pool.run(97, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn map_preserves_index_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map(50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = ThreadPool::new(4);
+        for round in 0..20 {
+            let sum = AtomicU64::new(0);
+            pool.run(round + 1, |i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            let want: u64 = (0..(round as u64 + 1)).sum();
+            assert_eq!(sum.load(Ordering::Relaxed), want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn nested_run_executes_inline() {
+        let pool = ThreadPool::new(2);
+        let count = AtomicU64::new(0);
+        pool.run(4, |_| {
+            // nested: must not deadlock
+            pool.run(3, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn panicking_task_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "task panic must propagate to the submitter");
+        // the pool must still be fully usable afterwards
+        let sum = AtomicU64::new(0);
+        pool.run(10, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_disjoint_regions() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u32; 103];
+        par_chunks_mut(&pool, &mut data, 10, |ci, chunk| {
+            for x in chunk.iter_mut() {
+                *x = ci as u32 + 1;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, (i / 10) as u32 + 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn resolve_threads_clamps_and_reads_env() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
+    }
+}

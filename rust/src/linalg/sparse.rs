@@ -14,6 +14,7 @@
 //!                     materializing the dense d_in × d_out matrix
 //!   * `fused_effective`  W = scale·(B@A) ⊕_idx vals  (Algorithm 1 line 4)
 
+use super::parallel::{self, ThreadPool};
 use super::Matrix;
 use crate::util::rng::Rng;
 
@@ -75,13 +76,9 @@ impl SparseSupport {
         w.scatter_add(&self.idx, vals);
     }
 
-    /// Fused `scale·(B @ A) ⊕_idx vals` — the transient dense weight of
-    /// Algorithm 1, built in one pass for consumers that want it
-    /// materialized (inference, analysis, parity checks).
-    pub fn fused_effective(&self, b: &Matrix, a: &Matrix, vals: &[f32], scale: f32) -> Matrix {
-        assert_eq!(b.rows, self.d_in);
-        assert_eq!(a.cols, self.d_out);
-        let mut w = b.matmul(a);
+    /// Shared tail of the Algorithm-1 apply: scale the B@A product and
+    /// scatter the sparse values onto it.
+    fn scale_and_scatter(&self, mut w: Matrix, vals: &[f32], scale: f32) -> Matrix {
         if scale != 1.0 {
             for x in &mut w.data {
                 *x *= scale;
@@ -89,6 +86,40 @@ impl SparseSupport {
         }
         self.densify_into(&mut w, vals);
         w
+    }
+
+    /// Fused `scale·(B @ A) ⊕_idx vals` — the transient dense weight of
+    /// Algorithm 1, built in one pass for consumers that want it
+    /// materialized (inference, analysis, parity checks).
+    pub fn fused_effective(&self, b: &Matrix, a: &Matrix, vals: &[f32], scale: f32) -> Matrix {
+        assert_eq!(b.rows, self.d_in);
+        assert_eq!(a.cols, self.d_out);
+        self.scale_and_scatter(b.matmul(a), vals, scale)
+    }
+
+    /// One batch row of `y += x @ S` (shared by the serial and the
+    /// row-partitioned parallel drivers; fixed accumulation order).
+    fn spmm_row(&self, x_row: &[f32], vals: &[f32], y_row: &mut [f32]) {
+        for i in 0..self.d_in {
+            let xv = x_row[i];
+            if xv == 0.0 {
+                continue;
+            }
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                y_row[self.cols[k] as usize] += xv * vals[k];
+            }
+        }
+    }
+
+    /// One batch row of `dx += dy @ S^T`.
+    fn spmm_t_row(&self, dy_row: &[f32], vals: &[f32], dx_row: &mut [f32]) {
+        for i in 0..self.d_in {
+            let mut acc = 0.0f32;
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += dy_row[self.cols[k] as usize] * vals[k];
+            }
+            dx_row[i] += acc;
+        }
     }
 
     /// `y += x @ S` for x [n, d_in]: the forward sparse contribution.
@@ -100,16 +131,27 @@ impl SparseSupport {
         for n in 0..x.rows {
             let x_row = &x.data[n * self.d_in..(n + 1) * self.d_in];
             let y_row = &mut y.data[n * self.d_out..(n + 1) * self.d_out];
-            for i in 0..self.d_in {
-                let xv = x_row[i];
-                if xv == 0.0 {
-                    continue;
-                }
-                for k in self.row_ptr[i]..self.row_ptr[i + 1] {
-                    y_row[self.cols[k] as usize] += xv * vals[k];
-                }
-            }
+            self.spmm_row(x_row, vals, y_row);
         }
+    }
+
+    /// `spmm_add`, batch rows partitioned over the pool. Each y row is
+    /// written by exactly one task, so results are bit-identical to the
+    /// serial kernel at every thread count.
+    pub fn spmm_add_par(&self, x: &Matrix, vals: &[f32], y: &mut Matrix, pool: &ThreadPool) {
+        assert_eq!(x.cols, self.d_in, "spmm x width");
+        assert_eq!((y.rows, y.cols), (x.rows, self.d_out), "spmm y shape");
+        assert_eq!(vals.len(), self.nnz());
+        let chunk_rows = parallel::chunk_len_for(pool, x.rows);
+        parallel::par_chunks_mut(pool, &mut y.data, chunk_rows * self.d_out, |ci, ychunk| {
+            let r0 = ci * chunk_rows;
+            for rr in 0..ychunk.len() / self.d_out {
+                let n = r0 + rr;
+                let x_row = &x.data[n * self.d_in..(n + 1) * self.d_in];
+                let y_row = &mut ychunk[rr * self.d_out..(rr + 1) * self.d_out];
+                self.spmm_row(x_row, vals, y_row);
+            }
+        });
     }
 
     /// `y = x @ S` (fresh output).
@@ -127,14 +169,26 @@ impl SparseSupport {
         for n in 0..dy.rows {
             let dy_row = &dy.data[n * self.d_out..(n + 1) * self.d_out];
             let dx_row = &mut dx.data[n * self.d_in..(n + 1) * self.d_in];
-            for i in 0..self.d_in {
-                let mut acc = 0.0f32;
-                for k in self.row_ptr[i]..self.row_ptr[i + 1] {
-                    acc += dy_row[self.cols[k] as usize] * vals[k];
-                }
-                dx_row[i] += acc;
-            }
+            self.spmm_t_row(dy_row, vals, dx_row);
         }
+    }
+
+    /// `spmm_t_add`, batch rows partitioned over the pool
+    /// (bit-identical to the serial kernel at every thread count).
+    pub fn spmm_t_add_par(&self, dy: &Matrix, vals: &[f32], dx: &mut Matrix, pool: &ThreadPool) {
+        assert_eq!(dy.cols, self.d_out, "spmm_t dy width");
+        assert_eq!((dx.rows, dx.cols), (dy.rows, self.d_in), "spmm_t dx shape");
+        assert_eq!(vals.len(), self.nnz());
+        let chunk_rows = parallel::chunk_len_for(pool, dy.rows);
+        parallel::par_chunks_mut(pool, &mut dx.data, chunk_rows * self.d_in, |ci, dxchunk| {
+            let r0 = ci * chunk_rows;
+            for rr in 0..dxchunk.len() / self.d_in {
+                let n = r0 + rr;
+                let dy_row = &dy.data[n * self.d_out..(n + 1) * self.d_out];
+                let dx_row = &mut dxchunk[rr * self.d_in..(rr + 1) * self.d_in];
+                self.spmm_t_row(dy_row, vals, dx_row);
+            }
+        });
     }
 
     /// `dy @ S^T` (fresh output).
@@ -144,6 +198,18 @@ impl SparseSupport {
         dx
     }
 
+    /// One support entry of eq. (2): `Σ_n x[n, row_k] · dy[n, col_k]`,
+    /// accumulated in ascending n (fixed order).
+    fn scatter_grad_at(&self, x: &Matrix, dy: &Matrix, k: usize) -> f32 {
+        let i = self.idx[k] as usize / self.d_out;
+        let c = self.cols[k] as usize;
+        let mut acc = 0.0f32;
+        for n in 0..x.rows {
+            acc += x.data[n * self.d_in + i] * dy.data[n * self.d_out + c];
+        }
+        acc
+    }
+
     /// Sparse value gradient of eq. (2): `dvals[k] = (x^T dy)[idx[k]]`
     /// computed as `Σ_n x[n, row_k] · dy[n, col_k]` — the dense d_in×d_out
     /// gradient is never formed.
@@ -151,18 +217,41 @@ impl SparseSupport {
         assert_eq!(x.cols, self.d_in);
         assert_eq!(dy.cols, self.d_out);
         assert_eq!(x.rows, dy.rows);
+        (0..self.nnz()).map(|k| self.scatter_grad_at(x, dy, k)).collect()
+    }
+
+    /// `scatter_grad`, support entries partitioned over the pool. Every
+    /// dvals[k] is computed wholly inside one task with the serial
+    /// accumulation order, so results are bit-identical at every thread
+    /// count.
+    pub fn scatter_grad_par(&self, x: &Matrix, dy: &Matrix, pool: &ThreadPool) -> Vec<f32> {
+        assert_eq!(x.cols, self.d_in);
+        assert_eq!(dy.cols, self.d_out);
+        assert_eq!(x.rows, dy.rows);
         let mut dvals = vec![0.0f32; self.nnz()];
-        for i in 0..self.d_in {
-            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
-                let c = self.cols[k] as usize;
-                let mut acc = 0.0f32;
-                for n in 0..x.rows {
-                    acc += x.data[n * self.d_in + i] * dy.data[n * self.d_out + c];
-                }
-                dvals[k] = acc;
+        let chunk = parallel::chunk_len_for(pool, dvals.len());
+        parallel::par_chunks_mut(pool, &mut dvals, chunk, |ci, dchunk| {
+            let k0 = ci * chunk;
+            for (kk, d) in dchunk.iter_mut().enumerate() {
+                *d = self.scatter_grad_at(x, dy, k0 + kk);
             }
-        }
+        });
         dvals
+    }
+
+    /// `fused_effective` with the B@A product spread over the pool (the
+    /// Algorithm-1 apply for inference/analysis consumers).
+    pub fn fused_effective_par(
+        &self,
+        b: &Matrix,
+        a: &Matrix,
+        vals: &[f32],
+        scale: f32,
+        pool: &ThreadPool,
+    ) -> Matrix {
+        assert_eq!(b.rows, self.d_in);
+        assert_eq!(a.cols, self.d_out);
+        self.scale_and_scatter(b.matmul_par(a, pool), vals, scale)
     }
 }
 
@@ -231,6 +320,36 @@ mod tests {
             let want = dense.data[i as usize];
             assert!((got[k] - want).abs() < 1e-4, "nnz {k}: {} vs {want}", got[k]);
         }
+    }
+
+    #[test]
+    fn parallel_sparse_kernels_bitwise_match_serial() {
+        let (sup, vals, mut rng) = fixture(6, 12, 9, 0.15);
+        let pool = ThreadPool::new(3);
+        let x = Matrix::random(7, 12, &mut rng);
+        let dy = Matrix::random(7, 9, &mut rng);
+
+        let mut y_s = Matrix::zeros(7, 9);
+        sup.spmm_add(&x, &vals, &mut y_s);
+        let mut y_p = Matrix::zeros(7, 9);
+        sup.spmm_add_par(&x, &vals, &mut y_p, &pool);
+        assert_eq!(y_s.data, y_p.data, "spmm");
+
+        let mut dx_s = Matrix::zeros(7, 12);
+        sup.spmm_t_add(&dy, &vals, &mut dx_s);
+        let mut dx_p = Matrix::zeros(7, 12);
+        sup.spmm_t_add_par(&dy, &vals, &mut dx_p, &pool);
+        assert_eq!(dx_s.data, dx_p.data, "spmm_t");
+
+        assert_eq!(sup.scatter_grad(&x, &dy), sup.scatter_grad_par(&x, &dy, &pool), "scatter");
+
+        let b = Matrix::random(12, 3, &mut rng);
+        let a = Matrix::random(3, 9, &mut rng);
+        assert_eq!(
+            sup.fused_effective(&b, &a, &vals, 2.0).data,
+            sup.fused_effective_par(&b, &a, &vals, 2.0, &pool).data,
+            "fused"
+        );
     }
 
     #[test]

@@ -88,6 +88,12 @@ fn backend_flags(c: Cli) -> Cli {
         .opt("batch", "8", "train batch rows (native backend)")
         .opt("lr", "0.003", "base learning rate (native backend)")
         .opt("total-steps", "2000", "lr-schedule horizon (native backend)")
+        .opt(
+            "threads",
+            "0",
+            "step-loop worker threads, native backend (0 = auto; losses are \
+             bit-identical at every thread count)",
+        )
 }
 
 fn backend_spec(a: &Args) -> Result<BackendSpec> {
@@ -110,6 +116,7 @@ fn backend_spec(a: &Args) -> Result<BackendSpec> {
         a.usize("batch"),
         a.f64("lr"),
         a.usize("total-steps"),
+        a.usize("threads"),
     )
 }
 

@@ -28,6 +28,24 @@ impl Runtime {
         Ok(Runtime { client })
     }
 
+    /// One process-wide PJRT CPU client, shared across artifact opens.
+    /// Bench loops that open many artifacts (table2/table3 sweeps)
+    /// previously paid client startup per `XlaBackend::open`; this
+    /// amortizes it to once per process. Client bring-up failures are
+    /// not cached, so a later call can still succeed.
+    pub fn cpu_shared() -> Result<std::sync::Arc<Runtime>> {
+        static SHARED: std::sync::OnceLock<std::sync::Mutex<Option<std::sync::Arc<Runtime>>>> =
+            std::sync::OnceLock::new();
+        let cell = SHARED.get_or_init(|| std::sync::Mutex::new(None));
+        let mut guard = cell.lock().unwrap();
+        if let Some(rt) = guard.as_ref() {
+            return Ok(rt.clone());
+        }
+        let rt = std::sync::Arc::new(Runtime::cpu()?);
+        *guard = Some(rt.clone());
+        Ok(rt)
+    }
+
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -314,6 +332,13 @@ impl Artifact {
 /// steps (the patched `execute_b_untupled` returns one buffer per output
 /// leaf), so the per-step host traffic is just tokens in + loss out,
 /// instead of a full round-trip of every parameter through Literals.
+///
+/// NOTE: since perf_steploop moved to the artifact-free Backend trait,
+/// this path has no in-repo bench consumer. It is kept as the primitive
+/// for the ROADMAP "serving path" item (persistent batched `forward`
+/// with device-resident params); wire the next xla-bound bench or the
+/// serving process through it rather than duplicating the buffer
+/// plumbing.
 pub struct DeviceState {
     pub bufs: HashMap<String, xla::PjRtBuffer>,
 }

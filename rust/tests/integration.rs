@@ -275,6 +275,7 @@ fn native_and_xla_loss_parity_smoke() {
         batch,
         lr: 3e-3,
         total_steps: 2000,
+        threads: 0,
     })
     .unwrap();
     let (nf, nl) = run(native);

@@ -16,6 +16,7 @@ fn native_spec(method: &str, batch: usize, steps: usize) -> BackendSpec {
         batch,
         lr: 3e-3,
         total_steps: steps.max(1),
+        threads: 0, // auto (results are thread-count independent)
     }
 }
 
@@ -209,11 +210,13 @@ fn native_checkpoint_is_analyzable() {
 #[test]
 fn backend_spec_validation() {
     // unknown engine and missing artifact are caught early
-    assert!(BackendSpec::from_flags("tpu", "", "tiny", "sltrain", 8, 3e-3, 100).is_err());
-    assert!(BackendSpec::from_flags("xla", "", "tiny", "sltrain", 8, 3e-3, 100).is_err());
-    assert!(BackendSpec::from_flags("native", "", "nope", "sltrain", 8, 3e-3, 100).is_err());
+    assert!(BackendSpec::from_flags("tpu", "", "tiny", "sltrain", 8, 3e-3, 100, 0).is_err());
+    assert!(BackendSpec::from_flags("xla", "", "tiny", "sltrain", 8, 3e-3, 100, 0).is_err());
+    assert!(BackendSpec::from_flags("native", "", "nope", "sltrain", 8, 3e-3, 100, 0).is_err());
     // --artifact with the native engine is a misdirected run, not a no-op
-    assert!(BackendSpec::from_flags("native", "a/dir", "tiny", "sltrain", 8, 3e-3, 100).is_err());
+    let misdirected =
+        BackendSpec::from_flags("native", "a/dir", "tiny", "sltrain", 8, 3e-3, 100, 0);
+    assert!(misdirected.is_err());
     // native relora/galore are rejected at open()
     let bad = BackendSpec::Native {
         preset: preset("tiny").unwrap(),
@@ -221,8 +224,63 @@ fn backend_spec_validation() {
         batch: 2,
         lr: 3e-3,
         total_steps: 10,
+        threads: 1,
     };
     assert!(backend::open(bad).is_err());
+}
+
+/// The parallelism payoff: on machines with >= 4 cores, the threaded
+/// step loop at 4 threads must beat 1 thread wall-clock on the tiny
+/// preset. Skipped on smaller runners where the comparison is
+/// meaningless.
+///
+/// `#[ignore]`d in the default suite: libtest runs sibling tests (incl.
+/// 200-step e2e training) concurrently in this binary, which poisons
+/// wall-clock ratios. CI runs it in a dedicated serial step:
+///   cargo test -q --test native_backend -- --ignored --test-threads=1
+#[test]
+#[ignore = "timing-sensitive: run serially (see doc comment)"]
+fn threaded_step_loop_beats_single_thread() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores < 4 {
+        eprintln!("[skip] threaded_step_loop_beats_single_thread: only {cores} cores");
+        return;
+    }
+    let time_threads = |threads: usize| {
+        let mut be = backend::open(BackendSpec::Native {
+            preset: preset("tiny").unwrap(),
+            method: "sltrain".to_string(),
+            batch: 8,
+            lr: 3e-3,
+            total_steps: 100,
+            threads,
+        })
+        .unwrap();
+        let mut pipe = Pipeline::build(be.preset().vocab, 7);
+        be.init_state(42).unwrap();
+        let (batch, seq) = (be.batch_size(), be.seq_len());
+        // warmup (pool spin-up, page faults)
+        for w in 0..2 {
+            let toks = pipe.train.next_batch(batch, seq);
+            be.train_step(w, &toks).unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        for step in 0..8 {
+            let toks = pipe.train.next_batch(batch, seq);
+            be.train_step(2 + step, &toks).unwrap();
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    // best-of-two per thread count: robust to transient CI contention
+    // (the test harness may run other tests concurrently)
+    let t1 = time_threads(1).min(time_threads(1));
+    let t4 = time_threads(4).min(time_threads(4));
+    // the issue's contract is simply "4 threads beats 1 thread"; leave
+    // headroom so shared 4-vCPU runners don't flake on a clean commit
+    assert!(
+        t4 < t1 * 0.95,
+        "4 threads ({t4:.3}s) not faster than 1 thread ({t1:.3}s) over 8 steps"
+    );
 }
 
 #[cfg(not(feature = "xla"))]

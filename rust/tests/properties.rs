@@ -10,7 +10,7 @@
 
 use sltrain::config::preset;
 use sltrain::data::{Bpe, CorpusConfig, Pipeline, SynthCorpus};
-use sltrain::linalg::{svd, Matrix};
+use sltrain::linalg::{svd, Matrix, ThreadPool};
 use sltrain::mem::{estimate, MemOptions};
 use sltrain::util::json::Json;
 use sltrain::util::rng::Rng;
@@ -107,6 +107,74 @@ fn prop_loader_shards_disjoint_and_deterministic() {
         let v = p1.valid.next_batch(2, 64);
         if v == a1 {
             return Err("train/valid shards overlap".into());
+        }
+        Ok(())
+    });
+}
+
+/// The pre-blocking kernel: a naive triple loop with the plain
+/// `l = 0..k` accumulation order per output element.
+fn matmul_naive_transb(a: &Matrix, bt: &Matrix) -> Matrix {
+    assert_eq!(a.cols, bt.cols);
+    let (m, k, n) = (a.rows, a.cols, bt.rows);
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += a.data[i * k + l] * bt.data[j * k + l];
+            }
+            out.data[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_matmul_transb_bitwise_matches_naive_reference() {
+    // random rectangular shapes, deliberately not multiples of the
+    // MR=4 / NR=8 microkernel tile (including k not divisible by the
+    // block size): the blocked kernel must agree bit for bit
+    forall(25, |rng| {
+        let m = 1 + rng.below(33) as usize;
+        let k = 1 + rng.below(37) as usize;
+        let n = 1 + rng.below(29) as usize;
+        let a = Matrix::random(m, k, rng);
+        let bt = Matrix::random(n, k, rng);
+        let want = matmul_naive_transb(&a, &bt);
+        let got = a.matmul_transb(&bt);
+        if want.data != got.data {
+            return Err(format!("blocked kernel diverges at {m}x{k}x{n}"));
+        }
+        let got2 = a.matmul(&bt.transpose());
+        if want.data != got2.data {
+            return Err(format!("matmul diverges at {m}x{k}x{n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_matmul_deterministic_across_runs_and_threads() {
+    // repeated parallel runs must be bit-identical (fixed reduction
+    // order), and so must different thread counts
+    forall(10, |rng| {
+        let m = 1 + rng.below(40) as usize;
+        let k = 1 + rng.below(24) as usize;
+        let n = 1 + rng.below(24) as usize;
+        let a = Matrix::random(m, k, rng);
+        let bt = Matrix::random(n, k, rng);
+        let serial = a.matmul_transb(&bt);
+        for threads in [2usize, 4] {
+            let pool = ThreadPool::new(threads);
+            for rep in 0..3 {
+                let got = a.matmul_transb_par(&bt, &pool);
+                if got.data != serial.data {
+                    return Err(format!(
+                        "parallel run {rep} at {threads} threads diverges ({m}x{k}x{n})"
+                    ));
+                }
+            }
         }
         Ok(())
     });
