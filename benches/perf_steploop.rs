@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         .opt("methods", "full,lowrank,sltrain", "comma-separated methods")
         .opt("threads", "1,2,4", "comma-separated thread counts")
         .opt("batch", "8", "train batch rows")
+        .opt("optim-bits", "0", "Adam moment precision: 32 | 8 (0 = auto)")
         .opt("json", "BENCH_steploop.json", "machine-readable output path")
         .opt("csv", "results/perf_steploop.csv", "output CSV")
         .parse_env();
@@ -77,6 +78,7 @@ fn main() -> anyhow::Result<()> {
                     lr: 3e-3,
                     total_steps: 2000,
                     threads,
+                    optim_bits: a.usize("optim-bits"),
                 };
                 let mut be: Box<dyn Backend> = match backend::open(spec) {
                     Ok(be) => be,
@@ -99,6 +101,7 @@ fn main() -> anyhow::Result<()> {
                 }
                 let dt = t1.elapsed().as_secs_f64();
                 let tps = (steps * batch * seq) as f64 / dt;
+                let optim_bits = be.mem_report().map(|m| m.optim_bits).unwrap_or(0);
                 if base_tps == 0.0 {
                     base_tps = tps;
                 }
@@ -115,6 +118,7 @@ fn main() -> anyhow::Result<()> {
                     ("config", s(cfgn)),
                     ("method", s(method)),
                     ("threads", num(threads as f64)),
+                    ("optim_bits", num(optim_bits as f64)),
                     ("tokens_per_sec", num(tps)),
                     ("step_ms", num(dt / steps as f64 * 1e3)),
                 ]));

@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
         .opt("steps", "120", "train steps per cell")
         .opt("configs", "tiny", "comma-separated scale points")
         .opt("threads", "0", "native step-loop worker threads (0 = auto)")
+        .opt("optim-bits", "0", "native Adam moment precision: 32 | 8 (0 = auto)")
         .opt("csv", "results/table2.csv", "output CSV")
         .parse_env();
     let steps = a.usize("steps");
@@ -67,6 +68,7 @@ fn main() -> anyhow::Result<()> {
                         lr: 3e-3,
                         total_steps: steps.max(1),
                         threads: a.usize("threads"),
+                        optim_bits: a.usize("optim-bits"),
                     }
                 }
             };

@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
         .opt("steps", "30", "measured steps (after 3 warmup)")
         .opt("config", "tiny", "scale point")
         .opt("threads", "0", "native step-loop worker threads (0 = auto)")
+        .opt("optim-bits", "0", "native Adam moment precision: 32 | 8 (0 = auto)")
         .opt("csv", "results/table3.csv", "output CSV")
         .parse_env();
     let cfgn = a.str("config");
@@ -57,6 +58,7 @@ fn main() -> anyhow::Result<()> {
                     lr: 3e-3,
                     total_steps: 2000,
                     threads: a.usize("threads"),
+                    optim_bits: a.usize("optim-bits"),
                 }
             }
         };

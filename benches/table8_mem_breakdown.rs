@@ -4,9 +4,15 @@
 //! published numbers in the mem module's unit tests.
 //!
 //!   cargo bench --bench table8_mem_breakdown
+//!
+//! The estimator tables are cross-checked against a *measured* section
+//! at the end: the native backend's `mem_report` (bytes actually held)
+//! for f32 vs block-wise 8-bit Adam moments on the tiny preset.
 
+use sltrain::backend::{self, Backend, BackendSpec};
 use sltrain::bench::{fmt, Table};
 use sltrain::config::preset;
+use sltrain::data::Pipeline;
 use sltrain::mem::{breakdown_row, estimate, MemEstimate, MemOptions};
 use sltrain::util::cli::Cli;
 
@@ -69,5 +75,48 @@ fn main() -> anyhow::Result<()> {
     }
     t9.print();
     println!("\npaper Table 9: r=128,d=0.01 -> 43.02M/0.26G ... r=160,d=0.03 -> 46.03M/0.28G");
+
+    // Measured (native backend, tiny preset): the bytes the engine
+    // actually holds after one step — the estimator's optimizer column
+    // made concrete, f32 vs block-wise 8-bit moments, plus the
+    // streaming backward's gradient high-water.
+    let mut tm = Table::new(
+        "Table 8 (measured) — native tiny: optimizer bytes f32 vs 8-bit, MB",
+        &["method", "optim f32", "optim 8-bit", "drop", "grad peak", "grad 2-phase"],
+    );
+    for method in ["full", "lowrank", "sltrain"] {
+        let mut optim = [0u64; 2];
+        let mut grad_peak = 0u64;
+        let mut grad_all = 0u64;
+        for (i, bits) in [32usize, 8].into_iter().enumerate() {
+            let spec = BackendSpec::Native {
+                preset: preset("tiny").unwrap(),
+                method: method.to_string(),
+                batch: 2,
+                lr: 3e-3,
+                total_steps: 100,
+                threads: 1,
+                optim_bits: bits,
+            };
+            let mut be: Box<dyn Backend> = backend::open(spec)?;
+            be.init_state(42)?;
+            let mut pipe = Pipeline::build(be.preset().vocab, 7);
+            let toks = pipe.train.next_batch(2, be.seq_len());
+            be.train_step(0, &toks)?;
+            let r = be.mem_report().expect("native backend tracks memory");
+            optim[i] = r.optim_bytes;
+            grad_peak = r.grad_peak_bytes;
+            grad_all = r.grad_all_bytes;
+        }
+        tm.row(vec![
+            method.to_string(),
+            fmt(optim[0] as f64 / 1e6, 3),
+            fmt(optim[1] as f64 / 1e6, 3),
+            format!("{:.0}%", 100.0 * (1.0 - optim[1] as f64 / optim[0] as f64)),
+            fmt(grad_peak as f64 / 1e6, 3),
+            fmt(grad_all as f64 / 1e6, 3),
+        ]);
+    }
+    tm.print();
     Ok(())
 }

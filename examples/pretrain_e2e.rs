@@ -28,6 +28,7 @@ fn main() -> Result<()> {
         .opt("eval-every", "50", "eval period")
         .opt("out", "runs/pretrain_e2e", "output dir (metrics + checkpoint)")
         .opt("threads", "0", "step-loop worker threads (native backend, 0 = auto)")
+        .opt("optim-bits", "0", "Adam moment precision: 32 | 8 (native backend, 0 = auto)")
         .parse_env();
 
     let steps = a.usize("steps");
@@ -40,6 +41,7 @@ fn main() -> Result<()> {
         3e-3,
         steps.max(1),
         a.usize("threads"),
+        a.usize("optim-bits"),
     )?;
     let mut be = backend::open(spec)?;
     let p = be.preset().clone();
@@ -88,6 +90,15 @@ fn main() -> Result<()> {
         r.wall_secs,
         r.peak_rss_bytes as f64 / 1e6
     );
+    if let Some(m) = be.mem_report() {
+        println!(
+            "measured state: params {:.1} MB | optim {:.1} MB ({}-bit moments) | grad peak {:.1} MB",
+            m.param_bytes as f64 / 1e6,
+            m.optim_bytes as f64 / 1e6,
+            m.optim_bits,
+            m.grad_peak_bytes as f64 / 1e6
+        );
+    }
     std::fs::write(
         out.join("summary.json"),
         sltrain::coordinator::trainer::summary_json(

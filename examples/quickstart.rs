@@ -23,6 +23,7 @@ fn main() -> Result<()> {
         .opt("method", "sltrain", "weight parameterization (native backend)")
         .opt("steps", "100", "optimizer steps")
         .opt("threads", "0", "step-loop worker threads (native backend, 0 = auto)")
+        .opt("optim-bits", "0", "Adam moment precision: 32 | 8 (native backend, 0 = auto)")
         .parse_env();
     let steps = a.usize("steps");
     let spec = BackendSpec::from_flags(
@@ -34,6 +35,7 @@ fn main() -> Result<()> {
         3e-3,
         steps.max(1),
         a.usize("threads"),
+        a.usize("optim-bits"),
     )?;
     let mut be = backend::open(spec)?;
     println!(

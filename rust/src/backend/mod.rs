@@ -61,6 +61,16 @@ impl StateTensor {
         }
     }
 
+    /// Raw signed-8 payload (quantized optimizer moment codes).
+    pub fn i8(name: &str, shape: Vec<usize>, data: &[i8]) -> StateTensor {
+        StateTensor {
+            name: name.to_string(),
+            shape,
+            dtype: Dtype::I8,
+            bytes: data.iter().map(|&x| x as u8).collect(),
+        }
+    }
+
     pub fn to_f32(&self) -> Result<Vec<f32>> {
         if self.dtype != Dtype::F32 {
             bail!("{}: not f32", self.name);
@@ -81,6 +91,13 @@ impl StateTensor {
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
             .collect())
+    }
+
+    pub fn to_i8(&self) -> Result<Vec<i8>> {
+        if self.dtype != Dtype::I8 {
+            bail!("{}: not i8", self.name);
+        }
+        Ok(self.bytes.iter().map(|&b| b as i8).collect())
     }
 }
 
@@ -144,6 +161,14 @@ pub trait Backend {
         Ok(())
     }
 
+    /// Measured memory footprint of the live training state — params,
+    /// optimizer moments as actually held (f32 or 8-bit), and the
+    /// gradient-buffer high-water of the step loop. `None` when the
+    /// engine does not track it (the PJRT path holds device buffers).
+    fn mem_report(&self) -> Option<crate::mem::MemReport> {
+        None
+    }
+
     /// Snapshot persistent state (params + fixed supports) for
     /// checkpointing and analysis.
     fn state_tensors(&self) -> Result<Vec<StateTensor>>;
@@ -171,6 +196,13 @@ pub enum BackendSpec {
         /// env, else available parallelism). Losses are bit-identical
         /// for every thread count.
         threads: usize,
+        /// Adam moment precision: 32 (f32) or 8 (block-wise absmax
+        /// quantized, Dettmers et al. [9]); 0 = auto (the
+        /// SLTRAIN_OPTIM_BITS env var, else 32). At 32 the step loop is
+        /// bit-identical to the two-phase reference; at 8 it stays
+        /// deterministic and thread-count-invariant but diverges
+        /// numerically (bounded per-block quantization error).
+        optim_bits: usize,
     },
 }
 
@@ -178,6 +210,7 @@ impl BackendSpec {
     /// Build a spec from the shared CLI flag set. `backend` is "xla" or
     /// "native"; `artifact` is required for xla, `config`/`method` for
     /// native.
+    #[allow(clippy::too_many_arguments)]
     pub fn from_flags(
         backend: &str,
         artifact: &str,
@@ -187,6 +220,7 @@ impl BackendSpec {
         lr: f64,
         total_steps: usize,
         threads: usize,
+        optim_bits: usize,
     ) -> Result<BackendSpec> {
         match backend {
             "xla" => {
@@ -211,6 +245,7 @@ impl BackendSpec {
                     lr: lr as f32,
                     total_steps: total_steps.max(1),
                     threads,
+                    optim_bits,
                 })
             }
             other => bail!("unknown backend {other:?} (expected xla | native)"),
@@ -224,9 +259,17 @@ impl BackendSpec {
 pub fn open(spec: BackendSpec) -> Result<Box<dyn Backend>> {
     match spec {
         BackendSpec::Xla { artifact_dir } => open_xla(artifact_dir),
-        BackendSpec::Native { preset, method, batch, lr, total_steps, threads } => Ok(Box::new(
-            native::NativeBackend::build(preset, &method, batch, lr, total_steps, threads)?,
-        )),
+        BackendSpec::Native { preset, method, batch, lr, total_steps, threads, optim_bits } => {
+            Ok(Box::new(native::NativeBackend::build(
+                preset,
+                &method,
+                batch,
+                lr,
+                total_steps,
+                threads,
+                optim_bits,
+            )?))
+        }
     }
 }
 

@@ -33,6 +33,21 @@
 //! lookups. A name table is kept only for the state interchange
 //! (checkpoints, parity tooling).
 //!
+//! **Memory model.** `train_step` is a *streaming per-layer fused
+//! backward+update* (Lv et al. [36]): the backward walk applies each
+//! parameter's Adam update the moment its gradient is finalized and
+//! releases the buffer, so peak gradient memory is O(largest tensor)
+//! instead of O(all trainable params) — the walk never reads a
+//! parameter again after its gradient is complete, so at
+//! `--optim-bits 32` the result is bit-identical to the two-phase
+//! "accumulate everything, then `adam_apply`" loop (kept as
+//! [`NativeBackend::train_step_two_phase`], the tested reference).
+//! Adam moments are held in f32 or, under `--optim-bits 8`, as
+//! block-wise absmax-quantized 8-bit codes (`crate::optim`), cutting
+//! optimizer state ~4×; both live in checkpoints via `state_tensors`.
+//! The gradient high-water is tracked (`mem::PeakTracker`) and exposed
+//! through `Backend::mem_report`.
+//!
 //! No artifacts, no XLA, no Python: this backend is the deterministic
 //! reference the AOT/PJRT path is parity-tested against, and the engine
 //! behind `sltrain train --backend native`.
@@ -43,8 +58,10 @@ use anyhow::{anyhow, bail, Result};
 
 use super::{Backend, StateTensor};
 use crate::config::ModelPreset;
-use crate::linalg::parallel::{resolve_threads, ThreadPool};
+use crate::linalg::parallel::{self, par_index_ranges, resolve_threads, SendPtr, ThreadPool};
 use crate::linalg::{Matrix, SparseSupport};
+use crate::mem::{MemReport, PeakTracker};
+use crate::optim::{self, AdamHyper, Moments, OptimBits};
 use crate::util::rng::Rng;
 
 const ADAM_B1: f32 = 0.9;
@@ -115,7 +132,7 @@ impl PTensor {
 // Interned once at init_state: the step loop addresses every parameter
 // by dense index, never by name.
 
-/// Index into the parameter store (`params` / `adam_m` / `adam_v`).
+/// Index into the parameter store (`params` / `optim_m` / `optim_v`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct ParamId(usize);
 
@@ -206,15 +223,20 @@ struct FwdCache {
 /// not yet touched).
 type Grads = Vec<Vec<f32>>;
 
-fn acc_grad(grads: &mut Grads, id: ParamId, g: &[f32]) {
+/// Move an owned gradient into its slot. Every parameter's gradient is
+/// produced exactly ONCE per backward walk — the streaming fused path
+/// depends on it (a second contribution after `finish_params` already
+/// applied the update would be silently dropped), so a refill is a
+/// loud invariant violation, not an accumulate.
+fn acc_grad_vec(grads: &mut Grads, id: ParamId, g: Vec<f32>) {
     let slot = &mut grads[id.0];
-    if slot.is_empty() {
-        slot.extend_from_slice(g);
-    } else {
-        for (a, b) in slot.iter_mut().zip(g) {
-            *a += b;
-        }
-    }
+    assert!(
+        slot.is_empty(),
+        "gradient slot {} filled twice in one backward walk (fused updates \
+         require single-contribution parameters)",
+        id.0
+    );
+    *slot = g;
 }
 
 // ------------------------------------------------------------ backend
@@ -227,11 +249,14 @@ pub struct NativeBackend {
     total_steps: usize,
     /// The paper's alpha/r balancing factor on B@A.
     scale: f32,
+    /// Adam moment precision (`--optim-bits`): f32, or block-wise 8-bit
+    /// for tensors clearing `optim::Q8_MIN_NUMEL`.
+    optim_bits: OptimBits,
     /// Interned parameter store; `ParamId` indexes all three vectors.
     params: Vec<PTensor>,
     param_names: Vec<String>,
-    adam_m: Vec<Vec<f32>>,
-    adam_v: Vec<Vec<f32>>,
+    optim_m: Vec<Moments>,
+    optim_v: Vec<Moments>,
     /// Name -> id, kept only for the state interchange.
     name_to_id: BTreeMap<String, usize>,
     /// Per-linear parameter handles, `LinId`-indexed.
@@ -244,11 +269,15 @@ pub struct NativeBackend {
     /// RoPE tables, [seq_len * head_dim/2] row-major.
     rope_cos: Vec<f32>,
     rope_sin: Vec<f32>,
-    /// Worker pool driving matmuls, attention heads and sparse kernels.
+    /// Worker pool driving matmuls, attention heads, sparse kernels and
+    /// the elementwise passes (Adam, rmsnorm, CE backward, embed scatter).
     pool: ThreadPool,
+    /// High-water of live gradient-buffer bytes across the run.
+    grad_peak: PeakTracker,
 }
 
 impl NativeBackend {
+    #[allow(clippy::too_many_arguments)]
     pub fn build(
         preset: ModelPreset,
         method: &str,
@@ -256,6 +285,7 @@ impl NativeBackend {
         lr: f32,
         total_steps: usize,
         threads: usize,
+        optim_bits: usize,
     ) -> Result<NativeBackend> {
         if !matches!(method, "full" | "lowrank" | "sltrain") {
             bail!("native backend supports full | lowrank | sltrain (got {method:?})");
@@ -289,10 +319,11 @@ impl NativeBackend {
             lr,
             total_steps: total_steps.max(1),
             scale,
+            optim_bits: optim::resolve_optim_bits(optim_bits)?,
             params: Vec::new(),
             param_names: Vec::new(),
-            adam_m: Vec::new(),
-            adam_v: Vec::new(),
+            optim_m: Vec::new(),
+            optim_v: Vec::new(),
             name_to_id: BTreeMap::new(),
             lins: Vec::new(),
             lin_paths: Vec::new(),
@@ -302,6 +333,7 @@ impl NativeBackend {
             rope_cos,
             rope_sin,
             pool: ThreadPool::new(resolve_threads(threads)),
+            grad_peak: PeakTracker::default(),
         })
     }
 
@@ -436,8 +468,10 @@ impl NativeBackend {
             self.lin_paths.push(path);
         }
 
-        self.adam_m = self.params.iter().map(|t| vec![0.0; t.numel()]).collect();
-        self.adam_v = self.params.iter().map(|t| vec![0.0; t.numel()]).collect();
+        let bits = self.optim_bits;
+        self.optim_m = self.params.iter().map(|t| Moments::zeros(bits, t.numel())).collect();
+        self.optim_v = self.params.iter().map(|t| Moments::zeros(bits, t.numel())).collect();
+        self.grad_peak.reset();
         let layers = (0..p.n_layers)
             .map(|l| {
                 let b = l * LINS_PER_LAYER;
@@ -466,9 +500,7 @@ impl NativeBackend {
             LinKind::Factored { b, a, sparse } => {
                 let xb = x.matmul_par(self.mat(b), &self.pool);
                 let mut y = xb.matmul_par(self.mat(a), &self.pool);
-                for v in &mut y.data {
-                    *v *= self.scale;
-                }
+                y.scale_mut(self.scale);
                 if let Some(sh) = sparse {
                     self.supports[sh.sup].spmm_add_par(x, self.vec1(sh.vals), &mut y, &self.pool);
                 }
@@ -492,7 +524,7 @@ impl NativeBackend {
         match self.lins[lin.0] {
             LinKind::Full { w } => {
                 let dw = xt.matmul_par(dy, &self.pool);
-                acc_grad(grads, w, &dw.data);
+                acc_grad_vec(grads, w, dw.data);
                 dy.matmul_transb_par(self.mat(w), &self.pool)
             }
             LinKind::Factored { b, a, sparse } => {
@@ -501,15 +533,18 @@ impl NativeBackend {
                 });
                 // eq. (2): the dense d_in × d_out gradient is never formed
                 let dy_at = dy.matmul_transb_par(self.mat(a), &self.pool); // [n, r]
-                let db = xt.matmul_par(&dy_at, &self.pool).scale(self.scale);
-                let da = xb.transpose().matmul_par(dy, &self.pool).scale(self.scale);
-                acc_grad(grads, b, &db.data);
-                acc_grad(grads, a, &da.data);
-                let mut dx = dy_at.matmul_transb_par(self.mat(b), &self.pool).scale(self.scale);
+                let mut db = xt.matmul_par(&dy_at, &self.pool);
+                db.scale_mut(self.scale);
+                let mut da = xb.transpose().matmul_par(dy, &self.pool);
+                da.scale_mut(self.scale);
+                acc_grad_vec(grads, b, db.data);
+                acc_grad_vec(grads, a, da.data);
+                let mut dx = dy_at.matmul_transb_par(self.mat(b), &self.pool);
+                dx.scale_mut(self.scale);
                 if let Some(sh) = sparse {
                     let sup = &self.supports[sh.sup];
                     let dvals = sup.scatter_grad_par(x, dy, &self.pool);
-                    acc_grad(grads, sh.vals, &dvals);
+                    acc_grad_vec(grads, sh.vals, dvals);
                     sup.spmm_t_add_par(dy, self.vec1(sh.vals), &mut dx, &self.pool);
                 }
                 dx
@@ -549,7 +584,7 @@ impl NativeBackend {
         let mut xb_cache: Vec<Option<Matrix>> = vec![None; self.lins.len()];
         for lh in &h.layers {
             let g1 = self.vec1(lh.ln1_g);
-            let (xn1, xhat1, r1) = rmsnorm_fwd(&x, g1);
+            let (xn1, xhat1, r1) = rmsnorm_fwd(&x, g1, &self.pool);
 
             let (mut q, xb) = self.linear_fwd(lh.q, &xn1);
             xb_cache[lh.q.0] = xb;
@@ -613,7 +648,7 @@ impl NativeBackend {
             let x_mid = x.add(&o_out);
 
             let g2 = self.vec1(lh.ln2_g);
-            let (xn2, xhat2, r2) = rmsnorm_fwd(&x_mid, g2);
+            let (xn2, xhat2, r2) = rmsnorm_fwd(&x_mid, g2, &self.pool);
             let (g_pre, xb) = self.linear_fwd(lh.gate, &xn2);
             xb_cache[lh.gate.0] = xb;
             let (u, xb) = self.linear_fwd(lh.up, &xn2);
@@ -647,7 +682,7 @@ impl NativeBackend {
         }
 
         let gf = self.vec1(h.lnf_g);
-        let (xnf, xhatf, rf) = rmsnorm_fwd(&x, gf);
+        let (xnf, xhatf, rf) = rmsnorm_fwd(&x, gf, &self.pool);
         let logits = xnf.matmul_par(self.mat(h.head), &self.pool);
         let cache =
             FwdCache { tokens: tokens.to_vec(), bsz, t, blocks, xb: xb_cache, xhatf, rf, xnf };
@@ -674,24 +709,43 @@ impl NativeBackend {
 
     // ---------------------------------------------------- backward
 
-    fn backward(&self, cache: &FwdCache, dlogits: &Matrix) -> Result<Grads> {
+    /// The backward walk. With `fuse: Some(hyper)` this is the
+    /// *streaming per-layer fused backward+update*: as soon as a
+    /// parameter's gradient is finalized, its Adam update runs (on the
+    /// worker pool) and the buffer is released — peak gradient memory
+    /// is O(largest tensor), and because no parameter is read again
+    /// after its gradient completes, the result is bit-identical to the
+    /// two-phase loop at `--optim-bits 32`. With `fuse: None` the walk
+    /// collects every gradient into the returned `Grads` (gradcheck /
+    /// two-phase reference).
+    fn backward_impl(
+        &mut self,
+        cache: &FwdCache,
+        dlogits: &Matrix,
+        fuse: Option<&AdamHyper>,
+    ) -> Result<Grads> {
         let h = self.handles()?.clone();
-        let p = &self.preset;
-        let (d, nh, hd) = (p.d_model, p.n_heads, self.head_dim());
+        let (d, nh, hd) = (self.preset.d_model, self.preset.n_heads, self.head_dim());
         let (bsz, t) = (cache.bsz, cache.t);
         let attn_scale = 1.0f32 / (hd as f32).sqrt();
         let half = hd / 2;
         let mut grads: Grads = vec![Vec::new(); self.params.len()];
 
-        // head + final norm
-        let head = self.mat(h.head);
+        // head + final norm; dL/dxnf must be formed BEFORE the fused
+        // head update mutates the head weights
         let dhead = cache.xnf.transpose().matmul_par(dlogits, &self.pool);
-        acc_grad(&mut grads, h.head, &dhead.data);
-        let dxnf = dlogits.matmul_transb_par(head, &self.pool);
-        let gf = self.vec1(h.lnf_g);
-        let mut dgf = vec![0.0f32; d];
-        let mut dx = rmsnorm_bwd(&dxnf, &cache.xhatf, &cache.rf, gf, &mut dgf);
-        acc_grad(&mut grads, h.lnf_g, &dgf);
+        acc_grad_vec(&mut grads, h.head, dhead.data);
+        let dxnf = dlogits.matmul_transb_par(self.mat(h.head), &self.pool);
+        self.finish_params(&mut grads, &[h.head], fuse)?;
+        let mut dx;
+        {
+            let gf = self.vec1(h.lnf_g);
+            let mut dgf = vec![0.0f32; d];
+            dx = rmsnorm_bwd(&dxnf, &cache.xhatf, &cache.rf, gf, &mut dgf, &self.pool);
+            acc_grad_vec(&mut grads, h.lnf_g, dgf);
+        }
+        self.finish_params(&mut grads, &[h.lnf_g], fuse)?;
+        drop(dxnf);
 
         for (l, blk) in cache.blocks.iter().enumerate().rev() {
             let lh = h.layers[l];
@@ -705,6 +759,8 @@ impl NativeBackend {
                 &dx,
                 &mut grads,
             );
+            drop(h_t);
+            self.finish_lin(&mut grads, lh.down, fuse)?;
             let mut dg_pre = Matrix::zeros(dh.rows, dh.cols);
             let mut du = Matrix::zeros(dh.rows, dh.cols);
             for i in 0..dh.data.len() {
@@ -713,6 +769,7 @@ impl NativeBackend {
                 du.data[i] = dh.data[i] * g * s;
                 dg_pre.data[i] = dh.data[i] * blk.u.data[i] * s * (1.0 + g * (1.0 - s));
             }
+            drop(dh);
             let xn2_t = blk.xn2.transpose();
             let mut dxn2 = self.linear_bwd(
                 lh.gate,
@@ -722,6 +779,8 @@ impl NativeBackend {
                 &dg_pre,
                 &mut grads,
             );
+            self.finish_lin(&mut grads, lh.gate, fuse)?;
+            drop(dg_pre);
             add_into(
                 &mut dxn2,
                 &self.linear_bwd(
@@ -733,10 +792,17 @@ impl NativeBackend {
                     &mut grads,
                 ),
             );
-            let g2 = self.vec1(lh.ln2_g);
-            let mut dg2 = vec![0.0f32; d];
-            let dnorm2 = rmsnorm_bwd(&dxn2, &blk.xhat2, &blk.r2, g2, &mut dg2);
-            acc_grad(&mut grads, lh.ln2_g, &dg2);
+            self.finish_lin(&mut grads, lh.up, fuse)?;
+            drop(du);
+            drop(xn2_t);
+            let dnorm2;
+            {
+                let g2 = self.vec1(lh.ln2_g);
+                let mut dg2 = vec![0.0f32; d];
+                dnorm2 = rmsnorm_bwd(&dxn2, &blk.xhat2, &blk.r2, g2, &mut dg2, &self.pool);
+                acc_grad_vec(&mut grads, lh.ln2_g, dg2);
+            }
+            self.finish_params(&mut grads, &[lh.ln2_g], fuse)?;
             let dx_mid = dx.add(&dnorm2);
 
             // ---- attention branch: x_mid = x_in + o(attn)
@@ -749,6 +815,8 @@ impl NativeBackend {
                 &dx_mid,
                 &mut grads,
             );
+            drop(cat_t);
+            self.finish_lin(&mut grads, lh.o, fuse)?;
             // per-(batch, head) softmax/rope backward, one task each
             let head_grads = self.pool.map(bsz * nh, |ai| {
                 let (bi, hi) = (ai / nh, ai % nh);
@@ -793,6 +861,7 @@ impl NativeBackend {
                 &dq,
                 &mut grads,
             );
+            self.finish_lin(&mut grads, lh.q, fuse)?;
             add_into(
                 &mut dxn1,
                 &self.linear_bwd(
@@ -804,6 +873,7 @@ impl NativeBackend {
                     &mut grads,
                 ),
             );
+            self.finish_lin(&mut grads, lh.k, fuse)?;
             add_into(
                 &mut dxn1,
                 &self.linear_bwd(
@@ -815,44 +885,115 @@ impl NativeBackend {
                     &mut grads,
                 ),
             );
-            let g1 = self.vec1(lh.ln1_g);
-            let mut dg1 = vec![0.0f32; d];
-            let dnorm1 = rmsnorm_bwd(&dxn1, &blk.xhat1, &blk.r1, g1, &mut dg1);
-            acc_grad(&mut grads, lh.ln1_g, &dg1);
+            self.finish_lin(&mut grads, lh.v, fuse)?;
+            let dnorm1;
+            {
+                let g1 = self.vec1(lh.ln1_g);
+                let mut dg1 = vec![0.0f32; d];
+                dnorm1 = rmsnorm_bwd(&dxn1, &blk.xhat1, &blk.r1, g1, &mut dg1, &self.pool);
+                acc_grad_vec(&mut grads, lh.ln1_g, dg1);
+            }
+            self.finish_params(&mut grads, &[lh.ln1_g], fuse)?;
             dx = dx_mid.add(&dnorm1);
         }
 
-        // embedding scatter (serial: token collisions share rows)
+        // Embedding scatter: vocab rows sharded over the pool. Every
+        // task scans the token stream in ascending order and
+        // accumulates only the rows of its own shard, so each embed row
+        // sees the exact serial accumulation order (token collisions
+        // share rows, but never shards) — bit-identical at every thread
+        // count. The shards ARE the per-shard accumulators: they
+        // partition the output in fixed shard order, so the "merge" is
+        // the identity.
         let embed_numel = self.params[h.embed.0].numel();
-        let ge = &mut grads[h.embed.0];
-        if ge.is_empty() {
-            ge.resize(embed_numel, 0.0);
+        {
+            let ge = &mut grads[h.embed.0];
+            if ge.is_empty() {
+                ge.resize(embed_numel, 0.0);
+            }
+            let vocab = embed_numel / d;
+            let shard_rows = parallel::chunk_len_for(&self.pool, vocab);
+            parallel::par_chunks_mut(&self.pool, ge, shard_rows * d, |ci, gchunk| {
+                let v0 = ci * shard_rows;
+                let v1 = v0 + gchunk.len() / d;
+                for (i, &tok) in cache.tokens.iter().enumerate() {
+                    let tok = tok as usize;
+                    if tok < v0 || tok >= v1 {
+                        continue;
+                    }
+                    let dst = &mut gchunk[(tok - v0) * d..(tok - v0 + 1) * d];
+                    let src = &dx.data[i * d..(i + 1) * d];
+                    for j in 0..d {
+                        dst[j] += src[j];
+                    }
+                }
+            });
         }
-        for (i, &tok) in cache.tokens.iter().enumerate() {
-            let tok = tok as usize;
-            for j in 0..d {
-                ge[tok * d + j] += dx.data[i * d + j];
+        self.finish_params(&mut grads, &[h.embed], fuse)?;
+        Ok(grads)
+    }
+
+    /// Record the live-gradient high-water, then (fused mode) apply the
+    /// Adam update for each finalized parameter and free its buffer.
+    fn finish_params(
+        &mut self,
+        grads: &mut Grads,
+        ids: &[ParamId],
+        fuse: Option<&AdamHyper>,
+    ) -> Result<()> {
+        let live: u64 = grads.iter().map(|g| (g.len() * 4) as u64).sum();
+        self.grad_peak.note(live);
+        if let Some(hy) = fuse {
+            for &id in ids {
+                let g = std::mem::take(&mut grads[id.0]);
+                if g.is_empty() {
+                    bail!("{}: fused update before gradient", self.param_names[id.0]);
+                }
+                self.apply_param_update(id.0, &g, hy)?;
             }
         }
-        Ok(grads)
+        Ok(())
+    }
+
+    /// `finish_params` over every parameter of one linear.
+    fn finish_lin(
+        &mut self,
+        grads: &mut Grads,
+        lin: LinId,
+        fuse: Option<&AdamHyper>,
+    ) -> Result<()> {
+        match self.lins[lin.0] {
+            LinKind::Full { w } => self.finish_params(grads, &[w], fuse),
+            LinKind::Factored { b, a, sparse: None } => self.finish_params(grads, &[b, a], fuse),
+            LinKind::Factored { b, a, sparse: Some(sh) } => {
+                self.finish_params(grads, &[b, a, sh.vals], fuse)
+            }
+        }
     }
 
     // ------------------------------------------------- loss + adam
 
-    /// Train-loss forward + backward (no update). The split from
-    /// `adam_apply` keeps gradients observable for verification.
-    fn loss_and_grads(&self, tokens: &[i32]) -> Result<(f64, Grads)> {
+    /// One full forward + backward over a train batch: the shared body
+    /// of the fused `train_step` and the collect-mode paths, so the
+    /// tokenization/forward contract cannot drift between them.
+    fn step_impl(&mut self, tokens: &[i32], fuse: Option<&AdamHyper>) -> Result<(f64, Grads)> {
         let (inputs, targets, t_in) = split_next_token(tokens, self.batch, self.preset.seq_len)?;
         let (logits, cache) = self.forward_cached(&inputs, self.batch, t_in)?;
-        let (loss, dlogits) = ce_loss_grad(&logits, &targets)?;
-        let grads = self.backward(&cache, &dlogits)?;
+        let (loss, dlogits) = ce_loss_grad(&logits, &targets, &self.pool)?;
+        let grads = self.backward_impl(&cache, &dlogits, fuse)?;
         Ok((loss, grads))
+    }
+
+    /// Train-loss forward + backward (no update). The split from
+    /// `adam_apply` keeps gradients observable for verification.
+    fn loss_and_grads(&mut self, tokens: &[i32]) -> Result<(f64, Grads)> {
+        self.step_impl(tokens, None)
     }
 
     fn loss_only(&self, tokens: &[i32], bsz: usize) -> Result<f64> {
         let (inputs, targets, t_in) = split_next_token(tokens, bsz, self.preset.seq_len)?;
         let (logits, _) = self.forward_cached(&inputs, bsz, t_in)?;
-        ce_loss(&logits, &targets)
+        ce_loss(&logits, &targets, &self.pool)
     }
 
     /// Linear warmup then cosine decay to 10% (optim.lr_schedule).
@@ -871,32 +1012,77 @@ impl NativeBackend {
         self.lr * (0.1 + 0.45 * (1.0 + (std::f32::consts::PI * prog).cos()))
     }
 
-    fn adam_apply(&mut self, step: i32, grads: &Grads) -> Result<()> {
-        if self.adam_m.len() != self.params.len() || self.adam_v.len() != self.params.len() {
+    /// Per-step Adam constants, computed once so the streaming fused
+    /// updates and the two-phase reference use identical values.
+    fn adam_hyper(&self, step: i32) -> AdamHyper {
+        let t = step.max(0) as f32 + 1.0;
+        AdamHyper {
+            lr: self.lr_at(step),
+            beta1: ADAM_B1,
+            beta2: ADAM_B2,
+            eps: ADAM_EPS,
+            bc1: 1.0 - ADAM_B1.powf(t),
+            bc2: 1.0 - ADAM_B2.powf(t),
+        }
+    }
+
+    fn optim_ready(&self) -> Result<()> {
+        if self.optim_m.len() != self.params.len() || self.optim_v.len() != self.params.len() {
             bail!("optimizer state dropped or uninitialized");
         }
-        let lr_t = self.lr_at(step);
-        let t = step.max(0) as f32 + 1.0;
-        let bc1 = 1.0 - ADAM_B1.powf(t);
-        let bc2 = 1.0 - ADAM_B2.powf(t);
-        for (idx, g) in grads.iter().enumerate() {
-            if g.is_empty() {
+        Ok(())
+    }
+
+    /// One parameter's Adam update (f32 or quantized moments, on the
+    /// pool). Shared by the streaming fused path and `adam_apply`, so
+    /// the two are bitwise-equal by construction.
+    fn apply_param_update(&mut self, idx: usize, g: &[f32], hy: &AdamHyper) -> Result<()> {
+        if g.len() != self.params[idx].numel() {
+            bail!(
+                "{}: grad numel {} != param {}",
+                self.param_names[idx],
+                g.len(),
+                self.params[idx].numel()
+            );
+        }
+        optim::adam_update(
+            &self.pool,
+            hy,
+            self.params[idx].data_mut(),
+            g,
+            &mut self.optim_m[idx],
+            &mut self.optim_v[idx],
+        );
+        Ok(())
+    }
+
+    /// Reference two-phase apply: one pass over fully-accumulated
+    /// `Grads` in ParamId order. Adam is elementwise, so this lands on
+    /// exactly the parameters the streaming fused walk produces — the
+    /// bitwise contract `train_step_two_phase` is tested against.
+    fn adam_apply(&mut self, step: i32, grads: &Grads) -> Result<()> {
+        self.optim_ready()?;
+        let hy = self.adam_hyper(step);
+        for idx in 0..grads.len() {
+            if grads[idx].is_empty() {
                 continue;
             }
-            let p = self.params[idx].data_mut();
-            let m = &mut self.adam_m[idx];
-            let v = &mut self.adam_v[idx];
-            if g.len() != p.len() {
-                bail!("{}: grad numel {} != param {}", self.param_names[idx], g.len(), p.len());
-            }
-            for i in 0..p.len() {
-                m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
-                v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
-                let upd = (m[i] / bc1) / ((v[i] / bc2).sqrt() + ADAM_EPS);
-                p[i] -= lr_t * upd;
-            }
+            self.apply_param_update(idx, &grads[idx], &hy)?;
         }
         Ok(())
+    }
+
+    /// The pre-refactor step loop: full backward into a `Grads`
+    /// accumulator, then one `adam_apply` pass. Kept public as the
+    /// bitwise reference for the fused-vs-two-phase regression tests
+    /// (`train_step` streams instead; at `--optim-bits 32` both produce
+    /// identical losses and parameters).
+    pub fn train_step_two_phase(&mut self, step: i32, tokens: &[i32]) -> Result<f32> {
+        self.handles()?;
+        self.optim_ready()?;
+        let (loss, grads) = self.loss_and_grads(tokens)?;
+        self.adam_apply(step, &grads)?;
+        Ok(loss as f32)
     }
 }
 
@@ -919,6 +1105,13 @@ impl Backend for NativeBackend {
         self.batch
     }
 
+    fn optimizer(&self) -> &str {
+        match self.optim_bits {
+            OptimBits::F32 => "adam",
+            OptimBits::Q8 => "adam8bit",
+        }
+    }
+
     fn n_params(&self) -> usize {
         if self.params.is_empty() {
             // not yet initialized: the config formula (verified equal to
@@ -933,10 +1126,14 @@ impl Backend for NativeBackend {
         Ok(())
     }
 
+    /// One optimizer step via the streaming per-layer fused
+    /// backward+update (see `backward_impl`); bit-identical to
+    /// `train_step_two_phase` at `--optim-bits 32`.
     fn train_step(&mut self, step: i32, tokens: &[i32]) -> Result<f32> {
         self.handles()?;
-        let (loss, grads) = self.loss_and_grads(tokens)?;
-        self.adam_apply(step, &grads)?;
+        self.optim_ready()?;
+        let hy = self.adam_hyper(step);
+        let (loss, _grads) = self.step_impl(tokens, Some(&hy))?;
         Ok(loss as f32)
     }
 
@@ -956,10 +1153,32 @@ impl Backend for NativeBackend {
         Ok(logits.data)
     }
 
+    /// Drop ALL optimizer state — f32 moments and, under
+    /// `--optim-bits 8`, the quantized code buffers *and* their
+    /// per-block scales (a stale quantized moment surviving a
+    /// ReLoRA-style merge would silently warp the first post-merge
+    /// updates; the unified `Moments` storage makes the drop total).
     fn drop_optimizer_state(&mut self) -> Result<()> {
-        self.adam_m.clear();
-        self.adam_v.clear();
+        self.optim_m.clear();
+        self.optim_v.clear();
         Ok(())
+    }
+
+    fn mem_report(&self) -> Option<MemReport> {
+        let param_bytes: u64 = self.params.iter().map(|t| (t.numel() * 4) as u64).sum();
+        let optim_bytes: u64 =
+            self.optim_m.iter().chain(&self.optim_v).map(|m| m.bytes()).sum();
+        let support_bytes: u64 = self.supports.iter().map(|s| s.bytes()).sum();
+        Some(MemReport {
+            param_bytes,
+            optim_bytes,
+            support_bytes,
+            grad_peak_bytes: self.grad_peak.peak_bytes(),
+            // every parameter is trainable: a two-phase loop holds one
+            // f32 gradient per parameter at its peak
+            grad_all_bytes: param_bytes,
+            optim_bits: self.optim_bits.bits() as u32,
+        })
     }
 
     fn state_tensors(&self) -> Result<Vec<StateTensor>> {
@@ -977,6 +1196,36 @@ impl Backend for NativeBackend {
             let idx: Vec<i32> = sup.idx.iter().map(|&i| i as i32).collect();
             out.push(StateTensor::i32(&format!("{path}.idx"), vec![sup.nnz()], &idx));
         }
+        // Optimizer moments (resume + the quantized-state round-trip):
+        // f32 moments as `optim.{m,v}.<param>`; quantized moments as raw
+        // I8 codes `optim.{m,v}.q8.<param>` plus f32 per-block scales
+        // `optim.{m,v}.scale.<param>` — all bit-exact payloads. Dropped
+        // state (Table-5 inference) is simply absent.
+        if self.optim_m.len() == self.params.len() && self.optim_v.len() == self.params.len() {
+            for (name, &id) in &self.name_to_id {
+                for (tag, mom) in [("m", &self.optim_m[id]), ("v", &self.optim_v[id])] {
+                    match mom {
+                        Moments::F32(data) => out.push(StateTensor::f32(
+                            &format!("optim.{tag}.{name}"),
+                            vec![data.len()],
+                            data,
+                        )),
+                        Moments::Q8 { codes, scales } => {
+                            out.push(StateTensor::i8(
+                                &format!("optim.{tag}.q8.{name}"),
+                                vec![codes.len()],
+                                codes,
+                            ));
+                            out.push(StateTensor::f32(
+                                &format!("optim.{tag}.scale.{name}"),
+                                vec![scales.len()],
+                                scales,
+                            ));
+                        }
+                    }
+                }
+            }
+        }
         Ok(out)
     }
 
@@ -985,9 +1234,133 @@ impl Backend for NativeBackend {
         // Stage and validate everything BEFORE mutating, so a mismatched
         // or corrupt checkpoint leaves the backend untouched (and support
         // indices never reach SparseSupport::new's panicking asserts).
+        enum MomentPart {
+            Full(Vec<f32>),
+            Codes(Vec<i8>),
+            Scales(Vec<f32>),
+        }
         let mut staged_supports: Vec<(usize, SparseSupport)> = Vec::new();
         let mut staged_params: Vec<(usize, Vec<f32>)> = Vec::new();
+        // (param id, is_v, payload)
+        let mut staged_moments: Vec<(usize, bool, MomentPart)> = Vec::new();
+        // Pre-scan: a checkpoint written under the other --optim-bits
+        // setting is still good for weights/supports, so when ANY of its
+        // moment tensors disagrees with this backend's representation,
+        // the whole moment family is skipped (weights-only load, logged)
+        // instead of bricking every prior checkpoint on a precision
+        // switch. Within a compatible family, partial/mixed sets still
+        // error (the pairing and all-or-nothing checks below).
+        let mut has_moments = false;
+        let mut moments_compatible = true;
+        if self.optim_m.len() == self.params.len() {
+            for st in tensors {
+                let Some(rest) = st.name.strip_prefix("optim.") else { continue };
+                let rest = rest
+                    .strip_prefix("m.")
+                    .or_else(|| rest.strip_prefix("v."))
+                    .unwrap_or(rest);
+                has_moments = true;
+                let (pname, wants_q8) = if let Some(p) = rest.strip_prefix("q8.") {
+                    (p, true)
+                } else if let Some(p) = rest.strip_prefix("scale.") {
+                    (p, true)
+                } else {
+                    (rest, false)
+                };
+                if let Some(&id) = self.name_to_id.get(pname) {
+                    if self.optim_m[id].is_quantized() != wants_q8 {
+                        moments_compatible = false;
+                    }
+                }
+            }
+        }
+        let skip_moments = has_moments && !moments_compatible;
+        if skip_moments {
+            crate::info!(
+                "checkpoint optimizer moments use a different --optim-bits than this \
+                 backend ({}); restoring weights/supports only",
+                self.optim_bits.bits()
+            );
+        }
         for st in tensors {
+            if skip_moments && st.name.starts_with("optim.") {
+                continue;
+            }
+            if let Some(rest) = st.name.strip_prefix("optim.") {
+                let (is_v, rest) = if let Some(r) = rest.strip_prefix("m.") {
+                    (false, r)
+                } else if let Some(r) = rest.strip_prefix("v.") {
+                    (true, r)
+                } else {
+                    bail!("unknown optimizer tensor {:?}", st.name);
+                };
+                if self.optim_m.len() != self.params.len() {
+                    bail!(
+                        "{}: cannot restore optimizer moments into dropped state \
+                         (call init_state first)",
+                        st.name
+                    );
+                }
+                let lookup = |pname: &str| -> Result<usize> {
+                    self.name_to_id
+                        .get(pname)
+                        .copied()
+                        .ok_or_else(|| anyhow!("{}: unknown parameter for moment", st.name))
+                };
+                let current = |id: usize| if is_v { &self.optim_v[id] } else { &self.optim_m[id] };
+                let bits_mismatch = || {
+                    anyhow!(
+                        "{}: checkpoint moment precision does not match this backend's \
+                         --optim-bits {} (re-run with matching optimizer bits)",
+                        st.name,
+                        self.optim_bits.bits()
+                    )
+                };
+                if let Some(pname) = rest.strip_prefix("q8.") {
+                    let id = lookup(pname)?;
+                    let codes = st.to_i8()?;
+                    match current(id) {
+                        Moments::Q8 { codes: cur, .. } if cur.len() == codes.len() => {}
+                        Moments::Q8 { codes: cur, .. } => bail!(
+                            "{}: codes numel {} != expected {}",
+                            st.name,
+                            codes.len(),
+                            cur.len()
+                        ),
+                        Moments::F32(_) => return Err(bits_mismatch()),
+                    }
+                    staged_moments.push((id, is_v, MomentPart::Codes(codes)));
+                } else if let Some(pname) = rest.strip_prefix("scale.") {
+                    let id = lookup(pname)?;
+                    let scales = st.to_f32()?;
+                    match current(id) {
+                        Moments::Q8 { scales: cur, .. } if cur.len() == scales.len() => {}
+                        Moments::Q8 { scales: cur, .. } => bail!(
+                            "{}: scale count {} != expected {}",
+                            st.name,
+                            scales.len(),
+                            cur.len()
+                        ),
+                        Moments::F32(_) => return Err(bits_mismatch()),
+                    }
+                    staged_moments.push((id, is_v, MomentPart::Scales(scales)));
+                } else {
+                    let id = lookup(rest)?;
+                    let data = st.to_f32()?;
+                    match current(id) {
+                        Moments::F32(cur) if cur.len() == data.len() => {}
+                        Moments::F32(cur) => bail!(
+                            "{}: moment numel {} != expected {}",
+                            st.name,
+                            data.len(),
+                            cur.len()
+                        ),
+                        Moments::Q8 { .. } => return Err(bits_mismatch()),
+                    }
+                    staged_moments.push((id, is_v, MomentPart::Full(data)));
+                }
+                continue;
+            }
             if let Some(path) = st.name.strip_suffix(".idx") {
                 let si = self
                     .support_paths
@@ -1021,6 +1394,48 @@ impl Backend for NativeBackend {
                 staged_params.push((id, data));
             }
         }
+        // cross-check: quantized moment parts must arrive in pairs — new
+        // codes with stale scales (or vice versa) would silently corrupt
+        // the moment they decode to
+        for (id, is_v, part) in &staged_moments {
+            let want_other = |other: &MomentPart| match part {
+                MomentPart::Codes(_) => matches!(other, MomentPart::Scales(_)),
+                MomentPart::Scales(_) => matches!(other, MomentPart::Codes(_)),
+                MomentPart::Full(_) => true,
+            };
+            let paired = matches!(part, MomentPart::Full(_))
+                || staged_moments
+                    .iter()
+                    .any(|(oid, ov, op)| oid == id && ov == is_v && want_other(op));
+            if !paired {
+                bail!(
+                    "optim.{}.{}: quantized moment codes and per-block scales must \
+                     round-trip together (one half is missing from the checkpoint)",
+                    if *is_v { "v" } else { "m" },
+                    self.param_names[*id]
+                );
+            }
+        }
+        // cross-check: a moment restore must be all-or-nothing — a
+        // checkpoint carrying SOME moments but missing others (a
+        // truncated v set, a subset of parameters) would silently mix
+        // restored and stale Adam state and diverge from the saved run
+        if !staged_moments.is_empty() {
+            for id in 0..self.params.len() {
+                for is_v in [false, true] {
+                    let covered =
+                        staged_moments.iter().any(|(oid, ov, _)| *oid == id && *ov == is_v);
+                    if !covered {
+                        bail!(
+                            "optim.{}.{}: checkpoint restores optimizer moments but this \
+                             one is missing — moment restores must be complete",
+                            if is_v { "v" } else { "m" },
+                            self.param_names[id]
+                        );
+                    }
+                }
+            }
+        }
         // cross-check: each reloaded support must agree with the values
         // tensor that will accompany it (staged if present, current else)
         for (si, sup) in &staged_supports {
@@ -1047,6 +1462,15 @@ impl Backend for NativeBackend {
         for (id, data) in staged_params {
             self.params[id].data_mut().copy_from_slice(&data);
         }
+        for (id, is_v, part) in staged_moments {
+            let mom = if is_v { &mut self.optim_v[id] } else { &mut self.optim_m[id] };
+            match (mom, part) {
+                (Moments::F32(cur), MomentPart::Full(data)) => *cur = data,
+                (Moments::Q8 { codes, .. }, MomentPart::Codes(data)) => *codes = data,
+                (Moments::Q8 { scales, .. }, MomentPart::Scales(data)) => *scales = data,
+                _ => unreachable!("moment representation validated during staging"),
+            }
+        }
         Ok(())
     }
 }
@@ -1057,45 +1481,88 @@ fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
-/// Row-wise RMSNorm with gain: returns (x̂·g, x̂, 1/rms per row).
-fn rmsnorm_fwd(x: &Matrix, g: &[f32]) -> (Matrix, Matrix, Vec<f32>) {
+/// Row-wise RMSNorm with gain: returns (x̂·g, x̂, 1/rms per row). Rows
+/// are independent, partitioned over the pool; each row's mean-square
+/// reduction stays inside one task in ascending-j order, so results are
+/// bit-identical to the serial loop at every thread count.
+fn rmsnorm_fwd(x: &Matrix, g: &[f32], pool: &ThreadPool) -> (Matrix, Matrix, Vec<f32>) {
     let d = x.cols;
     assert_eq!(g.len(), d);
     let mut y = Matrix::zeros(x.rows, d);
     let mut xhat = Matrix::zeros(x.rows, d);
     let mut inv_rms = vec![0.0f32; x.rows];
-    for i in 0..x.rows {
-        let row = &x.data[i * d..(i + 1) * d];
-        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
-        let r = 1.0 / (ms + RMS_EPS).sqrt();
-        inv_rms[i] = r;
-        for j in 0..d {
-            let xh = row[j] * r;
-            xhat.data[i * d + j] = xh;
-            y.data[i * d + j] = xh * g[j];
+    let yp = SendPtr::new(y.data.as_mut_ptr());
+    let xp = SendPtr::new(xhat.data.as_mut_ptr());
+    let rp = SendPtr::new(inv_rms.as_mut_ptr());
+    par_index_ranges(pool, x.rows, 1, |rows| {
+        for i in rows {
+            let row = &x.data[i * d..(i + 1) * d];
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let r = 1.0 / (ms + RMS_EPS).sqrt();
+            // SAFETY: row i is written by exactly one task; the borrows
+            // outlive the pool run.
+            unsafe {
+                *rp.get().add(i) = r;
+                let yr = std::slice::from_raw_parts_mut(yp.get().add(i * d), d);
+                let xr = std::slice::from_raw_parts_mut(xp.get().add(i * d), d);
+                for j in 0..d {
+                    let xh = row[j] * r;
+                    xr[j] = xh;
+                    yr[j] = xh * g[j];
+                }
+            }
         }
-    }
+    });
     (y, xhat, inv_rms)
 }
 
 /// RMSNorm backward: dx = r·(dx̂ − x̂·mean(dx̂⊙x̂)), dg += Σ_rows dy⊙x̂.
-fn rmsnorm_bwd(dy: &Matrix, xhat: &Matrix, inv_rms: &[f32], g: &[f32], dg: &mut [f32]) -> Matrix {
+/// Two pool passes, both bit-identical to the serial loop at every
+/// thread count: dx rows are independent (each row's `dot` reduction
+/// stays inside one task, ascending j), and dg is partitioned by
+/// *columns* — every dg[j] accumulates over rows in ascending order,
+/// exactly the per-column order of the serial loop, with no reduction
+/// crossing a task boundary.
+fn rmsnorm_bwd(
+    dy: &Matrix,
+    xhat: &Matrix,
+    inv_rms: &[f32],
+    g: &[f32],
+    dg: &mut [f32],
+    pool: &ThreadPool,
+) -> Matrix {
     let d = dy.cols;
     let mut dx = Matrix::zeros(dy.rows, d);
-    for i in 0..dy.rows {
-        let dyr = &dy.data[i * d..(i + 1) * d];
-        let xhr = &xhat.data[i * d..(i + 1) * d];
-        let mut dot = 0.0f32;
-        for j in 0..d {
-            dg[j] += dyr[j] * xhr[j];
-            dot += dyr[j] * g[j] * xhr[j];
+    let dxp = SendPtr::new(dx.data.as_mut_ptr());
+    par_index_ranges(pool, dy.rows, 1, |rows| {
+        for i in rows {
+            let dyr = &dy.data[i * d..(i + 1) * d];
+            let xhr = &xhat.data[i * d..(i + 1) * d];
+            let mut dot = 0.0f32;
+            for j in 0..d {
+                dot += dyr[j] * g[j] * xhr[j];
+            }
+            dot /= d as f32;
+            let r = inv_rms[i];
+            // SAFETY: row i is written by exactly one task.
+            let dxr = unsafe { std::slice::from_raw_parts_mut(dxp.get().add(i * d), d) };
+            for j in 0..d {
+                dxr[j] = r * (dyr[j] * g[j] - xhr[j] * dot);
+            }
         }
-        dot /= d as f32;
-        let r = inv_rms[i];
-        for j in 0..d {
-            dx.data[i * d + j] = r * (dyr[j] * g[j] - xhr[j] * dot);
+    });
+    let chunk = parallel::chunk_len_for(pool, d);
+    parallel::par_chunks_mut(pool, dg, chunk, |ci, dgc| {
+        let j0 = ci * chunk;
+        for i in 0..dy.rows {
+            let dyr = &dy.data[i * d..(i + 1) * d];
+            let xhr = &xhat.data[i * d..(i + 1) * d];
+            for (jj, dgj) in dgc.iter_mut().enumerate() {
+                let j = j0 + jj;
+                *dgj += dyr[j] * xhr[j];
+            }
         }
-    }
+    });
     dx
 }
 
@@ -1153,49 +1620,88 @@ fn split_next_token(tokens: &[i32], bsz: usize, seq: usize) -> Result<(Vec<i32>,
     Ok((inputs, targets, t_in))
 }
 
-/// Mean next-token cross-entropy (f64 accumulation for stability).
-fn ce_loss(logits: &Matrix, targets: &[i32]) -> Result<f64> {
-    let (n, v) = (logits.rows, logits.cols);
+/// Targets must be one per logit row and inside the vocab — validated
+/// up front because the parallel CE passes cannot bail mid-task.
+fn validate_targets(targets: &[i32], n: usize, v: usize) -> Result<()> {
     if targets.len() != n {
         bail!("{n} logit rows but {} targets", targets.len());
     }
-    let mut total = 0.0f64;
-    for i in 0..n {
-        let row = &logits.data[i * v..(i + 1) * v];
-        let tgt = targets[i] as usize;
-        if tgt >= v {
-            bail!("target {tgt} out of vocab {v}");
+    for &t in targets {
+        if t as usize >= v {
+            bail!("target {t} out of vocab {v}");
         }
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let sum: f64 = row.iter().map(|&x| ((x - mx) as f64).exp()).sum();
-        total += mx as f64 + sum.ln() - row[tgt] as f64;
+    }
+    Ok(())
+}
+
+/// One row of the log-sum-exp cross-entropy: returns the row loss and,
+/// when `dlr` is given, writes dL/dlogits = (softmax − onehot)·inv_n
+/// into it. The single copy of the numerics keeps train loss
+/// (`ce_loss_grad`) and eval loss (`ce_loss`) bit-identical by
+/// construction.
+#[inline]
+fn ce_row(row: &[f32], tgt: usize, inv_n: f32, dlr: Option<&mut [f32]>) -> f64 {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let sum: f64 = row.iter().map(|&x| ((x - mx) as f64).exp()).sum();
+    if let Some(dlr) = dlr {
+        for j in 0..row.len() {
+            let p = (((row[j] - mx) as f64).exp() / sum) as f32;
+            dlr[j] = p * inv_n;
+        }
+        dlr[tgt] -= inv_n;
+    }
+    mx as f64 + sum.ln() - row[tgt] as f64
+}
+
+/// Mean next-token cross-entropy (f64 accumulation for stability).
+/// Row softmaxes run on the pool; the cross-row f64 sum is taken
+/// serially in ascending row order afterwards, so the result is
+/// bit-identical to the serial loop at every thread count.
+fn ce_loss(logits: &Matrix, targets: &[i32], pool: &ThreadPool) -> Result<f64> {
+    let (n, v) = (logits.rows, logits.cols);
+    validate_targets(targets, n, v)?;
+    let mut row_loss = vec![0.0f64; n];
+    let rp = SendPtr::new(row_loss.as_mut_ptr());
+    par_index_ranges(pool, n, 1, |rows| {
+        for i in rows {
+            let row = &logits.data[i * v..(i + 1) * v];
+            // SAFETY: slot i is written by exactly one task.
+            unsafe {
+                *rp.get().add(i) = ce_row(row, targets[i] as usize, 0.0, None);
+            }
+        }
+    });
+    let mut total = 0.0f64;
+    for l in &row_loss {
+        total += l;
     }
     Ok(total / n as f64)
 }
 
-/// CE loss plus dL/dlogits = (softmax − onehot)/n.
-fn ce_loss_grad(logits: &Matrix, targets: &[i32]) -> Result<(f64, Matrix)> {
+/// CE loss plus dL/dlogits = (softmax − onehot)/n. Rows on the pool,
+/// f64 loss summed serially in row order (bit-identical to the serial
+/// loop at every thread count).
+fn ce_loss_grad(logits: &Matrix, targets: &[i32], pool: &ThreadPool) -> Result<(f64, Matrix)> {
     let (n, v) = (logits.rows, logits.cols);
-    if targets.len() != n {
-        bail!("{n} logit rows but {} targets", targets.len());
-    }
+    validate_targets(targets, n, v)?;
     let mut dl = Matrix::zeros(n, v);
     let inv_n = 1.0f32 / n as f32;
+    let mut row_loss = vec![0.0f64; n];
+    let dlp = SendPtr::new(dl.data.as_mut_ptr());
+    let rp = SendPtr::new(row_loss.as_mut_ptr());
+    par_index_ranges(pool, n, 1, |rows| {
+        for i in rows {
+            let row = &logits.data[i * v..(i + 1) * v];
+            // SAFETY: row i and slot i are written by exactly one task.
+            unsafe {
+                let dlr = std::slice::from_raw_parts_mut(dlp.get().add(i * v), v);
+                *rp.get().add(i) = ce_row(row, targets[i] as usize, inv_n, Some(dlr));
+            }
+        }
+    });
     let mut total = 0.0f64;
-    for i in 0..n {
-        let row = &logits.data[i * v..(i + 1) * v];
-        let tgt = targets[i] as usize;
-        if tgt >= v {
-            bail!("target {tgt} out of vocab {v}");
-        }
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let sum: f64 = row.iter().map(|&x| ((x - mx) as f64).exp()).sum();
-        total += mx as f64 + sum.ln() - row[tgt] as f64;
-        for j in 0..v {
-            let p = (((row[j] - mx) as f64).exp() / sum) as f32;
-            dl.data[i * v + j] = p * inv_n;
-        }
-        dl.data[i * v + tgt] -= inv_n;
+    for l in &row_loss {
+        total += l;
     }
     Ok((total / n as f64, dl))
 }
@@ -1220,13 +1726,23 @@ mod tests {
     }
 
     fn micro_backend_threads(method: &str, seed: u32, threads: usize) -> NativeBackend {
-        let mut be = NativeBackend::build(micro_preset(), method, 2, 3e-3, 100, threads).unwrap();
+        // optim bits 0 = auto, so the CI SLTRAIN_OPTIM_BITS matrix flows
+        // through the whole suite
+        let mut be =
+            NativeBackend::build(micro_preset(), method, 2, 3e-3, 100, threads, 0).unwrap();
         be.init_state(seed).unwrap();
         be
     }
 
     fn micro_backend(method: &str, seed: u32) -> NativeBackend {
         micro_backend_threads(method, seed, 2)
+    }
+
+    fn tiny_backend(method: &str, seed: u32, threads: usize, bits: usize) -> NativeBackend {
+        let p = crate::config::preset("tiny").unwrap();
+        let mut be = NativeBackend::build(p, method, 2, 3e-3, 100, threads, bits).unwrap();
+        be.init_state(seed).unwrap();
+        be
     }
 
     fn random_tokens(be: &NativeBackend, seed: u64) -> Vec<i32> {
@@ -1375,7 +1891,239 @@ mod tests {
         assert!((be.lr_at(5) - be.lr).abs() / be.lr < 1e-3);
         assert!((be.lr_at(10_000) - 0.1 * be.lr).abs() < 1e-6);
         // at the aot.py-default horizon the warmup is exactly 100 steps
-        let long = NativeBackend::build(micro_preset(), "full", 2, 3e-3, 2000, 1).unwrap();
+        let long = NativeBackend::build(micro_preset(), "full", 2, 3e-3, 2000, 1, 0).unwrap();
         assert_eq!(long.warmup_steps(), 100.0);
+    }
+
+    /// The tentpole contract: the streaming per-layer fused
+    /// backward+update must match the two-phase "collect all grads,
+    /// then adam_apply" loop *bitwise* — losses and every parameter —
+    /// at every thread count, for every method, at --optim-bits 32.
+    #[test]
+    fn fused_updates_match_two_phase_bitwise() {
+        for method in ["full", "lowrank", "sltrain"] {
+            for threads in [1usize, 3] {
+                let mut fused =
+                    NativeBackend::build(micro_preset(), method, 2, 3e-3, 100, threads, 32)
+                        .unwrap();
+                fused.init_state(11).unwrap();
+                let mut twop =
+                    NativeBackend::build(micro_preset(), method, 2, 3e-3, 100, threads, 32)
+                        .unwrap();
+                twop.init_state(11).unwrap();
+                let tokens = random_tokens(&fused, 13);
+                for step in 0..4 {
+                    let lf = fused.train_step(step, &tokens).unwrap();
+                    let lt = twop.train_step_two_phase(step, &tokens).unwrap();
+                    assert_eq!(lf, lt, "{method} x{threads} step {step} loss");
+                }
+                for idx in 0..fused.params.len() {
+                    assert_eq!(
+                        fused.params[idx].data(),
+                        twop.params[idx].data(),
+                        "{method} x{threads}: {}",
+                        fused.param_names[idx]
+                    );
+                }
+            }
+        }
+    }
+
+    /// --optim-bits 8: small tensors are gated to f32 moments, big ones
+    /// quantize; training stays deterministic, thread-count-invariant,
+    /// and actually learns.
+    #[test]
+    fn q8_gates_small_tensors_and_trains_thread_invariantly() {
+        // micro: every tensor is below Q8_MIN_NUMEL -> all f32
+        let mut micro =
+            NativeBackend::build(micro_preset(), "sltrain", 2, 3e-3, 100, 1, 8).unwrap();
+        micro.init_state(0).unwrap();
+        assert!(micro.optim_m.iter().all(|m| !m.is_quantized()), "micro must gate to f32");
+        // tiny: embed/head/linears quantize, norm gains stay f32
+        let be = tiny_backend("sltrain", 3, 1, 8);
+        let embed_id = be.name_to_id["embed.w"];
+        let lnf_id = be.name_to_id["lnf.g"];
+        assert!(be.optim_m[embed_id].is_quantized(), "tiny embed moments must quantize");
+        assert!(!be.optim_m[lnf_id].is_quantized(), "norm gains must stay f32");
+
+        let mut runs = vec![];
+        for threads in [1usize, 3] {
+            let mut be = tiny_backend("sltrain", 3, threads, 8);
+            let tokens = random_tokens(&be, 21);
+            let mut losses = vec![];
+            for step in 0..30 {
+                losses.push(be.train_step(step, &tokens).unwrap());
+            }
+            runs.push(losses);
+        }
+        assert_eq!(runs[0], runs[1], "q8 losses must be bit-identical across thread counts");
+        let (first, last) = (runs[0][0] as f64, *runs[0].last().unwrap() as f64);
+        assert!(last < first - 0.3, "q8 must overfit one batch: {first} -> {last}");
+    }
+
+    /// mem_report: the streaming walk's gradient high-water sits well
+    /// under the two-phase footprint, and 8-bit moments cut optimizer
+    /// bytes >= 60% (the Fig-3 acceptance bar) on the tiny preset.
+    #[test]
+    fn mem_report_tracks_grad_peak_and_q8_shrink() {
+        let mut be32 = tiny_backend("sltrain", 1, 2, 32);
+        let tokens = random_tokens(&be32, 2);
+        be32.train_step(0, &tokens).unwrap();
+        let r32 = be32.mem_report().unwrap();
+        assert_eq!(r32.optim_bits, 32);
+        assert!(r32.grad_peak_bytes > 0);
+        assert!(
+            r32.grad_peak_bytes < r32.grad_all_bytes / 2,
+            "streaming peak {} should sit well under two-phase {}",
+            r32.grad_peak_bytes,
+            r32.grad_all_bytes
+        );
+        // the two-phase reference holds every gradient at once
+        let mut twop = tiny_backend("sltrain", 1, 2, 32);
+        twop.train_step_two_phase(0, &tokens).unwrap();
+        let rtp = twop.mem_report().unwrap();
+        assert_eq!(rtp.grad_peak_bytes, rtp.grad_all_bytes);
+        // 8-bit moments: >= 60% optimizer-state cut
+        let be8 = tiny_backend("sltrain", 1, 2, 8);
+        let r8 = be8.mem_report().unwrap();
+        assert_eq!(r8.optim_bits, 8);
+        assert!(
+            (r8.optim_bytes as f64) < r32.optim_bytes as f64 * 0.4,
+            "q8 optimizer bytes {} vs f32 {} (need >= 60% cut)",
+            r8.optim_bytes,
+            r32.optim_bytes
+        );
+    }
+
+    /// Quantized optimizer state round-trips bit-identically through
+    /// the interchange tensors, and a restored backend continues
+    /// training on the exact same trajectory.
+    #[test]
+    fn optimizer_state_roundtrips_bit_identical() {
+        for bits in [32usize, 8] {
+            let mut be = tiny_backend("sltrain", 9, 2, bits);
+            let tokens = random_tokens(&be, 3);
+            for step in 0..3 {
+                be.train_step(step, &tokens).unwrap();
+            }
+            let snap = be.state_tensors().unwrap();
+            if bits == 8 {
+                assert!(
+                    snap.iter().any(|t| t.name.starts_with("optim.m.q8.")),
+                    "q8 snapshot must carry I8 moment codes"
+                );
+                assert!(
+                    snap.iter().any(|t| t.name.starts_with("optim.v.scale.")),
+                    "q8 snapshot must carry per-block scales"
+                );
+            }
+            let mut be2 = tiny_backend("sltrain", 1234, 2, bits); // different init
+            be2.load_state_tensors(&snap).unwrap();
+            let snap2 = be2.state_tensors().unwrap();
+            assert_eq!(snap.len(), snap2.len(), "bits {bits}: tensor count");
+            for (a, b) in snap.iter().zip(&snap2) {
+                assert_eq!(a.name, b.name, "bits {bits}");
+                assert_eq!(a.dtype, b.dtype, "bits {bits}: {}", a.name);
+                assert_eq!(a.bytes, b.bytes, "bits {bits}: {} bytes drifted", a.name);
+            }
+            // resumed training must continue the exact trajectory
+            for step in 3..6 {
+                let l1 = be.train_step(step, &tokens).unwrap();
+                let l2 = be2.train_step(step, &tokens).unwrap();
+                assert_eq!(l1, l2, "bits {bits}: resumed step {step}");
+            }
+        }
+    }
+
+    /// Loading a checkpoint written under the other --optim-bits
+    /// setting degrades to a weights-only restore (moments skipped,
+    /// left at init) instead of bricking the checkpoint — switching
+    /// precision mid-project must not lose the weights.
+    #[test]
+    fn cross_precision_checkpoint_restores_weights_only() {
+        for (src_bits, dst_bits) in [(32usize, 8usize), (8, 32)] {
+            let mut src = tiny_backend("sltrain", 5, 1, src_bits);
+            let tokens = random_tokens(&src, 4);
+            src.train_step(0, &tokens).unwrap();
+            let snap = src.state_tensors().unwrap();
+            let want = src.eval_loss(&tokens).unwrap();
+            let mut dst = tiny_backend("sltrain", 99, 1, dst_bits); // different init
+            dst.load_state_tensors(&snap).unwrap();
+            let got = dst.eval_loss(&tokens).unwrap();
+            assert!(
+                (want - got).abs() < 1e-6,
+                "{src_bits}->{dst_bits}: weights not restored ({want} vs {got})"
+            );
+            // moments were skipped: they must still be at init (all zero)
+            for mom in dst.optim_m.iter().chain(&dst.optim_v) {
+                match mom {
+                    Moments::F32(d) => assert!(d.iter().all(|&x| x == 0.0)),
+                    Moments::Q8 { codes, scales } => {
+                        assert!(codes.iter().all(|&c| c == 0));
+                        assert!(scales.iter().all(|&s| s == 0.0));
+                    }
+                }
+            }
+            // and training continues cleanly from the restored weights
+            dst.train_step(1, &tokens).unwrap();
+        }
+    }
+
+    /// Quantized moment codes without their per-block scales (or vice
+    /// versa) must be rejected — pairing new codes with stale scales
+    /// would silently corrupt the decoded moments.
+    #[test]
+    fn unpaired_quantized_moments_are_rejected() {
+        let mut be = tiny_backend("sltrain", 5, 1, 8);
+        let tokens = random_tokens(&be, 4);
+        be.train_step(0, &tokens).unwrap();
+        let snap = be.state_tensors().unwrap();
+        for stripped in [".scale.", ".q8."] {
+            let partial: Vec<StateTensor> = snap
+                .iter()
+                .filter(|t| !(t.name.starts_with("optim.") && t.name.contains(stripped)))
+                .cloned()
+                .collect();
+            assert!(partial.len() < snap.len(), "filter must drop something");
+            let mut be2 = tiny_backend("sltrain", 5, 1, 8);
+            let err = be2
+                .load_state_tensors(&partial)
+                .err()
+                .unwrap_or_else(|| panic!("load without {stripped} tensors must fail"));
+            assert!(
+                format!("{err}").contains("round-trip together"),
+                "unhelpful error: {err}"
+            );
+        }
+        // and a checkpoint missing one whole moment family (all of v)
+        // must be rejected too — restored m + stale v would silently
+        // diverge from the saved trajectory
+        let no_v: Vec<StateTensor> =
+            snap.iter().filter(|t| !t.name.starts_with("optim.v.")).cloned().collect();
+        let mut be3 = tiny_backend("sltrain", 5, 1, 8);
+        let err = be3
+            .load_state_tensors(&no_v)
+            .err()
+            .expect("load without the v moments must fail");
+        assert!(format!("{err}").contains("complete"), "unhelpful error: {err}");
+    }
+
+    /// drop_optimizer_state must drop quantized moments and their
+    /// per-block scales too (the ReLoRA-merge staleness fix), after
+    /// which training fails cleanly and snapshots carry no moments.
+    #[test]
+    fn drop_optimizer_state_drops_quantized_buffers() {
+        let mut be = tiny_backend("sltrain", 2, 1, 8);
+        let tokens = random_tokens(&be, 6);
+        be.train_step(0, &tokens).unwrap();
+        assert!(be.mem_report().unwrap().optim_bytes > 0);
+        be.drop_optimizer_state().unwrap();
+        assert_eq!(be.mem_report().unwrap().optim_bytes, 0, "all moment buffers freed");
+        let snap = be.state_tensors().unwrap();
+        assert!(
+            snap.iter().all(|t| !t.name.starts_with("optim.")),
+            "dropped state must not leak into snapshots"
+        );
+        assert!(be.train_step(1, &tokens).is_err(), "stepping without moments must fail");
     }
 }

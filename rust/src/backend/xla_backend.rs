@@ -154,6 +154,13 @@ impl Backend for XlaBackend {
             .collect();
         let state = self.state.as_mut().ok_or_else(|| anyhow!("init_state not called"))?;
         for t in tensors {
+            if t.name.starts_with("optim.") {
+                // native-backend optimizer moments (f32 or quantized
+                // codes+scales): the artifact path owns its own opt_state
+                // layout, so cross-backend loads carry weights/supports
+                // only and the moments are skipped, not an error
+                continue;
+            }
             if !known.contains(t.name.as_str()) {
                 bail!("{}: not a tensor of this artifact", t.name);
             }

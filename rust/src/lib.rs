@@ -26,6 +26,7 @@ pub mod coordinator;
 pub mod data;
 pub mod linalg;
 pub mod mem;
+pub mod optim;
 pub mod runtime;
 pub mod util;
 

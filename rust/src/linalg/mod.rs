@@ -119,6 +119,14 @@ impl Matrix {
         }
     }
 
+    /// `scale` without the copy, for hot-loop callers that own the
+    /// matrix (same elementwise multiply, so bit-identical results).
+    pub fn scale_mut(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
     pub fn frob_norm(&self) -> f32 {
         self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
     }

@@ -270,12 +270,21 @@ fn worker_loop(shared: &Shared) {
 
 /// A raw pointer wrapper that lets pool tasks write disjoint regions of
 /// one buffer. The *user* guarantees disjointness; the helpers below
-/// encapsulate the common safe patterns.
-struct SendPtr<T>(*mut T);
+/// encapsulate the common safe patterns. Public so the optimizer and
+/// backend elementwise passes can partition several parallel buffers by
+/// one shared index range (`par_index_ranges`).
+pub struct SendPtr<T>(*mut T);
 unsafe impl<T: Send> Send for SendPtr<T> {}
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 impl<T> SendPtr<T> {
-    fn get(&self) -> *mut T {
+    /// Wrap a base pointer. Callers must guarantee that concurrent
+    /// tasks dereference disjoint offsets and that the pointee outlives
+    /// the pool run.
+    pub fn new(ptr: *mut T) -> SendPtr<T> {
+        SendPtr(ptr)
+    }
+
+    pub fn get(&self) -> *mut T {
         self.0
     }
 }
@@ -310,6 +319,33 @@ pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
 /// length so that at most `threads` tasks are created.
 pub fn chunk_len_for(pool: &ThreadPool, n: usize) -> usize {
     n.div_ceil(pool.threads().max(1)).max(1)
+}
+
+/// Partition `0..n` into contiguous index ranges (one per pool thread,
+/// the last possibly shorter) and run `f(range)` over the pool. Every
+/// range boundary is a multiple of `granule`, so units of work spanning
+/// `granule` consecutive indices (rows of a matrix, 8-bit quantization
+/// blocks) are never split across tasks. All callers partition
+/// element-wise or block-wise *independent* work, so which thread runs
+/// which range cannot change a bit of the result — the determinism
+/// contract holds at every thread count.
+pub fn par_index_ranges<F: Fn(std::ops::Range<usize>) + Sync>(
+    pool: &ThreadPool,
+    n: usize,
+    granule: usize,
+    f: F,
+) {
+    if n == 0 {
+        return;
+    }
+    let granule = granule.max(1);
+    let per = n.div_ceil(pool.threads().max(1));
+    let chunk = per.div_ceil(granule) * granule;
+    let tasks = n.div_ceil(chunk);
+    pool.run(tasks, |t| {
+        let start = t * chunk;
+        f(start..(start + chunk).min(n));
+    });
 }
 
 #[cfg(test)]
@@ -401,5 +437,25 @@ mod tests {
     fn resolve_threads_clamps_and_reads_env() {
         assert_eq!(resolve_threads(3), 3);
         assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn par_index_ranges_covers_all_indices_with_aligned_boundaries() {
+        for threads in [1, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for (n, granule) in [(1usize, 4usize), (255, 4), (256, 4), (1000, 7), (13, 256)] {
+                let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                par_index_ranges(&pool, n, granule, |r| {
+                    assert!(r.start % granule == 0, "start {} not {granule}-aligned", r.start);
+                    assert!(r.end == n || r.end % granule == 0, "end {} unaligned", r.end);
+                    for i in r {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "n={n} g={granule} index {i}");
+                }
+            }
+        }
     }
 }

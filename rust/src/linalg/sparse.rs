@@ -69,6 +69,15 @@ impl SparseSupport {
         self.idx.len()
     }
 
+    /// Bytes actually held by the fixed support: the flat u32 indices
+    /// plus the derived CSR arrays (cols + row pointer). Counted by the
+    /// backend's `mem_report` — supports are training state too.
+    pub fn bytes(&self) -> u64 {
+        (self.idx.len() * 4
+            + self.cols.len() * 4
+            + self.row_ptr.len() * std::mem::size_of::<usize>()) as u64
+    }
+
     /// Scatter-add the values into a dense [d_in, d_out] matrix (the ⊕).
     pub fn densify_into(&self, w: &mut Matrix, vals: &[f32]) {
         assert_eq!((w.rows, w.cols), (self.d_in, self.d_out));

@@ -94,6 +94,12 @@ fn backend_flags(c: Cli) -> Cli {
             "step-loop worker threads, native backend (0 = auto; losses are \
              bit-identical at every thread count)",
         )
+        .opt(
+            "optim-bits",
+            "0",
+            "Adam moment precision, native backend: 32 | 8 (block-wise \
+             quantized); 0 = auto (SLTRAIN_OPTIM_BITS env, else 32)",
+        )
 }
 
 fn backend_spec(a: &Args) -> Result<BackendSpec> {
@@ -117,6 +123,7 @@ fn backend_spec(a: &Args) -> Result<BackendSpec> {
         a.f64("lr"),
         a.usize("total-steps"),
         a.usize("threads"),
+        a.usize("optim-bits"),
     )
 }
 
@@ -167,6 +174,17 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         r.wall_secs,
         r.peak_rss_bytes as f64 / 1e6
     );
+    if let Some(m) = be.mem_report() {
+        println!(
+            "mem: params {:.1} MB | optim {:.1} MB ({}-bit moments) | grad peak {:.1} MB \
+             (two-phase loop would hold {:.1} MB)",
+            m.param_bytes as f64 / 1e6,
+            m.optim_bytes as f64 / 1e6,
+            m.optim_bits,
+            m.grad_peak_bytes as f64 / 1e6,
+            m.grad_all_bytes as f64 / 1e6
+        );
+    }
     Ok(())
 }
 
@@ -217,6 +235,10 @@ fn cmd_analyze(argv: &[String]) -> Result<()> {
     // group tensors by linear path
     let mut paths: BTreeMap<String, ()> = BTreeMap::new();
     for n in ck.names() {
+        if n.starts_with("optim.") {
+            // optimizer moments (resume payload), not analyzable weights
+            continue;
+        }
         if let Some(base) = n.strip_suffix(".B") {
             paths.insert(base.to_string(), ());
         }

@@ -8,6 +8,8 @@
 //! (GaLore 60M optimizer = 78.20M moments + 3.67M projection, SLTrain
 //! 60M = 32.78M base + 10M low-rank + 0.76M sparse, ...).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::config::ModelPreset;
 
 pub const BF16: f64 = 2.0;
@@ -46,6 +48,65 @@ impl MemEstimate {
 
     pub fn gb(bytes: f64) -> f64 {
         bytes / 1e9
+    }
+}
+
+/// *Measured* (not estimated) footprint of a live training engine, in
+/// bytes as actually allocated — f32 params, f32 or i8+scale optimizer
+/// moments, gradient buffers. Reported by `Backend::mem_report`; the
+/// analytic [`estimate`] below stays the paper-convention (bf16) model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemReport {
+    pub param_bytes: u64,
+    /// Optimizer moments as held: 8·numel for f32 Adam, ~2.03·numel for
+    /// the block-wise 8-bit moments.
+    pub optim_bytes: u64,
+    /// Fixed sparse-support structures (sltrain): flat indices + CSR
+    /// arrays. Zero for dense methods.
+    pub support_bytes: u64,
+    /// High-water mark of live *parameter-gradient* buffers (the
+    /// buffers the per-layer-update literature targets; activation
+    /// gradients are transient per-op temporaries and are not counted).
+    /// The streaming per-layer fused backward releases each buffer
+    /// right after its Adam update, so this sits near the largest
+    /// single tensor instead of the full trainable size; compare
+    /// against `grad_all_bytes`, which uses the same scope.
+    pub grad_peak_bytes: u64,
+    /// What a two-phase loop holds at its peak: every parameter
+    /// gradient at once (same scope as `grad_peak_bytes`).
+    pub grad_all_bytes: u64,
+    /// Adam moment precision actually in use (32 or 8).
+    pub optim_bits: u32,
+}
+
+impl MemReport {
+    /// Params + optimizer + supports + gradient high-water: the
+    /// training-state bytes the engine cannot avoid holding.
+    pub fn total_bytes(&self) -> u64 {
+        self.param_bytes + self.optim_bytes + self.support_bytes + self.grad_peak_bytes
+    }
+}
+
+/// Monotonic peak-bytes tracker. Atomic so a backend can note the live
+/// total from `&self` contexts that must stay `Sync` (the worker pool
+/// borrows the backend shared during parallel regions).
+#[derive(Debug, Default)]
+pub struct PeakTracker {
+    peak: AtomicU64,
+}
+
+impl PeakTracker {
+    /// Record an observed live-byte total; keeps the maximum.
+    pub fn note(&self, live_bytes: u64) {
+        self.peak.fetch_max(live_bytes, Ordering::Relaxed);
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.peak.store(0, Ordering::Relaxed);
     }
 }
 
@@ -237,6 +298,32 @@ mod tests {
         assert!(q8.optim_bytes < base.optim_bytes * 0.6);
         assert!(q8pl.grad_bytes < base.grad_bytes * 0.2);
         assert!(q8pl.train_bytes() < base.train_bytes());
+    }
+
+    #[test]
+    fn peak_tracker_keeps_maximum_and_resets() {
+        let t = PeakTracker::default();
+        assert_eq!(t.peak_bytes(), 0);
+        t.note(100);
+        t.note(50);
+        assert_eq!(t.peak_bytes(), 100);
+        t.note(300);
+        assert_eq!(t.peak_bytes(), 300);
+        t.reset();
+        assert_eq!(t.peak_bytes(), 0);
+    }
+
+    #[test]
+    fn mem_report_totals_sum_components() {
+        let r = MemReport {
+            param_bytes: 10,
+            optim_bytes: 20,
+            support_bytes: 3,
+            grad_peak_bytes: 5,
+            grad_all_bytes: 40,
+            optim_bits: 8,
+        };
+        assert_eq!(r.total_bytes(), 38);
     }
 
     #[test]

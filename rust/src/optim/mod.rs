@@ -1,0 +1,394 @@
+//! Optimizer-state machinery for the native engine: Adam moment
+//! storage (f32 or block-wise 8-bit quantized) and the parallel
+//! elementwise update kernel.
+//!
+//! The paper's headline memory result combines SLTrain with the 8-bit
+//! Adam of Dettmers et al. [9]: both moments are held as 8-bit codes
+//! with one f32 absmax scale per [`quant::Q8_BLOCK`] elements
+//! (~1.016 bytes/element instead of 4) — a signed grid for `m`, the
+//! full unsigned 0..=255 grid for the nonnegative second moment. The
+//! second moment is stored in the **sqrt domain** — codes represent
+//! `sqrt(v)`, dequantized as `(code·scale)²` — because a linear absmax
+//! grid collapses small `v` entries to zero while their `m` blockmates
+//! stay nonzero, which turns `m/(√v+ε)` into a divergent update
+//! (reproduced in the PR's simulation; the sqrt grid matches `m`'s
+//! dynamic range and trains indistinguishably from f32).
+//!
+//! Determinism: the f32 path is element-independent and the q8 path is
+//! block-independent (dequant → update → requant never leaves a block),
+//! so the pool partition cannot change a bit of the result — updates
+//! are bit-identical across runs *and* thread counts.
+
+pub mod quant;
+
+use anyhow::{bail, Result};
+
+use crate::linalg::parallel::{par_index_ranges, SendPtr, ThreadPool};
+pub use quant::{dequant_unsigned, quantize_block, quantize_block_unsigned, Q8_BLOCK};
+
+/// Tensors smaller than this keep f32 moments even under
+/// `--optim-bits 8` (mirrors bitsandbytes' `min_8bit_size`): norm gains
+/// and other small tensors contribute nothing to the footprint but are
+/// the most quantization-sensitive.
+pub const Q8_MIN_NUMEL: usize = 1024;
+
+/// Below this many elements the update runs inline: pool dispatch costs
+/// more than the loop, and element/block independence makes serial and
+/// parallel results bit-identical anyway.
+const PAR_CUTOFF: usize = 8192;
+
+/// Adam moment precision of one backend (`--optim-bits {32,8}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimBits {
+    F32,
+    Q8,
+}
+
+impl OptimBits {
+    pub fn bits(self) -> usize {
+        match self {
+            OptimBits::F32 => 32,
+            OptimBits::Q8 => 8,
+        }
+    }
+}
+
+/// Resolve the `--optim-bits` flag: `0` means "auto" — the
+/// `SLTRAIN_OPTIM_BITS` env var if set, else 32. Only 32 and 8 are
+/// valid precisions; a set-but-garbled env var is an error, not a
+/// silent fall-back to f32 (a typo in a CI matrix leg must not turn
+/// the quantized run green without coverage).
+pub fn resolve_optim_bits(requested: usize) -> Result<OptimBits> {
+    let v = if requested == 0 {
+        match std::env::var("SLTRAIN_OPTIM_BITS") {
+            Ok(raw) => match raw.trim().parse::<usize>() {
+                Ok(n) => n,
+                Err(_) => bail!("SLTRAIN_OPTIM_BITS must be 32 or 8 (got {raw:?})"),
+            },
+            Err(_) => 32,
+        }
+    } else {
+        requested
+    };
+    match v {
+        32 => Ok(OptimBits::F32),
+        8 => Ok(OptimBits::Q8),
+        other => bail!("--optim-bits must be 32 or 8 (got {other})"),
+    }
+}
+
+/// One Adam moment tensor. The representation is chosen per parameter
+/// at init: f32 always, or block-wise 8-bit when the backend runs
+/// `--optim-bits 8` *and* the tensor clears [`Q8_MIN_NUMEL`].
+#[derive(Debug, Clone)]
+pub enum Moments {
+    F32(Vec<f32>),
+    /// 8-bit codes + one f32 absmax scale per [`Q8_BLOCK`] codes. For
+    /// the first moment the codes hold `m` on the signed grid; for the
+    /// second moment they hold `sqrt(v)` on the unsigned 0..=255 grid
+    /// (bit-pattern stored as i8; see module docs).
+    Q8 { codes: Vec<i8>, scales: Vec<f32> },
+}
+
+impl Moments {
+    pub fn zeros(bits: OptimBits, n: usize) -> Moments {
+        match bits {
+            OptimBits::Q8 if n >= Q8_MIN_NUMEL => Moments::Q8 {
+                codes: vec![0; n],
+                scales: vec![0.0; n.div_ceil(Q8_BLOCK)],
+            },
+            _ => Moments::F32(vec![0.0; n]),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            Moments::F32(v) => v.len(),
+            Moments::Q8 { codes, .. } => codes.len(),
+        }
+    }
+
+    /// Bytes actually held (i8 codes + f32 scales, or 4 bytes/element).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Moments::F32(v) => (v.len() * 4) as u64,
+            Moments::Q8 { codes, scales } => (codes.len() + scales.len() * 4) as u64,
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, Moments::Q8 { .. })
+    }
+}
+
+/// Per-step Adam hyperparameters, precomputed once so every per-layer
+/// fused update of the step uses identical constants.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamHyper {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Bias corrections `1 − βᵗ`.
+    pub bc1: f32,
+    pub bc2: f32,
+}
+
+/// One Adam update `p -= lr · m̂/(√v̂ + ε)` over a full parameter
+/// tensor, moments updated in place. Elementwise passes run on the
+/// pool; results are bit-identical to the serial loop at every thread
+/// count (see module docs).
+pub fn adam_update(
+    pool: &ThreadPool,
+    h: &AdamHyper,
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut Moments,
+    v: &mut Moments,
+) {
+    let n = p.len();
+    assert_eq!(g.len(), n, "adam grad/param numel mismatch");
+    match (m, v) {
+        (Moments::F32(m), Moments::F32(v)) => {
+            assert_eq!(m.len(), n, "adam m numel");
+            assert_eq!(v.len(), n, "adam v numel");
+            if n <= PAR_CUTOFF || pool.threads() == 1 {
+                adam_f32_chunk(h, p, g, m, v);
+                return;
+            }
+            let pp = SendPtr::new(p.as_mut_ptr());
+            let mp = SendPtr::new(m.as_mut_ptr());
+            let vp = SendPtr::new(v.as_mut_ptr());
+            par_index_ranges(pool, n, 1, |r| {
+                // SAFETY: ranges are disjoint across tasks; the borrows
+                // outlive the pool run (par_index_ranges blocks).
+                let (ps, ms, vs) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(pp.get().add(r.start), r.len()),
+                        std::slice::from_raw_parts_mut(mp.get().add(r.start), r.len()),
+                        std::slice::from_raw_parts_mut(vp.get().add(r.start), r.len()),
+                    )
+                };
+                adam_f32_chunk(h, ps, &g[r], ms, vs);
+            });
+        }
+        (
+            Moments::Q8 { codes: mc, scales: ms },
+            Moments::Q8 { codes: vc, scales: vs },
+        ) => {
+            assert_eq!(mc.len(), n, "adam m codes numel");
+            assert_eq!(vc.len(), n, "adam v codes numel");
+            assert_eq!(ms.len(), n.div_ceil(Q8_BLOCK), "adam m scales");
+            assert_eq!(vs.len(), n.div_ceil(Q8_BLOCK), "adam v scales");
+            if n <= PAR_CUTOFF || pool.threads() == 1 {
+                adam_q8_chunk(h, p, g, mc, ms, vc, vs);
+                return;
+            }
+            let pp = SendPtr::new(p.as_mut_ptr());
+            let mcp = SendPtr::new(mc.as_mut_ptr());
+            let msp = SendPtr::new(ms.as_mut_ptr());
+            let vcp = SendPtr::new(vc.as_mut_ptr());
+            let vsp = SendPtr::new(vs.as_mut_ptr());
+            // granule Q8_BLOCK: a quantization block is never split, so
+            // each task's requant sees its blocks whole (bit-identical
+            // at every thread count) and the per-task scale subranges
+            // below are disjoint.
+            par_index_ranges(pool, n, Q8_BLOCK, |r| {
+                let b0 = r.start / Q8_BLOCK;
+                let b1 = r.end.div_ceil(Q8_BLOCK);
+                // SAFETY: element ranges and block ranges are disjoint
+                // across tasks; borrows outlive the pool run.
+                let (ps, mcs, mss, vcs, vss) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(pp.get().add(r.start), r.len()),
+                        std::slice::from_raw_parts_mut(mcp.get().add(r.start), r.len()),
+                        std::slice::from_raw_parts_mut(msp.get().add(b0), b1 - b0),
+                        std::slice::from_raw_parts_mut(vcp.get().add(r.start), r.len()),
+                        std::slice::from_raw_parts_mut(vsp.get().add(b0), b1 - b0),
+                    )
+                };
+                adam_q8_chunk(h, ps, &g[r], mcs, mss, vcs, vss);
+            });
+        }
+        _ => panic!("adam moments m/v disagree on representation"),
+    }
+}
+
+/// The f32 kernel over one contiguous chunk — the exact expression
+/// order of the pre-refactor serial loop, so the fused/parallel paths
+/// stay bit-identical to it.
+fn adam_f32_chunk(h: &AdamHyper, p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32]) {
+    for i in 0..p.len() {
+        m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * g[i];
+        v[i] = h.beta2 * v[i] + (1.0 - h.beta2) * g[i] * g[i];
+        let upd = (m[i] / h.bc1) / ((v[i] / h.bc2).sqrt() + h.eps);
+        p[i] -= h.lr * upd;
+    }
+}
+
+/// The q8 kernel over one block-aligned chunk: per block, dequantize
+/// both moments, run the f32 Adam recurrence, requantize (`m` linear,
+/// `v` in the sqrt domain).
+fn adam_q8_chunk(
+    h: &AdamHyper,
+    p: &mut [f32],
+    g: &[f32],
+    m_codes: &mut [i8],
+    m_scales: &mut [f32],
+    v_codes: &mut [i8],
+    v_scales: &mut [f32],
+) {
+    let n = p.len();
+    let mut mbuf = [0.0f32; Q8_BLOCK];
+    let mut vbuf = [0.0f32; Q8_BLOCK];
+    for (b, start) in (0..n).step_by(Q8_BLOCK).enumerate() {
+        let end = (start + Q8_BLOCK).min(n);
+        let msc = m_scales[b];
+        let vsc = v_scales[b];
+        for i in start..end {
+            let k = i - start;
+            let mi = m_codes[i] as f32 * msc;
+            let vroot = dequant_unsigned(v_codes[i], vsc);
+            let vi = vroot * vroot;
+            let mn = h.beta1 * mi + (1.0 - h.beta1) * g[i];
+            let vn = h.beta2 * vi + (1.0 - h.beta2) * g[i] * g[i];
+            let upd = (mn / h.bc1) / ((vn / h.bc2).sqrt() + h.eps);
+            p[i] -= h.lr * upd;
+            mbuf[k] = mn;
+            vbuf[k] = vn.sqrt();
+        }
+        m_scales[b] = quantize_block(&mbuf[..end - start], &mut m_codes[start..end]);
+        // sqrt(v) is nonnegative: the unsigned grid doubles its
+        // resolution at the same byte cost
+        v_scales[b] = quantize_block_unsigned(&vbuf[..end - start], &mut v_codes[start..end]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(rng: &mut Rng, n: usize, mag: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32 * mag).collect()
+    }
+
+    fn hyper(step: usize) -> AdamHyper {
+        let t = step as f32 + 1.0;
+        AdamHyper {
+            lr: 3e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            bc1: 1.0 - 0.9f32.powf(t),
+            bc2: 1.0 - 0.999f32.powf(t),
+        }
+    }
+
+    /// The f32 parallel path must be bit-identical to the serial kernel
+    /// at every thread count (element independence).
+    #[test]
+    fn f32_update_is_bit_identical_across_thread_counts() {
+        let n = 3 * PAR_CUTOFF + 17; // force the parallel path
+        let mut rng = Rng::new(1);
+        let g: Vec<f32> = randvec(&mut rng, n, 0.1);
+        let p0: Vec<f32> = randvec(&mut rng, n, 1.0);
+        let mut want: Option<(Vec<f32>, Moments, Moments)> = None;
+        for threads in [1usize, 2, 5] {
+            let pool = ThreadPool::new(threads);
+            let mut p = p0.clone();
+            let mut m = Moments::zeros(OptimBits::F32, n);
+            let mut v = Moments::zeros(OptimBits::F32, n);
+            for step in 0..3 {
+                adam_update(&pool, &hyper(step), &mut p, &g, &mut m, &mut v);
+            }
+            match &want {
+                None => want = Some((p, m, v)),
+                Some((wp, wm, wv)) => {
+                    assert_eq!(&p, wp, "params at {threads} threads");
+                    match (&m, wm, &v, wv) {
+                        (Moments::F32(a), Moments::F32(b), Moments::F32(c), Moments::F32(d)) => {
+                            assert_eq!(a, b, "m at {threads} threads");
+                            assert_eq!(c, d, "v at {threads} threads");
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+    }
+
+    /// The q8 parallel path must be bit-identical across thread counts
+    /// (block independence + block-aligned partition).
+    #[test]
+    fn q8_update_is_bit_identical_across_thread_counts() {
+        let n = 3 * PAR_CUTOFF + Q8_BLOCK / 2; // parallel path, ragged tail block
+        let mut rng = Rng::new(2);
+        let g: Vec<f32> = randvec(&mut rng, n, 0.1);
+        let p0: Vec<f32> = randvec(&mut rng, n, 1.0);
+        let mut want: Option<Vec<f32>> = None;
+        for threads in [1usize, 3, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut p = p0.clone();
+            let mut m = Moments::zeros(OptimBits::Q8, n);
+            let mut v = Moments::zeros(OptimBits::Q8, n);
+            assert!(m.is_quantized() && v.is_quantized());
+            for step in 0..3 {
+                adam_update(&pool, &hyper(step), &mut p, &g, &mut m, &mut v);
+            }
+            match &want {
+                None => want = Some(p),
+                Some(wp) => assert_eq!(&p, wp, "q8 params at {threads} threads"),
+            }
+        }
+    }
+
+    /// q8 must track the f32 trajectory closely on a well-scaled
+    /// problem (the convergence claim behind `--optim-bits 8`).
+    #[test]
+    fn q8_update_tracks_f32_trajectory() {
+        let n = 2 * Q8_BLOCK;
+        let mut rng = Rng::new(3);
+        let pool = ThreadPool::new(1);
+        let mut pf: Vec<f32> = randvec(&mut rng, n, 1.0);
+        let mut pq = pf.clone();
+        let mut mf = Moments::zeros(OptimBits::F32, n);
+        let mut vf = Moments::zeros(OptimBits::F32, n);
+        // force quantized moments despite n < Q8_MIN_NUMEL
+        let mut mq = Moments::Q8 { codes: vec![0; n], scales: vec![0.0; n.div_ceil(Q8_BLOCK)] };
+        let mut vq = Moments::Q8 { codes: vec![0; n], scales: vec![0.0; n.div_ceil(Q8_BLOCK)] };
+        for step in 0..100 {
+            // gradient of f(p) = ||p||²/2 — drives p toward 0
+            let gf: Vec<f32> = pf.clone();
+            let gq: Vec<f32> = pq.clone();
+            adam_update(&pool, &hyper(step), &mut pf, &gf, &mut mf, &mut vf);
+            adam_update(&pool, &hyper(step), &mut pq, &gq, &mut mq, &mut vq);
+        }
+        let nf: f32 = pf.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nq: f32 = pq.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let n0: f32 = (n as f32).sqrt(); // ~initial norm (unit gaussians)
+        assert!(nf < n0 * 0.9, "f32 Adam failed to descend: {nf} vs {n0}");
+        assert!(nq < n0 * 0.9, "q8 Adam failed to descend: {nq} vs {n0}");
+        assert!((nf - nq).abs() < n0 * 0.1, "q8 drifted: f32 {nf} vs q8 {nq}");
+    }
+
+    #[test]
+    fn moments_gate_small_tensors_and_report_bytes() {
+        let small = Moments::zeros(OptimBits::Q8, Q8_MIN_NUMEL - 1);
+        assert!(!small.is_quantized(), "below the gate stays f32");
+        let big = Moments::zeros(OptimBits::Q8, 4 * Q8_MIN_NUMEL);
+        assert!(big.is_quantized());
+        let n = 4 * Q8_MIN_NUMEL;
+        assert_eq!(Moments::zeros(OptimBits::F32, n).bytes(), (n * 4) as u64);
+        assert_eq!(big.bytes(), (n + n.div_ceil(Q8_BLOCK) * 4) as u64);
+        assert_eq!(big.numel(), n);
+    }
+
+    #[test]
+    fn resolve_optim_bits_validates() {
+        assert_eq!(resolve_optim_bits(32).unwrap(), OptimBits::F32);
+        assert_eq!(resolve_optim_bits(8).unwrap(), OptimBits::Q8);
+        assert!(resolve_optim_bits(16).is_err());
+        assert!(resolve_optim_bits(0).is_ok(), "0 = auto must resolve");
+    }
+}

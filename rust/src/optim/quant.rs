@@ -1,0 +1,215 @@
+//! Block-wise absmax 8-bit quantization (Dettmers et al. [9]) for the
+//! native engine's Adam moments.
+//!
+//! A tensor is split into fixed blocks of [`Q8_BLOCK`] consecutive
+//! elements; each block stores one f32 scale (`absmax / 127`) plus one
+//! signed-8 code per element (`round(x / scale)`, clamped to ±127).
+//! Properties the optimizer relies on:
+//!
+//! * **Bounded error.** `|dequant(quant(x)) − x| ≤ absmax/127` per
+//!   block (the round-off is at most half a code, `absmax/254`; the
+//!   bound leaves fp slack). Sole exception: blocks whose absmax sits
+//!   under [`Q8_FLUSH_BELOW`] flush to exact zero (see its doc).
+//!   Tested below.
+//! * **Block independence.** A block's codes depend only on that
+//!   block's values, so any block-aligned partition of the
+//!   dequant→update→requant pass over the worker pool is bit-identical
+//!   to the serial pass — the thread-count-invariance contract.
+//! * **All-zero blocks** stay exactly zero (scale 0, codes 0), so fresh
+//!   moments survive a quantized round-trip untouched.
+
+/// Elements per quantization block (one f32 scale amortized over 256
+/// i8 codes: 1.015625 bytes/element vs 4 for f32 moments).
+pub const Q8_BLOCK: usize = 256;
+
+/// Blocks whose peak magnitude is below this are flushed to exact zero
+/// instead of quantized: beneath ~3.7e-37 the `127/absmax` reciprocal
+/// overflows to +inf and would snap every nonzero element to ±absmax
+/// (breaking the error bound by up to 127×). A moment this small is
+/// indistinguishable from zero for the Adam update, so the flush costs
+/// nothing — but it is the one documented exception to the
+/// `err ≤ absmax/127` bound (flushed blocks have `err ≤ absmax`,
+/// absolutely below this constant).
+pub const Q8_FLUSH_BELOW: f32 = 1e-35;
+
+/// Quantize one block: writes `codes[i] = round(src[i] / scale)` and
+/// returns the block scale `absmax / 127` (0.0 for an all-zero block).
+pub fn quantize_block(src: &[f32], codes: &mut [i8]) -> f32 {
+    assert_eq!(src.len(), codes.len(), "quantize_block length mismatch");
+    let mut absmax = 0.0f32;
+    for &x in src {
+        absmax = absmax.max(x.abs());
+    }
+    if absmax < Q8_FLUSH_BELOW {
+        for c in codes.iter_mut() {
+            *c = 0;
+        }
+        return 0.0;
+    }
+    let inv = 127.0f32 / absmax;
+    for (c, &x) in codes.iter_mut().zip(src) {
+        *c = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    absmax / 127.0
+}
+
+/// Quantize a *nonnegative* block onto the full unsigned 8-bit grid —
+/// codes 0..=255, stored as the i8 with the same bit pattern (decode
+/// with [`dequant_unsigned`]). Twice the resolution of the signed grid
+/// for values that cannot be negative, which is exactly the sqrt-domain
+/// second Adam moment. Returns the block scale `max / 255`.
+pub fn quantize_block_unsigned(src: &[f32], codes: &mut [i8]) -> f32 {
+    assert_eq!(src.len(), codes.len(), "quantize_block_unsigned length mismatch");
+    let mut mx = 0.0f32;
+    for &x in src {
+        debug_assert!(x >= 0.0, "unsigned grid fed a negative value");
+        mx = mx.max(x);
+    }
+    if mx < Q8_FLUSH_BELOW {
+        for c in codes.iter_mut() {
+            *c = 0;
+        }
+        return 0.0;
+    }
+    let inv = 255.0f32 / mx;
+    for (c, &x) in codes.iter_mut().zip(src) {
+        *c = ((x * inv).round().clamp(0.0, 255.0) as u8) as i8;
+    }
+    mx / 255.0
+}
+
+/// Decode one unsigned-grid code (see [`quantize_block_unsigned`]).
+#[inline]
+pub fn dequant_unsigned(code: i8, scale: f32) -> f32 {
+    (code as u8) as f32 * scale
+}
+
+/// Dequantize `codes` (with one scale per [`Q8_BLOCK`] codes) into
+/// `out`: the raw-code inverse of repeated [`quantize_block`] calls.
+/// NOTE: this decodes what the codes *store* — for the second Adam
+/// moment that is `sqrt(v)` (the optimizer squares it on dequant); the
+/// real runtime decode lives inline in `adam_q8_chunk`. Test-only: the
+/// oracle for the roundtrip error bound.
+#[cfg(test)]
+fn dequantize_into(codes: &[i8], scales: &[f32], out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len(), "dequantize length mismatch");
+    assert_eq!(scales.len(), codes.len().div_ceil(Q8_BLOCK), "dequantize scale count");
+    for (b, chunk) in codes.chunks(Q8_BLOCK).enumerate() {
+        let s = scales[b];
+        for (k, &c) in chunk.iter().enumerate() {
+            out[b * Q8_BLOCK + k] = c as f32 * s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_is_within_absmax_over_127() {
+        let mut rng = Rng::new(7);
+        for trial in 0..50 {
+            // mixed magnitudes, including exact zeros and sign flips
+            let n = 1 + (trial * 37) % (2 * Q8_BLOCK);
+            let mag = 10.0f32.powf((trial % 13) as f32 - 6.0);
+            let src: Vec<f32> = (0..n)
+                .map(|i| if i % 11 == 0 { 0.0 } else { rng.gaussian() as f32 * mag })
+                .collect();
+            let mut codes = vec![0i8; n];
+            let mut scales = vec![0.0f32; n.div_ceil(Q8_BLOCK)];
+            for (b, chunk) in src.chunks(Q8_BLOCK).enumerate() {
+                let start = b * Q8_BLOCK;
+                scales[b] = quantize_block(chunk, &mut codes[start..start + chunk.len()]);
+            }
+            let mut back = vec![0.0f32; n];
+            dequantize_into(&codes, &scales, &mut back);
+            for (b, chunk) in src.chunks(Q8_BLOCK).enumerate() {
+                let absmax = chunk.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let bound = absmax / 127.0;
+                for (k, &x) in chunk.iter().enumerate() {
+                    let err = (back[b * Q8_BLOCK + k] - x).abs();
+                    assert!(
+                        err <= bound,
+                        "trial {trial} block {b} elem {k}: err {err} > bound {bound}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_block_stays_exactly_zero() {
+        let src = vec![0.0f32; Q8_BLOCK];
+        let mut codes = vec![5i8; Q8_BLOCK];
+        let scale = quantize_block(&src, &mut codes);
+        assert_eq!(scale, 0.0);
+        assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    /// Below Q8_FLUSH_BELOW the 127/absmax reciprocal would overflow to
+    /// +inf and snap every element to ±absmax; such blocks must flush
+    /// to exact zero instead.
+    #[test]
+    fn subnormal_blocks_flush_to_zero() {
+        let src = [1e-38f32, -2e-38, 0.0, 5e-39];
+        let mut codes = [9i8; 4];
+        assert_eq!(quantize_block(&src, &mut codes), 0.0);
+        assert!(codes.iter().all(|&c| c == 0));
+        let srcu = [1e-38f32, 2e-38, 0.0, 5e-39];
+        let mut codes = [9i8; 4];
+        assert_eq!(quantize_block_unsigned(&srcu, &mut codes), 0.0);
+        assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn extremes_map_to_full_code_range() {
+        let src = [1.0f32, -1.0, 0.5, -0.25, 0.0];
+        let mut codes = [0i8; 5];
+        let scale = quantize_block(&src, &mut codes);
+        assert_eq!(codes[0], 127);
+        assert_eq!(codes[1], -127);
+        assert_eq!(codes[4], 0);
+        assert!((scale - 1.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unsigned_grid_bounds_error_and_uses_full_range() {
+        let mut rng = Rng::new(11);
+        for trial in 0..30 {
+            let n = 1 + (trial * 29) % Q8_BLOCK;
+            let mag = 10.0f32.powf((trial % 9) as f32 - 4.0);
+            let src: Vec<f32> = (0..n)
+                .map(|i| if i % 7 == 0 { 0.0 } else { (rng.gaussian() as f32 * mag).abs() })
+                .collect();
+            let mut codes = vec![0i8; n];
+            let scale = quantize_block_unsigned(&src, &mut codes);
+            let mx = src.iter().fold(0.0f32, |a, &x| a.max(x));
+            for (k, &x) in src.iter().enumerate() {
+                let err = (dequant_unsigned(codes[k], scale) - x).abs();
+                assert!(err <= mx / 255.0, "trial {trial} elem {k}: err {err} > {}", mx / 255.0);
+            }
+            if mx > 0.0 {
+                let top = src.iter().position(|&x| x == mx).unwrap();
+                assert_eq!(codes[top] as u8, 255, "max must hit the top code");
+            }
+        }
+        // zero block stays zero
+        let mut codes = [7i8; 4];
+        assert_eq!(quantize_block_unsigned(&[0.0; 4], &mut codes), 0.0);
+        assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn quantization_is_deterministic() {
+        let mut rng = Rng::new(3);
+        let src: Vec<f32> = (0..Q8_BLOCK).map(|_| rng.gaussian() as f32).collect();
+        let mut c1 = vec![0i8; Q8_BLOCK];
+        let mut c2 = vec![0i8; Q8_BLOCK];
+        let s1 = quantize_block(&src, &mut c1);
+        let s2 = quantize_block(&src, &mut c2);
+        assert_eq!(s1.to_bits(), s2.to_bits());
+        assert_eq!(c1, c2);
+    }
+}

@@ -276,6 +276,7 @@ fn native_and_xla_loss_parity_smoke() {
         lr: 3e-3,
         total_steps: 2000,
         threads: 0,
+        optim_bits: 0,
     })
     .unwrap();
     let (nf, nl) = run(native);

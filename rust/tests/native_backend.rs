@@ -16,7 +16,8 @@ fn native_spec(method: &str, batch: usize, steps: usize) -> BackendSpec {
         batch,
         lr: 3e-3,
         total_steps: steps.max(1),
-        threads: 0, // auto (results are thread-count independent)
+        threads: 0,    // auto (results are thread-count independent)
+        optim_bits: 0, // auto (SLTRAIN_OPTIM_BITS env matrix flows through)
     }
 }
 
@@ -210,12 +211,12 @@ fn native_checkpoint_is_analyzable() {
 #[test]
 fn backend_spec_validation() {
     // unknown engine and missing artifact are caught early
-    assert!(BackendSpec::from_flags("tpu", "", "tiny", "sltrain", 8, 3e-3, 100, 0).is_err());
-    assert!(BackendSpec::from_flags("xla", "", "tiny", "sltrain", 8, 3e-3, 100, 0).is_err());
-    assert!(BackendSpec::from_flags("native", "", "nope", "sltrain", 8, 3e-3, 100, 0).is_err());
+    assert!(BackendSpec::from_flags("tpu", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0).is_err());
+    assert!(BackendSpec::from_flags("xla", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0).is_err());
+    assert!(BackendSpec::from_flags("native", "", "nope", "sltrain", 8, 3e-3, 100, 0, 0).is_err());
     // --artifact with the native engine is a misdirected run, not a no-op
     let misdirected =
-        BackendSpec::from_flags("native", "a/dir", "tiny", "sltrain", 8, 3e-3, 100, 0);
+        BackendSpec::from_flags("native", "a/dir", "tiny", "sltrain", 8, 3e-3, 100, 0, 0);
     assert!(misdirected.is_err());
     // native relora/galore are rejected at open()
     let bad = BackendSpec::Native {
@@ -225,8 +226,20 @@ fn backend_spec_validation() {
         lr: 3e-3,
         total_steps: 10,
         threads: 1,
+        optim_bits: 0,
     };
     assert!(backend::open(bad).is_err());
+    // only 32 and 8 are valid Adam moment precisions
+    let bad_bits = BackendSpec::Native {
+        preset: preset("tiny").unwrap(),
+        method: "sltrain".into(),
+        batch: 2,
+        lr: 3e-3,
+        total_steps: 10,
+        threads: 1,
+        optim_bits: 16,
+    };
+    assert!(backend::open(bad_bits).is_err());
 }
 
 /// The parallelism payoff: on machines with >= 4 cores, the threaded
@@ -254,6 +267,7 @@ fn threaded_step_loop_beats_single_thread() {
             lr: 3e-3,
             total_steps: 100,
             threads,
+            optim_bits: 0,
         })
         .unwrap();
         let mut pipe = Pipeline::build(be.preset().vocab, 7);
@@ -280,6 +294,104 @@ fn threaded_step_loop_beats_single_thread() {
     assert!(
         t4 < t1 * 0.95,
         "4 threads ({t4:.3}s) not faster than 1 thread ({t1:.3}s) over 8 steps"
+    );
+}
+
+/// The per-layer fused refactor's acceptance contract: at
+/// `--optim-bits 32`, the streaming fused `train_step` produces losses
+/// bit-identical to the pre-refactor two-phase loop (kept as
+/// `train_step_two_phase`) at every thread count.
+#[test]
+fn per_layer_fused_updates_match_two_phase_loop() {
+    use sltrain::backend::native::NativeBackend;
+    let p = preset("tiny").unwrap();
+    let mut pipe = Pipeline::build(p.vocab, 7);
+    let batches: Vec<Vec<i32>> = (0..5).map(|_| pipe.train.next_batch(4, p.seq_len)).collect();
+    let mk = |threads: usize| {
+        let mut be = NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, threads, 32).unwrap();
+        be.init_state(42).unwrap();
+        be
+    };
+    let mut reference = mk(1);
+    let ref_losses: Vec<f32> = batches
+        .iter()
+        .enumerate()
+        .map(|(s, b)| reference.train_step_two_phase(s as i32, b).unwrap())
+        .collect();
+    for threads in [1usize, 2, 4] {
+        let mut be = mk(threads);
+        let losses: Vec<f32> = batches
+            .iter()
+            .enumerate()
+            .map(|(s, b)| be.train_step(s as i32, b).unwrap())
+            .collect();
+        assert_eq!(losses, ref_losses, "fused x{threads} vs serial two-phase loop");
+    }
+}
+
+/// Quantized optimizer state survives the full checkpoint file format:
+/// 8-bit moment codes (I8) + per-block scales (f32) round-trip
+/// bit-identically through save/load, and the restored backend resumes
+/// the exact training trajectory.
+#[test]
+fn q8_optimizer_state_roundtrips_through_checkpoint_file() {
+    use sltrain::backend::native::NativeBackend;
+    let p = preset("tiny").unwrap();
+    let mut be = NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, 0, 8).unwrap();
+    be.init_state(42).unwrap();
+    let mut pipe = Pipeline::build(p.vocab, 7);
+    let batch: Vec<i32> = pipe.train.next_batch(4, p.seq_len);
+    for step in 0..3 {
+        be.train_step(step, &batch).unwrap();
+    }
+
+    let dir = std::env::temp_dir().join(format!("sltrain-q8ckpt-{}", std::process::id()));
+    let path = dir.join("q8.ckpt");
+    save_checkpoint(&be, 3, &path).unwrap();
+
+    let ck = Checkpoint::load(&path).unwrap();
+    let restored = ck.to_state_tensors();
+    // the checkpoint must carry the quantized moments explicitly
+    assert!(restored.iter().any(|t| t.name.starts_with("optim.m.q8.")), "missing I8 codes");
+    assert!(restored.iter().any(|t| t.name.starts_with("optim.m.scale.")), "missing scales");
+    // byte-level roundtrip against the source snapshot
+    let src = be.state_tensors().unwrap();
+    for st in &src {
+        let back = restored.iter().find(|t| t.name == st.name).unwrap_or_else(|| {
+            panic!("{} lost in checkpoint roundtrip", st.name)
+        });
+        assert_eq!(back.bytes, st.bytes, "{} bytes drifted", st.name);
+    }
+
+    let mut be2 = NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, 0, 8).unwrap();
+    be2.init_state(99).unwrap(); // different init, fully overwritten by load
+    be2.load_state_tensors(&restored).unwrap();
+    for step in 3..6 {
+        let l1 = be.train_step(step, &batch).unwrap();
+        let l2 = be2.train_step(step, &batch).unwrap();
+        assert_eq!(l1, l2, "resumed q8 trajectory diverged at step {step}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The streaming fused backward's gradient high-water must sit well
+/// under the two-phase footprint (the memory claim of this refactor),
+/// visible through the engine-agnostic `Backend::mem_report`.
+#[test]
+fn mem_report_shows_streaming_grad_peak_through_trait() {
+    let mut be = open("sltrain", 4, 20);
+    let mut pipe = Pipeline::build(be.preset().vocab, 7);
+    be.init_state(42).unwrap();
+    let toks = pipe.train.next_batch(be.batch_size(), be.seq_len());
+    be.train_step(0, &toks).unwrap();
+    let r = be.mem_report().expect("native backend must report memory");
+    assert!(r.param_bytes > 0 && r.optim_bytes > 0);
+    assert!(r.grad_peak_bytes > 0, "peak tracker must observe the backward walk");
+    assert!(
+        r.grad_peak_bytes < r.grad_all_bytes / 2,
+        "streaming peak {} not lean vs two-phase {}",
+        r.grad_peak_bytes,
+        r.grad_all_bytes
     );
 }
 
