@@ -22,10 +22,11 @@ use sltrain::util::json::{num, obj, s, Json};
 fn main() -> anyhow::Result<()> {
     let a = Cli::new("fig3_memory", "Fig 3: measured native training memory + analytic overlay")
         .opt("configs", "tiny", "comma-separated native presets")
-        .opt("methods", "full,lowrank,sltrain", "comma-separated methods")
+        .opt("methods", "full,lowrank,sltrain,relora,galore", "comma-separated methods")
         .opt("steps", "5", "train steps before measuring (fills the gradient peak)")
         .opt("batch", "4", "train batch rows")
         .opt("threads", "0", "step-loop worker threads (0 = auto)")
+        .opt("galore-every", "0", "GaLore projector refresh period (0 = default)")
         .opt("json", "BENCH_memory.json", "machine-readable output path")
         .opt("csv", "results/fig3.csv", "output CSV")
         .parse_env();
@@ -66,6 +67,7 @@ fn main() -> anyhow::Result<()> {
                     total_steps: 2000,
                     threads: a.usize("threads"),
                     optim_bits: bits,
+                    galore_every: a.usize("galore-every"),
                 };
                 // any per-cell failure (open, init, step) skips the cell
                 // so one bad combo can't abort the whole trajectory run
@@ -121,6 +123,7 @@ fn main() -> anyhow::Result<()> {
                     ("optim_bits", num(bits as f64)),
                     ("param_bytes", num(r.param_bytes as f64)),
                     ("optim_bytes", num(r.optim_bytes as f64)),
+                    ("proj_bytes", num(r.proj_bytes as f64)),
                     ("support_bytes", num(r.support_bytes as f64)),
                     ("grad_peak_bytes", num(r.grad_peak_bytes as f64)),
                     ("grad_two_phase_bytes", num(r.grad_all_bytes as f64)),

@@ -24,10 +24,11 @@ fn main() -> anyhow::Result<()> {
     let a = Cli::new("perf_steploop", "native step-loop throughput per method x thread count")
         .opt("steps", "20", "measured steps per cell (after 2 warmup)")
         .opt("configs", "tiny", "comma-separated scale points")
-        .opt("methods", "full,lowrank,sltrain", "comma-separated methods")
+        .opt("methods", "full,lowrank,sltrain,relora,galore", "comma-separated methods")
         .opt("threads", "1,2,4", "comma-separated thread counts")
         .opt("batch", "8", "train batch rows")
         .opt("optim-bits", "0", "Adam moment precision: 32 | 8 (0 = auto)")
+        .opt("galore-every", "0", "GaLore projector refresh period (0 = default)")
         .opt("json", "BENCH_steploop.json", "machine-readable output path")
         .opt("csv", "results/perf_steploop.csv", "output CSV")
         .parse_env();
@@ -79,6 +80,7 @@ fn main() -> anyhow::Result<()> {
                     total_steps: 2000,
                     threads,
                     optim_bits: a.usize("optim-bits"),
+                    galore_every: a.usize("galore-every"),
                 };
                 let mut be: Box<dyn Backend> = match backend::open(spec) {
                     Ok(be) => be,

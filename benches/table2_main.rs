@@ -6,9 +6,10 @@
 //!   ReLoRA in between; SLTrain's params/memory close to Low-Rank.
 //!
 //! Engine-agnostic: runs on the pure-rust native backend by default (no
-//! artifacts needed — full/lowrank/sltrain columns), or on AOT artifact
-//! bundles with `--backend xla` (adds relora/galore, needs the `xla`
-//! cargo feature and `make artifacts`).
+//! artifacts needed — all five method rows, relora restarts and the
+//! galore projected optimizer included), or on AOT artifact bundles
+//! with `--backend xla` (needs the `xla` cargo feature and
+//! `make artifacts`).
 //!
 //!   cargo bench --bench table2_main -- --steps 300
 //!   cargo bench --bench table2_main --features xla -- --backend xla
@@ -29,6 +30,7 @@ fn main() -> anyhow::Result<()> {
         .opt("configs", "tiny", "comma-separated scale points")
         .opt("threads", "0", "native step-loop worker threads (0 = auto)")
         .opt("optim-bits", "0", "native Adam moment precision: 32 | 8 (0 = auto)")
+        .opt("galore-every", "0", "native GaLore projector refresh period (0 = default)")
         .opt("csv", "results/table2.csv", "output CSV")
         .parse_env();
     let steps = a.usize("steps");
@@ -55,10 +57,6 @@ fn main() -> anyhow::Result<()> {
                     BackendSpec::Xla { artifact_dir: dir.into() }
                 }
                 _ => {
-                    if matches!(method, "relora" | "galore") {
-                        println!("[skip] {cfg_name}/{method} (xla-only method)");
-                        continue;
-                    }
                     let p = preset(cfg_name)
                         .ok_or_else(|| anyhow::anyhow!("unknown preset {cfg_name:?}"))?;
                     BackendSpec::Native {
@@ -69,6 +67,7 @@ fn main() -> anyhow::Result<()> {
                         total_steps: steps.max(1),
                         threads: a.usize("threads"),
                         optim_bits: a.usize("optim-bits"),
+                        galore_every: a.usize("galore-every"),
                     }
                 }
             };

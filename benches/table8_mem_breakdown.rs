@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
         "Table 8 (measured) — native tiny: optimizer bytes f32 vs 8-bit, MB",
         &["method", "optim f32", "optim 8-bit", "drop", "grad peak", "grad 2-phase"],
     );
-    for method in ["full", "lowrank", "sltrain"] {
+    for method in ["full", "lowrank", "sltrain", "relora", "galore"] {
         let mut optim = [0u64; 2];
         let mut grad_peak = 0u64;
         let mut grad_all = 0u64;
@@ -97,6 +97,7 @@ fn main() -> anyhow::Result<()> {
                 total_steps: 100,
                 threads: 1,
                 optim_bits: bits,
+                galore_every: 0,
             };
             let mut be: Box<dyn Backend> = backend::open(spec)?;
             be.init_state(42)?;

@@ -42,6 +42,7 @@ fn main() -> Result<()> {
         steps.max(1),
         a.usize("threads"),
         a.usize("optim-bits"),
+        0, // galore refresh: unused (this example trains sltrain)
     )?;
     let mut be = backend::open(spec)?;
     let p = be.preset().clone();

@@ -24,6 +24,7 @@ fn main() -> Result<()> {
         .opt("steps", "100", "optimizer steps")
         .opt("threads", "0", "step-loop worker threads (native backend, 0 = auto)")
         .opt("optim-bits", "0", "Adam moment precision: 32 | 8 (native backend, 0 = auto)")
+        .opt("galore-every", "0", "GaLore projector refresh period (0 = default 200)")
         .parse_env();
     let steps = a.usize("steps");
     let spec = BackendSpec::from_flags(
@@ -36,6 +37,7 @@ fn main() -> Result<()> {
         steps.max(1),
         a.usize("threads"),
         a.usize("optim-bits"),
+        a.usize("galore-every"),
     )?;
     let mut be = backend::open(spec)?;
     println!(

@@ -9,9 +9,12 @@
 //! implementations exist:
 //!
 //! * [`native::NativeBackend`] — a pure-rust transformer trainer built on
-//!   `linalg::Matrix` + `linalg::sparse`, with full forward/backward and
-//!   Adam over {B, A, S-values}. Needs no artifacts, no XLA, no Python:
-//!   the deterministic reference the AOT path is parity-tested against.
+//!   `linalg::Matrix` + `linalg::sparse`, covering all five methods of
+//!   `config::METHODS` (full, lowrank, sltrain, relora, galore) with
+//!   full forward/backward, Adam (f32 or 8-bit moments), the ReLoRA
+//!   merge-and-restart hook and the GaLore projected-space optimizer.
+//!   Needs no artifacts, no XLA, no Python: the deterministic reference
+//!   the AOT path is parity-tested against.
 //! * `xla_backend::XlaBackend` (cargo feature `xla`) — a thin adapter
 //!   over the AOT/PJRT machinery in `runtime::pjrt`, executing the
 //!   HLO-text artifact bundles emitted by `python/compile/aot.py`.
@@ -19,6 +22,7 @@
 //! Selection is data-driven via [`BackendSpec`] (the `--backend
 //! {xla,native}` CLI flag), so every consumer from `main.rs` down to the
 //! bench binaries is engine-agnostic.
+#![deny(missing_docs)]
 
 pub mod native;
 
@@ -36,13 +40,18 @@ use crate::runtime::Dtype;
 /// with checkpoints and artifact sidecars (little-endian raw bytes).
 #[derive(Debug, Clone)]
 pub struct StateTensor {
+    /// Dot-path tensor name (`layers.0.attn.q.B`, `optim.m.embed.w`, …).
     pub name: String,
+    /// Logical shape; the byte payload is row-major.
     pub shape: Vec<usize>,
+    /// Element type of the payload.
     pub dtype: Dtype,
+    /// Little-endian raw bytes, `shape.product()` elements.
     pub bytes: Vec<u8>,
 }
 
 impl StateTensor {
+    /// Pack an f32 tensor into the interchange layout.
     pub fn f32(name: &str, shape: Vec<usize>, data: &[f32]) -> StateTensor {
         StateTensor {
             name: name.to_string(),
@@ -52,6 +61,7 @@ impl StateTensor {
         }
     }
 
+    /// Pack an i32 tensor (sparse-support indices) into the layout.
     pub fn i32(name: &str, shape: Vec<usize>, data: &[i32]) -> StateTensor {
         StateTensor {
             name: name.to_string(),
@@ -71,6 +81,7 @@ impl StateTensor {
         }
     }
 
+    /// Decode the payload as f32 (errors on any other dtype).
     pub fn to_f32(&self) -> Result<Vec<f32>> {
         if self.dtype != Dtype::F32 {
             bail!("{}: not f32", self.name);
@@ -82,6 +93,7 @@ impl StateTensor {
             .collect())
     }
 
+    /// Decode the payload as i32 (u32 accepted bit-for-bit).
     pub fn to_i32(&self) -> Result<Vec<i32>> {
         if self.dtype != Dtype::I32 && self.dtype != Dtype::U32 {
             bail!("{}: not i32/u32", self.name);
@@ -93,6 +105,7 @@ impl StateTensor {
             .collect())
     }
 
+    /// Decode the payload as raw i8 (quantized moment codes).
     pub fn to_i8(&self) -> Result<Vec<i8>> {
         if self.dtype != Dtype::I8 {
             bail!("{}: not i8", self.name);
@@ -130,6 +143,7 @@ pub trait Backend {
         "adam"
     }
 
+    /// Sequence length of every token batch (the preset's `seq_len`).
     fn seq_len(&self) -> usize {
         self.preset().seq_len
     }
@@ -150,7 +164,23 @@ pub trait Backend {
     /// Forward pass returning logits [batch, seq, vocab] flattened.
     fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
 
-    /// ReLoRA restart hook (merge adaptors + reset their moments).
+    /// ReLoRA restart hook (paper eq. 1), implemented by both engines
+    /// for `method == "relora"`. The contract:
+    ///
+    /// * `W0 ← W0 + scale·B·A` for every adapted linear, then `B ← 0`
+    ///   and `A ←` a fresh Kaiming draw derived deterministically from
+    ///   `seed` — so the function the model computes is unchanged up to
+    ///   f32 re-association (eval loss is continuous across a merge).
+    /// * The Adam moments of the re-initialized adaptors are reset to
+    ///   zero — under 8-bit moments that means the quantized codes
+    ///   *and* their per-block scales.
+    /// * Same `seed` ⇒ bit-identical post-merge state, at every thread
+    ///   count (the coordinator passes the step number as the seed, so
+    ///   resumed runs replay merges exactly).
+    ///
+    /// Errors for every other method; the default implementation errors
+    /// unconditionally (an engine that cannot restart must refuse, not
+    /// no-op, or the relora baseline silently degrades to lowrank).
     fn merge(&mut self, seed: i32) -> Result<()> {
         let _ = seed;
         bail!("{} backend has no merge/restart entrypoint", self.kind())
@@ -183,12 +213,19 @@ pub trait Backend {
 #[derive(Debug, Clone)]
 pub enum BackendSpec {
     /// AOT artifact bundle executed through PJRT (feature `xla`).
-    Xla { artifact_dir: PathBuf },
+    Xla {
+        /// Directory holding the HLO-text artifact bundle.
+        artifact_dir: PathBuf,
+    },
     /// Pure-rust engine: preset + method + run hyperparameters.
     Native {
+        /// Architectural shape to instantiate.
         preset: ModelPreset,
+        /// Weight parameterization (`config::METHODS`).
         method: String,
+        /// Rows per train-step token batch.
         batch: usize,
+        /// Base learning rate of the warmup+cosine schedule.
         lr: f32,
         /// lr-schedule horizon (mirrors aot.py's total_steps default).
         total_steps: usize,
@@ -203,6 +240,12 @@ pub enum BackendSpec {
         /// deterministic and thread-count-invariant but diverges
         /// numerically (bounded per-block quantization error).
         optim_bits: usize,
+        /// GaLore projector refresh period in steps (`--galore-every`):
+        /// the rank-r gradient subspace is recomputed by truncated SVD
+        /// at step 0 and every multiple of this period. 0 = default
+        /// (200, the aot.py `galore_refresh` default). Ignored unless
+        /// the method is galore.
+        galore_every: usize,
     },
 }
 
@@ -221,6 +264,7 @@ impl BackendSpec {
         total_steps: usize,
         threads: usize,
         optim_bits: usize,
+        galore_every: usize,
     ) -> Result<BackendSpec> {
         match backend {
             "xla" => {
@@ -246,6 +290,7 @@ impl BackendSpec {
                     total_steps: total_steps.max(1),
                     threads,
                     optim_bits,
+                    galore_every,
                 })
             }
             other => bail!("unknown backend {other:?} (expected xla | native)"),
@@ -259,17 +304,25 @@ impl BackendSpec {
 pub fn open(spec: BackendSpec) -> Result<Box<dyn Backend>> {
     match spec {
         BackendSpec::Xla { artifact_dir } => open_xla(artifact_dir),
-        BackendSpec::Native { preset, method, batch, lr, total_steps, threads, optim_bits } => {
-            Ok(Box::new(native::NativeBackend::build(
-                preset,
-                &method,
-                batch,
-                lr,
-                total_steps,
-                threads,
-                optim_bits,
-            )?))
-        }
+        BackendSpec::Native {
+            preset,
+            method,
+            batch,
+            lr,
+            total_steps,
+            threads,
+            optim_bits,
+            galore_every,
+        } => Ok(Box::new(native::NativeBackend::build(
+            preset,
+            &method,
+            batch,
+            lr,
+            total_steps,
+            threads,
+            optim_bits,
+            galore_every,
+        )?)),
     }
 }
 

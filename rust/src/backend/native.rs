@@ -3,13 +3,31 @@
 //! A from-scratch implementation of the paper's pretraining setup on
 //! `linalg::Matrix` + `linalg::sparse` — LLaMA-shaped blocks (RMSNorm,
 //! rotary attention, SwiGLU), full manual forward/backward, and Adam
-//! with the GaLore-repo warmup+cosine schedule, over the `full`,
-//! `lowrank` and `sltrain` weight parameterizations of
-//! `python/compile/layers.py`:
+//! with the GaLore-repo warmup+cosine schedule, over all five weight
+//! parameterizations of `python/compile/layers.py` (the paper's
+//! Tables 2–4 comparison set):
 //!
 //!   full     y = x W
 //!   lowrank  y = scale · (x B) A
 //!   sltrain  y = scale · (x B) A + x S       (S fixed-support sparse)
+//!   relora   y = x W0 + scale · (x B) A      (W0 frozen between merges)
+//!   galore   y = x W                         (rank-r *gradient* projection)
+//!
+//! The two baselines differ from full/lowrank/sltrain only in how state
+//! evolves, not in the forward math:
+//!
+//! * **ReLoRA** (Lialin et al., eq. 1) trains only `{B, A}`; `W0` is
+//!   frozen and receives no gradient. Every `relora_every` steps the
+//!   coordinator calls [`Backend::merge`], which folds `scale·B·A` into
+//!   `W0`, re-initializes the adaptors from the merge seed and zeroes
+//!   their Adam moments (codes *and* scales under 8-bit moments).
+//! * **GaLore** (Zhao et al., §2) trains the full-rank `W`, but each
+//!   adapted linear's Adam moments live in a rank-r projected space:
+//!   the projector `P` (top-r singular subspace of the gradient, via
+//!   `linalg::svd`) is refreshed every `galore_every` steps, the moment
+//!   recurrence runs on `PᵀG` (or `GP`), and the bias-corrected
+//!   direction is projected back before the weight update — so
+//!   `mem_report()` shows optimizer state at the projected size.
 //!
 //! Like the paper's kernels (and unlike the densifying oracle), the hot
 //! loop never materializes the dense `W = scale·BA ⊕ S` nor its
@@ -72,6 +90,11 @@ const ADAM_EPS: f32 = 1e-8;
 const WARMUP_CAP: f32 = 100.0;
 const RMS_EPS: f32 = 1e-6;
 const ROPE_THETA: f32 = 10000.0;
+/// GaLore's fixed update scale on projected-back directions (the
+/// `gl_scale` of python/compile/optim.py and α of the GaLore repo).
+const GALORE_SCALE: f32 = 0.25;
+/// Default projector refresh period (aot.py's `galore_refresh`).
+const GALORE_DEFAULT_EVERY: usize = 200;
 
 // ------------------------------------------------------------- tensors
 
@@ -153,6 +176,82 @@ struct SparseHandle {
 enum LinKind {
     Full { w: ParamId },
     Factored { b: ParamId, a: ParamId, sparse: Option<SparseHandle> },
+    /// ReLoRA: frozen base weight + trainable adaptor pair. `w0` never
+    /// receives a gradient; it changes only through `merge`.
+    Relora { w0: ParamId, b: ParamId, a: ParamId },
+}
+
+/// GaLore optimizer state of one adapted full-rank weight: the rank-r
+/// projector whose subspace the Adam moments live in.
+///
+/// `left == true` (d_in ≤ d_out): `P` is [d_in, k], gradients project
+/// as `PᵀG` to [k, d_out]. Otherwise `P` is [d_out, k] and gradients
+/// project as `GP` to [d_in, k] — always the cheaper side, exactly
+/// `galore_targets` in python/compile/optim.py.
+#[derive(Debug, Clone)]
+struct GaloreProj {
+    left: bool,
+    k: usize,
+    /// Orthonormal-column projector; refreshed from the gradient's
+    /// truncated SVD, zero until the step-0 refresh.
+    p: Matrix,
+    /// `p` transposed, maintained by [`GaloreProj::set_p`]: the
+    /// left-projection hot path multiplies by `Pᵀ` every step, so the
+    /// transpose is paid once per refresh instead. Empty when `left`
+    /// is false (the right side never needs it).
+    pt: Matrix,
+    /// False until a real frame is installed (SVD refresh or checkpoint
+    /// restore). A not-ready frame is the zero matrix, which would turn
+    /// every update into a silent no-op — the step loop refreshes
+    /// immediately instead of waiting for the next period boundary
+    /// (e.g. after a weights-only resume at an arbitrary step).
+    ready: bool,
+}
+
+impl GaloreProj {
+    fn new(left: bool, k: usize, pdim: usize) -> GaloreProj {
+        let mut gs =
+            GaloreProj { left, k, p: Matrix::zeros(0, 0), pt: Matrix::zeros(0, 0), ready: false };
+        gs.clear(pdim);
+        gs
+    }
+
+    /// Install a projector frame (refresh / checkpoint restore),
+    /// keeping the cached transpose in sync. Readiness is derived from
+    /// the frame itself: an all-zero P (a snapshot taken before the
+    /// first refresh, or the SVD of a zero gradient) is NOT a live
+    /// frame — treating it as one would silently zero every update
+    /// until the next period boundary, so the step loop keeps
+    /// re-refreshing instead (a zero-gradient Jacobi SVD converges
+    /// immediately, so the degenerate re-refresh costs nothing).
+    fn set_p(&mut self, p: Matrix) {
+        self.pt = if self.left { p.transpose() } else { Matrix::zeros(0, 0) };
+        self.ready = p.data.iter().any(|&x| x != 0.0);
+        self.p = p;
+    }
+
+    /// Reset to the not-ready zero frame of `pdim` rows (init / drop).
+    fn clear(&mut self, pdim: usize) {
+        self.set_p(Matrix::zeros(pdim, self.k));
+    }
+
+    /// Projected-moment element count for a [rows, cols] weight.
+    fn proj_numel(&self, rows: usize, cols: usize) -> usize {
+        if self.left {
+            self.k * cols
+        } else {
+            rows * self.k
+        }
+    }
+
+    /// Expected projector shape for a [rows, cols] weight.
+    fn proj_shape(&self, rows: usize, cols: usize) -> (usize, usize) {
+        if self.left {
+            (rows, self.k)
+        } else {
+            (cols, self.k)
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -241,6 +340,9 @@ fn acc_grad_vec(grads: &mut Grads, id: ParamId, g: Vec<f32>) {
 
 // ------------------------------------------------------------ backend
 
+/// The pure-rust training engine behind `--backend native`: full
+/// forward/backward, Adam, and all five weight parameterizations (see
+/// the module docs for the execution/memory model).
 pub struct NativeBackend {
     preset: ModelPreset,
     method: String,
@@ -252,11 +354,19 @@ pub struct NativeBackend {
     /// Adam moment precision (`--optim-bits`): f32, or block-wise 8-bit
     /// for tensors clearing `optim::Q8_MIN_NUMEL`.
     optim_bits: OptimBits,
+    /// GaLore projector refresh period (steps); method galore only.
+    galore_every: usize,
     /// Interned parameter store; `ParamId` indexes all three vectors.
     params: Vec<PTensor>,
     param_names: Vec<String>,
     optim_m: Vec<Moments>,
     optim_v: Vec<Moments>,
+    /// ParamId-indexed: true for parameters excluded from training
+    /// (relora's `W0`). Frozen parameters carry no optimizer moments.
+    frozen: Vec<bool>,
+    /// ParamId-indexed GaLore projector state; `Some` exactly for the
+    /// adapted linear weights when the method is galore.
+    galore: Vec<Option<GaloreProj>>,
     /// Name -> id, kept only for the state interchange.
     name_to_id: BTreeMap<String, usize>,
     /// Per-linear parameter handles, `LinId`-indexed.
@@ -277,6 +387,9 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Construct an (uninitialized) engine for `preset` × `method`.
+    /// `threads`, `optim_bits` and `galore_every` accept 0 = auto; call
+    /// [`Backend::init_state`] before training.
     #[allow(clippy::too_many_arguments)]
     pub fn build(
         preset: ModelPreset,
@@ -286,9 +399,13 @@ impl NativeBackend {
         total_steps: usize,
         threads: usize,
         optim_bits: usize,
+        galore_every: usize,
     ) -> Result<NativeBackend> {
-        if !matches!(method, "full" | "lowrank" | "sltrain") {
-            bail!("native backend supports full | lowrank | sltrain (got {method:?})");
+        if !crate::config::METHODS.contains(&method) {
+            bail!(
+                "native backend supports full | lowrank | sltrain | relora | galore \
+                 (got {method:?})"
+            );
         }
         if preset.d_model % preset.n_heads != 0 {
             bail!("d_model {} not divisible by n_heads {}", preset.d_model, preset.n_heads);
@@ -320,10 +437,13 @@ impl NativeBackend {
             total_steps: total_steps.max(1),
             scale,
             optim_bits: optim::resolve_optim_bits(optim_bits)?,
+            galore_every: if galore_every == 0 { GALORE_DEFAULT_EVERY } else { galore_every },
             params: Vec::new(),
             param_names: Vec::new(),
             optim_m: Vec::new(),
             optim_v: Vec::new(),
+            frozen: Vec::new(),
+            galore: Vec::new(),
             name_to_id: BTreeMap::new(),
             lins: Vec::new(),
             lin_paths: Vec::new(),
@@ -367,6 +487,8 @@ impl NativeBackend {
         self.name_to_id.insert(name.clone(), id);
         self.param_names.push(name);
         self.params.push(t);
+        self.frozen.push(false);
+        self.galore.push(None);
         ParamId(id)
     }
 
@@ -381,6 +503,8 @@ impl NativeBackend {
         self.params.clear();
         self.param_names.clear();
         self.name_to_id.clear();
+        self.frozen.clear();
+        self.galore.clear();
         self.lins.clear();
         self.lin_paths.clear();
         self.supports.clear();
@@ -427,6 +551,38 @@ impl NativeBackend {
                     );
                     LinKind::Full { w }
                 }
+                "galore" => {
+                    // same full-rank weight; the rank-r treatment lives
+                    // entirely in the optimizer (projected moments)
+                    let mut r1 = base.fork(1);
+                    let w = self.intern(
+                        format!("{path}.w"),
+                        PTensor::Mat(gauss_mat(&mut r1, d_in, d_out, kaiming_in)),
+                    );
+                    let k = p.rank.min(d_in).min(d_out);
+                    let left = d_in <= d_out;
+                    let pdim = if left { d_in } else { d_out };
+                    self.galore[w.0] = Some(GaloreProj::new(left, k, pdim));
+                    LinKind::Full { w }
+                }
+                "relora" => {
+                    // W0 Kaiming (frozen), B zero, A Kaiming — merge
+                    // restarts re-draw A with the same recipe
+                    let mut r1 = base.fork(1);
+                    let mut r3 = base.fork(3);
+                    let w0 = self.intern(
+                        format!("{path}.w0"),
+                        PTensor::Mat(gauss_mat(&mut r3, d_in, d_out, kaiming_in)),
+                    );
+                    self.frozen[w0.0] = true;
+                    let b = self
+                        .intern(format!("{path}.B"), PTensor::Mat(Matrix::zeros(d_in, p.rank)));
+                    let a = self.intern(
+                        format!("{path}.A"),
+                        PTensor::Mat(gauss_mat(&mut r1, p.rank, d_out, kaiming_r)),
+                    );
+                    LinKind::Relora { w0, b, a }
+                }
                 "lowrank" => {
                     // lowrank cannot start at BA = 0 (no gradient to
                     // escape); Kaiming B as in [24]
@@ -469,8 +625,22 @@ impl NativeBackend {
         }
 
         let bits = self.optim_bits;
-        self.optim_m = self.params.iter().map(|t| Moments::zeros(bits, t.numel())).collect();
-        self.optim_v = self.params.iter().map(|t| Moments::zeros(bits, t.numel())).collect();
+        // Moment sizing per parameter: frozen parameters (relora W0)
+        // carry none, galore targets carry them at the projected size —
+        // the optimizer-byte win mem_report() measures.
+        let moment_sizes: Vec<usize> = (0..self.params.len())
+            .map(|idx| {
+                if self.frozen[idx] {
+                    return 0;
+                }
+                match (&self.galore[idx], &self.params[idx]) {
+                    (Some(gp), PTensor::Mat(m)) => gp.proj_numel(m.rows, m.cols),
+                    _ => self.params[idx].numel(),
+                }
+            })
+            .collect();
+        self.optim_m = moment_sizes.iter().map(|&n| Moments::zeros(bits, n)).collect();
+        self.optim_v = moment_sizes.iter().map(|&n| Moments::zeros(bits, n)).collect();
         self.grad_peak.reset();
         let layers = (0..p.n_layers)
             .map(|l| {
@@ -504,6 +674,13 @@ impl NativeBackend {
                 if let Some(sh) = sparse {
                     self.supports[sh.sup].spmm_add_par(x, self.vec1(sh.vals), &mut y, &self.pool);
                 }
+                (y, Some(xb))
+            }
+            LinKind::Relora { w0, b, a } => {
+                let xb = x.matmul_par(self.mat(b), &self.pool);
+                let mut y = xb.matmul_par(self.mat(a), &self.pool);
+                y.scale_mut(self.scale);
+                add_into(&mut y, &x.matmul_par(self.mat(w0), &self.pool));
                 (y, Some(xb))
             }
         }
@@ -547,6 +724,24 @@ impl NativeBackend {
                     acc_grad_vec(grads, sh.vals, dvals);
                     sup.spmm_t_add_par(dy, self.vec1(sh.vals), &mut dx, &self.pool);
                 }
+                dx
+            }
+            LinKind::Relora { w0, b, a } => {
+                // W0 is frozen: no gradient is produced for it (eq. 1
+                // trains the adaptors only); it still routes dL/dx.
+                let xb = xb.unwrap_or_else(|| {
+                    panic!("{}: missing x@B cache", self.lin_paths[lin.0])
+                });
+                let dy_at = dy.matmul_transb_par(self.mat(a), &self.pool); // [n, r]
+                let mut db = xt.matmul_par(&dy_at, &self.pool);
+                db.scale_mut(self.scale);
+                let mut da = xb.transpose().matmul_par(dy, &self.pool);
+                da.scale_mut(self.scale);
+                acc_grad_vec(grads, b, db.data);
+                acc_grad_vec(grads, a, da.data);
+                let mut dx = dy_at.matmul_transb_par(self.mat(b), &self.pool);
+                dx.scale_mut(self.scale);
+                add_into(&mut dx, &dy.matmul_transb_par(self.mat(w0), &self.pool));
                 dx
             }
         }
@@ -949,7 +1144,7 @@ impl NativeBackend {
                 if g.is_empty() {
                     bail!("{}: fused update before gradient", self.param_names[id.0]);
                 }
-                self.apply_param_update(id.0, &g, hy)?;
+                self.apply_param_update(id.0, g, hy)?;
             }
         }
         Ok(())
@@ -968,6 +1163,8 @@ impl NativeBackend {
             LinKind::Factored { b, a, sparse: Some(sh) } => {
                 self.finish_params(grads, &[b, a, sh.vals], fuse)
             }
+            // w0 is frozen: only the adaptors finalize
+            LinKind::Relora { w0: _, b, a } => self.finish_params(grads, &[b, a], fuse),
         }
     }
 
@@ -1023,6 +1220,7 @@ impl NativeBackend {
             eps: ADAM_EPS,
             bc1: 1.0 - ADAM_B1.powf(t),
             bc2: 1.0 - ADAM_B2.powf(t),
+            step,
         }
     }
 
@@ -1033,10 +1231,14 @@ impl NativeBackend {
         Ok(())
     }
 
-    /// One parameter's Adam update (f32 or quantized moments, on the
-    /// pool). Shared by the streaming fused path and `adam_apply`, so
-    /// the two are bitwise-equal by construction.
-    fn apply_param_update(&mut self, idx: usize, g: &[f32], hy: &AdamHyper) -> Result<()> {
+    /// One parameter's optimizer update (f32 or quantized moments, on
+    /// the pool): plain Adam, or — for galore-projected weights — the
+    /// projector refresh + projected-space Adam + project-back of
+    /// `galore_param_update`. Takes the gradient by value (both callers
+    /// are done with it; galore reuses the buffer as a matrix without
+    /// copying). Shared by the streaming fused path and `adam_apply`,
+    /// so the two are bitwise-equal by construction.
+    fn apply_param_update(&mut self, idx: usize, g: Vec<f32>, hy: &AdamHyper) -> Result<()> {
         if g.len() != self.params[idx].numel() {
             bail!(
                 "{}: grad numel {} != param {}",
@@ -1045,29 +1247,113 @@ impl NativeBackend {
                 self.params[idx].numel()
             );
         }
+        if self.frozen[idx] {
+            bail!("{}: gradient produced for a frozen parameter", self.param_names[idx]);
+        }
+        if self.galore[idx].is_some() {
+            return self.galore_param_update(idx, g, hy);
+        }
         optim::adam_update(
             &self.pool,
             hy,
             self.params[idx].data_mut(),
-            g,
+            &g,
             &mut self.optim_m[idx],
             &mut self.optim_v[idx],
         );
         Ok(())
     }
 
+    /// The GaLore step for one adapted weight (Zhao et al. §2, the exact
+    /// recipe of python/compile/optim.py's `galore_update` with the
+    /// subspace iteration replaced by `linalg::svd` — the paper's
+    /// original torch.svd projector, available here because the native
+    /// engine has a real SVD):
+    ///
+    /// 1. every `galore_every` steps (and at step 0) refresh `P` to the
+    ///    top-k singular subspace of the gradient,
+    /// 2. project the gradient (`PᵀG` or `GP`),
+    /// 3. run the Adam moment recurrence *in the projected space*
+    ///    (`optim::adam_direction` — f32 or block-quantized moments),
+    /// 4. project the bias-corrected direction back and apply it scaled
+    ///    by `GALORE_SCALE · lr`.
+    ///
+    /// Every stage is deterministic and thread-count-invariant: the SVD
+    /// is serial f64, the matmuls honor the pool's bitwise contract, and
+    /// the moment kernels partition element/block-independently.
+    fn galore_param_update(&mut self, idx: usize, g: Vec<f32>, hy: &AdamHyper) -> Result<()> {
+        let (rows, cols) = {
+            let m = self.params[idx].mat();
+            (m.rows, m.cols)
+        };
+        let gm = Matrix::from_vec(rows, cols, g);
+        let every = self.galore_every.max(1);
+        // refresh on the period, and immediately whenever no real frame
+        // is installed (fresh init resuming mid-period, weights-only
+        // restore) — a zero P would silently produce zero updates until
+        // the next boundary
+        let ready = self.galore[idx].as_ref().expect("checked by caller").ready;
+        if !ready || (hy.step.max(0) as usize) % every == 0 {
+            let f = crate::linalg::svd::svd(&gm);
+            let gs = self.galore[idx].as_mut().expect("checked by caller");
+            let k = gs.k;
+            gs.set_p(if gs.left {
+                // top-k left singular vectors: [rows, k]
+                Matrix::from_fn(rows, k, |i, j| f.u[(i, j)])
+            } else {
+                // top-k right singular vectors: [cols, k]
+                Matrix::from_fn(cols, k, |i, j| f.vt[(j, i)])
+            });
+        }
+        let gs = self.galore[idx].as_ref().expect("checked by caller");
+        let gp = if gs.left {
+            gs.pt.matmul_par(&gm, &self.pool) // [k, cols]
+        } else {
+            gm.matmul_par(&gs.p, &self.pool) // [rows, k]
+        };
+        if self.optim_m[idx].numel() != gp.data.len() {
+            bail!(
+                "{}: projected moment numel {} != expected {}",
+                self.param_names[idx],
+                self.optim_m[idx].numel(),
+                gp.data.len()
+            );
+        }
+        let mut upd_p = Matrix::zeros(gp.rows, gp.cols);
+        optim::adam_direction(
+            &self.pool,
+            hy,
+            &gp.data,
+            &mut self.optim_m[idx],
+            &mut self.optim_v[idx],
+            &mut upd_p.data,
+        );
+        let upd = if gs.left {
+            gs.p.matmul_par(&upd_p, &self.pool) // [rows, cols]
+        } else {
+            upd_p.matmul_transb_par(&gs.p, &self.pool) // [rows, cols]
+        };
+        let step_scale = hy.lr * GALORE_SCALE;
+        let pd = self.params[idx].data_mut();
+        for (p, u) in pd.iter_mut().zip(&upd.data) {
+            *p -= step_scale * u;
+        }
+        Ok(())
+    }
+
     /// Reference two-phase apply: one pass over fully-accumulated
-    /// `Grads` in ParamId order. Adam is elementwise, so this lands on
-    /// exactly the parameters the streaming fused walk produces — the
-    /// bitwise contract `train_step_two_phase` is tested against.
-    fn adam_apply(&mut self, step: i32, grads: &Grads) -> Result<()> {
+    /// `Grads` in ParamId order, consuming them. Adam is elementwise,
+    /// so this lands on exactly the parameters the streaming fused walk
+    /// produces — the bitwise contract `train_step_two_phase` is tested
+    /// against.
+    fn adam_apply(&mut self, step: i32, grads: Grads) -> Result<()> {
         self.optim_ready()?;
         let hy = self.adam_hyper(step);
-        for idx in 0..grads.len() {
-            if grads[idx].is_empty() {
+        for (idx, g) in grads.into_iter().enumerate() {
+            if g.is_empty() {
                 continue;
             }
-            self.apply_param_update(idx, &grads[idx], &hy)?;
+            self.apply_param_update(idx, g, &hy)?;
         }
         Ok(())
     }
@@ -1081,7 +1367,7 @@ impl NativeBackend {
         self.handles()?;
         self.optim_ready()?;
         let (loss, grads) = self.loss_and_grads(tokens)?;
-        self.adam_apply(step, &grads)?;
+        self.adam_apply(step, grads)?;
         Ok(loss as f32)
     }
 }
@@ -1106,9 +1392,12 @@ impl Backend for NativeBackend {
     }
 
     fn optimizer(&self) -> &str {
-        match self.optim_bits {
-            OptimBits::F32 => "adam",
-            OptimBits::Q8 => "adam8bit",
+        // mirror aot.py's opt_kind naming: the galore projector wraps
+        // the (possibly quantized) Adam moments
+        match (self.method.as_str(), self.optim_bits) {
+            ("galore", _) => "galore",
+            (_, OptimBits::F32) => "adam",
+            (_, OptimBits::Q8) => "adam8bit",
         }
     }
 
@@ -1153,14 +1442,73 @@ impl Backend for NativeBackend {
         Ok(logits.data)
     }
 
+    /// The ReLoRA restart (paper eq. 1): fold `scale·B·A` into the
+    /// frozen `W0`, zero `B`, re-draw `A` (Kaiming, deterministically
+    /// from a root RNG re-seeded with `seed` and forked per linear
+    /// exactly like init: `root.fork(1000 + j).fork(1)`), and
+    /// reset the adaptors' Adam moments — under 8-bit moments that
+    /// zeroes the quantized codes *and* their per-block scales
+    /// (`Moments::zeros`), so no stale moment can warp the first
+    /// post-merge updates. The function the model computes is unchanged
+    /// up to f32 re-association: eval loss is continuous across the
+    /// merge. Bit-identical at every thread count (the fold runs on the
+    /// pool's bitwise-deterministic matmul).
+    fn merge(&mut self, seed: i32) -> Result<()> {
+        if self.method != "relora" {
+            bail!(
+                "merge is the relora restart hook (this backend trains {:?})",
+                self.method
+            );
+        }
+        self.handles()?;
+        let bits = self.optim_bits;
+        let kaiming_r = (2.0f32 / self.preset.rank as f32).sqrt();
+        let root = Rng::new(seed as u32 as u64);
+        let lins = self.lins.clone();
+        let have_moments = self.optim_m.len() == self.params.len();
+        for (j, lin) in lins.into_iter().enumerate() {
+            let LinKind::Relora { w0, b, a } = lin else { continue };
+            // W0 <- W0 + scale * B @ A
+            let ba = self.mat(b).matmul_par(self.mat(a), &self.pool);
+            let scale = self.scale;
+            for (w, x) in self.params[w0.0].data_mut().iter_mut().zip(&ba.data) {
+                *w += scale * x;
+            }
+            // B <- 0; A <- fresh Kaiming from the merge seed, drawn
+            // with init's exact per-linear scheme (base = root.fork(
+            // 1000 + j), A from base.fork(1)) so the documented recipe
+            // holds with root re-seeded from the merge seed
+            self.params[b.0].data_mut().fill(0.0);
+            let base = root.fork(1000 + j as u64);
+            let mut r = base.fork(1);
+            for x in self.params[a.0].data_mut() {
+                *x = r.gaussian() as f32 * kaiming_r;
+            }
+            // reset the re-initialized adaptors' moments (f32 zeros, or
+            // zeroed q8 codes + scales)
+            if have_moments {
+                for id in [b, a] {
+                    let n = self.params[id.0].numel();
+                    self.optim_m[id.0] = Moments::zeros(bits, n);
+                    self.optim_v[id.0] = Moments::zeros(bits, n);
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Drop ALL optimizer state — f32 moments and, under
     /// `--optim-bits 8`, the quantized code buffers *and* their
     /// per-block scales (a stale quantized moment surviving a
     /// ReLoRA-style merge would silently warp the first post-merge
-    /// updates; the unified `Moments` storage makes the drop total).
+    /// updates; the unified `Moments` storage makes the drop total) —
+    /// plus the GaLore projectors, which are optimizer state too.
     fn drop_optimizer_state(&mut self) -> Result<()> {
         self.optim_m.clear();
         self.optim_v.clear();
+        for gs in self.galore.iter_mut().flatten() {
+            gs.clear(0);
+        }
         Ok(())
     }
 
@@ -1168,15 +1516,31 @@ impl Backend for NativeBackend {
         let param_bytes: u64 = self.params.iter().map(|t| (t.numel() * 4) as u64).sum();
         let optim_bytes: u64 =
             self.optim_m.iter().chain(&self.optim_v).map(|m| m.bytes()).sum();
+        // actually-held frame bytes: P plus the cached Pᵀ of the
+        // left-projection hot path
+        let proj_bytes: u64 = self
+            .galore
+            .iter()
+            .flatten()
+            .map(|gs| ((gs.p.data.len() + gs.pt.data.len()) * 4) as u64)
+            .sum();
         let support_bytes: u64 = self.supports.iter().map(|s| s.bytes()).sum();
+        // a two-phase loop holds one f32 gradient per *trainable*
+        // parameter at its peak (relora's frozen W0 never has one)
+        let grad_all_bytes: u64 = self
+            .params
+            .iter()
+            .zip(&self.frozen)
+            .filter(|(_, &fz)| !fz)
+            .map(|(t, _)| (t.numel() * 4) as u64)
+            .sum();
         Some(MemReport {
             param_bytes,
             optim_bytes,
+            proj_bytes,
             support_bytes,
             grad_peak_bytes: self.grad_peak.peak_bytes(),
-            // every parameter is trainable: a two-phase loop holds one
-            // f32 gradient per parameter at its peak
-            grad_all_bytes: param_bytes,
+            grad_all_bytes,
             optim_bits: self.optim_bits.bits() as u32,
         })
     }
@@ -1199,10 +1563,24 @@ impl Backend for NativeBackend {
         // Optimizer moments (resume + the quantized-state round-trip):
         // f32 moments as `optim.{m,v}.<param>`; quantized moments as raw
         // I8 codes `optim.{m,v}.q8.<param>` plus f32 per-block scales
-        // `optim.{m,v}.scale.<param>` — all bit-exact payloads. Dropped
-        // state (Table-5 inference) is simply absent.
+        // `optim.{m,v}.scale.<param>` — all bit-exact payloads. Frozen
+        // parameters (relora W0) carry no moments; galore-projected
+        // parameters carry projected-size moments plus their projector
+        // as `optim.proj.<param>` (resumed moments are meaningless in a
+        // different subspace, so the frame rides along). Dropped state
+        // (Table-5 inference) is simply absent.
         if self.optim_m.len() == self.params.len() && self.optim_v.len() == self.params.len() {
             for (name, &id) in &self.name_to_id {
+                if self.frozen[id] {
+                    continue;
+                }
+                if let Some(gs) = &self.galore[id] {
+                    out.push(StateTensor::f32(
+                        &format!("optim.proj.{name}"),
+                        vec![gs.p.rows, gs.p.cols],
+                        &gs.p.data,
+                    ));
+                }
                 for (tag, mom) in [("m", &self.optim_m[id]), ("v", &self.optim_v[id])] {
                     match mom {
                         Moments::F32(data) => out.push(StateTensor::f32(
@@ -1243,6 +1621,8 @@ impl Backend for NativeBackend {
         let mut staged_params: Vec<(usize, Vec<f32>)> = Vec::new();
         // (param id, is_v, payload)
         let mut staged_moments: Vec<(usize, bool, MomentPart)> = Vec::new();
+        // (param id, projector) — galore subspace frames
+        let mut staged_projs: Vec<(usize, Matrix)> = Vec::new();
         // Pre-scan: a checkpoint written under the other --optim-bits
         // setting is still good for weights/supports, so when ANY of its
         // moment tensors disagrees with this backend's representation,
@@ -1255,6 +1635,10 @@ impl Backend for NativeBackend {
         if self.optim_m.len() == self.params.len() {
             for st in tensors {
                 let Some(rest) = st.name.strip_prefix("optim.") else { continue };
+                if rest.starts_with("proj.") {
+                    // projectors are f32 under either --optim-bits
+                    continue;
+                }
                 let rest = rest
                     .strip_prefix("m.")
                     .or_else(|| rest.strip_prefix("v."))
@@ -1278,15 +1662,48 @@ impl Backend for NativeBackend {
         if skip_moments {
             crate::info!(
                 "checkpoint optimizer moments use a different --optim-bits than this \
-                 backend ({}); restoring weights/supports only",
+                 backend ({}); restoring weights/supports (and galore projectors) only",
                 self.optim_bits.bits()
             );
         }
         for st in tensors {
-            if skip_moments && st.name.starts_with("optim.") {
+            if skip_moments
+                && st.name.starts_with("optim.")
+                && !st.name.starts_with("optim.proj.")
+            {
+                // the projector frame is f32 under either --optim-bits:
+                // keep it through a weights-only fallback, or the
+                // restored backend would run zero-update steps until
+                // its next refresh boundary
                 continue;
             }
             if let Some(rest) = st.name.strip_prefix("optim.") {
+                if let Some(pname) = rest.strip_prefix("proj.") {
+                    let &id = self
+                        .name_to_id
+                        .get(pname)
+                        .ok_or_else(|| anyhow!("{}: unknown parameter for projector", st.name))?;
+                    let Some(gs) = &self.galore[id] else {
+                        bail!("{}: not a galore-projected parameter", st.name);
+                    };
+                    let (rows, cols) = {
+                        let m = self.params[id].mat();
+                        (m.rows, m.cols)
+                    };
+                    let want = gs.proj_shape(rows, cols);
+                    if st.shape != [want.0, want.1] {
+                        bail!(
+                            "{}: projector shape {:?} != expected [{}, {}]",
+                            st.name,
+                            st.shape,
+                            want.0,
+                            want.1
+                        );
+                    }
+                    let data = st.to_f32()?;
+                    staged_projs.push((id, Matrix::from_vec(want.0, want.1, data)));
+                    continue;
+                }
                 let (is_v, rest) = if let Some(r) = rest.strip_prefix("m.") {
                     (false, r)
                 } else if let Some(r) = rest.strip_prefix("v.") {
@@ -1422,6 +1839,10 @@ impl Backend for NativeBackend {
         // restored and stale Adam state and diverge from the saved run
         if !staged_moments.is_empty() {
             for id in 0..self.params.len() {
+                if self.frozen[id] {
+                    // frozen parameters (relora W0) carry no moments
+                    continue;
+                }
                 for is_v in [false, true] {
                     let covered =
                         staged_moments.iter().any(|(oid, ov, _)| *oid == id && *ov == is_v);
@@ -1433,6 +1854,18 @@ impl Backend for NativeBackend {
                             self.param_names[id]
                         );
                     }
+                }
+                // galore moments are coordinates in the projector's
+                // subspace: restoring them without their frame would
+                // silently continue in the wrong basis
+                if self.galore[id].is_some()
+                    && !staged_projs.iter().any(|(pid, _)| *pid == id)
+                {
+                    bail!(
+                        "optim.proj.{}: galore moments restored without their \
+                         projector — the subspace frame must round-trip with them",
+                        self.param_names[id]
+                    );
                 }
             }
         }
@@ -1461,6 +1894,9 @@ impl Backend for NativeBackend {
         }
         for (id, data) in staged_params {
             self.params[id].data_mut().copy_from_slice(&data);
+        }
+        for (id, p) in staged_projs {
+            self.galore[id].as_mut().expect("validated during staging").set_p(p);
         }
         for (id, is_v, part) in staged_moments {
             let mom = if is_v { &mut self.optim_v[id] } else { &mut self.optim_m[id] };
@@ -1520,7 +1956,7 @@ fn rmsnorm_fwd(x: &Matrix, g: &[f32], pool: &ThreadPool) -> (Matrix, Matrix, Vec
 /// Two pool passes, both bit-identical to the serial loop at every
 /// thread count: dx rows are independent (each row's `dot` reduction
 /// stays inside one task, ascending j), and dg is partitioned by
-/// *columns* — every dg[j] accumulates over rows in ascending order,
+/// *columns* — every `dg[j]` accumulates over rows in ascending order,
 /// exactly the per-column order of the serial loop, with no reduction
 /// crossing a task boundary.
 fn rmsnorm_bwd(
@@ -1725,11 +2161,24 @@ mod tests {
         }
     }
 
+    /// Short projector period so micro/tiny runs cross refresh
+    /// boundaries within a handful of steps.
+    const TEST_GALORE_EVERY: usize = 3;
+
     fn micro_backend_threads(method: &str, seed: u32, threads: usize) -> NativeBackend {
         // optim bits 0 = auto, so the CI SLTRAIN_OPTIM_BITS matrix flows
         // through the whole suite
-        let mut be =
-            NativeBackend::build(micro_preset(), method, 2, 3e-3, 100, threads, 0).unwrap();
+        let mut be = NativeBackend::build(
+            micro_preset(),
+            method,
+            2,
+            3e-3,
+            100,
+            threads,
+            0,
+            TEST_GALORE_EVERY,
+        )
+        .unwrap();
         be.init_state(seed).unwrap();
         be
     }
@@ -1740,7 +2189,9 @@ mod tests {
 
     fn tiny_backend(method: &str, seed: u32, threads: usize, bits: usize) -> NativeBackend {
         let p = crate::config::preset("tiny").unwrap();
-        let mut be = NativeBackend::build(p, method, 2, 3e-3, 100, threads, bits).unwrap();
+        let mut be =
+            NativeBackend::build(p, method, 2, 3e-3, 100, threads, bits, TEST_GALORE_EVERY)
+                .unwrap();
         be.init_state(seed).unwrap();
         be
     }
@@ -1757,7 +2208,10 @@ mod tests {
     /// entry with the largest analytic gradient is perturbed.
     #[test]
     fn gradients_match_finite_differences() {
-        for method in ["full", "lowrank", "sltrain"] {
+        // relora checks the frozen-W0 + adaptor backward; galore's
+        // backward is the full path (its rank-r treatment lives in the
+        // optimizer, not the gradient)
+        for method in ["full", "lowrank", "sltrain", "relora", "galore"] {
             let mut be = micro_backend(method, 3);
             let tokens = random_tokens(&be, 11);
             let (_, grads) = be.loss_and_grads(&tokens).unwrap();
@@ -1794,7 +2248,7 @@ mod tests {
 
     #[test]
     fn n_params_matches_preset_formula() {
-        for method in ["full", "lowrank", "sltrain"] {
+        for method in ["full", "lowrank", "sltrain", "relora", "galore"] {
             let be = micro_backend(method, 0);
             assert_eq!(
                 be.n_params(),
@@ -1891,7 +2345,7 @@ mod tests {
         assert!((be.lr_at(5) - be.lr).abs() / be.lr < 1e-3);
         assert!((be.lr_at(10_000) - 0.1 * be.lr).abs() < 1e-6);
         // at the aot.py-default horizon the warmup is exactly 100 steps
-        let long = NativeBackend::build(micro_preset(), "full", 2, 3e-3, 2000, 1, 0).unwrap();
+        let long = NativeBackend::build(micro_preset(), "full", 2, 3e-3, 2000, 1, 0, 0).unwrap();
         assert_eq!(long.warmup_steps(), 100.0);
     }
 
@@ -1901,15 +2355,31 @@ mod tests {
     /// at every thread count, for every method, at --optim-bits 32.
     #[test]
     fn fused_updates_match_two_phase_bitwise() {
-        for method in ["full", "lowrank", "sltrain"] {
+        for method in ["full", "lowrank", "sltrain", "relora", "galore"] {
             for threads in [1usize, 3] {
-                let mut fused =
-                    NativeBackend::build(micro_preset(), method, 2, 3e-3, 100, threads, 32)
-                        .unwrap();
+                let mut fused = NativeBackend::build(
+                    micro_preset(),
+                    method,
+                    2,
+                    3e-3,
+                    100,
+                    threads,
+                    32,
+                    TEST_GALORE_EVERY,
+                )
+                .unwrap();
                 fused.init_state(11).unwrap();
-                let mut twop =
-                    NativeBackend::build(micro_preset(), method, 2, 3e-3, 100, threads, 32)
-                        .unwrap();
+                let mut twop = NativeBackend::build(
+                    micro_preset(),
+                    method,
+                    2,
+                    3e-3,
+                    100,
+                    threads,
+                    32,
+                    TEST_GALORE_EVERY,
+                )
+                .unwrap();
                 twop.init_state(11).unwrap();
                 let tokens = random_tokens(&fused, 13);
                 for step in 0..4 {
@@ -1936,7 +2406,7 @@ mod tests {
     fn q8_gates_small_tensors_and_trains_thread_invariantly() {
         // micro: every tensor is below Q8_MIN_NUMEL -> all f32
         let mut micro =
-            NativeBackend::build(micro_preset(), "sltrain", 2, 3e-3, 100, 1, 8).unwrap();
+            NativeBackend::build(micro_preset(), "sltrain", 2, 3e-3, 100, 1, 8, 0).unwrap();
         micro.init_state(0).unwrap();
         assert!(micro.optim_m.iter().all(|m| !m.is_quantized()), "micro must gate to f32");
         // tiny: embed/head/linears quantize, norm gains stay f32
@@ -2106,6 +2576,303 @@ mod tests {
             .err()
             .expect("load without the v moments must fail");
         assert!(format!("{err}").contains("complete"), "unhelpful error: {err}");
+    }
+
+    /// Both native baselines must actually learn: a repeated batch is
+    /// decisively overfit, with a ReLoRA merge mid-run (the loss must
+    /// keep falling across the restart) and GaLore crossing several
+    /// projector refreshes.
+    #[test]
+    fn relora_and_galore_overfit_one_batch() {
+        for method in ["relora", "galore"] {
+            let mut be = micro_backend(method, 1);
+            let tokens = random_tokens(&be, 5);
+            let first = be.train_step(0, &tokens).unwrap() as f64;
+            let mut last = first;
+            for step in 1..40 {
+                last = be.train_step(step, &tokens).unwrap() as f64;
+                if method == "relora" && step == 20 {
+                    be.merge(step).unwrap();
+                }
+            }
+            assert!(last < first - 0.3, "{method}: {first} -> {last}");
+        }
+    }
+
+    /// The merge contract, both moment precisions: eval loss is
+    /// continuous across the restart (W0 absorbs scale·B·A exactly, up
+    /// to f32 re-association), B returns to zero, A is re-drawn, W0
+    /// moved, and the adaptors' Adam moments are wiped — under 8-bit
+    /// moments the quantized codes *and* the per-block scales.
+    #[test]
+    fn relora_merge_is_loss_continuous_and_resets_moments() {
+        for bits in [32usize, 8] {
+            let mut be = tiny_backend("relora", 7, 2, bits);
+            let tokens = random_tokens(&be, 15);
+            for step in 0..4 {
+                be.train_step(step, &tokens).unwrap();
+            }
+            // pre-merge state of one adapted linear
+            let LinKind::Relora { w0, b, a } = be.lins[0] else {
+                panic!("relora backend must intern Relora linears");
+            };
+            if bits == 8 {
+                assert!(
+                    be.optim_m[b.0].is_quantized(),
+                    "tiny relora B moments must quantize at --optim-bits 8"
+                );
+            }
+            let w0_before = be.params[w0.0].data().to_vec();
+            let a_before = be.params[a.0].data().to_vec();
+            assert!(be.params[b.0].data().iter().any(|&x| x != 0.0), "B trained off zero");
+            let before = be.eval_loss(&tokens).unwrap();
+            be.merge(4).unwrap();
+            let after = be.eval_loss(&tokens).unwrap();
+            assert!(
+                (before - after).abs() < 1e-3,
+                "bits {bits}: merge must be loss-continuous ({before} vs {after})"
+            );
+            assert!(be.params[b.0].data().iter().all(|&x| x == 0.0), "B must reset to zero");
+            assert_ne!(be.params[a.0].data(), &a_before[..], "A must be re-drawn");
+            assert_ne!(be.params[w0.0].data(), &w0_before[..], "W0 must absorb the fold");
+            for lin in be.lins.clone() {
+                let LinKind::Relora { w0, b, a } = lin else { unreachable!() };
+                for id in [b, a] {
+                    for mom in [&be.optim_m[id.0], &be.optim_v[id.0]] {
+                        match mom {
+                            Moments::F32(d) => assert!(
+                                d.iter().all(|&x| x == 0.0),
+                                "bits {bits}: adaptor moments must reset"
+                            ),
+                            Moments::Q8 { codes, scales } => {
+                                assert!(codes.iter().all(|&c| c == 0), "codes must reset");
+                                assert!(scales.iter().all(|&s| s == 0.0), "scales must reset");
+                            }
+                        }
+                    }
+                }
+                // the frozen W0 has no moments to reset
+                assert_eq!(be.optim_m[w0.0].numel(), 0, "W0 must carry no moments");
+            }
+            // training continues cleanly from the merged state
+            be.train_step(4, &tokens).unwrap();
+        }
+    }
+
+    /// ReLoRA trajectories — including the merge fold and the post-merge
+    /// re-init — must be bit-identical at 1, 2 and 4 threads.
+    #[test]
+    fn relora_merge_bit_identical_across_thread_counts() {
+        let mut runs = vec![];
+        for threads in [1usize, 2, 4] {
+            let mut be = micro_backend_threads("relora", 5, threads);
+            let tokens = random_tokens(&be, 9);
+            let mut losses = vec![];
+            for step in 0..3 {
+                losses.push(be.train_step(step, &tokens).unwrap());
+            }
+            be.merge(3).unwrap();
+            for step in 3..6 {
+                losses.push(be.train_step(step, &tokens).unwrap());
+            }
+            let snap = be.state_tensors().unwrap();
+            runs.push((losses, snap));
+        }
+        for (i, threads) in [2usize, 4].iter().enumerate() {
+            assert_eq!(runs[0].0, runs[i + 1].0, "1 vs {threads} threads: losses");
+            for (a, b) in runs[0].1.iter().zip(&runs[i + 1].1) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.bytes, b.bytes, "1 vs {threads} threads: {} drifted", a.name);
+            }
+        }
+    }
+
+    /// Resuming from a checkpoint taken mid-relora-cycle (between two
+    /// merges) must reproduce the no-resume trajectory bit-for-bit,
+    /// merges included — the merge seed is the step number, so restarts
+    /// replay identically. Both moment precisions.
+    #[test]
+    fn relora_resume_mid_cycle_reproduces_trajectory() {
+        for bits in [32usize, 8] {
+            let merge_every = 3i32;
+            let mut be = tiny_backend("relora", 9, 2, bits);
+            let tokens = random_tokens(&be, 3);
+            // coordinator schedule: merge after the step when
+            // step > 0 && step % merge_every == 0
+            for step in 0..5 {
+                be.train_step(step, &tokens).unwrap();
+                if step > 0 && step % merge_every == 0 {
+                    be.merge(step).unwrap();
+                }
+            }
+            // snapshot mid-cycle: after the step-3 merge, before step-6's
+            let snap = be.state_tensors().unwrap();
+            let mut be2 = tiny_backend("relora", 4242, 2, bits); // different init
+            be2.load_state_tensors(&snap).unwrap();
+            for step in 5..9 {
+                let l1 = be.train_step(step, &tokens).unwrap();
+                let l2 = be2.train_step(step, &tokens).unwrap();
+                assert_eq!(l1, l2, "bits {bits}: resumed relora step {step}");
+                if step > 0 && step % merge_every == 0 {
+                    be.merge(step).unwrap();
+                    be2.merge(step).unwrap();
+                }
+            }
+        }
+    }
+
+    /// GaLore's optimizer-byte win, measured: moments live at the
+    /// projected size (k·max(d_in,d_out) per linear instead of
+    /// d_in·d_out), so optimizer bytes sit well under the full-rank
+    /// baseline while parameter bytes are identical; the projector is
+    /// tracked separately and dropped with the optimizer state.
+    #[test]
+    fn galore_moments_projected_and_optimizer_bytes_shrink() {
+        let mut gl = tiny_backend("galore", 1, 2, 32);
+        let full = tiny_backend("full", 1, 2, 32);
+        let rg = gl.mem_report().unwrap();
+        let rf = full.mem_report().unwrap();
+        assert_eq!(rg.param_bytes, rf.param_bytes, "same full-rank weights");
+        assert!(rg.proj_bytes > 0, "galore must hold projectors");
+        assert_eq!(rf.proj_bytes, 0, "full holds no projectors");
+        assert!(
+            rg.optim_bytes + rg.proj_bytes < rf.optim_bytes,
+            "galore optimizer state {} + proj {} must undercut full {}",
+            rg.optim_bytes,
+            rg.proj_bytes,
+            rf.optim_bytes
+        );
+        // projected moment shape: k*max(d) per attention linear
+        let wid = gl.name_to_id["layers.0.attn.q.w"];
+        let p = gl.preset.clone();
+        assert_eq!(gl.optim_m[wid].numel(), p.rank.min(p.d_model) * p.d_model);
+        // drop: moments AND projectors released
+        gl.drop_optimizer_state().unwrap();
+        let rd = gl.mem_report().unwrap();
+        assert_eq!(rd.optim_bytes, 0);
+        assert_eq!(rd.proj_bytes, 0, "projectors are optimizer state");
+    }
+
+    /// The projector refresh (truncated SVD of the step gradient) and
+    /// the projected-space updates must be bit-identical at 1, 2 and 4
+    /// threads, across several refresh boundaries.
+    #[test]
+    fn galore_projector_refresh_deterministic_across_thread_counts() {
+        let mut runs = vec![];
+        for threads in [1usize, 2, 4] {
+            let mut be = micro_backend_threads("galore", 5, threads);
+            assert_eq!(be.galore_every, TEST_GALORE_EVERY);
+            let tokens = random_tokens(&be, 9);
+            let mut losses = vec![];
+            for step in 0..7 {
+                // refreshes at steps 0, 3, 6
+                losses.push(be.train_step(step, &tokens).unwrap());
+            }
+            let snap = be.state_tensors().unwrap();
+            runs.push((losses, snap));
+        }
+        for (i, threads) in [2usize, 4].iter().enumerate() {
+            assert_eq!(runs[0].0, runs[i + 1].0, "1 vs {threads} threads: losses");
+            for (a, b) in runs[0].1.iter().zip(&runs[i + 1].1) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.bytes, b.bytes, "1 vs {threads} threads: {} drifted", a.name);
+            }
+        }
+    }
+
+    /// GaLore state — projected moments AND the projector frame — must
+    /// round-trip through the interchange tensors, and a restored
+    /// backend must continue the exact trajectory across the next
+    /// refresh. A checkpoint carrying galore moments without their
+    /// projector is rejected (moments are meaningless without their
+    /// subspace frame).
+    #[test]
+    fn galore_state_roundtrips_and_requires_projector() {
+        for bits in [32usize, 8] {
+            let mut be = tiny_backend("galore", 9, 2, bits);
+            let tokens = random_tokens(&be, 3);
+            for step in 0..4 {
+                be.train_step(step, &tokens).unwrap();
+            }
+            let snap = be.state_tensors().unwrap();
+            assert!(
+                snap.iter().any(|t| t.name.starts_with("optim.proj.")),
+                "snapshot must carry the projector frames"
+            );
+            let mut be2 = tiny_backend("galore", 777, 2, bits); // different init
+            be2.load_state_tensors(&snap).unwrap();
+            for step in 4..8 {
+                // crosses the refresh at step 6
+                let l1 = be.train_step(step, &tokens).unwrap();
+                let l2 = be2.train_step(step, &tokens).unwrap();
+                assert_eq!(l1, l2, "bits {bits}: resumed galore step {step}");
+            }
+            // moments without their frame must be rejected
+            let no_proj: Vec<StateTensor> = snap
+                .iter()
+                .filter(|t| !t.name.starts_with("optim.proj."))
+                .cloned()
+                .collect();
+            assert!(no_proj.len() < snap.len());
+            let mut be3 = tiny_backend("galore", 9, 2, bits);
+            let err = be3
+                .load_state_tensors(&no_proj)
+                .err()
+                .expect("galore moments without projector must fail");
+            assert!(format!("{err}").contains("projector"), "unhelpful error: {err}");
+        }
+    }
+
+    /// Degraded galore restores must not strand the backend on a zero
+    /// projector (which makes every update a silent no-op until the
+    /// next refresh boundary): a cross-precision load keeps the
+    /// bits-independent `optim.proj.*` frame, and a weights-only load
+    /// (no optim.* at all) triggers an immediate refresh on the first
+    /// step even off the period.
+    #[test]
+    fn degraded_galore_restores_still_update_weights() {
+        let mut src = tiny_backend("galore", 5, 1, 8);
+        let tokens = random_tokens(&src, 4);
+        for step in 0..4 {
+            src.train_step(step, &tokens).unwrap();
+        }
+        let snap = src.state_tensors().unwrap();
+        let wname = "layers.0.attn.q.w";
+
+        // cross-precision (8 -> 32): moments skipped, projector kept
+        let mut dst = tiny_backend("galore", 99, 1, 32);
+        dst.load_state_tensors(&snap).unwrap();
+        let wid = dst.name_to_id[wname];
+        let gs = dst.galore[wid].as_ref().unwrap();
+        assert!(gs.ready && gs.p.data.iter().any(|&x| x != 0.0), "projector must survive");
+        let before = dst.params[wid].data().to_vec();
+        dst.train_step(4, &tokens).unwrap(); // 4 % TEST_GALORE_EVERY != 0
+        assert_ne!(dst.params[wid].data(), &before[..], "step must move the weight");
+
+        // weights-only (no optim.* at all, e.g. cross-backend): the
+        // not-ready frame forces an immediate refresh off the period
+        let weights_only: Vec<StateTensor> =
+            snap.iter().filter(|t| !t.name.starts_with("optim.")).cloned().collect();
+        let mut dst2 = tiny_backend("galore", 7, 1, 32);
+        dst2.load_state_tensors(&weights_only).unwrap();
+        let wid2 = dst2.name_to_id[wname];
+        assert!(!dst2.galore[wid2].as_ref().unwrap().ready);
+        let before = dst2.params[wid2].data().to_vec();
+        dst2.train_step(4, &tokens).unwrap();
+        assert_ne!(dst2.params[wid2].data(), &before[..], "refresh-on-demand must kick in");
+        assert!(dst2.galore[wid2].as_ref().unwrap().ready);
+
+        // a snapshot taken before the first step carries the all-zero
+        // frame: restoring it must not mark the projector live
+        let cold = tiny_backend("galore", 3, 1, 32);
+        let cold_snap = cold.state_tensors().unwrap();
+        let mut dst3 = tiny_backend("galore", 8, 1, 32);
+        dst3.load_state_tensors(&cold_snap).unwrap();
+        let wid3 = dst3.name_to_id[wname];
+        assert!(
+            !dst3.galore[wid3].as_ref().unwrap().ready,
+            "a restored zero frame must stay not-ready"
+        );
     }
 
     /// drop_optimizer_state must drop quantized moments and their

@@ -14,6 +14,8 @@ use super::{Backend, StateTensor};
 use crate::config::ModelPreset;
 use crate::runtime::{lit_f32, lit_i32, lit_i8, Artifact, Dtype, Runtime, State, TensorSpec};
 
+/// The AOT/PJRT execution engine: one loaded artifact bundle plus the
+/// host-resident literal state it trains.
 pub struct XlaBackend {
     /// Process-shared PJRT CPU client (one bring-up per process, not
     /// per artifact open — bench loops sweep many artifacts).
@@ -30,10 +32,12 @@ impl XlaBackend {
         Ok(XlaBackend { rt, art, state: None })
     }
 
+    /// The artifact bundle's manifest (shapes, entrypoints, method).
     pub fn manifest(&self) -> &crate::runtime::Manifest {
         &self.art.manifest
     }
 
+    /// PJRT platform name of the shared client ("cpu", …).
     pub fn platform(&self) -> String {
         self.rt.platform()
     }

@@ -7,6 +7,12 @@
 
 use crate::util::json::Json;
 
+/// The paper's Tables 2–4 comparison set, every one trainable on the
+/// native backend (see docs/METHODS.md for the equation ↔ code map):
+/// `full` (vanilla Adam), `lowrank` (W = scale·BA), `sltrain`
+/// (W = scale·BA ⊕ S, eq. 2), `relora` (W0 + scale·BA with periodic
+/// merges, eq. 1) and `galore` (full-rank W, rank-r gradient
+/// projection in the optimizer).
 pub const METHODS: [&str; 5] = ["full", "lowrank", "sltrain", "relora", "galore"];
 
 #[derive(Debug, Clone, PartialEq)]
@@ -75,7 +81,11 @@ impl ModelPreset {
         ((self.delta * d_in as f64 * d_out as f64).round() as usize).max(1)
     }
 
-    /// Trainable parameter count per method (paper Table 2 "Param").
+    /// Parameter count per method (paper Table 2 "Param"). Counts every
+    /// stored parameter, matching the table's convention: for `relora`
+    /// that includes the frozen `W0` (only the adaptors receive
+    /// gradients), and `galore` equals `full` (its rank-r saving is in
+    /// optimizer state, not parameters — see `mem::estimate`).
     pub fn param_count(&self, method: &str) -> usize {
         let base = self.base_params();
         let linears = self.linear_paths();

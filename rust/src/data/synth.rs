@@ -26,7 +26,7 @@ impl Default for CorpusConfig {
 
 pub struct SynthCorpus {
     words: Vec<String>,
-    /// chain[w] = list of (successor, weight)
+    /// `chain[w]` = list of (successor, weight)
     chain: Vec<Vec<(usize, f64)>>,
     zipf: Zipf,
     cfg: CorpusConfig,

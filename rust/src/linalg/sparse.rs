@@ -28,7 +28,7 @@ pub struct SparseSupport {
     pub idx: Vec<u32>,
     /// Column of each nonzero (idx % d_out), aligned with `idx`.
     cols: Vec<u32>,
-    /// CSR row pointer: nonzeros of row i live in row_ptr[i]..row_ptr[i+1].
+    /// CSR row pointer: nonzeros of row i live in `row_ptr[i]..row_ptr[i+1]`.
     row_ptr: Vec<usize>,
 }
 
@@ -230,7 +230,7 @@ impl SparseSupport {
     }
 
     /// `scatter_grad`, support entries partitioned over the pool. Every
-    /// dvals[k] is computed wholly inside one task with the serial
+    /// `dvals[k]` is computed wholly inside one task with the serial
     /// accumulation order, so results are bit-identical at every thread
     /// count.
     pub fn scatter_grad_par(&self, x: &Matrix, dy: &Matrix, pool: &ThreadPool) -> Vec<f32> {

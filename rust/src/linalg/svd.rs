@@ -5,6 +5,15 @@
 //! accumulated rotations. Cost O(m n^2) per sweep, a handful of sweeps —
 //! fine for the d ≤ 2k weight matrices the analysis benches decompose.
 //! For rows < cols we factor the transpose and swap U/V.
+//!
+//! The GaLore projector refresh (`backend::native`) also runs this on
+//! each adapted linear's gradient — the paper's original torch.svd
+//! recipe. That is a full decomposition to keep only the top-r columns,
+//! so refresh steps are much more expensive than regular ones; the
+//! `--galore-every` period (default 200) amortizes it, and off-refresh
+//! steps pay only rank-r matmuls. If refresh stalls ever matter at
+//! larger scales, the warm-started subspace iteration of
+//! `python/compile/optim.py` (pure matmuls) is the drop-in alternative.
 
 use super::Matrix;
 

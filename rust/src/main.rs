@@ -10,10 +10,11 @@
 //!   prop1         Monte-Carlo check of Proposition 1
 //!
 //! The compute-bearing subcommands take `--backend {native,xla}`.
-//! `native` (the default) needs no artifacts and no XLA: the full
-//! sparse+low-rank trainer runs on the in-crate linalg kernels. `xla`
-//! executes an AOT artifact bundle through PJRT and requires both
-//! `--artifact` and a build with the `xla` cargo feature.
+//! `native` (the default) needs no artifacts and no XLA: all five
+//! methods (full/lowrank/sltrain/relora/galore) run on the in-crate
+//! linalg kernels. `xla` executes an AOT artifact bundle through PJRT
+//! and requires both `--artifact` and a build with the `xla` cargo
+//! feature.
 //!
 //! Examples:
 //!   sltrain train --backend native --config tiny --steps 200
@@ -100,6 +101,12 @@ fn backend_flags(c: Cli) -> Cli {
             "Adam moment precision, native backend: 32 | 8 (block-wise \
              quantized); 0 = auto (SLTRAIN_OPTIM_BITS env, else 32)",
         )
+        .opt(
+            "galore-every",
+            "0",
+            "GaLore projector refresh period in steps, native backend \
+             (0 = default 200; only --method galore uses it)",
+        )
 }
 
 fn backend_spec(a: &Args) -> Result<BackendSpec> {
@@ -124,6 +131,7 @@ fn backend_spec(a: &Args) -> Result<BackendSpec> {
         a.usize("total-steps"),
         a.usize("threads"),
         a.usize("optim-bits"),
+        a.usize("galore-every"),
     )
 }
 
@@ -136,7 +144,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     .opt("eval-every", "50", "evaluation period (0 = only final)")
     .opt("eval-batches", "4", "validation batches per evaluation")
     .opt("log-every", "10", "train-loss log period")
-    .opt("relora-every", "100", "ReLoRA restart period (relora artifacts)")
+    .opt("relora-every", "100", "ReLoRA restart period (--method relora, either backend)")
     .opt("seed", "42", "init + data seed")
     .opt("data-seed", "7", "synthetic corpus seed")
     .opt("metrics", "", "JSONL metrics output path")

@@ -57,10 +57,17 @@ impl MemEstimate {
 /// analytic [`estimate`] below stays the paper-convention (bf16) model.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MemReport {
+    /// All parameter tensors as held (f32), trainable or frozen.
     pub param_bytes: u64,
     /// Optimizer moments as held: 8·numel for f32 Adam, ~2.03·numel for
-    /// the block-wise 8-bit moments.
+    /// the block-wise 8-bit moments. GaLore moments are counted at
+    /// their projected size — the method's optimizer-byte win.
     pub optim_bytes: u64,
+    /// GaLore projector matrices (f32, one rank-r frame per adapted
+    /// linear). Optimizer state, but tracked separately from the
+    /// moments so the f32-vs-8-bit moment comparison stays clean. Zero
+    /// for every other method.
+    pub proj_bytes: u64,
     /// Fixed sparse-support structures (sltrain): flat indices + CSR
     /// arrays. Zero for dense methods.
     pub support_bytes: u64,
@@ -80,10 +87,15 @@ pub struct MemReport {
 }
 
 impl MemReport {
-    /// Params + optimizer + supports + gradient high-water: the
-    /// training-state bytes the engine cannot avoid holding.
+    /// Params + optimizer (moments and projectors) + supports +
+    /// gradient high-water: the training-state bytes the engine cannot
+    /// avoid holding.
     pub fn total_bytes(&self) -> u64 {
-        self.param_bytes + self.optim_bytes + self.support_bytes + self.grad_peak_bytes
+        self.param_bytes
+            + self.optim_bytes
+            + self.proj_bytes
+            + self.support_bytes
+            + self.grad_peak_bytes
     }
 }
 
@@ -318,12 +330,13 @@ mod tests {
         let r = MemReport {
             param_bytes: 10,
             optim_bytes: 20,
+            proj_bytes: 4,
             support_bytes: 3,
             grad_peak_bytes: 5,
             grad_all_bytes: 40,
             optim_bits: 8,
         };
-        assert_eq!(r.total_bytes(), 38);
+        assert_eq!(r.total_bytes(), 42);
     }
 
     #[test]

@@ -18,6 +18,14 @@
 //! block-independent (dequant → update → requant never leaves a block),
 //! so the pool partition cannot change a bit of the result — updates
 //! are bit-identical across runs *and* thread counts.
+//!
+//! Two entry points share the same kernels: [`adam_update`] applies the
+//! step to a parameter in place (the full/lowrank/sltrain/relora path),
+//! and [`adam_direction`] only advances the moments and returns the
+//! bias-corrected direction — the GaLore path, whose moments live in a
+//! projected space of a different shape than the parameter, so the
+//! caller projects the direction back before touching the weights.
+#![deny(missing_docs)]
 
 pub mod quant;
 
@@ -40,11 +48,15 @@ const PAR_CUTOFF: usize = 8192;
 /// Adam moment precision of one backend (`--optim-bits {32,8}`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OptimBits {
+    /// Full-precision f32 moments (`--optim-bits 32`, the default).
     F32,
+    /// Block-wise absmax-quantized 8-bit moments (`--optim-bits 8`),
+    /// for tensors clearing [`Q8_MIN_NUMEL`].
     Q8,
 }
 
 impl OptimBits {
+    /// The flag value this precision corresponds to (32 or 8).
     pub fn bits(self) -> usize {
         match self {
             OptimBits::F32 => 32,
@@ -82,15 +94,26 @@ pub fn resolve_optim_bits(requested: usize) -> Result<OptimBits> {
 /// `--optim-bits 8` *and* the tensor clears [`Q8_MIN_NUMEL`].
 #[derive(Debug, Clone)]
 pub enum Moments {
+    /// Full-precision moments, one f32 per element.
     F32(Vec<f32>),
     /// 8-bit codes + one f32 absmax scale per [`Q8_BLOCK`] codes. For
     /// the first moment the codes hold `m` on the signed grid; for the
     /// second moment they hold `sqrt(v)` on the unsigned 0..=255 grid
     /// (bit-pattern stored as i8; see module docs).
-    Q8 { codes: Vec<i8>, scales: Vec<f32> },
+    Q8 {
+        /// One signed-8 code per element (see the variant doc for what
+        /// the codes represent per moment).
+        codes: Vec<i8>,
+        /// One f32 absmax scale per [`Q8_BLOCK`] codes.
+        scales: Vec<f32>,
+    },
 }
 
 impl Moments {
+    /// Fresh all-zero moments for an `n`-element tensor: quantized when
+    /// the backend runs 8-bit moments *and* `n` clears [`Q8_MIN_NUMEL`],
+    /// f32 otherwise. Zeroing covers the codes *and* the per-block
+    /// scales, so a reset moment decodes to exact zero.
     pub fn zeros(bits: OptimBits, n: usize) -> Moments {
         match bits {
             OptimBits::Q8 if n >= Q8_MIN_NUMEL => Moments::Q8 {
@@ -101,6 +124,7 @@ impl Moments {
         }
     }
 
+    /// Elements tracked (code count for quantized moments).
     pub fn numel(&self) -> usize {
         match self {
             Moments::F32(v) => v.len(),
@@ -116,6 +140,7 @@ impl Moments {
         }
     }
 
+    /// True when this moment is held as 8-bit codes + scales.
     pub fn is_quantized(&self) -> bool {
         matches!(self, Moments::Q8 { .. })
     }
@@ -125,13 +150,22 @@ impl Moments {
 /// fused update of the step uses identical constants.
 #[derive(Debug, Clone, Copy)]
 pub struct AdamHyper {
+    /// Scheduled learning rate of this step.
     pub lr: f32,
+    /// First-moment decay β₁.
     pub beta1: f32,
+    /// Second-moment decay β₂.
     pub beta2: f32,
+    /// Denominator stabilizer ε.
     pub eps: f32,
-    /// Bias corrections `1 − βᵗ`.
+    /// First-moment bias correction `1 − β₁ᵗ`.
     pub bc1: f32,
+    /// Second-moment bias correction `1 − β₂ᵗ`.
     pub bc2: f32,
+    /// The optimizer step these constants were computed for. Carried so
+    /// schedule-dependent optimizer state (the GaLore projector refresh)
+    /// sees the same step in the fused and two-phase paths.
+    pub step: i32,
 }
 
 /// One Adam update `p -= lr · m̂/(√v̂ + ε)` over a full parameter
@@ -214,6 +248,87 @@ pub fn adam_update(
     }
 }
 
+/// Advance the Adam moments on `g` and write the bias-corrected update
+/// direction `m̂/(√v̂ + ε)` into `upd` **without touching a parameter**.
+/// This is [`adam_update`] minus the final `p -= lr·upd` application:
+/// the GaLore optimizer keeps its moments in a rank-r projected space,
+/// so the direction must be projected back to the weight's shape before
+/// it can be applied. Same kernels, same partitioning, same determinism
+/// contract (bit-identical across runs and thread counts).
+pub fn adam_direction(
+    pool: &ThreadPool,
+    h: &AdamHyper,
+    g: &[f32],
+    m: &mut Moments,
+    v: &mut Moments,
+    upd: &mut [f32],
+) {
+    let n = g.len();
+    assert_eq!(upd.len(), n, "adam direction/grad numel mismatch");
+    match (m, v) {
+        (Moments::F32(m), Moments::F32(v)) => {
+            assert_eq!(m.len(), n, "adam m numel");
+            assert_eq!(v.len(), n, "adam v numel");
+            if n <= PAR_CUTOFF || pool.threads() == 1 {
+                adam_dir_f32_chunk(h, g, m, v, upd);
+                return;
+            }
+            let up = SendPtr::new(upd.as_mut_ptr());
+            let mp = SendPtr::new(m.as_mut_ptr());
+            let vp = SendPtr::new(v.as_mut_ptr());
+            par_index_ranges(pool, n, 1, |r| {
+                // SAFETY: ranges are disjoint across tasks; the borrows
+                // outlive the pool run (par_index_ranges blocks).
+                let (us, ms, vs) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(up.get().add(r.start), r.len()),
+                        std::slice::from_raw_parts_mut(mp.get().add(r.start), r.len()),
+                        std::slice::from_raw_parts_mut(vp.get().add(r.start), r.len()),
+                    )
+                };
+                adam_dir_f32_chunk(h, &g[r], ms, vs, us);
+            });
+        }
+        (
+            Moments::Q8 { codes: mc, scales: ms },
+            Moments::Q8 { codes: vc, scales: vs },
+        ) => {
+            assert_eq!(mc.len(), n, "adam m codes numel");
+            assert_eq!(vc.len(), n, "adam v codes numel");
+            assert_eq!(ms.len(), n.div_ceil(Q8_BLOCK), "adam m scales");
+            assert_eq!(vs.len(), n.div_ceil(Q8_BLOCK), "adam v scales");
+            if n <= PAR_CUTOFF || pool.threads() == 1 {
+                adam_dir_q8_chunk(h, g, mc, ms, vc, vs, upd);
+                return;
+            }
+            let up = SendPtr::new(upd.as_mut_ptr());
+            let mcp = SendPtr::new(mc.as_mut_ptr());
+            let msp = SendPtr::new(ms.as_mut_ptr());
+            let vcp = SendPtr::new(vc.as_mut_ptr());
+            let vsp = SendPtr::new(vs.as_mut_ptr());
+            // granule Q8_BLOCK: quantization blocks are never split (see
+            // adam_update's q8 arm for the partition contract)
+            par_index_ranges(pool, n, Q8_BLOCK, |r| {
+                let b0 = r.start / Q8_BLOCK;
+                let b1 = r.end.div_ceil(Q8_BLOCK);
+                // SAFETY: element ranges and block ranges are disjoint
+                // across tasks; borrows outlive the pool run.
+                let (us, mcs, mss, vcs, vss) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(up.get().add(r.start), r.len()),
+                        std::slice::from_raw_parts_mut(mcp.get().add(r.start), r.len()),
+                        std::slice::from_raw_parts_mut(msp.get().add(b0), b1 - b0),
+                        std::slice::from_raw_parts_mut(vcp.get().add(r.start), r.len()),
+                        std::slice::from_raw_parts_mut(vsp.get().add(b0), b1 - b0),
+                    )
+                };
+                adam_dir_q8_chunk(h, &g[r], mcs, mss, vcs, vss, us);
+            });
+        }
+        _ => panic!("adam moments m/v disagree on representation"),
+    }
+}
+
 /// The f32 kernel over one contiguous chunk — the exact expression
 /// order of the pre-refactor serial loop, so the fused/parallel paths
 /// stay bit-identical to it.
@@ -264,6 +379,51 @@ fn adam_q8_chunk(
     }
 }
 
+/// [`adam_f32_chunk`] with the parameter application stripped: same
+/// moment recurrence, but the bias-corrected direction lands in `upd`.
+fn adam_dir_f32_chunk(h: &AdamHyper, g: &[f32], m: &mut [f32], v: &mut [f32], upd: &mut [f32]) {
+    for i in 0..g.len() {
+        m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * g[i];
+        v[i] = h.beta2 * v[i] + (1.0 - h.beta2) * g[i] * g[i];
+        upd[i] = (m[i] / h.bc1) / ((v[i] / h.bc2).sqrt() + h.eps);
+    }
+}
+
+/// [`adam_q8_chunk`] with the parameter application stripped: per
+/// block, dequantize both moments, run the f32 Adam recurrence into
+/// `upd`, requantize (`m` linear, `v` in the sqrt domain).
+fn adam_dir_q8_chunk(
+    h: &AdamHyper,
+    g: &[f32],
+    m_codes: &mut [i8],
+    m_scales: &mut [f32],
+    v_codes: &mut [i8],
+    v_scales: &mut [f32],
+    upd: &mut [f32],
+) {
+    let n = g.len();
+    let mut mbuf = [0.0f32; Q8_BLOCK];
+    let mut vbuf = [0.0f32; Q8_BLOCK];
+    for (b, start) in (0..n).step_by(Q8_BLOCK).enumerate() {
+        let end = (start + Q8_BLOCK).min(n);
+        let msc = m_scales[b];
+        let vsc = v_scales[b];
+        for i in start..end {
+            let k = i - start;
+            let mi = m_codes[i] as f32 * msc;
+            let vroot = dequant_unsigned(v_codes[i], vsc);
+            let vi = vroot * vroot;
+            let mn = h.beta1 * mi + (1.0 - h.beta1) * g[i];
+            let vn = h.beta2 * vi + (1.0 - h.beta2) * g[i] * g[i];
+            upd[i] = (mn / h.bc1) / ((vn / h.bc2).sqrt() + h.eps);
+            mbuf[k] = mn;
+            vbuf[k] = vn.sqrt();
+        }
+        m_scales[b] = quantize_block(&mbuf[..end - start], &mut m_codes[start..end]);
+        v_scales[b] = quantize_block_unsigned(&vbuf[..end - start], &mut v_codes[start..end]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,6 +442,7 @@ mod tests {
             eps: 1e-8,
             bc1: 1.0 - 0.9f32.powf(t),
             bc2: 1.0 - 0.999f32.powf(t),
+            step: step as i32,
         }
     }
 
@@ -370,6 +531,57 @@ mod tests {
         assert!(nf < n0 * 0.9, "f32 Adam failed to descend: {nf} vs {n0}");
         assert!(nq < n0 * 0.9, "q8 Adam failed to descend: {nq} vs {n0}");
         assert!((nf - nq).abs() < n0 * 0.1, "q8 drifted: f32 {nf} vs q8 {nq}");
+    }
+
+    /// adam_direction must advance the moments exactly like adam_update
+    /// and return the direction adam_update would have applied — the
+    /// contract that lets GaLore reuse the Adam kernels with a
+    /// project-back in between. Both precisions, both partition paths.
+    #[test]
+    fn direction_matches_applied_update_bitwise() {
+        for bits in [OptimBits::F32, OptimBits::Q8] {
+            let n = 2 * PAR_CUTOFF + Q8_BLOCK / 2; // parallel path, ragged tail
+            let mut rng = Rng::new(5);
+            let p0: Vec<f32> = randvec(&mut rng, n, 1.0);
+            let g: Vec<f32> = randvec(&mut rng, n, 0.1);
+            for threads in [1usize, 3] {
+                let pool = ThreadPool::new(threads);
+                let mut pa = p0.clone();
+                let mut ma = Moments::Q8 {
+                    codes: vec![0; n],
+                    scales: vec![0.0; n.div_ceil(Q8_BLOCK)],
+                };
+                let mut va = ma.clone();
+                if bits == OptimBits::F32 {
+                    ma = Moments::F32(vec![0.0; n]);
+                    va = Moments::F32(vec![0.0; n]);
+                }
+                let mut mb = ma.clone();
+                let mut vb = va.clone();
+                let mut pb = p0.clone();
+                let mut upd = vec![0.0f32; n];
+                for step in 0..3 {
+                    let h = hyper(step);
+                    adam_update(&pool, &h, &mut pa, &g, &mut ma, &mut va);
+                    adam_direction(&pool, &h, &g, &mut mb, &mut vb, &mut upd);
+                    for i in 0..n {
+                        pb[i] -= h.lr * upd[i];
+                    }
+                }
+                assert_eq!(pa, pb, "{bits:?} x{threads}: applied vs direction params");
+                match (&ma, &mb) {
+                    (Moments::F32(a), Moments::F32(b)) => assert_eq!(a, b),
+                    (
+                        Moments::Q8 { codes: a, scales: sa },
+                        Moments::Q8 { codes: b, scales: sb },
+                    ) => {
+                        assert_eq!(a, b);
+                        assert_eq!(sa, sb);
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
     }
 
     #[test]

@@ -277,6 +277,7 @@ fn native_and_xla_loss_parity_smoke() {
         total_steps: 2000,
         threads: 0,
         optim_bits: 0,
+        galore_every: 0,
     })
     .unwrap();
     let (nf, nl) = run(native);

@@ -16,8 +16,9 @@ fn native_spec(method: &str, batch: usize, steps: usize) -> BackendSpec {
         batch,
         lr: 3e-3,
         total_steps: steps.max(1),
-        threads: 0,    // auto (results are thread-count independent)
-        optim_bits: 0, // auto (SLTRAIN_OPTIM_BITS env matrix flows through)
+        threads: 0,     // auto (results are thread-count independent)
+        optim_bits: 0,  // auto (SLTRAIN_OPTIM_BITS env matrix flows through)
+        galore_every: 5, // short refresh so small runs cross boundaries
     }
 }
 
@@ -60,6 +61,33 @@ fn native_full_and_lowrank_train() {
         let first = r.train_curve.points[0].1;
         let last = r.train_curve.points.last().unwrap().1;
         assert!(last < first, "{method}: {first} -> {last}");
+    }
+}
+
+/// The baseline rows of Tables 2/3 run natively end-to-end: the
+/// coordinator drives relora restarts through `Backend::merge` (the
+/// `relora_every` schedule) and galore's projected optimizer, and both
+/// improve over their initial loss.
+#[test]
+fn native_relora_and_galore_train_through_coordinator() {
+    for method in ["relora", "galore"] {
+        let mut be = open(method, 4, 60);
+        let mut pipe = Pipeline::build(be.preset().vocab, 7);
+        let cfg = TrainConfig {
+            steps: 60,
+            eval_every: 0,
+            eval_batches: 2,
+            log_every: 0,
+            relora_every: 20,
+            ..Default::default()
+        };
+        let r = train(be.as_mut(), &mut pipe, &cfg).unwrap();
+        let first = r.train_curve.points[0].1;
+        let last = r.train_curve.points.last().unwrap().1;
+        assert!(last < first, "{method}: {first} -> {last}");
+        let expect_merges = if method == "relora" { 2 } else { 0 };
+        assert_eq!(r.relora_merges, expect_merges, "{method} merges");
+        assert_eq!(r.n_params, preset("tiny").unwrap().param_count(method), "{method}");
     }
 }
 
@@ -211,24 +239,21 @@ fn native_checkpoint_is_analyzable() {
 #[test]
 fn backend_spec_validation() {
     // unknown engine and missing artifact are caught early
-    assert!(BackendSpec::from_flags("tpu", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0).is_err());
-    assert!(BackendSpec::from_flags("xla", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0).is_err());
-    assert!(BackendSpec::from_flags("native", "", "nope", "sltrain", 8, 3e-3, 100, 0, 0).is_err());
+    assert!(BackendSpec::from_flags("tpu", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0).is_err());
+    assert!(BackendSpec::from_flags("xla", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0).is_err());
+    assert!(
+        BackendSpec::from_flags("native", "", "nope", "sltrain", 8, 3e-3, 100, 0, 0, 0).is_err()
+    );
     // --artifact with the native engine is a misdirected run, not a no-op
     let misdirected =
-        BackendSpec::from_flags("native", "a/dir", "tiny", "sltrain", 8, 3e-3, 100, 0, 0);
+        BackendSpec::from_flags("native", "a/dir", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0);
     assert!(misdirected.is_err());
-    // native relora/galore are rejected at open()
-    let bad = BackendSpec::Native {
-        preset: preset("tiny").unwrap(),
-        method: "relora".into(),
-        batch: 2,
-        lr: 3e-3,
-        total_steps: 10,
-        threads: 1,
-        optim_bits: 0,
-    };
-    assert!(backend::open(bad).is_err());
+    // every method of the paper's comparison set opens natively
+    for method in ["full", "lowrank", "sltrain", "relora", "galore"] {
+        assert!(backend::open(native_spec(method, 2, 10)).is_ok(), "{method}");
+    }
+    // unknown methods are rejected at open()
+    assert!(backend::open(native_spec("lora", 2, 10)).is_err());
     // only 32 and 8 are valid Adam moment precisions
     let bad_bits = BackendSpec::Native {
         preset: preset("tiny").unwrap(),
@@ -238,6 +263,7 @@ fn backend_spec_validation() {
         total_steps: 10,
         threads: 1,
         optim_bits: 16,
+        galore_every: 0,
     };
     assert!(backend::open(bad_bits).is_err());
 }
@@ -268,6 +294,7 @@ fn threaded_step_loop_beats_single_thread() {
             total_steps: 100,
             threads,
             optim_bits: 0,
+            galore_every: 0,
         })
         .unwrap();
         let mut pipe = Pipeline::build(be.preset().vocab, 7);
@@ -308,7 +335,8 @@ fn per_layer_fused_updates_match_two_phase_loop() {
     let mut pipe = Pipeline::build(p.vocab, 7);
     let batches: Vec<Vec<i32>> = (0..5).map(|_| pipe.train.next_batch(4, p.seq_len)).collect();
     let mk = |threads: usize| {
-        let mut be = NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, threads, 32).unwrap();
+        let mut be =
+            NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, threads, 32, 0).unwrap();
         be.init_state(42).unwrap();
         be
     };
@@ -337,7 +365,7 @@ fn per_layer_fused_updates_match_two_phase_loop() {
 fn q8_optimizer_state_roundtrips_through_checkpoint_file() {
     use sltrain::backend::native::NativeBackend;
     let p = preset("tiny").unwrap();
-    let mut be = NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, 0, 8).unwrap();
+    let mut be = NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, 0, 8, 0).unwrap();
     be.init_state(42).unwrap();
     let mut pipe = Pipeline::build(p.vocab, 7);
     let batch: Vec<i32> = pipe.train.next_batch(4, p.seq_len);
@@ -363,7 +391,7 @@ fn q8_optimizer_state_roundtrips_through_checkpoint_file() {
         assert_eq!(back.bytes, st.bytes, "{} bytes drifted", st.name);
     }
 
-    let mut be2 = NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, 0, 8).unwrap();
+    let mut be2 = NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, 0, 8, 0).unwrap();
     be2.init_state(99).unwrap(); // different init, fully overwritten by load
     be2.load_state_tensors(&restored).unwrap();
     for step in 3..6 {
