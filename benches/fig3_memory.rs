@@ -14,6 +14,7 @@
 use sltrain::backend::{self, Backend, BackendSpec};
 use sltrain::bench::{fmt, Table};
 use sltrain::config::preset;
+use sltrain::linalg::SupportPattern;
 use sltrain::data::Pipeline;
 use sltrain::mem::{estimate, MemEstimate, MemOptions};
 use sltrain::util::cli::Cli;
@@ -27,10 +28,12 @@ fn main() -> anyhow::Result<()> {
         .opt("batch", "4", "train batch rows")
         .opt("threads", "0", "step-loop worker threads (0 = auto)")
         .opt("galore-every", "0", "GaLore projector refresh period (0 = default)")
+        .opt("support", "random", "sltrain support pattern: random | n:m")
         .opt("json", "BENCH_memory.json", "machine-readable output path")
         .opt("csv", "results/fig3.csv", "output CSV")
         .parse_env();
     let steps = a.usize("steps").max(1);
+    let support = SupportPattern::parse(&a.str("support")).map_err(anyhow::Error::msg)?;
     let batch = a.usize("batch").max(1);
 
     let mut t = Table::new(
@@ -68,6 +71,7 @@ fn main() -> anyhow::Result<()> {
                     threads: a.usize("threads"),
                     optim_bits: bits,
                     galore_every: a.usize("galore-every"),
+                    support,
                 };
                 // any per-cell failure (open, init, step) skips the cell
                 // so one bad combo can't abort the whole trajectory run
@@ -121,6 +125,7 @@ fn main() -> anyhow::Result<()> {
                     ("config", s(cfgn)),
                     ("method", s(method)),
                     ("optim_bits", num(bits as f64)),
+                    ("support", s(&support.label())),
                     ("param_bytes", num(r.param_bytes as f64)),
                     ("optim_bytes", num(r.optim_bytes as f64)),
                     ("proj_bytes", num(r.proj_bytes as f64)),
@@ -168,6 +173,7 @@ fn main() -> anyhow::Result<()> {
         ("bench", s("fig3_memory")),
         ("steps", num(steps as f64)),
         ("batch", num(batch as f64)),
+        ("support", s(&support.label())),
         ("results", Json::Arr(results)),
     ]);
     std::fs::write(a.str("json"), report.to_string())?;

@@ -17,6 +17,7 @@ use sltrain::backend::{self, Backend, BackendSpec};
 use sltrain::bench::{fmt, Table};
 use sltrain::config::preset;
 use sltrain::data::Pipeline;
+use sltrain::linalg::{simd, SupportPattern};
 use sltrain::util::cli::Cli;
 use sltrain::util::json::{num, obj, s, Json};
 
@@ -29,12 +30,16 @@ fn main() -> anyhow::Result<()> {
         .opt("batch", "8", "train batch rows")
         .opt("optim-bits", "0", "Adam moment precision: 32 | 8 (0 = auto)")
         .opt("galore-every", "0", "GaLore projector refresh period (0 = default)")
+        .opt("support", "random", "sltrain support pattern: random | n:m (e.g. 2:4)")
         .opt("json", "BENCH_steploop.json", "machine-readable output path")
         .opt("csv", "results/perf_steploop.csv", "output CSV")
         .parse_env();
     let steps = a.usize("steps").max(1);
     let batch = a.usize("batch").max(1);
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let support = SupportPattern::parse(&a.str("support")).map_err(anyhow::Error::msg)?;
+    let simd_path = simd::active_path().name();
+    println!("simd microkernel path: {simd_path} (SLTRAIN_SIMD=off forces scalar)");
 
     // data pipeline rate, standalone
     let mut pipe0 = Pipeline::build(4096, 7);
@@ -81,6 +86,7 @@ fn main() -> anyhow::Result<()> {
                     threads,
                     optim_bits: a.usize("optim-bits"),
                     galore_every: a.usize("galore-every"),
+                    support,
                 };
                 let mut be: Box<dyn Backend> = match backend::open(spec) {
                     Ok(be) => be,
@@ -121,6 +127,7 @@ fn main() -> anyhow::Result<()> {
                     ("method", s(method)),
                     ("threads", num(threads as f64)),
                     ("optim_bits", num(optim_bits as f64)),
+                    ("support", s(&support.label())),
                     ("tokens_per_sec", num(tps)),
                     ("step_ms", num(dt / steps as f64 * 1e3)),
                 ]));
@@ -135,6 +142,8 @@ fn main() -> anyhow::Result<()> {
         ("steps", num(steps as f64)),
         ("batch", num(batch as f64)),
         ("cores", num(cores as f64)),
+        ("simd", s(simd_path)),
+        ("support", s(&support.label())),
         ("pipeline_tokens_per_sec", num(pipe_rate)),
         ("results", Json::Arr(results)),
     ]);

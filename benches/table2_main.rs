@@ -20,6 +20,7 @@ use sltrain::backend::{self, BackendSpec};
 use sltrain::bench::{fmt, Table};
 use sltrain::config::preset;
 use sltrain::coordinator::trainer::quick_train;
+use sltrain::linalg::SupportPattern;
 use sltrain::mem::{estimate, MemEstimate, MemOptions};
 use sltrain::util::cli::Cli;
 
@@ -31,10 +32,12 @@ fn main() -> anyhow::Result<()> {
         .opt("threads", "0", "native step-loop worker threads (0 = auto)")
         .opt("optim-bits", "0", "native Adam moment precision: 32 | 8 (0 = auto)")
         .opt("galore-every", "0", "native GaLore projector refresh period (0 = default)")
+        .opt("support", "random", "native sltrain support pattern: random | n:m")
         .opt("csv", "results/table2.csv", "output CSV")
         .parse_env();
     let steps = a.usize("steps");
     let engine = a.str("backend");
+    let support = SupportPattern::parse(&a.str("support")).map_err(anyhow::Error::msg)?;
 
     let mut t = Table::new(
         &format!("Table 2 (scaled) — {} steps, synthetic C4, {} backend", steps, engine),
@@ -68,6 +71,7 @@ fn main() -> anyhow::Result<()> {
                         threads: a.usize("threads"),
                         optim_bits: a.usize("optim-bits"),
                         galore_every: a.usize("galore-every"),
+                        support,
                     }
                 }
             };

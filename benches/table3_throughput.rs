@@ -16,6 +16,7 @@ use sltrain::backend::{self, Backend, BackendSpec};
 use sltrain::bench::{fmt, Table};
 use sltrain::config::preset;
 use sltrain::data::Pipeline;
+use sltrain::linalg::SupportPattern;
 use sltrain::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
@@ -26,10 +27,12 @@ fn main() -> anyhow::Result<()> {
         .opt("threads", "0", "native step-loop worker threads (0 = auto)")
         .opt("optim-bits", "0", "native Adam moment precision: 32 | 8 (0 = auto)")
         .opt("galore-every", "0", "native GaLore projector refresh period (0 = default)")
+        .opt("support", "random", "native sltrain support pattern: random | n:m")
         .opt("csv", "results/table3.csv", "output CSV")
         .parse_env();
     let cfgn = a.str("config");
     let engine = a.str("backend");
+    let support = SupportPattern::parse(&a.str("support")).map_err(anyhow::Error::msg)?;
 
     let mut t = Table::new(
         &format!("Table 3 — tokens/sec, {} ({} backend)", cfgn, engine),
@@ -58,6 +61,7 @@ fn main() -> anyhow::Result<()> {
                     threads: a.usize("threads"),
                     optim_bits: a.usize("optim-bits"),
                     galore_every: a.usize("galore-every"),
+                    support,
                 }
             }
         };

@@ -12,6 +12,7 @@
 use sltrain::backend::{self, Backend, BackendSpec};
 use sltrain::bench::{fmt, Table};
 use sltrain::config::preset;
+use sltrain::linalg::SupportPattern;
 use sltrain::data::Pipeline;
 use sltrain::mem::{breakdown_row, estimate, MemEstimate, MemOptions};
 use sltrain::util::cli::Cli;
@@ -98,6 +99,7 @@ fn main() -> anyhow::Result<()> {
                 threads: 1,
                 optim_bits: bits,
                 galore_every: 0,
+                support: SupportPattern::UniformRandom,
             };
             let mut be: Box<dyn Backend> = backend::open(spec)?;
             be.init_state(42)?;

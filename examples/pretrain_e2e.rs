@@ -43,6 +43,7 @@ fn main() -> Result<()> {
         a.usize("threads"),
         a.usize("optim-bits"),
         0, // galore refresh: unused (this example trains sltrain)
+        "random",
     )?;
     let mut be = backend::open(spec)?;
     let p = be.preset().clone();

@@ -25,6 +25,7 @@ fn main() -> Result<()> {
         .opt("threads", "0", "step-loop worker threads (native backend, 0 = auto)")
         .opt("optim-bits", "0", "Adam moment precision: 32 | 8 (native backend, 0 = auto)")
         .opt("galore-every", "0", "GaLore projector refresh period (0 = default 200)")
+        .opt("support", "random", "sltrain support pattern: random | n:m, e.g. 2:4 (native backend)")
         .parse_env();
     let steps = a.usize("steps");
     let spec = BackendSpec::from_flags(
@@ -38,6 +39,7 @@ fn main() -> Result<()> {
         a.usize("threads"),
         a.usize("optim-bits"),
         a.usize("galore-every"),
+        &a.str("support"),
     )?;
     let mut be = backend::open(spec)?;
     println!(

@@ -34,6 +34,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use crate::config::{preset, ModelPreset};
+use crate::linalg::SupportPattern;
 use crate::runtime::Dtype;
 
 /// One named tensor of backend state, in the interchange layout shared
@@ -246,6 +247,11 @@ pub enum BackendSpec {
         /// (200, the aot.py `galore_refresh` default). Ignored unless
         /// the method is galore.
         galore_every: usize,
+        /// Sparse-support pattern for the sltrain method (`--support`):
+        /// the paper's uniform-random support at the preset's `delta`,
+        /// or SLoPe-style structured N:M (density n/m, vectorizable
+        /// kernels). Ignored by methods without a sparse factor.
+        support: SupportPattern,
     },
 }
 
@@ -265,6 +271,7 @@ impl BackendSpec {
         threads: usize,
         optim_bits: usize,
         galore_every: usize,
+        support: &str,
     ) -> Result<BackendSpec> {
         match backend {
             "xla" => {
@@ -282,6 +289,8 @@ impl BackendSpec {
                 }
                 let p = preset(config)
                     .ok_or_else(|| anyhow::anyhow!("unknown preset {config:?}"))?;
+                let support =
+                    SupportPattern::parse(support).map_err(|e| anyhow::anyhow!("--support: {e}"))?;
                 Ok(BackendSpec::Native {
                     preset: p,
                     method: method.to_string(),
@@ -291,6 +300,7 @@ impl BackendSpec {
                     threads,
                     optim_bits,
                     galore_every,
+                    support,
                 })
             }
             other => bail!("unknown backend {other:?} (expected xla | native)"),
@@ -313,6 +323,7 @@ pub fn open(spec: BackendSpec) -> Result<Box<dyn Backend>> {
             threads,
             optim_bits,
             galore_every,
+            support,
         } => Ok(Box::new(native::NativeBackend::build(
             preset,
             &method,
@@ -322,6 +333,7 @@ pub fn open(spec: BackendSpec) -> Result<Box<dyn Backend>> {
             threads,
             optim_bits,
             galore_every,
+            support,
         )?)),
     }
 }

@@ -77,7 +77,7 @@ use anyhow::{anyhow, bail, Result};
 use super::{Backend, StateTensor};
 use crate::config::ModelPreset;
 use crate::linalg::parallel::{self, par_index_ranges, resolve_threads, SendPtr, ThreadPool};
-use crate::linalg::{Matrix, SparseSupport};
+use crate::linalg::{Matrix, SparseSupport, SupportPattern};
 use crate::mem::{MemReport, PeakTracker};
 use crate::optim::{self, AdamHyper, Moments, OptimBits};
 use crate::util::rng::Rng;
@@ -356,6 +356,10 @@ pub struct NativeBackend {
     optim_bits: OptimBits,
     /// GaLore projector refresh period (steps); method galore only.
     galore_every: usize,
+    /// Sparse-support pattern (`--support`): the paper's uniform-random
+    /// support at the preset's delta, or SLoPe-style structured N:M.
+    /// Used only by methods with a sparse factor (sltrain).
+    support: SupportPattern,
     /// Interned parameter store; `ParamId` indexes all three vectors.
     params: Vec<PTensor>,
     param_names: Vec<String>,
@@ -400,7 +404,13 @@ impl NativeBackend {
         threads: usize,
         optim_bits: usize,
         galore_every: usize,
+        support: SupportPattern,
     ) -> Result<NativeBackend> {
+        if let SupportPattern::StructuredNM { n, m } = support {
+            if n == 0 || m == 0 || n > m || m > 256 {
+                bail!("bad structured support {n}:{m} (need 1 <= n <= m <= 256)");
+            }
+        }
         if !crate::config::METHODS.contains(&method) {
             bail!(
                 "native backend supports full | lowrank | sltrain | relora | galore \
@@ -438,6 +448,7 @@ impl NativeBackend {
             scale,
             optim_bits: optim::resolve_optim_bits(optim_bits)?,
             galore_every: if galore_every == 0 { GALORE_DEFAULT_EVERY } else { galore_every },
+            support,
             params: Vec::new(),
             param_names: Vec::new(),
             optim_m: Vec::new(),
@@ -495,8 +506,9 @@ impl NativeBackend {
     /// Paper §3.3 init, mirroring python `model.init_fn` / `init_linear`:
     /// embed N(0, 0.02), head Kaiming, norm gains 1, per-linear Kaiming A
     /// (+ Kaiming B for lowrank, zero B + uniform ±1/√d_in values for
-    /// sltrain), and one independent uniform support per linear. All
-    /// parameter handles are interned here, once.
+    /// sltrain), and one independent support per linear — uniform random
+    /// at delta or structured N:M, per the configured `SupportPattern`.
+    /// All parameter handles are interned here, once.
     fn init_params(&mut self, seed: u32) {
         let p = self.preset.clone();
         let root = Rng::new(seed as u64);
@@ -608,7 +620,14 @@ impl NativeBackend {
                         PTensor::Mat(gauss_mat(&mut r1, p.rank, d_out, kaiming_r)),
                     );
                     let mut r_sup = base.fork(3);
-                    let sup = SparseSupport::random(d_in, d_out, p.delta, &mut r_sup);
+                    let sup = match self.support {
+                        SupportPattern::UniformRandom => {
+                            SparseSupport::random(d_in, d_out, p.delta, &mut r_sup)
+                        }
+                        SupportPattern::StructuredNM { n, m } => {
+                            SparseSupport::structured_nm(d_in, d_out, n, m, &mut r_sup)
+                        }
+                    };
                     let bound = 1.0f32 / (d_in as f32).sqrt();
                     let vals_data: Vec<f32> =
                         (0..sup.nnz()).map(|_| r2.range_f32(-bound, bound)).collect();
@@ -1793,7 +1812,15 @@ impl Backend for NativeBackend {
                 if idx.iter().any(|&i| i >= bound) {
                     bail!("{}: support index out of range {bound}", st.name);
                 }
-                staged_supports.push((si, SparseSupport::new(sup.d_in, sup.d_out, idx)));
+                let mut reloaded = SparseSupport::new(sup.d_in, sup.d_out, idx);
+                // checkpoints carry only the flat interchange indices;
+                // re-attach the structured fast-path layout when the
+                // reloaded support still conforms (falls back to the
+                // generic CSR kernels — identical results — otherwise)
+                if let SupportPattern::StructuredNM { n, m } = self.support {
+                    reloaded.structure_as_nm(n, m);
+                }
+                staged_supports.push((si, reloaded));
             } else {
                 let data = st.to_f32()?;
                 let &id = self
@@ -2165,7 +2192,12 @@ mod tests {
     /// boundaries within a handful of steps.
     const TEST_GALORE_EVERY: usize = 3;
 
-    fn micro_backend_threads(method: &str, seed: u32, threads: usize) -> NativeBackend {
+    fn micro_backend_support(
+        method: &str,
+        seed: u32,
+        threads: usize,
+        support: SupportPattern,
+    ) -> NativeBackend {
         // optim bits 0 = auto, so the CI SLTRAIN_OPTIM_BITS matrix flows
         // through the whole suite
         let mut be = NativeBackend::build(
@@ -2177,10 +2209,15 @@ mod tests {
             threads,
             0,
             TEST_GALORE_EVERY,
+            support,
         )
         .unwrap();
         be.init_state(seed).unwrap();
         be
+    }
+
+    fn micro_backend_threads(method: &str, seed: u32, threads: usize) -> NativeBackend {
+        micro_backend_support(method, seed, threads, SupportPattern::UniformRandom)
     }
 
     fn micro_backend(method: &str, seed: u32) -> NativeBackend {
@@ -2189,9 +2226,18 @@ mod tests {
 
     fn tiny_backend(method: &str, seed: u32, threads: usize, bits: usize) -> NativeBackend {
         let p = crate::config::preset("tiny").unwrap();
-        let mut be =
-            NativeBackend::build(p, method, 2, 3e-3, 100, threads, bits, TEST_GALORE_EVERY)
-                .unwrap();
+        let mut be = NativeBackend::build(
+            p,
+            method,
+            2,
+            3e-3,
+            100,
+            threads,
+            bits,
+            TEST_GALORE_EVERY,
+            SupportPattern::UniformRandom,
+        )
+        .unwrap();
         be.init_state(seed).unwrap();
         be
     }
@@ -2327,6 +2373,56 @@ mod tests {
         );
     }
 
+    /// SLoPe-style structured 2:4 support trains end-to-end: the loss
+    /// drops, every support row conforms to the N:M layout (fast-path
+    /// kernels engaged), and a state roundtrip into a fresh structured
+    /// backend re-attaches the N:M layout after reload.
+    #[test]
+    fn structured_24_support_trains_and_roundtrips() {
+        let pat = SupportPattern::StructuredNM { n: 2, m: 4 };
+        let mut be = micro_backend_support("sltrain", 9, 2, pat);
+        assert!(
+            be.supports.iter().all(|s| s.nm_pattern() == Some((2, 4))),
+            "structured build must engage the N:M fast path on every linear"
+        );
+        let tokens = random_tokens(&be, 3);
+        let first = be.train_step(0, &tokens).unwrap() as f64;
+        let mut last = first;
+        for step in 1..25 {
+            last = be.train_step(step, &tokens).unwrap() as f64;
+        }
+        assert!(last < first - 0.3, "2:4 sltrain: {first} -> {last}");
+
+        let snap = be.state_tensors().unwrap();
+        let before = be.eval_loss(&tokens).unwrap();
+        let mut be2 = micro_backend_support("sltrain", 1234, 2, pat);
+        be2.load_state_tensors(&snap).unwrap();
+        assert!(
+            be2.supports.iter().all(|s| s.nm_pattern() == Some((2, 4))),
+            "reloaded supports must regain the N:M layout"
+        );
+        let after = be2.eval_loss(&tokens).unwrap();
+        assert!((before - after).abs() < 1e-6, "restored eval {after} != source {before}");
+    }
+
+    /// Structured and random supports are different point sets, so the
+    /// two patterns must produce genuinely different models (the
+    /// table1_support comparison is not vacuous).
+    #[test]
+    fn structured_and_random_supports_differ() {
+        let a = micro_backend_support("sltrain", 9, 1, SupportPattern::UniformRandom);
+        let b = micro_backend_support(
+            "sltrain",
+            9,
+            1,
+            SupportPattern::StructuredNM { n: 2, m: 4 },
+        );
+        assert!(a.supports.iter().all(|s| s.nm_pattern().is_none()));
+        let idx_a: Vec<_> = a.supports.iter().map(|s| s.idx.clone()).collect();
+        let idx_b: Vec<_> = b.supports.iter().map(|s| s.idx.clone()).collect();
+        assert_ne!(idx_a, idx_b, "patterns collapsed to the same support");
+    }
+
     #[test]
     fn forward_shape_and_merge_unsupported() {
         let mut be = micro_backend("full", 2);
@@ -2345,7 +2441,18 @@ mod tests {
         assert!((be.lr_at(5) - be.lr).abs() / be.lr < 1e-3);
         assert!((be.lr_at(10_000) - 0.1 * be.lr).abs() < 1e-6);
         // at the aot.py-default horizon the warmup is exactly 100 steps
-        let long = NativeBackend::build(micro_preset(), "full", 2, 3e-3, 2000, 1, 0, 0).unwrap();
+        let long = NativeBackend::build(
+            micro_preset(),
+            "full",
+            2,
+            3e-3,
+            2000,
+            1,
+            0,
+            0,
+            SupportPattern::UniformRandom,
+        )
+        .unwrap();
         assert_eq!(long.warmup_steps(), 100.0);
     }
 
@@ -2366,6 +2473,7 @@ mod tests {
                     threads,
                     32,
                     TEST_GALORE_EVERY,
+                    SupportPattern::UniformRandom,
                 )
                 .unwrap();
                 fused.init_state(11).unwrap();
@@ -2378,6 +2486,7 @@ mod tests {
                     threads,
                     32,
                     TEST_GALORE_EVERY,
+                    SupportPattern::UniformRandom,
                 )
                 .unwrap();
                 twop.init_state(11).unwrap();
@@ -2406,7 +2515,18 @@ mod tests {
     fn q8_gates_small_tensors_and_trains_thread_invariantly() {
         // micro: every tensor is below Q8_MIN_NUMEL -> all f32
         let mut micro =
-            NativeBackend::build(micro_preset(), "sltrain", 2, 3e-3, 100, 1, 8, 0).unwrap();
+            NativeBackend::build(
+            micro_preset(),
+            "sltrain",
+            2,
+            3e-3,
+            100,
+            1,
+            8,
+            0,
+            SupportPattern::UniformRandom,
+        )
+        .unwrap();
         micro.init_state(0).unwrap();
         assert!(micro.optim_m.iter().all(|m| !m.is_quantized()), "micro must gate to f32");
         // tiny: embed/head/linears quantize, norm gains stay f32

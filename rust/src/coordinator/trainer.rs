@@ -9,7 +9,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::checkpoint::Checkpoint;
 use super::metrics::{perplexity, Curve, Ema, Throughput};
@@ -30,6 +30,12 @@ pub struct TrainConfig {
     pub metrics_path: Option<PathBuf>,
     pub checkpoint_path: Option<PathBuf>,
     pub checkpoint_every: usize,
+    /// Resume from `checkpoint_path` when it exists: restore state and
+    /// the step counter, fast-forward the data stream, and continue to
+    /// `steps`. The resumed trajectory is bit-identical to an
+    /// uninterrupted run (the lr schedule is a pure function of the
+    /// absolute step, and relora merge seeds are step numbers).
+    pub resume: bool,
 }
 
 impl Default for TrainConfig {
@@ -44,6 +50,7 @@ impl Default for TrainConfig {
             metrics_path: None,
             checkpoint_path: None,
             checkpoint_every: 0,
+            resume: false,
         }
     }
 }
@@ -72,6 +79,26 @@ pub fn train(
     let method = backend.method().to_string();
 
     backend.init_state(cfg.seed)?;
+
+    // --resume: restore state + step counter from the checkpoint, then
+    // consume the batches the original run already saw so the data
+    // stream lines up with an uninterrupted trajectory. A missing file
+    // degrades to a fresh start (first run of a restartable job).
+    let mut start_step = 0usize;
+    if cfg.resume {
+        let Some(path) = &cfg.checkpoint_path else {
+            bail!("--resume needs a checkpoint path");
+        };
+        if path.exists() {
+            let ck = Checkpoint::load(path)?;
+            backend.load_state_tensors(&ck.to_state_tensors())?;
+            start_step = ck.step;
+            crate::info!("resumed {path:?} at step {start_step}");
+        } else {
+            crate::info!("resume: no checkpoint at {path:?}, starting fresh");
+        }
+    }
+
     let valid_set = pipe.valid_set(cfg.eval_batches, batch, seq);
 
     let mut metrics = match &cfg.metrics_path {
@@ -89,7 +116,13 @@ pub fn train(
     // so the post-loop save doesn't write the same checkpoint twice
     let mut saved_at_final_step = false;
 
-    for step in 0..cfg.steps {
+    // replay the already-trained prefix of the data stream (cheap: the
+    // synthetic pipeline generates batches, it doesn't store them)
+    for _ in 0..start_step.min(cfg.steps) {
+        pipe.train.next_batch(batch, seq);
+    }
+
+    for step in start_step..cfg.steps {
         let tokens = pipe.train.next_batch(batch, seq);
         let loss = backend.train_step(step as i32, &tokens)? as f64;
         thr.add_tokens((batch * seq) as u64);
@@ -152,7 +185,7 @@ pub fn train(
     };
     if let Some(p) = &cfg.checkpoint_path {
         if !saved_at_final_step {
-            save_checkpoint(backend, cfg.steps, p)?;
+            save_checkpoint(backend, cfg.steps.max(start_step), p)?;
         }
     }
 

@@ -7,12 +7,15 @@
 //! dependencies.
 
 pub mod parallel;
+pub mod simd;
 pub mod sparse;
 pub mod svd;
 
 pub use parallel::ThreadPool;
-pub use sparse::SparseSupport;
+pub use sparse::{SparseSupport, SupportPattern};
 pub use svd::{svd, Svd};
+
+use simd::{MR, NR};
 
 /// Row-major f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -174,17 +177,13 @@ impl Matrix {
 //
 // GEBP-style kernel: B is packed once into zero-padded column panels of
 // width NR; the microkernel keeps an MR x NR accumulator tile in
-// registers and streams the panel, so the inner loop is NR independent
-// FMA lanes (SIMD across the panel) with no loop-carried dependency
-// chain. Crucially each accumulator sums `a[i, l] * b[l, j]` for
-// `l = 0..k` sequentially — the exact order of the naive dot product —
-// so blocking, padding and row-panel threading change performance, not
-// a single output bit.
-
-/// Microkernel tile height (output rows in registers).
-const MR: usize = 4;
-/// Packed panel width (output cols per panel; SIMD-friendly multiple).
-const NR: usize = 8;
+// registers and streams the panel. Full tiles dispatch to the runtime-
+// selected SIMD microkernel in `simd` (AVX2 / NEON / scalar); ragged
+// bottom rows take a scalar edge loop. Crucially every path sums
+// `a[i, l] * b[l, j]` for `l = 0..k` sequentially with unfused mul+add
+// — the exact IEEE rounding sequence of the naive dot product — so
+// blocking, padding, vectorization and row-panel threading change
+// performance, not a single output bit (see `simd` module docs).
 
 /// B packed into `ceil(n / NR)` zero-padded column panels; panel `p`
 /// stores `B[l, p*NR + jj]` at `data[p*k*NR + l*NR + jj]`.
@@ -235,9 +234,23 @@ fn pack_bt(bt: &Matrix) -> PackedB {
 }
 
 /// Compute output rows [r0, r1) of `a @ B` into `out` (row r0 at offset
-/// 0, row-major, width `pb.n`).
-#[allow(clippy::needless_range_loop)]
+/// 0, row-major, width `pb.n`) on the process-wide microkernel path.
 fn gemm_rows(a: &[f32], k: usize, pb: &PackedB, r0: usize, r1: usize, out: &mut [f32]) {
+    gemm_rows_on(simd::active_path(), a, k, pb, r0, r1, out)
+}
+
+/// `gemm_rows` pinned to an explicit microkernel path (the SIMD-vs-scalar
+/// bitwise tests drive both paths through here).
+#[allow(clippy::needless_range_loop)]
+fn gemm_rows_on(
+    path: simd::Path,
+    a: &[f32],
+    k: usize,
+    pb: &PackedB,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
     let n = pb.n;
     debug_assert_eq!(out.len(), (r1 - r0) * n);
     debug_assert_eq!(pb.k, k);
@@ -251,20 +264,10 @@ fn gemm_rows(a: &[f32], k: usize, pb: &PackedB, r0: usize, r1: usize, out: &mut 
             let panel = &pb.data[p * k * NR..(p + 1) * k * NR];
             let mut acc = [[0.0f32; NR]; MR];
             if mr == MR {
-                let a0 = &a[i0 * k..(i0 + 1) * k];
-                let a1 = &a[(i0 + 1) * k..(i0 + 2) * k];
-                let a2 = &a[(i0 + 2) * k..(i0 + 3) * k];
-                let a3 = &a[(i0 + 3) * k..(i0 + 4) * k];
-                for l in 0..k {
-                    let bl: &[f32; NR] = panel[l * NR..l * NR + NR].try_into().unwrap();
-                    let av = [a0[l], a1[l], a2[l], a3[l]];
-                    for ii in 0..MR {
-                        for jj in 0..NR {
-                            acc[ii][jj] += av[ii] * bl[jj];
-                        }
-                    }
-                }
+                simd::tile(path, a, i0, k, panel, &mut acc);
             } else {
+                // ragged bottom rows: scalar edge loop, same `l` order
+                // on every path (so chunk boundaries never change bits)
                 for l in 0..k {
                     let bl: &[f32; NR] = panel[l * NR..l * NR + NR].try_into().unwrap();
                     for ii in 0..mr {
@@ -371,8 +374,21 @@ mod tests {
     #[test]
     fn blocked_matmul_bitwise_matches_naive_on_ragged_shapes() {
         let mut rng = Rng::new(17);
-        // shapes straddling the MR=4 / NR=8 tile edges, incl. k % NR != 0
-        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 9, 17), (13, 31, 6), (8, 2, 24)] {
+        // shapes straddling the MR=8 / NR=8 tile edges, incl. k % NR != 0
+        // and m % MR != 0
+        for (m, k, n) in [
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, 8, 8),
+            (5, 9, 17),
+            (7, 3, 9),
+            (8, 8, 8),
+            (9, 17, 5),
+            (13, 31, 6),
+            (8, 2, 24),
+            (16, 9, 24),
+            (23, 31, 15),
+        ] {
             let a = Matrix::random(m, k, &mut rng);
             let b = Matrix::random(k, n, &mut rng);
             let want = matmul_naive(&a, &b);
@@ -397,6 +413,44 @@ mod tests {
                 a.matmul_transb_par(&b.transpose(), &pool).data,
                 "transb {m}x{k}x{n}"
             );
+        }
+    }
+
+    #[test]
+    fn simd_and_scalar_gemm_paths_bitwise_identical() {
+        // the active microkernel path (AVX2/NEON where detected) must
+        // reproduce the scalar path bit for bit, including ragged
+        // shapes, tiny matrices, and empty dimensions
+        let mut rng = Rng::new(41);
+        let active = simd::active_path();
+        let mut shapes = vec![
+            (0usize, 3usize, 4usize),
+            (3, 0, 4),
+            (4, 3, 0),
+            (1, 1, 1),
+            (8, 8, 8),
+            (9, 13, 17),
+            (16, 5, 9),
+            (23, 31, 15),
+            (64, 33, 40),
+        ];
+        // plus random ragged shapes around the tile edges
+        for _ in 0..20 {
+            shapes.push((
+                1 + rng.below(40) as usize,
+                1 + rng.below(37) as usize,
+                1 + rng.below(29) as usize,
+            ));
+        }
+        for (m, k, n) in shapes {
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let pb = pack_b(&b);
+            let mut got = vec![0.0f32; m * n];
+            gemm_rows_on(active, &a.data, k, &pb, 0, m, &mut got);
+            let mut want = vec![0.0f32; m * n];
+            gemm_rows_on(simd::Path::Scalar, &a.data, k, &pb, 0, m, &mut want);
+            assert_eq!(got, want, "path {active:?} diverges from scalar at {m}x{k}x{n}");
         }
     }
 

@@ -1,0 +1,218 @@
+//! Runtime-dispatched SIMD microkernels for the GEBP matmul core.
+//!
+//! The blocked GEMM in `linalg::mod` spends essentially all of its time
+//! in one microkernel: accumulate an `MR × NR` register tile of
+//! `A @ panel(B)`. This module provides that kernel on three paths —
+//! AVX2 (x86_64), NEON (aarch64) and plain scalar rust — selected once
+//! per process by runtime feature detection.
+//!
+//! **Determinism contract.** The repo guarantees bit-identical results
+//! across thread counts *and* across microkernel paths. The vector
+//! kernels uphold this by construction: they use unfused multiply +
+//! add intrinsics (never FMA), so every output element experiences the
+//! exact same sequence of IEEE-754 f32 roundings, in the same naive
+//! `l = 0..k` order, as the scalar kernel. Widening the tile changes
+//! which elements are computed together, never the per-element order.
+//!
+//! `SLTRAIN_SIMD=off` forces the scalar path (the escape hatch and the
+//! CI cross-check); `SLTRAIN_SIMD=auto` (or unset) picks the widest
+//! available ISA. Anything else aborts with a clear message rather than
+//! silently running a path the operator did not ask for.
+
+use std::sync::OnceLock;
+
+/// Microkernel tile height (output rows held in registers).
+pub const MR: usize = 8;
+/// Packed panel width (output cols per panel; one AVX2 vector, two
+/// NEON vectors).
+pub const NR: usize = 8;
+
+/// The `MR × NR` register accumulator tile.
+pub type Acc = [[f32; NR]; MR];
+
+/// Which instruction set the microkernel dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    /// Plain rust loops — always compiled, forced by `SLTRAIN_SIMD=off`,
+    /// and the bitwise reference every vector path must match.
+    Scalar,
+    /// 8-lane f32 vectors on x86_64 (runtime-detected via cpuid).
+    Avx2,
+    /// Paired 4-lane f32 vectors on aarch64 (baseline feature).
+    Neon,
+}
+
+impl Path {
+    /// Stable lower-case name for logs and bench metadata.
+    pub fn name(self) -> &'static str {
+        match self {
+            Path::Scalar => "scalar",
+            Path::Avx2 => "avx2",
+            Path::Neon => "neon",
+        }
+    }
+}
+
+static ACTIVE: OnceLock<Path> = OnceLock::new();
+
+/// The microkernel path selected for this process. Resolved once from
+/// `SLTRAIN_SIMD` + CPU feature detection and cached (the env var is
+/// read at first use, so set it before any matmul runs).
+pub fn active_path() -> Path {
+    *ACTIVE.get_or_init(|| match std::env::var("SLTRAIN_SIMD") {
+        Err(_) => detect(),
+        Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => detect(),
+            "off" => Path::Scalar,
+            other => panic!("SLTRAIN_SIMD={other:?}: expected \"auto\" or \"off\""),
+        },
+    })
+}
+
+// the scalar tail is unreachable only on aarch64, where NEON is baseline
+#[allow(unreachable_code)]
+fn detect() -> Path {
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        return Path::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    return Path::Neon;
+    Path::Scalar
+}
+
+/// Accumulate `a[i0..i0+MR, 0..k] @ panel` into `acc` on the given path.
+///
+/// `panel` is a zero-padded packed B panel (`panel[l*NR + jj]` holds
+/// `B[l, j0+jj]`). Only `active_path()` (or `Path::Scalar`) may be
+/// passed: the vector variants assume their ISA was runtime-detected.
+#[inline]
+pub fn tile(path: Path, a: &[f32], i0: usize, k: usize, panel: &[f32], acc: &mut Acc) {
+    debug_assert!(panel.len() >= k * NR);
+    debug_assert!(a.len() >= (i0 + MR) * k);
+    #[cfg(target_arch = "x86_64")]
+    if path == Path::Avx2 {
+        // SAFETY: Avx2 is only produced by `detect` after cpuid says so.
+        unsafe { avx2_tile(a, i0, k, panel, acc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path == Path::Neon {
+        // SAFETY: NEON is a baseline feature of every aarch64 target.
+        unsafe { neon_tile(a, i0, k, panel, acc) };
+        return;
+    }
+    let _ = path;
+    scalar_tile(a, i0, k, panel, acc);
+}
+
+/// The reference microkernel: per output element the plain `l = 0..k`
+/// mul-then-add chain, i.e. exactly the naive dot product.
+pub fn scalar_tile(a: &[f32], i0: usize, k: usize, panel: &[f32], acc: &mut Acc) {
+    for l in 0..k {
+        let bl: &[f32; NR] = panel[l * NR..l * NR + NR].try_into().unwrap();
+        for (ii, row) in acc.iter_mut().enumerate() {
+            let av = a[(i0 + ii) * k + l];
+            for (c, &b) in row.iter_mut().zip(bl) {
+                *c += av * b;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_tile(a: &[f32], i0: usize, k: usize, panel: &[f32], acc: &mut Acc) {
+    use std::arch::x86_64::*;
+    let mut v: [__m256; MR] = [_mm256_setzero_ps(); MR];
+    for (vr, row) in v.iter_mut().zip(acc.iter()) {
+        *vr = _mm256_loadu_ps(row.as_ptr());
+    }
+    let ap = a.as_ptr();
+    let pp = panel.as_ptr();
+    for l in 0..k {
+        let bl = _mm256_loadu_ps(pp.add(l * NR));
+        for (ii, vr) in v.iter_mut().enumerate() {
+            let av = _mm256_set1_ps(*ap.add((i0 + ii) * k + l));
+            // unfused mul + add — NOT _mm256_fmadd_ps: two IEEE
+            // roundings per lane, matching the scalar kernel bit for bit
+            *vr = _mm256_add_ps(*vr, _mm256_mul_ps(av, bl));
+        }
+    }
+    for (row, vr) in acc.iter_mut().zip(v.iter()) {
+        _mm256_storeu_ps(row.as_mut_ptr(), *vr);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn neon_tile(a: &[f32], i0: usize, k: usize, panel: &[f32], acc: &mut Acc) {
+    use std::arch::aarch64::*;
+    let mut lo = [vdupq_n_f32(0.0); MR];
+    let mut hi = [vdupq_n_f32(0.0); MR];
+    for (ii, row) in acc.iter().enumerate() {
+        lo[ii] = vld1q_f32(row.as_ptr());
+        hi[ii] = vld1q_f32(row.as_ptr().add(4));
+    }
+    let ap = a.as_ptr();
+    let pp = panel.as_ptr();
+    for l in 0..k {
+        let b0 = vld1q_f32(pp.add(l * NR));
+        let b1 = vld1q_f32(pp.add(l * NR + 4));
+        for (ii, (lv, hv)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+            let av = vdupq_n_f32(*ap.add((i0 + ii) * k + l));
+            // unfused mul + add — NOT vfmaq_f32: two IEEE roundings per
+            // lane, matching the scalar kernel bit for bit
+            *lv = vaddq_f32(*lv, vmulq_f32(av, b0));
+            *hv = vaddq_f32(*hv, vmulq_f32(av, b1));
+        }
+    }
+    for (ii, row) in acc.iter_mut().enumerate() {
+        vst1q_f32(row.as_mut_ptr(), lo[ii]);
+        vst1q_f32(row.as_mut_ptr().add(4), hi[ii]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn path_names_are_stable() {
+        assert_eq!(Path::Scalar.name(), "scalar");
+        assert_eq!(Path::Avx2.name(), "avx2");
+        assert_eq!(Path::Neon.name(), "neon");
+    }
+
+    #[test]
+    fn active_path_is_cached_and_valid() {
+        let p = active_path();
+        assert_eq!(p, active_path(), "path must be stable within a process");
+        if std::env::var("SLTRAIN_SIMD").as_deref() == Ok("off") {
+            assert_eq!(p, Path::Scalar);
+        }
+    }
+
+    #[test]
+    fn vector_tile_bitwise_matches_scalar_tile() {
+        // ragged k (k % NR != 0), k == 0, and accumulation on top of a
+        // non-zero starting tile — every case must agree bit for bit
+        let mut rng = Rng::new(7);
+        for k in [0usize, 1, 3, 8, 13, 64, 129] {
+            let a: Vec<f32> = (0..(MR + 2) * k.max(1)).map(|_| rng.gaussian() as f32).collect();
+            let panel: Vec<f32> = (0..k * NR).map(|_| rng.gaussian() as f32).collect();
+            let mut start = [[0.0f32; NR]; MR];
+            for row in start.iter_mut() {
+                for c in row.iter_mut() {
+                    *c = rng.gaussian() as f32;
+                }
+            }
+            let mut got = start;
+            tile(active_path(), &a, 0, k, &panel, &mut got);
+            let mut want = start;
+            scalar_tile(&a, 0, k, &panel, &mut want);
+            assert_eq!(got, want, "path {:?} diverges at k={k}", active_path());
+        }
+    }
+}

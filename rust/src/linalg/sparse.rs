@@ -13,13 +13,111 @@
 //!                     paper's eq. (2) sparse gradient, never
 //!                     materializing the dense d_in × d_out matrix
 //!   * `fused_effective`  W = scale·(B@A) ⊕_idx vals  (Algorithm 1 line 4)
+//!
+//! Two support *patterns* share this machinery (`SupportPattern`): the
+//! paper's uniform-random support, and SLoPe-style structured N:M
+//! (`n` nonzeros in every aligned group of `m` consecutive columns).
+//! A structured support carries an extra `NmLayout` that lets the
+//! kernels walk fixed-trip-count groups with contiguous value blocks
+//! and byte-sized in-group offsets instead of per-entry u32 column
+//! gathers — same entry order, so results are bit-identical to the
+//! generic CSR path; only speed differs.
 
 use super::parallel::{self, ThreadPool};
 use super::Matrix;
 use crate::util::rng::Rng;
 
+/// How the fixed support of the sparse factor is chosen and laid out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SupportPattern {
+    /// `nnz = round(delta · d_in · d_out)` entries drawn uniformly at
+    /// random — the paper's §3.2 strategy.
+    UniformRandom,
+    /// `n` nonzeros in every aligned group of `m` consecutive columns,
+    /// per row (SLoPe's 2:4 scheme generalized). Density is `n/m`;
+    /// the preset's `delta` is ignored.
+    StructuredNM {
+        /// Nonzeros kept per group.
+        n: usize,
+        /// Group width in columns (≤ 256 so in-group offsets fit a byte).
+        m: usize,
+    },
+}
+
+impl SupportPattern {
+    /// Parse a CLI support spec: `random`, or `n:m` (e.g. `2:4`).
+    pub fn parse(s: &str) -> Result<SupportPattern, String> {
+        let t = s.trim();
+        if t.is_empty() || t == "random" {
+            return Ok(SupportPattern::UniformRandom);
+        }
+        if let Some((ns, ms)) = t.split_once(':') {
+            let parse = |x: &str| {
+                x.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad support pattern {s:?}: {x:?} is not a number"))
+            };
+            let (n, m) = (parse(ns)?, parse(ms)?);
+            if n == 0 || m == 0 || n > m || m > 256 {
+                return Err(format!(
+                    "bad support pattern {s:?}: need 1 <= n <= m <= 256"
+                ));
+            }
+            return Ok(SupportPattern::StructuredNM { n, m });
+        }
+        Err(format!("unknown support pattern {s:?} (expected \"random\" or \"n:m\", e.g. \"2:4\")"))
+    }
+
+    /// Stable label for logs, benches and CSV rows.
+    pub fn label(&self) -> String {
+        match self {
+            SupportPattern::UniformRandom => "random".to_string(),
+            SupportPattern::StructuredNM { n, m } => format!("{n}:{m}"),
+        }
+    }
+
+    /// Fraction of entries kept: `Some(n/m)` for structured patterns,
+    /// `None` for random (density comes from the preset's `delta`).
+    pub fn density(&self) -> Option<f64> {
+        match self {
+            SupportPattern::UniformRandom => None,
+            SupportPattern::StructuredNM { n, m } => Some(*n as f64 / *m as f64),
+        }
+    }
+}
+
+impl std::fmt::Display for SupportPattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// The structured-N:M fast-path layout: with every row holding exactly
+/// `n` entries per complete `m`-wide group (plus `min(n, d_out % m)` in
+/// the ragged tail group), group boundaries are pure arithmetic and
+/// each entry's column is `group·m + off` with a byte-sized `off`.
+#[derive(Debug, Clone)]
+struct NmLayout {
+    n: usize,
+    m: usize,
+    /// In-group column offset (`col % m`) of each entry, aligned with `idx`.
+    offs: Vec<u8>,
+    /// Complete m-wide groups per row (`d_out / m`).
+    full_groups: usize,
+    /// Entries in the ragged tail group (`min(n, d_out % m)`).
+    tail: usize,
+}
+
+impl NmLayout {
+    /// Entries per row (uniform across rows by construction).
+    fn per_row(&self) -> usize {
+        self.full_groups * self.n + self.tail
+    }
+}
+
 /// A fixed sparse support over a `d_in × d_out` matrix: sorted flat
-/// row-major COO indices plus the derived CSR row partition.
+/// row-major COO indices plus the derived CSR row partition, and — for
+/// conforming N:M supports — the structured fast-path layout.
 #[derive(Debug, Clone)]
 pub struct SparseSupport {
     pub d_in: usize,
@@ -30,6 +128,8 @@ pub struct SparseSupport {
     cols: Vec<u32>,
     /// CSR row pointer: nonzeros of row i live in `row_ptr[i]..row_ptr[i+1]`.
     row_ptr: Vec<usize>,
+    /// Structured-N:M layout when the support conforms (`None` = generic).
+    nm: Option<NmLayout>,
 }
 
 impl SparseSupport {
@@ -48,7 +148,81 @@ impl SparseSupport {
         for r in 0..d_in {
             row_ptr[r + 1] += row_ptr[r];
         }
-        SparseSupport { d_in, d_out, idx, cols, row_ptr }
+        SparseSupport { d_in, d_out, idx, cols, row_ptr, nm: None }
+    }
+
+    /// Structured N:M support: in every row, `n` distinct columns drawn
+    /// per aligned `m`-wide group (and `min(n, tail)` in the ragged tail
+    /// of `d_out % m` columns). Density is `n/m` by construction; the
+    /// returned support carries the vectorizable fast-path layout.
+    pub fn structured_nm(d_in: usize, d_out: usize, n: usize, m: usize, rng: &mut Rng) -> Self {
+        assert!(n >= 1 && n <= m && m <= 256, "bad N:M pattern {n}:{m}");
+        assert!(d_out > 0 && d_in > 0, "empty support shape");
+        let full_groups = d_out / m;
+        let tail_cols = d_out % m;
+        let tail = n.min(tail_cols);
+        let mut idx = Vec::with_capacity(d_in * (full_groups * n + tail));
+        for i in 0..d_in {
+            let row0 = (i * d_out) as u32;
+            for g in 0..full_groups {
+                let base = row0 + (g * m) as u32;
+                for off in rng.sample_without_replacement(m as u64, n) {
+                    idx.push(base + off as u32);
+                }
+            }
+            if tail > 0 {
+                let base = row0 + (full_groups * m) as u32;
+                for off in rng.sample_without_replacement(tail_cols as u64, tail) {
+                    idx.push(base + off as u32);
+                }
+            }
+        }
+        let mut sup = SparseSupport::new(d_in, d_out, idx);
+        let ok = sup.structure_as_nm(n, m);
+        debug_assert!(ok, "freshly generated N:M support must conform");
+        sup
+    }
+
+    /// Attach the structured N:M fast-path layout if the support
+    /// conforms (exactly `n` entries in every complete `m`-wide group
+    /// and `min(n, d_out % m)` in the tail group, for every row).
+    /// Returns whether it attached. A non-conforming support keeps the
+    /// generic CSR kernels — results are identical either way, only
+    /// speed differs; this is how checkpoint-reloaded supports regain
+    /// the fast path.
+    pub fn structure_as_nm(&mut self, n: usize, m: usize) -> bool {
+        if n == 0 || m == 0 || n > m || m > 256 {
+            return false;
+        }
+        let full_groups = self.d_out / m;
+        let tail_cols = self.d_out % m;
+        let tail = n.min(tail_cols);
+        let per_row = full_groups * n + tail;
+        if self.idx.len() != self.d_in * per_row {
+            return false;
+        }
+        let mut offs = Vec::with_capacity(self.idx.len());
+        for i in 0..self.d_in {
+            if self.row_ptr[i] != i * per_row {
+                return false;
+            }
+            for (e, k) in (self.row_ptr[i]..self.row_ptr[i] + per_row).enumerate() {
+                let col = self.cols[k] as usize;
+                // entry e of the row must live in group e/n (tail last)
+                let want_g = if e < full_groups * n { e / n } else { full_groups };
+                if col / m != want_g {
+                    return false;
+                }
+                offs.push((col - want_g * m) as u8);
+            }
+        }
+        self.nm = Some(NmLayout { n, m, offs, full_groups, tail });
+        true
+    }
+
+    /// The structured pattern this support is laid out as, if any.
+    pub fn nm_pattern(&self) -> Option<(usize, usize)> {
+        self.nm.as_ref().map(|l| (l.n, l.m))
     }
 
     /// Uniform random support with `nnz = max(1, round(delta·d_in·d_out))`
@@ -70,12 +244,14 @@ impl SparseSupport {
     }
 
     /// Bytes actually held by the fixed support: the flat u32 indices
-    /// plus the derived CSR arrays (cols + row pointer). Counted by the
-    /// backend's `mem_report` — supports are training state too.
+    /// plus the derived CSR arrays (cols + row pointer) plus, for
+    /// structured supports, the byte-sized in-group offsets. Counted by
+    /// the backend's `mem_report` — supports are training state too.
     pub fn bytes(&self) -> u64 {
         (self.idx.len() * 4
             + self.cols.len() * 4
-            + self.row_ptr.len() * std::mem::size_of::<usize>()) as u64
+            + self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.nm.as_ref().map_or(0, |l| l.offs.len())) as u64
     }
 
     /// Scatter-add the values into a dense [d_in, d_out] matrix (the ⊕).
@@ -109,6 +285,9 @@ impl SparseSupport {
     /// One batch row of `y += x @ S` (shared by the serial and the
     /// row-partitioned parallel drivers; fixed accumulation order).
     fn spmm_row(&self, x_row: &[f32], vals: &[f32], y_row: &mut [f32]) {
+        if let Some(nm) = &self.nm {
+            return self.spmm_row_nm(nm, x_row, vals, y_row);
+        }
         for i in 0..self.d_in {
             let xv = x_row[i];
             if xv == 0.0 {
@@ -120,14 +299,65 @@ impl SparseSupport {
         }
     }
 
+    /// `spmm_row` on the structured-N:M layout: fixed-trip-count group
+    /// loops, contiguous value blocks, byte offsets into an m-wide
+    /// window — no per-entry u32 column gather. Entry order (ascending
+    /// k) is identical to the generic path, so results are bitwise equal.
+    fn spmm_row_nm(&self, nm: &NmLayout, x_row: &[f32], vals: &[f32], y_row: &mut [f32]) {
+        let per_row = nm.per_row();
+        for i in 0..self.d_in {
+            let xv = x_row[i];
+            if xv == 0.0 {
+                continue;
+            }
+            let mut k = i * per_row;
+            for g in 0..nm.full_groups {
+                let y_g = &mut y_row[g * nm.m..(g + 1) * nm.m];
+                for e in 0..nm.n {
+                    y_g[nm.offs[k + e] as usize] += xv * vals[k + e];
+                }
+                k += nm.n;
+            }
+            let base = nm.full_groups * nm.m;
+            for e in 0..nm.tail {
+                y_row[base + nm.offs[k + e] as usize] += xv * vals[k + e];
+            }
+        }
+    }
+
     /// One batch row of `dx += dy @ S^T`.
     fn spmm_t_row(&self, dy_row: &[f32], vals: &[f32], dx_row: &mut [f32]) {
+        if let Some(nm) = &self.nm {
+            return self.spmm_t_row_nm(nm, dy_row, vals, dx_row);
+        }
         for i in 0..self.d_in {
             let mut acc = 0.0f32;
             for k in self.row_ptr[i]..self.row_ptr[i + 1] {
                 acc += dy_row[self.cols[k] as usize] * vals[k];
             }
             dx_row[i] += acc;
+        }
+    }
+
+    /// `spmm_t_row` on the structured-N:M layout (same entry order as
+    /// the generic path — bitwise-equal results, vectorizable loops).
+    fn spmm_t_row_nm(&self, nm: &NmLayout, dy_row: &[f32], vals: &[f32], dx_row: &mut [f32]) {
+        let per_row = nm.per_row();
+        for (i, dx) in dx_row.iter_mut().enumerate().take(self.d_in) {
+            let mut acc = 0.0f32;
+            let mut k = i * per_row;
+            for g in 0..nm.full_groups {
+                let dy_g = &dy_row[g * nm.m..(g + 1) * nm.m];
+                for e in 0..nm.n {
+                    acc += dy_g[nm.offs[k + e] as usize] * vals[k + e];
+                }
+                k += nm.n;
+            }
+            let base = nm.full_groups * nm.m;
+            for e in 0..nm.tail {
+                acc += dy_row[base + nm.offs[k + e] as usize] * vals[k + e];
+            }
+            *dx += acc;
         }
     }
 
@@ -208,10 +438,19 @@ impl SparseSupport {
     }
 
     /// One support entry of eq. (2): `Σ_n x[n, row_k] · dy[n, col_k]`,
-    /// accumulated in ascending n (fixed order).
+    /// accumulated in ascending n (fixed order). On the structured-N:M
+    /// layout, (row, col) come from group arithmetic + the byte offset
+    /// instead of the idx/cols gathers — same sum, same order.
     fn scatter_grad_at(&self, x: &Matrix, dy: &Matrix, k: usize) -> f32 {
-        let i = self.idx[k] as usize / self.d_out;
-        let c = self.cols[k] as usize;
+        let (i, c) = match &self.nm {
+            Some(nm) => {
+                let per_row = nm.per_row();
+                let e = k % per_row;
+                let g = if e < nm.full_groups * nm.n { e / nm.n } else { nm.full_groups };
+                (k / per_row, g * nm.m + nm.offs[k] as usize)
+            }
+            None => (self.idx[k] as usize / self.d_out, self.cols[k] as usize),
+        };
         let mut acc = 0.0f32;
         for n in 0..x.rows {
             acc += x.data[n * self.d_in + i] * dy.data[n * self.d_out + c];
@@ -359,6 +598,123 @@ mod tests {
             sup.fused_effective_par(&b, &a, &vals, 2.0, &pool).data,
             "fused"
         );
+    }
+
+    #[test]
+    fn support_pattern_parses_and_labels() {
+        assert_eq!(SupportPattern::parse("random").unwrap(), SupportPattern::UniformRandom);
+        assert_eq!(SupportPattern::parse("").unwrap(), SupportPattern::UniformRandom);
+        assert_eq!(
+            SupportPattern::parse("2:4").unwrap(),
+            SupportPattern::StructuredNM { n: 2, m: 4 }
+        );
+        assert_eq!(
+            SupportPattern::parse(" 1:32 ").unwrap(),
+            SupportPattern::StructuredNM { n: 1, m: 32 }
+        );
+        assert_eq!(SupportPattern::parse("2:4").unwrap().label(), "2:4");
+        assert_eq!(SupportPattern::parse("random").unwrap().label(), "random");
+        assert_eq!(SupportPattern::parse("2:4").unwrap().density(), Some(0.5));
+        assert!(SupportPattern::parse("4:2").is_err());
+        assert!(SupportPattern::parse("0:4").is_err());
+        assert!(SupportPattern::parse("2:999").is_err());
+        assert!(SupportPattern::parse("dense").is_err());
+    }
+
+    #[test]
+    fn structured_nm_support_conforms() {
+        let mut rng = Rng::new(11);
+        // d_out = 10 exercises the ragged tail group (10 % 4 = 2)
+        for (d_in, d_out, n, m) in [(7, 12, 2, 4), (5, 10, 2, 4), (6, 9, 1, 3), (4, 16, 3, 8)] {
+            let sup = SparseSupport::structured_nm(d_in, d_out, n, m, &mut rng);
+            assert_eq!(sup.nm_pattern(), Some((n, m)));
+            assert!(sup.idx.windows(2).all(|w| w[0] < w[1]), "sorted-distinct");
+            let full_groups = d_out / m;
+            let tail = n.min(d_out % m);
+            assert_eq!(sup.nnz(), d_in * (full_groups * n + tail), "{n}:{m} on {d_in}x{d_out}");
+            // count entries per (row, group)
+            for i in 0..d_in {
+                let mut per_group = vec![0usize; full_groups + 1];
+                for k in sup.row_ptr[i]..sup.row_ptr[i + 1] {
+                    per_group[sup.cols[k] as usize / m] += 1;
+                }
+                for (g, &c) in per_group.iter().enumerate() {
+                    let want = if g < full_groups { n } else { tail };
+                    assert_eq!(c, want, "row {i} group {g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn structure_as_nm_rejects_nonconforming_supports() {
+        let mut rng = Rng::new(12);
+        let mut sup = SparseSupport::random(9, 16, 0.5, &mut rng);
+        assert!(!sup.structure_as_nm(2, 4), "random support should not conform");
+        assert_eq!(sup.nm_pattern(), None);
+        // a conforming support reloaded through the flat-idx interchange
+        // format regains the fast path
+        let orig = SparseSupport::structured_nm(9, 16, 2, 4, &mut rng);
+        let mut reloaded = SparseSupport::new(9, 16, orig.idx.clone());
+        assert_eq!(reloaded.nm_pattern(), None);
+        assert!(reloaded.structure_as_nm(2, 4));
+        assert_eq!(reloaded.nm_pattern(), Some((2, 4)));
+    }
+
+    #[test]
+    fn nm_kernels_bitwise_match_generic_csr() {
+        // the structured fast path must agree bit for bit with the
+        // generic CSR kernels on the same support, serially and at
+        // 1/2/4 threads — for spmm, spmm_t and scatter_grad
+        let mut rng = Rng::new(13);
+        for (d_in, d_out, n, m) in [(12, 16, 2, 4), (9, 10, 2, 4), (8, 9, 1, 3), (6, 24, 3, 8)] {
+            let fast = SparseSupport::structured_nm(d_in, d_out, n, m, &mut rng);
+            // same support, forced onto the generic path
+            let generic = SparseSupport::new(d_in, d_out, fast.idx.clone());
+            let vals: Vec<f32> = (0..fast.nnz()).map(|_| rng.gaussian() as f32).collect();
+            let x = Matrix::random(7, d_in, &mut rng);
+            let dy = Matrix::random(7, d_out, &mut rng);
+
+            assert_eq!(fast.spmm(&x, &vals).data, generic.spmm(&x, &vals).data, "spmm {n}:{m}");
+            assert_eq!(
+                fast.spmm_t(&dy, &vals).data,
+                generic.spmm_t(&dy, &vals).data,
+                "spmm_t {n}:{m}"
+            );
+            assert_eq!(
+                fast.scatter_grad(&x, &dy),
+                generic.scatter_grad(&x, &dy),
+                "scatter_grad {n}:{m}"
+            );
+            for threads in [1usize, 2, 4] {
+                let pool = ThreadPool::new(threads);
+                let mut y_f = Matrix::zeros(7, d_out);
+                fast.spmm_add_par(&x, &vals, &mut y_f, &pool);
+                let mut y_g = Matrix::zeros(7, d_out);
+                generic.spmm_add_par(&x, &vals, &mut y_g, &pool);
+                assert_eq!(y_f.data, y_g.data, "spmm {n}:{m} @{threads}t");
+
+                let mut dx_f = Matrix::zeros(7, d_in);
+                fast.spmm_t_add_par(&dy, &vals, &mut dx_f, &pool);
+                let mut dx_g = Matrix::zeros(7, d_in);
+                generic.spmm_t_add_par(&dy, &vals, &mut dx_g, &pool);
+                assert_eq!(dx_f.data, dx_g.data, "spmm_t {n}:{m} @{threads}t");
+
+                assert_eq!(
+                    fast.scatter_grad_par(&x, &dy, &pool),
+                    generic.scatter_grad_par(&x, &dy, &pool),
+                    "scatter_grad {n}:{m} @{threads}t"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nm_support_counts_offs_in_bytes() {
+        let mut rng = Rng::new(14);
+        let fast = SparseSupport::structured_nm(8, 16, 2, 4, &mut rng);
+        let generic = SparseSupport::new(8, 16, fast.idx.clone());
+        assert_eq!(fast.bytes(), generic.bytes() + fast.nnz() as u64);
     }
 
     #[test]

@@ -107,6 +107,13 @@ fn backend_flags(c: Cli) -> Cli {
             "GaLore projector refresh period in steps, native backend \
              (0 = default 200; only --method galore uses it)",
         )
+        .opt(
+            "support",
+            "random",
+            "sltrain sparse-support pattern, native backend: random \
+             (paper, density = preset delta) | n:m (SLoPe-style \
+             structured, e.g. 2:4, density n/m)",
+        )
 }
 
 fn backend_spec(a: &Args) -> Result<BackendSpec> {
@@ -132,6 +139,7 @@ fn backend_spec(a: &Args) -> Result<BackendSpec> {
         a.usize("threads"),
         a.usize("optim-bits"),
         a.usize("galore-every"),
+        &a.str("support"),
     )
 }
 
@@ -150,6 +158,13 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     .opt("metrics", "", "JSONL metrics output path")
     .opt("checkpoint", "", "checkpoint output path")
     .opt("checkpoint-every", "0", "checkpoint period (0 = end only)")
+    .switch(
+        "resume",
+        "resume from --checkpoint if it exists: restore weights, optimizer \
+         moments, the step counter and the lr schedule, and fast-forward \
+         the data stream (the resumed trajectory matches an uninterrupted \
+         run bit for bit)",
+    )
     .parse(argv);
 
     let mut be = backend::open(backend_spec(&a)?)?;
@@ -172,6 +187,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         metrics_path: non_empty(a.str("metrics")).map(PathBuf::from),
         checkpoint_path: non_empty(a.str("checkpoint")).map(PathBuf::from),
         checkpoint_every: a.usize("checkpoint-every"),
+        resume: a.flag("resume"),
     };
     let r = train(be.as_mut(), &mut pipe, &cfg)?;
     println!(

@@ -69,7 +69,8 @@ pub struct MemReport {
     /// for every other method.
     pub proj_bytes: u64,
     /// Fixed sparse-support structures (sltrain): flat indices + CSR
-    /// arrays. Zero for dense methods.
+    /// arrays, plus the u8 in-group offsets of structured N:M supports
+    /// (`--support n:m`). Zero for dense methods.
     pub support_bytes: u64,
     /// High-water mark of live *parameter-gradient* buffers (the
     /// buffers the per-layer-update literature targets; activation

@@ -278,6 +278,7 @@ fn native_and_xla_loss_parity_smoke() {
         threads: 0,
         optim_bits: 0,
         galore_every: 0,
+        support: sltrain::linalg::SupportPattern::UniformRandom,
     })
     .unwrap();
     let (nf, nl) = run(native);

@@ -8,6 +8,7 @@ use sltrain::config::preset;
 use sltrain::coordinator::trainer::{quick_train, save_checkpoint};
 use sltrain::coordinator::{train, Checkpoint, TrainConfig};
 use sltrain::data::Pipeline;
+use sltrain::linalg::SupportPattern;
 
 fn native_spec(method: &str, batch: usize, steps: usize) -> BackendSpec {
     BackendSpec::Native {
@@ -19,6 +20,7 @@ fn native_spec(method: &str, batch: usize, steps: usize) -> BackendSpec {
         threads: 0,     // auto (results are thread-count independent)
         optim_bits: 0,  // auto (SLTRAIN_OPTIM_BITS env matrix flows through)
         galore_every: 5, // short refresh so small runs cross boundaries
+        support: SupportPattern::UniformRandom,
     }
 }
 
@@ -239,14 +241,14 @@ fn native_checkpoint_is_analyzable() {
 #[test]
 fn backend_spec_validation() {
     // unknown engine and missing artifact are caught early
-    assert!(BackendSpec::from_flags("tpu", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0).is_err());
-    assert!(BackendSpec::from_flags("xla", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0).is_err());
+    assert!(BackendSpec::from_flags("tpu", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random").is_err());
+    assert!(BackendSpec::from_flags("xla", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random").is_err());
     assert!(
-        BackendSpec::from_flags("native", "", "nope", "sltrain", 8, 3e-3, 100, 0, 0, 0).is_err()
+        BackendSpec::from_flags("native", "", "nope", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random").is_err()
     );
     // --artifact with the native engine is a misdirected run, not a no-op
     let misdirected =
-        BackendSpec::from_flags("native", "a/dir", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0);
+        BackendSpec::from_flags("native", "a/dir", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random");
     assert!(misdirected.is_err());
     // every method of the paper's comparison set opens natively
     for method in ["full", "lowrank", "sltrain", "relora", "galore"] {
@@ -264,8 +266,18 @@ fn backend_spec_validation() {
         threads: 1,
         optim_bits: 16,
         galore_every: 0,
+        support: SupportPattern::UniformRandom,
     };
     assert!(backend::open(bad_bits).is_err());
+    // support-pattern strings are validated in from_flags
+    assert!(BackendSpec::from_flags(
+        "native", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "3:2"
+    )
+    .is_err());
+    assert!(BackendSpec::from_flags(
+        "native", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "2:4"
+    )
+    .is_ok());
 }
 
 /// The parallelism payoff: on machines with >= 4 cores, the threaded
@@ -295,6 +307,7 @@ fn threaded_step_loop_beats_single_thread() {
             threads,
             optim_bits: 0,
             galore_every: 0,
+            support: SupportPattern::UniformRandom,
         })
         .unwrap();
         let mut pipe = Pipeline::build(be.preset().vocab, 7);
@@ -336,7 +349,8 @@ fn per_layer_fused_updates_match_two_phase_loop() {
     let batches: Vec<Vec<i32>> = (0..5).map(|_| pipe.train.next_batch(4, p.seq_len)).collect();
     let mk = |threads: usize| {
         let mut be =
-            NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, threads, 32, 0).unwrap();
+            NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, threads, 32, 0, SupportPattern::UniformRandom)
+                .unwrap();
         be.init_state(42).unwrap();
         be
     };
@@ -365,7 +379,18 @@ fn per_layer_fused_updates_match_two_phase_loop() {
 fn q8_optimizer_state_roundtrips_through_checkpoint_file() {
     use sltrain::backend::native::NativeBackend;
     let p = preset("tiny").unwrap();
-    let mut be = NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, 0, 8, 0).unwrap();
+    let mut be = NativeBackend::build(
+        p.clone(),
+        "sltrain",
+        4,
+        3e-3,
+        100,
+        0,
+        8,
+        0,
+        SupportPattern::UniformRandom,
+    )
+    .unwrap();
     be.init_state(42).unwrap();
     let mut pipe = Pipeline::build(p.vocab, 7);
     let batch: Vec<i32> = pipe.train.next_batch(4, p.seq_len);
@@ -391,7 +416,18 @@ fn q8_optimizer_state_roundtrips_through_checkpoint_file() {
         assert_eq!(back.bytes, st.bytes, "{} bytes drifted", st.name);
     }
 
-    let mut be2 = NativeBackend::build(p.clone(), "sltrain", 4, 3e-3, 100, 0, 8, 0).unwrap();
+    let mut be2 = NativeBackend::build(
+        p.clone(),
+        "sltrain",
+        4,
+        3e-3,
+        100,
+        0,
+        8,
+        0,
+        SupportPattern::UniformRandom,
+    )
+    .unwrap();
     be2.init_state(99).unwrap(); // different init, fully overwritten by load
     be2.load_state_tensors(&restored).unwrap();
     for step in 3..6 {
@@ -421,6 +457,62 @@ fn mem_report_shows_streaming_grad_peak_through_trait() {
         r.grad_peak_bytes,
         r.grad_all_bytes
     );
+}
+
+/// `train --resume` through the real CLI binary: interrupt a run at
+/// step 3, resume to step 6, and the final checkpoint must be
+/// byte-identical to an uninterrupted 6-step run — weights, quantized
+/// optimizer moments, supports, step counter, everything.
+#[test]
+fn cli_resume_matches_uninterrupted_run_bit_for_bit() {
+    let dir = std::env::temp_dir().join(format!("sltrain-resume-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |steps: usize, ckpt: &std::path::Path, resume: bool| {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_sltrain"));
+        cmd.args([
+            "train",
+            "--backend",
+            "native",
+            "--config",
+            "tiny",
+            "--method",
+            "sltrain",
+            "--batch",
+            "2",
+            "--threads",
+            "2",
+            "--eval-every",
+            "0",
+            "--log-every",
+            "0",
+        ]);
+        cmd.arg("--steps").arg(steps.to_string());
+        cmd.arg("--checkpoint").arg(ckpt);
+        if resume {
+            cmd.arg("--resume");
+        }
+        let out = cmd.output().unwrap();
+        assert!(
+            out.status.success(),
+            "train --steps {steps} resume={resume} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    };
+    let full = dir.join("full.ckpt");
+    let part = dir.join("part.ckpt");
+    run(6, &full, false); // uninterrupted reference
+    run(3, &part, false); // "interrupted" prefix
+    run(6, &part, true); // resume the prefix to the same horizon
+    let a = std::fs::read(&full).unwrap();
+    let b = std::fs::read(&part).unwrap();
+    assert_eq!(a, b, "resumed checkpoint diverged from the uninterrupted run");
+    // --resume without --checkpoint is a usage error, not a silent fresh run
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_sltrain"))
+        .args(["train", "--backend", "native", "--config", "tiny", "--steps", "1", "--resume"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "--resume without --checkpoint must fail");
+    std::fs::remove_dir_all(dir).ok();
 }
 
 #[cfg(not(feature = "xla"))]

@@ -133,8 +133,9 @@ fn matmul_naive_transb(a: &Matrix, bt: &Matrix) -> Matrix {
 #[test]
 fn prop_matmul_transb_bitwise_matches_naive_reference() {
     // random rectangular shapes, deliberately not multiples of the
-    // MR=4 / NR=8 microkernel tile (including k not divisible by the
-    // block size): the blocked kernel must agree bit for bit
+    // MR=8 / NR=8 microkernel tile (including k not divisible by the
+    // block size): the blocked kernel (SIMD or scalar — whichever path
+    // is active) must agree bit for bit with the naive triple loop
     forall(25, |rng| {
         let m = 1 + rng.below(33) as usize;
         let k = 1 + rng.below(37) as usize;

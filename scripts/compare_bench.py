@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Compare a fresh bench JSON against the committed BENCH_baseline snapshot.
+
+Gate: any matched row whose tokens_per_sec drops more than --max-drop-pct
+(default 15%) vs the baseline fails the run (exit 1). Memory rows
+(total_bytes) are reported informationally but never gate — byte
+footprints move with config changes by design and are reviewed by hand.
+
+Rows are matched on the identity keys present in both records:
+(config, method, threads, optim_bits, support). Rows only present on one
+side are reported, not failed, so adding a bench cell never breaks CI.
+
+A baseline with a top-level "bootstrap": true marker (or zeroed
+tokens_per_sec values) is a schema placeholder committed before any
+runner measured real numbers: the comparison is printed but the gate is
+skipped. Refresh the snapshot per BENCH_baseline/README.md to arm it.
+
+Usage:
+  python3 scripts/compare_bench.py BENCH_baseline/BENCH_steploop.json BENCH_steploop.json
+  python3 scripts/compare_bench.py --max-drop-pct 10 <baseline.json> <new.json>
+
+stdlib only; exit 0 = pass (or unarmed baseline), exit 1 = regression.
+"""
+
+import argparse
+import json
+import sys
+
+IDENTITY_KEYS = ("config", "method", "threads", "optim_bits", "support")
+
+
+def row_key(row):
+    return tuple((k, row[k]) for k in IDENTITY_KEYS if k in row)
+
+
+def fmt_key(key):
+    return "/".join(f"{k}={v}" for k, v in key)
+
+
+def load_rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("results", [])
+    if not isinstance(rows, list):
+        sys.exit(f"error: {path}: 'results' is not a list")
+    return doc, {row_key(r): r for r in rows if isinstance(r, dict)}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed snapshot JSON (BENCH_baseline/...)")
+    ap.add_argument("new", help="freshly emitted bench JSON")
+    ap.add_argument(
+        "--max-drop-pct",
+        type=float,
+        default=15.0,
+        help="max tolerated tokens/sec drop vs baseline (default 15)",
+    )
+    args = ap.parse_args()
+
+    base_doc, base_rows = load_rows(args.baseline)
+    _, new_rows = load_rows(args.new)
+    bootstrap = bool(base_doc.get("bootstrap"))
+
+    failures = []
+    for key, new in sorted(new_rows.items()):
+        base = base_rows.get(key)
+        label = fmt_key(key) or "<unkeyed>"
+        if base is None:
+            print(f"  [new]  {label}: no baseline row")
+            continue
+        if "tokens_per_sec" in new and "tokens_per_sec" in base:
+            b, n = float(base["tokens_per_sec"]), float(new["tokens_per_sec"])
+            if b <= 0.0:
+                print(f"  [skip] {label}: baseline tokens/sec not armed ({b})")
+            else:
+                delta = 100.0 * (n - b) / b
+                status = "ok"
+                if delta < -args.max_drop_pct:
+                    status = "FAIL"
+                    failures.append((label, b, n, delta))
+                print(
+                    f"  [{status:>4}] {label}: {b:.0f} -> {n:.0f} tok/s ({delta:+.1f}%)"
+                )
+        if "total_bytes" in new and "total_bytes" in base:
+            b, n = float(base["total_bytes"]), float(new["total_bytes"])
+            if b > 0.0:
+                print(
+                    f"  [info] {label}: total {b/1e6:.3f} -> {n/1e6:.3f} MB "
+                    f"({100.0 * (n - b) / b:+.1f}%)"
+                )
+    for key in sorted(set(base_rows) - set(new_rows)):
+        print(f"  [gone] {fmt_key(key)}: baseline row not re-measured")
+
+    if failures and bootstrap:
+        print("\nbootstrap baseline: regressions reported but not gating")
+        return 0
+    if failures:
+        print(f"\n{len(failures)} row(s) regressed beyond {args.max_drop_pct:.0f}%:")
+        for label, b, n, delta in failures:
+            print(f"  {label}: {b:.0f} -> {n:.0f} tok/s ({delta:+.1f}%)")
+        return 1
+    print("\nbench comparison passed" + (" (bootstrap baseline, gate unarmed)" if bootstrap else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

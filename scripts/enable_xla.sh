@@ -1,0 +1,40 @@
+#!/usr/bin/env sh
+# Enable the AOT/PJRT execution path: uncomment the vendored `xla` path
+# dependency in rust/Cargo.toml so `cargo build --features xla` links
+# the third_party_xla bindings. The dependency line is commented out in
+# the committed tree so the default offline build never resolves the
+# bindings' crates.io dependencies (bindgen, cc, zip, ...).
+#
+#   scripts/enable_xla.sh            # uncomment the dep line
+#   scripts/enable_xla.sh --revert   # re-comment it (back to offline default)
+#
+# Building with the feature additionally needs the XLA C++ extension:
+# set XLA_EXTENSION_DIR to an unpacked xla_extension release (defaults
+# to third_party_xla/xla_extension).
+
+set -eu
+cd "$(dirname "$0")/.."
+manifest=rust/Cargo.toml
+
+if [ "${1:-}" = "--revert" ]; then
+    sed -i.bak 's|^xla = { path = "../third_party_xla" }|# xla = { path = "../third_party_xla" }   # required by `--features xla`|' "$manifest"
+    rm -f "$manifest.bak"
+    echo "xla dependency commented out in $manifest (offline default)"
+    exit 0
+fi
+
+if grep -q '^xla = { path = "../third_party_xla" }' "$manifest"; then
+    echo "xla dependency already enabled in $manifest"
+    exit 0
+fi
+
+sed -i.bak 's|^# xla = { path = "../third_party_xla" }.*|xla = { path = "../third_party_xla" }|' "$manifest"
+rm -f "$manifest.bak"
+
+if grep -q '^xla = { path = "../third_party_xla" }' "$manifest"; then
+    echo "xla dependency enabled in $manifest"
+    echo "next: cargo build --release --features xla"
+else
+    echo "error: could not find the commented xla dependency line in $manifest" >&2
+    exit 1
+fi
