@@ -192,6 +192,28 @@ pub trait Backend {
         Ok(())
     }
 
+    /// Fold every adapted linear into a plain dense weight — the
+    /// paper's Table-5 inference recipe, applied in place:
+    ///
+    /// * sltrain: `W ← scale·B·A ⊕_idx vals` (the fused kernel of
+    ///   `linalg::sparse::SparseSupport::fused_effective`),
+    /// * lowrank: `W ← scale·B·A`,
+    /// * relora: `W ← W0 + scale·B·A` (the merge fold, without the
+    ///   restart),
+    /// * full / galore: the weight is already dense — unchanged.
+    ///
+    /// After folding the engine is inference-only: `forward` and
+    /// `eval_loss` run on the dense weights (one matmul per linear, no
+    /// factored or sparse kernels on the hot path), optimizer state is
+    /// dropped, and `train_step`/`merge` refuse. Folding is
+    /// deterministic: the same state folds to bit-identical dense
+    /// weights at every thread count. The default implementation
+    /// errors — an engine that cannot materialize its effective
+    /// weights must refuse rather than silently serve factored ones.
+    fn fold_weights(&mut self) -> Result<()> {
+        bail!("{} backend has no fold-for-inference entrypoint", self.kind())
+    }
+
     /// Measured memory footprint of the live training state — params,
     /// optimizer moments as actually held (f32 or 8-bit), and the
     /// gradient-buffer high-water of the step loop. `None` when the

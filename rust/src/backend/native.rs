@@ -278,6 +278,44 @@ struct ModelHandles {
 /// Linears per layer in `linear_paths()` order (q,k,v,o,gate,up,down).
 const LINS_PER_LAYER: usize = 7;
 
+// ----------------------------------------------------- KV cache
+
+/// Per-sequence KV cache for incremental decoding: the post-rope keys
+/// and values of every already-processed position, one `[len, head_dim]`
+/// matrix per (layer, head). Create with
+/// [`NativeBackend::new_kv_cache`], grow it through
+/// [`NativeBackend::forward_incremental`]. Rows are appended and never
+/// rewritten, which is what makes the cached path bit-identical to a
+/// full-sequence recompute (see `forward_incremental`).
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    /// Post-rope keys, `k[layer][head]` of shape `[len, head_dim]`.
+    k: Vec<Vec<Matrix>>,
+    /// Values, `v[layer][head]` of shape `[len, head_dim]`.
+    v: Vec<Vec<Matrix>>,
+    /// Positions processed so far (rows held per head matrix).
+    len: usize,
+}
+
+impl KvCache {
+    /// Number of positions already processed through this cache.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no tokens have been processed yet (next call prefills).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Heap bytes held by the cached keys and values.
+    pub fn bytes(&self) -> usize {
+        let per = |m: &Matrix| m.data.len() * std::mem::size_of::<f32>();
+        self.k.iter().flatten().map(per).sum::<usize>()
+            + self.v.iter().flatten().map(per).sum::<usize>()
+    }
+}
+
 // ----------------------------------------------------- forward caches
 
 struct BlockCache {
@@ -388,6 +426,9 @@ pub struct NativeBackend {
     pool: ThreadPool,
     /// High-water of live gradient-buffer bytes across the run.
     grad_peak: PeakTracker,
+    /// True after `fold_weights`: every linear is dense, optimizer
+    /// state is gone, and the engine is inference-only (Table 5).
+    folded: bool,
 }
 
 impl NativeBackend {
@@ -465,6 +506,7 @@ impl NativeBackend {
             rope_sin,
             pool: ThreadPool::new(resolve_threads(threads)),
             grad_peak: PeakTracker::default(),
+            folded: false,
         })
     }
 
@@ -521,6 +563,7 @@ impl NativeBackend {
         self.lin_paths.clear();
         self.supports.clear();
         self.support_paths.clear();
+        self.folded = false;
 
         let gauss_mat = |rng: &mut Rng, rows: usize, cols: usize, std: f32| {
             let mut m = Matrix::zeros(rows, cols);
@@ -904,11 +947,21 @@ impl NativeBackend {
     }
 
     fn rope_head(&self, m: &mut Matrix, half: usize, inverse: bool) {
+        self.rope_head_at(m, half, inverse, 0);
+    }
+
+    /// `rope_head` with the rows at absolute positions `pos0..`. The
+    /// tables are indexed by absolute position, so a row decoded
+    /// incrementally at position `p` receives the exact rotation the
+    /// full-sequence recompute applies to row `p` — one of the
+    /// invariants behind the bitwise KV-cache parity contract.
+    fn rope_head_at(&self, m: &mut Matrix, half: usize, inverse: bool, pos0: usize) {
         for ti in 0..m.rows {
+            let pos = pos0 + ti;
             let row = &mut m.data[ti * 2 * half..(ti + 1) * 2 * half];
             for j in 0..half {
-                let c = self.rope_cos[ti * half + j];
-                let s = self.rope_sin[ti * half + j];
+                let c = self.rope_cos[pos * half + j];
+                let s = self.rope_sin[pos * half + j];
                 let (x1, x2) = (row[2 * j], row[2 * j + 1]);
                 if inverse {
                     row[2 * j] = x1 * c + x2 * s;
@@ -919,6 +972,158 @@ impl NativeBackend {
                 }
             }
         }
+    }
+
+    // ------------------------------------------ incremental decoding
+
+    /// True once `fold_weights` ran: dense weights only, inference-only.
+    pub fn is_folded(&self) -> bool {
+        self.folded
+    }
+
+    /// Fresh, empty per-sequence KV cache shaped for this model.
+    pub fn new_kv_cache(&self) -> KvCache {
+        let nh = self.preset.n_heads;
+        let hd = self.head_dim();
+        let layer = |_: usize| (0..nh).map(|_| Matrix::zeros(0, hd)).collect::<Vec<_>>();
+        KvCache {
+            k: (0..self.preset.n_layers).map(layer).collect(),
+            v: (0..self.preset.n_layers).map(layer).collect(),
+            len: 0,
+        }
+    }
+
+    /// Run the next chunk of ONE sequence through the model, appending
+    /// its keys/values to `cache`, and return the logits of the new
+    /// rows (`[tokens.len(), vocab]`). An empty cache fed the whole
+    /// prompt is the prefill; a one-token chunk is an incremental
+    /// decode step. Works on factored and folded weights alike.
+    ///
+    /// Bitwise contract (the serving extension of the repo's
+    /// determinism contract, tested in `tests/serve_parity.rs`): row
+    /// `i` of the returned logits is bit-identical to row `pos0 + i`
+    /// of a full-sequence recompute over the concatenated tokens, at
+    /// every thread count and on either microkernel path. Every op is
+    /// row-local except attention, and attention row `p` depends on
+    /// rows `<= p` only through the cached post-rope k / v — which are
+    /// bit-identical by induction: same per-row dot-product order
+    /// (the GEBP kernel sums `l = 0..k` on every path), the same
+    /// absolute-position rope, the same masked-softmax numerics, and
+    /// the full path's zero-masked `j > p` tail contributes
+    /// exactly-`+0.0` products that cannot flip a bit of the row sums
+    /// (the softmax row always holds at least one strictly positive
+    /// weight, so no partial sum is `-0.0`).
+    pub fn forward_incremental(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Matrix> {
+        let h = self.handles()?.clone();
+        let p = &self.preset;
+        let (d, nh, hd) = (p.d_model, p.n_heads, self.head_dim());
+        let half = hd / 2;
+        let t = tokens.len();
+        let pos0 = cache.len;
+        if t == 0 {
+            bail!("forward_incremental needs at least one token");
+        }
+        if cache.k.len() != p.n_layers || cache.k.first().is_some_and(|l| l.len() != nh) {
+            bail!("KV cache shape does not match this model (use new_kv_cache)");
+        }
+        if pos0 + t > p.seq_len {
+            bail!(
+                "sequence length {} exceeds preset seq_len {} (rope tables and the \
+                 causal mask are sized to the preset)",
+                pos0 + t,
+                p.seq_len
+            );
+        }
+
+        let embed = self.mat(h.embed);
+        let mut x = Matrix::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            if tok >= p.vocab {
+                bail!("token {tok} out of vocab {}", p.vocab);
+            }
+            x.data[i * d..(i + 1) * d].copy_from_slice(&embed.data[tok * d..(tok + 1) * d]);
+        }
+
+        let attn_scale = 1.0f32 / (hd as f32).sqrt();
+        for (li, lh) in h.layers.iter().enumerate() {
+            let (xn1, _, _) = rmsnorm_fwd(&x, self.vec1(lh.ln1_g), &self.pool);
+            let (q, _) = self.linear_fwd(lh.q, &xn1);
+            let (k, _) = self.linear_fwd(lh.k, &xn1);
+            let (v, _) = self.linear_fwd(lh.v, &xn1);
+            // rope the new rows at their absolute positions (one task
+            // per head), then append to the cache serially — exactly
+            // one writer per (layer, head) region
+            let roped = self.pool.map(nh, |hi| {
+                let mut q_h = head_slice(&q, 0, hi, t, hd);
+                let mut k_h = head_slice(&k, 0, hi, t, hd);
+                let v_h = head_slice(&v, 0, hi, t, hd);
+                self.rope_head_at(&mut q_h, half, false, pos0);
+                self.rope_head_at(&mut k_h, half, false, pos0);
+                (q_h, k_h, v_h)
+            });
+            for (hi, (_, k_h, v_h)) in roped.iter().enumerate() {
+                let kc = &mut cache.k[li][hi];
+                kc.data.extend_from_slice(&k_h.data);
+                kc.rows += t;
+                let vc = &mut cache.v[li][hi];
+                vc.data.extend_from_slice(&v_h.data);
+                vc.rows += t;
+            }
+            // attention of the new rows against the whole cache, with
+            // the training forward's exact causal-softmax numerics
+            let l_total = pos0 + t;
+            let heads = self.pool.map(nh, |hi| {
+                let mut s = roped[hi].0.matmul_transb(&cache.k[li][hi]);
+                for i in 0..t {
+                    let limit = pos0 + i;
+                    let row = &mut s.data[i * l_total..(i + 1) * l_total];
+                    let mut mx = f32::NEG_INFINITY;
+                    for (j, val) in row.iter_mut().enumerate() {
+                        if j > limit {
+                            *val = 0.0;
+                        } else {
+                            *val *= attn_scale;
+                            mx = mx.max(*val);
+                        }
+                    }
+                    let mut sum = 0.0f32;
+                    for (j, val) in row.iter_mut().enumerate() {
+                        if j > limit {
+                            *val = 0.0;
+                        } else {
+                            *val = (*val - mx).exp();
+                            sum += *val;
+                        }
+                    }
+                    for val in row.iter_mut() {
+                        *val /= sum;
+                    }
+                }
+                s.matmul(&cache.v[li][hi])
+            });
+            let mut attn_cat = Matrix::zeros(t, d);
+            for (hi, out_h) in heads.iter().enumerate() {
+                head_write(&mut attn_cat, out_h, 0, hi, t, hd);
+            }
+
+            let (o_out, _) = self.linear_fwd(lh.o, &attn_cat);
+            let x_mid = x.add(&o_out);
+            let (xn2, _, _) = rmsnorm_fwd(&x_mid, self.vec1(lh.ln2_g), &self.pool);
+            let (g_pre, _) = self.linear_fwd(lh.gate, &xn2);
+            let (u, _) = self.linear_fwd(lh.up, &xn2);
+            let mut h_act = Matrix::zeros(t, p.d_ff);
+            for i in 0..h_act.data.len() {
+                let g = g_pre.data[i];
+                h_act.data[i] = g * sigmoid(g) * u.data[i];
+            }
+            let (d_out, _) = self.linear_fwd(lh.down, &h_act);
+            x = x_mid.add(&d_out);
+        }
+        cache.len += t;
+
+        let (xnf, _, _) = rmsnorm_fwd(&x, self.vec1(h.lnf_g), &self.pool);
+        Ok(xnf.matmul_par(self.mat(h.head), &self.pool))
     }
 
     // ---------------------------------------------------- backward
@@ -1250,6 +1455,13 @@ impl NativeBackend {
         Ok(())
     }
 
+    fn not_folded(&self) -> Result<()> {
+        if self.folded {
+            bail!("weights were folded for inference (fold_weights); this engine is forward-only");
+        }
+        Ok(())
+    }
+
     /// One parameter's optimizer update (f32 or quantized moments, on
     /// the pool): plain Adam, or — for galore-projected weights — the
     /// projector refresh + projected-space Adam + project-back of
@@ -1384,6 +1596,7 @@ impl NativeBackend {
     /// identical losses and parameters).
     pub fn train_step_two_phase(&mut self, step: i32, tokens: &[i32]) -> Result<f32> {
         self.handles()?;
+        self.not_folded()?;
         self.optim_ready()?;
         let (loss, grads) = self.loss_and_grads(tokens)?;
         self.adam_apply(step, grads)?;
@@ -1439,6 +1652,7 @@ impl Backend for NativeBackend {
     /// `train_step_two_phase` at `--optim-bits 32`.
     fn train_step(&mut self, step: i32, tokens: &[i32]) -> Result<f32> {
         self.handles()?;
+        self.not_folded()?;
         self.optim_ready()?;
         let hy = self.adam_hyper(step);
         let (loss, _grads) = self.step_impl(tokens, Some(&hy))?;
@@ -1480,6 +1694,7 @@ impl Backend for NativeBackend {
             );
         }
         self.handles()?;
+        self.not_folded()?;
         let bits = self.optim_bits;
         let kaiming_r = (2.0f32 / self.preset.rank as f32).sqrt();
         let root = Rng::new(seed as u32 as u64);
@@ -1528,6 +1743,116 @@ impl Backend for NativeBackend {
         for gs in self.galore.iter_mut().flatten() {
             gs.clear(0);
         }
+        Ok(())
+    }
+
+    /// Table 5's fold-for-inference, in place: every adapted linear is
+    /// materialized dense (`scale·B·A ⊕ S` through the fused kernel for
+    /// sltrain, `scale·B·A` for lowrank, `W0 + scale·B·A` in merge's
+    /// exact accumulate order for relora, a plain copy for full/galore)
+    /// and the parameter store is rebuilt full-style — `{path}.w` names,
+    /// no factors, no supports, no optimizer state, no projectors. The
+    /// fold runs on the pool's bitwise-deterministic matmuls, so the
+    /// same state folds to bit-identical dense weights at every thread
+    /// count (tested in `tests/serve_parity.rs`). Afterwards the engine
+    /// is inference-only: `train_step` and `merge` refuse.
+    fn fold_weights(&mut self) -> Result<()> {
+        let h = self.handles()?.clone();
+        if self.folded {
+            return Ok(());
+        }
+
+        // 1) materialize every linear's effective dense weight from the
+        //    live factors, before any store is touched
+        let mut dense: Vec<Matrix> = Vec::with_capacity(self.lins.len());
+        for lin in &self.lins {
+            let w = match *lin {
+                LinKind::Full { w } => self.mat(w).clone(),
+                LinKind::Factored { b, a, sparse: None } => {
+                    let mut w = self.mat(b).matmul_par(self.mat(a), &self.pool);
+                    w.scale_mut(self.scale);
+                    w
+                }
+                LinKind::Factored { b, a, sparse: Some(sh) } => self.supports[sh.sup]
+                    .fused_effective_par(
+                        self.mat(b),
+                        self.mat(a),
+                        self.vec1(sh.vals),
+                        self.scale,
+                        &self.pool,
+                    ),
+                LinKind::Relora { w0, b, a } => {
+                    // merge's fold without the restart: same elementwise
+                    // accumulate order, so the folded weight is
+                    // bit-identical to what merge would have produced
+                    let ba = self.mat(b).matmul_par(self.mat(a), &self.pool);
+                    let mut w = self.mat(w0).clone();
+                    for (wi, x) in w.data.iter_mut().zip(&ba.data) {
+                        *wi += self.scale * x;
+                    }
+                    w
+                }
+            };
+            dense.push(w);
+        }
+
+        // 2) snapshot the tensors that survive the rebuild as-is
+        let embed_t = self.params[h.embed.0].clone();
+        let head_t = self.params[h.head.0].clone();
+        let lnf_t = self.params[h.lnf_g.0].clone();
+        let ln_ts: Vec<(PTensor, PTensor)> = h
+            .layers
+            .iter()
+            .map(|lh| (self.params[lh.ln1_g.0].clone(), self.params[lh.ln2_g.0].clone()))
+            .collect();
+        let lin_paths = std::mem::take(&mut self.lin_paths);
+
+        // 3) rebuild the store dense-only, in init's intern order
+        self.params.clear();
+        self.param_names.clear();
+        self.name_to_id.clear();
+        self.frozen.clear();
+        self.galore.clear();
+        self.lins.clear();
+        self.supports.clear();
+        self.support_paths.clear();
+        self.optim_m.clear();
+        self.optim_v.clear();
+        self.grad_peak.reset();
+
+        let embed = self.intern("embed.w".into(), embed_t);
+        let head = self.intern("head.w".into(), head_t);
+        let lnf_g = self.intern("lnf.g".into(), lnf_t);
+        let mut ln1_ids = Vec::with_capacity(h.layers.len());
+        let mut ln2_ids = Vec::with_capacity(h.layers.len());
+        for (i, (g1, g2)) in ln_ts.into_iter().enumerate() {
+            ln1_ids.push(self.intern(format!("layers.{i}.ln1.g"), g1));
+            ln2_ids.push(self.intern(format!("layers.{i}.ln2.g"), g2));
+        }
+        for (path, w) in lin_paths.iter().zip(dense) {
+            let id = self.intern(format!("{path}.w"), PTensor::Mat(w));
+            self.lins.push(LinKind::Full { w: id });
+        }
+        self.lin_paths = lin_paths;
+
+        let layers = (0..h.layers.len())
+            .map(|l| {
+                let b = l * LINS_PER_LAYER;
+                LayerHandles {
+                    ln1_g: ln1_ids[l],
+                    ln2_g: ln2_ids[l],
+                    q: LinId(b),
+                    k: LinId(b + 1),
+                    v: LinId(b + 2),
+                    o: LinId(b + 3),
+                    gate: LinId(b + 4),
+                    up: LinId(b + 5),
+                    down: LinId(b + 6),
+                }
+            })
+            .collect();
+        self.handles = Some(ModelHandles { embed, head, lnf_g, layers });
+        self.folded = true;
         Ok(())
     }
 
@@ -1647,38 +1972,52 @@ impl Backend for NativeBackend {
         // moment tensors disagrees with this backend's representation,
         // the whole moment family is skipped (weights-only load, logged)
         // instead of bricking every prior checkpoint on a precision
-        // switch. Within a compatible family, partial/mixed sets still
-        // error (the pairing and all-or-nothing checks below).
+        // switch. The same fallback applies when this backend dropped
+        // its optimizer state (`drop_optimizer_state`): a full training
+        // checkpoint then restores weights/supports only, identical to
+        // a fresh weights-only load — there is no moment storage to
+        // validate against, let alone restore into. Within a compatible
+        // family, partial/mixed sets still error (the pairing and
+        // all-or-nothing checks below).
+        let dropped = self.optim_m.len() != self.params.len();
         let mut has_moments = false;
         let mut moments_compatible = true;
-        if self.optim_m.len() == self.params.len() {
-            for st in tensors {
-                let Some(rest) = st.name.strip_prefix("optim.") else { continue };
-                if rest.starts_with("proj.") {
-                    // projectors are f32 under either --optim-bits
-                    continue;
-                }
-                let rest = rest
-                    .strip_prefix("m.")
-                    .or_else(|| rest.strip_prefix("v."))
-                    .unwrap_or(rest);
-                has_moments = true;
-                let (pname, wants_q8) = if let Some(p) = rest.strip_prefix("q8.") {
-                    (p, true)
-                } else if let Some(p) = rest.strip_prefix("scale.") {
-                    (p, true)
-                } else {
-                    (rest, false)
-                };
-                if let Some(&id) = self.name_to_id.get(pname) {
-                    if self.optim_m[id].is_quantized() != wants_q8 {
-                        moments_compatible = false;
-                    }
+        for st in tensors {
+            let Some(rest) = st.name.strip_prefix("optim.") else { continue };
+            if rest.starts_with("proj.") {
+                // projectors are f32 under either --optim-bits
+                continue;
+            }
+            let rest = rest
+                .strip_prefix("m.")
+                .or_else(|| rest.strip_prefix("v."))
+                .unwrap_or(rest);
+            has_moments = true;
+            if dropped {
+                // no representation to compare against; the moment
+                // family is skipped wholesale below
+                continue;
+            }
+            let (pname, wants_q8) = if let Some(p) = rest.strip_prefix("q8.") {
+                (p, true)
+            } else if let Some(p) = rest.strip_prefix("scale.") {
+                (p, true)
+            } else {
+                (rest, false)
+            };
+            if let Some(&id) = self.name_to_id.get(pname) {
+                if self.optim_m[id].is_quantized() != wants_q8 {
+                    moments_compatible = false;
                 }
             }
         }
-        let skip_moments = has_moments && !moments_compatible;
-        if skip_moments {
+        let skip_moments = has_moments && (dropped || !moments_compatible);
+        if skip_moments && dropped {
+            crate::info!(
+                "optimizer state was dropped on this backend; restoring the checkpoint's \
+                 weights/supports only"
+            );
+        } else if skip_moments {
             crate::info!(
                 "checkpoint optimizer moments use a different --optim-bits than this \
                  backend ({}); restoring weights/supports (and galore projectors) only",
@@ -1688,12 +2027,14 @@ impl Backend for NativeBackend {
         for st in tensors {
             if skip_moments
                 && st.name.starts_with("optim.")
-                && !st.name.starts_with("optim.proj.")
+                && (dropped || !st.name.starts_with("optim.proj."))
             {
                 // the projector frame is f32 under either --optim-bits:
                 // keep it through a weights-only fallback, or the
                 // restored backend would run zero-update steps until
-                // its next refresh boundary
+                // its next refresh boundary. When the optimizer state
+                // was dropped outright, the projector goes with it —
+                // the drop is total.
                 continue;
             }
             if let Some(rest) = st.name.strip_prefix("optim.") {

@@ -28,6 +28,7 @@ pub mod linalg;
 pub mod mem;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use util::json::Json;

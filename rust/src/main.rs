@@ -7,6 +7,7 @@
 //!   data          inspect / dump the synthetic corpus + tokenizer
 //!   throughput    Table-3 style tokens/sec measurement
 //!   inference     Table-5 style forward-only memory + throughput
+//!   serve         fold-for-inference daemon (KV cache, continuous batching)
 //!   prop1         Monte-Carlo check of Proposition 1
 //!
 //! The compute-bearing subcommands take `--backend {native,xla}`.
@@ -28,13 +29,15 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Result};
 
 use sltrain::analysis::{full_rank_probability, ResidualReport, SpectrumDecomp};
-use sltrain::backend::{self, BackendSpec};
+use sltrain::backend::native::NativeBackend;
+use sltrain::backend::{self, Backend, BackendSpec};
 use sltrain::bench::{fmt, Table};
 use sltrain::config::{preset, METHODS};
 use sltrain::coordinator::{train, Checkpoint, TrainConfig};
 use sltrain::data::{CorpusConfig, Pipeline, SynthCorpus};
 use sltrain::linalg::Matrix;
 use sltrain::mem::{estimate, MemEstimate, MemOptions};
+use sltrain::serve::ServeConfig;
 use sltrain::util::cli::{Args, Cli};
 
 fn main() {
@@ -48,6 +51,7 @@ fn main() {
         "data" => cmd_data(&rest),
         "throughput" => cmd_throughput(&rest),
         "inference" => cmd_inference(&rest),
+        "serve" => cmd_serve(&rest),
         "prop1" => cmd_prop1(&rest),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -74,6 +78,8 @@ subcommands:
   data          synthetic corpus + tokenizer inspection
   throughput    training tokens/sec (Table 3)
   inference     forward-only memory + tokens/sec (Table 5)
+  serve         persistent inference daemon on a unix socket (fold +
+                KV-cache decoding + continuous batching)
   prop1         Monte-Carlo verification of Proposition 1
   help          this message
 
@@ -425,6 +431,58 @@ fn cmd_inference(argv: &[String]) -> Result<()> {
         rss1 as f64 / 1e6,
     );
     Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let a = backend_flags(Cli::new(
+        "sltrain serve",
+        "persistent inference daemon: fold the checkpoint dense (Table 5), decode \
+         with per-sequence KV caches, batch continuously over a unix socket",
+    ))
+    .req("socket", "unix socket path to bind")
+    .opt("checkpoint", "", "SLTCKPT1 checkpoint to serve (empty = fresh init from --seed)")
+    .opt("seed", "42", "init seed when no checkpoint is given")
+    .opt("max-batch", "8", "concurrent decode slots (continuous-batching width)")
+    .switch(
+        "no-fold",
+        "serve the live factored/sparse weights instead of folding dense \
+         (slower per token; numerics differ only by f32 re-association)",
+    )
+    .parse(argv);
+
+    let BackendSpec::Native {
+        preset,
+        method,
+        batch,
+        lr,
+        total_steps,
+        threads,
+        optim_bits,
+        galore_every,
+        support,
+    } = backend_spec(&a)?
+    else {
+        bail!("serve runs on the native engine only (drop --backend xla / --artifact)");
+    };
+    let mut be = NativeBackend::build(
+        preset, &method, batch, lr, total_steps, threads, optim_bits, galore_every, support,
+    )?;
+    be.init_state(a.u64("seed") as u32)?;
+    if let Some(path) = non_empty(a.str("checkpoint")) {
+        let ck = Checkpoint::load(Path::new(&path))?;
+        be.load_state_tensors(&ck.to_state_tensors())?;
+        sltrain::info!("serve: restored checkpoint {path} (step {})", ck.step);
+    }
+    // Table 5: inference holds parameters only
+    be.drop_optimizer_state()?;
+    if !a.flag("no-fold") {
+        be.fold_weights()?;
+    }
+    let cfg = ServeConfig {
+        socket: PathBuf::from(a.str("socket")),
+        max_batch: a.usize("max-batch"),
+    };
+    sltrain::serve::run(be, &cfg)
 }
 
 fn cmd_prop1(argv: &[String]) -> Result<()> {

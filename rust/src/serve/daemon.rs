@@ -1,0 +1,217 @@
+//! The persistent serving process.
+//!
+//! One scheduler thread (the caller's) owns the backend and runs the
+//! admit/decode/evict loop; one accept thread polls the Unix listener;
+//! one lightweight thread per connection reads request lines, hands
+//! `generate`s to the scheduler through a shared queue, and writes the
+//! response when the scheduler completes them. Everything is std-only
+//! (`std::os::unix::net`, `std::sync::mpsc`).
+//!
+//! Lifecycle: `run` binds the socket (removing a stale file from a
+//! crashed predecessor), serves until a `shutdown` request arrives,
+//! finishes every in-flight sequence, stops admitting (late `generate`s
+//! get an error response), unlinks the socket, and returns `Ok` — the
+//! process exits 0. Malformed requests are answered with
+//! `{"ok":false,...}` on the same connection; they never terminate the
+//! daemon or the connection (tested black-box in `tests/serve_e2e.rs`).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::backend::native::NativeBackend;
+use crate::backend::Backend;
+use crate::serve::protocol::{self, Request};
+use crate::serve::scheduler::{GenRequest, GenResult, Scheduler};
+use crate::util::json::{num, obj, s, Json};
+
+/// Daemon configuration (the `sltrain serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Unix socket path to bind.
+    pub socket: PathBuf,
+    /// Concurrent decode slots (continuous-batching width).
+    pub max_batch: usize,
+}
+
+/// A generate handed from a connection thread to the scheduler loop,
+/// with the channel its result travels back on.
+type Submission = (GenRequest, Sender<std::result::Result<GenResult, String>>);
+
+struct Shared {
+    queue: Mutex<Vec<Submission>>,
+    shutdown: AtomicBool,
+    next_id: AtomicU64,
+    info_line: String,
+}
+
+/// Serve `backend` on `cfg.socket` until a `shutdown` request drains
+/// the daemon. The backend should arrive ready: initialized,
+/// checkpoint loaded, optimizer state dropped, and (normally) folded.
+pub fn run(backend: NativeBackend, cfg: &ServeConfig) -> Result<()> {
+    let mut sched = Scheduler::new(backend, cfg.max_batch);
+    if cfg.socket.exists() {
+        // a previous daemon that crashed leaves the socket file behind;
+        // binding over it needs the unlink first
+        std::fs::remove_file(&cfg.socket)
+            .with_context(|| format!("removing stale socket {:?}", cfg.socket))?;
+    }
+    let listener = UnixListener::bind(&cfg.socket)
+        .with_context(|| format!("binding {:?}", cfg.socket))?;
+    listener.set_nonblocking(true)?;
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(Vec::new()),
+        shutdown: AtomicBool::new(false),
+        next_id: AtomicU64::new(0),
+        info_line: info_line(sched.backend()),
+    });
+    crate::info!(
+        "serve: {} / {} on {:?} ({} decode slots, folded: {})",
+        sched.backend().preset().name,
+        sched.backend().method(),
+        cfg.socket,
+        cfg.max_batch,
+        sched.backend().is_folded()
+    );
+
+    let accept_shared = shared.clone();
+    let accept_handle = std::thread::spawn(move || accept_loop(listener, accept_shared));
+
+    // the scheduler loop: drain submissions, step, dispatch results
+    let mut waiters: HashMap<u64, Sender<std::result::Result<GenResult, String>>> = HashMap::new();
+    loop {
+        let subs: Vec<Submission> = std::mem::take(&mut *shared.queue.lock().unwrap());
+        for (req, tx) in subs {
+            let rid = req.id;
+            match sched.submit(req) {
+                Ok(()) => {
+                    waiters.insert(rid, tx);
+                }
+                Err(e) => {
+                    let _ = tx.send(Err(format!("{e:#}")));
+                }
+            }
+        }
+        if sched.is_idle() {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        for r in sched.step()? {
+            if let Some(tx) = waiters.remove(&r.id) {
+                let _ = tx.send(Ok(r));
+            }
+        }
+    }
+    // stragglers that slipped into the queue after the final drain get
+    // a clean error instead of a hung connection
+    for (_, tx) in shared.queue.lock().unwrap().drain(..) {
+        let _ = tx.send(Err("daemon is shutting down".into()));
+    }
+    let _ = accept_handle.join();
+    let _ = std::fs::remove_file(&cfg.socket);
+    crate::info!("serve: clean shutdown");
+    Ok(())
+}
+
+fn accept_loop(listener: UnixListener, shared: Arc<Shared>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // accepted sockets inherit the listener's non-blocking
+                // mode on some platforms; connection reads are blocking
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let conn_shared = shared.clone();
+                std::thread::spawn(move || handle_conn(stream, conn_shared));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_conn(stream: UnixStream, shared: Arc<Shared>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let reader = BufReader::new(read_half);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { return };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match protocol::parse_request(&line) {
+            Err(e) => protocol::error_line(&Json::Null, &format!("{e:#}")),
+            Ok(Request::Ping) => protocol::pong_line(),
+            Ok(Request::Info) => shared.info_line.clone(),
+            Ok(Request::Shutdown) => {
+                // respond BEFORE raising the flag: once the scheduler
+                // loop sees it, the process may exit at any moment
+                if write_line(&mut writer, &protocol::shutdown_line()).is_err() {
+                    return;
+                }
+                shared.shutdown.store(true, Ordering::SeqCst);
+                continue;
+            }
+            Ok(Request::Generate { id, prompt, max_tokens }) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    protocol::error_line(&id, "daemon is shutting down")
+                } else {
+                    let rid = shared.next_id.fetch_add(1, Ordering::SeqCst);
+                    let (tx, rx) = channel();
+                    shared
+                        .queue
+                        .lock()
+                        .unwrap()
+                        .push((GenRequest { id: rid, prompt, max_tokens }, tx));
+                    match rx.recv() {
+                        Ok(Ok(r)) => protocol::generate_line(&id, r.prompt_len, &r.tokens),
+                        Ok(Err(msg)) => protocol::error_line(&id, &msg),
+                        Err(_) => {
+                            protocol::error_line(&id, "daemon exited before the request completed")
+                        }
+                    }
+                }
+            }
+        };
+        if write_line(&mut writer, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+fn write_line(w: &mut UnixStream, line: &str) -> std::io::Result<()> {
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+fn info_line(be: &NativeBackend) -> String {
+    let p = be.preset();
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", s("info")),
+        ("preset", s(&p.name)),
+        ("method", s(be.method())),
+        ("vocab", num(p.vocab as f64)),
+        ("seq_len", num(p.seq_len as f64)),
+        ("n_params", num(be.n_params() as f64)),
+        ("folded", Json::Bool(be.is_folded())),
+    ])
+    .to_string()
+}

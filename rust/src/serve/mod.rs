@@ -1,0 +1,56 @@
+//! The serving stack: fold-for-inference daemon with KV-cache decoding
+//! and continuous batching.
+//!
+//! The paper's Table-5 inference recipe is *fold once, serve dense*:
+//! `Backend::fold_weights` materializes every adapted linear into a
+//! plain dense weight (`scale·B·A ⊕ S` for sltrain, `W0 + scale·B·A`
+//! for relora, `scale·B·A` for lowrank), after which generation runs
+//! one matmul per linear with no factored or sparse kernels on the hot
+//! path. This module is the consumer of that fold:
+//!
+//! * [`protocol`] — the wire format: newline-delimited JSON over a Unix
+//!   socket. One request object per line, one response object per line.
+//! * [`scheduler`] — continuous batching over
+//!   `NativeBackend::forward_incremental`: sequences are admitted into
+//!   the running batch between decode steps and evicted the moment
+//!   they finish, so a long generation never blocks a short one.
+//! * [`daemon`] — the persistent process: bind the socket, accept
+//!   connections, run the scheduler loop until a `shutdown` request
+//!   drains it.
+//! * [`loadgen`] — a synthetic open-loop load generator (fixed arrival
+//!   rate, latency measured from arrival, queueing included) emitting
+//!   the tokens/sec + p50/p99 numbers behind `BENCH_serving.json`.
+//!
+//! ## Protocol
+//!
+//! Requests (one JSON object per line, `op` selects):
+//!
+//! ```json
+//! {"op":"ping"}
+//! {"op":"info"}
+//! {"op":"generate","prompt":[1,2,3],"max_tokens":8,"id":7}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Responses always carry `"ok"` (`true`/`false`); errors carry
+//! `"error"` with a message and never kill the daemon or the
+//! connection. A `generate` response echoes the request's `id`
+//! verbatim and returns the greedily-decoded continuation:
+//!
+//! ```json
+//! {"ok":true,"op":"generate","id":7,"prompt_len":3,"tokens":[5,9,2,...]}
+//! ```
+//!
+//! Decoding is greedy argmax (lowest index wins ties), so a served
+//! continuation is a pure function of the checkpoint and the prompt —
+//! the serving extension of the repo's determinism contract.
+
+pub mod daemon;
+pub mod loadgen;
+pub mod protocol;
+pub mod scheduler;
+
+pub use daemon::{run, ServeConfig};
+pub use loadgen::{percentile, run_open_loop, LoadReport, LoadSpec};
+pub use protocol::{error_line, parse_request, Request};
+pub use scheduler::{GenRequest, GenResult, Scheduler};

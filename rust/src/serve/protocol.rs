@@ -1,0 +1,152 @@
+//! Wire format of the serving daemon: newline-delimited JSON.
+//!
+//! One request object per line in, one response object per line out.
+//! Parsing is total: any malformed line maps to an error *response*
+//! (`{"ok":false,"error":...}`), never a dropped connection — the
+//! daemon must survive hostile input (tested in `tests/serve_e2e.rs`).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+/// A parsed client request. `Generate::id` is the client's `id` value
+/// echoed verbatim in the response (clients use it to match pipelined
+/// responses); it defaults to `Json::Null`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Liveness probe; answered immediately with `{"ok":true,"op":"pong"}`.
+    Ping,
+    /// Model card: preset, method, vocab, seq_len, folded, n_params.
+    Info,
+    /// Greedy generation from a token prompt.
+    Generate {
+        /// Client correlation id, echoed verbatim.
+        id: Json,
+        /// Prompt token ids (must be non-empty, all `< vocab`).
+        prompt: Vec<i32>,
+        /// Tokens to generate (clamped to the seq_len budget).
+        max_tokens: usize,
+    },
+    /// Stop admitting, drain in-flight sequences, exit cleanly.
+    Shutdown,
+}
+
+/// Parse one request line. Errors name what was wrong — they become
+/// the `error` field of an `{"ok":false}` response.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line.trim()).map_err(|e| anyhow!("bad json: {e}"))?;
+    let op = v
+        .get("op")
+        .and_then(|o| o.as_str())
+        .ok_or_else(|| anyhow!("missing string field \"op\""))?;
+    match op {
+        "ping" => Ok(Request::Ping),
+        "info" => Ok(Request::Info),
+        "shutdown" => Ok(Request::Shutdown),
+        "generate" => {
+            let prompt_v = v.req("prompt")?;
+            let arr = prompt_v
+                .as_arr()
+                .ok_or_else(|| anyhow!("\"prompt\" must be an array of token ids"))?;
+            let mut prompt = Vec::with_capacity(arr.len());
+            for t in arr {
+                let n = t.as_f64().ok_or_else(|| anyhow!("non-numeric token in prompt"))?;
+                if n.fract() != 0.0 || n < 0.0 {
+                    bail!("token {n} is not a non-negative integer");
+                }
+                prompt.push(n as i32);
+            }
+            let max_tokens = v
+                .get("max_tokens")
+                .map(|m| m.as_usize().ok_or_else(|| anyhow!("\"max_tokens\" must be a number")))
+                .transpose()?
+                .unwrap_or(16);
+            let id = v.get("id").cloned().unwrap_or(Json::Null);
+            Ok(Request::Generate { id, prompt, max_tokens })
+        }
+        other => bail!("unknown op {other:?} (ping | info | generate | shutdown)"),
+    }
+}
+
+/// `{"ok":false,"error":<msg>}` with the client id echoed when known.
+pub fn error_line(id: &Json, msg: &str) -> String {
+    let mut pairs = vec![("ok", Json::Bool(false)), ("error", s(msg))];
+    if *id != Json::Null {
+        pairs.push(("id", id.clone()));
+    }
+    obj(pairs).to_string()
+}
+
+/// `{"ok":true,"op":"pong"}`.
+pub fn pong_line() -> String {
+    obj(vec![("ok", Json::Bool(true)), ("op", s("pong"))]).to_string()
+}
+
+/// `{"ok":true,"op":"shutdown"}` — the ack written *before* the daemon
+/// starts draining (after that, the process may exit at any moment).
+pub fn shutdown_line() -> String {
+    obj(vec![("ok", Json::Bool(true)), ("op", s("shutdown"))]).to_string()
+}
+
+/// The `generate` success response.
+pub fn generate_line(id: &Json, prompt_len: usize, tokens: &[i32]) -> String {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", s("generate")),
+        ("id", id.clone()),
+        ("prompt_len", num(prompt_len as f64)),
+        ("tokens", Json::Arr(tokens.iter().map(|&t| num(t as f64)).collect())),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_op() {
+        assert_eq!(parse_request(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
+        assert_eq!(parse_request(r#"{"op":"info"}"#).unwrap(), Request::Info);
+        assert_eq!(parse_request(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown);
+        let g = parse_request(r#"{"op":"generate","prompt":[1,2],"max_tokens":3,"id":9}"#).unwrap();
+        assert_eq!(
+            g,
+            Request::Generate { id: Json::Num(9.0), prompt: vec![1, 2], max_tokens: 3 }
+        );
+    }
+
+    #[test]
+    fn generate_defaults() {
+        let g = parse_request(r#"{"op":"generate","prompt":[0]}"#).unwrap();
+        let Request::Generate { id, prompt, max_tokens } = g else { panic!("not generate") };
+        assert_eq!(id, Json::Null);
+        assert_eq!(prompt, vec![0]);
+        assert_eq!(max_tokens, 16);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"op":"warp"}"#).is_err());
+        assert!(parse_request(r#"{"op":"generate"}"#).is_err());
+        assert!(parse_request(r#"{"op":"generate","prompt":"abc"}"#).is_err());
+        assert!(parse_request(r#"{"op":"generate","prompt":[1.5]}"#).is_err());
+        assert!(parse_request(r#"{"op":"generate","prompt":[-1]}"#).is_err());
+        assert!(parse_request(r#"{"op":"generate","prompt":[1],"max_tokens":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let line = generate_line(&Json::Num(3.0), 2, &[4, 5]);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_i64(), Some(3));
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        let e = error_line(&Json::Null, "nope");
+        let v = Json::parse(&e).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("nope"));
+        assert!(v.get("id").is_none());
+    }
+}

@@ -1,0 +1,289 @@
+//! Continuous batching over the incremental-decode path.
+//!
+//! The scheduler owns the backend and a set of in-flight sequences,
+//! each with its own [`KvCache`]. One [`Scheduler::step`] call (a)
+//! admits queued requests into free batch slots — the prefill runs
+//! their whole prompt through `forward_incremental` in one shot — and
+//! (b) advances every active sequence by one greedily-decoded token,
+//! evicting the ones that hit their budget. Admission between decode
+//! steps is what makes the batching *continuous*: a 512-token
+//! generation never blocks a 4-token one arriving behind it.
+//!
+//! Decoding is greedy argmax with lowest-index tie-break, so the
+//! output tokens are a pure function of (weights, prompt) — batching
+//! order, admission timing, and thread count cannot change them
+//! (per-row matmul results are independent of batch composition, and
+//! each sequence carries its own cache).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::backend::native::{KvCache, NativeBackend};
+use crate::backend::Backend;
+
+/// A queued generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    /// Scheduler-scoped id; results carry it back.
+    pub id: u64,
+    /// Prompt token ids (non-empty, all `< vocab`).
+    pub prompt: Vec<i32>,
+    /// Tokens to generate (clamped to the seq_len budget at submit).
+    pub max_tokens: usize,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    /// The request's id.
+    pub id: u64,
+    /// The generated continuation (prompt not included).
+    pub tokens: Vec<i32>,
+    /// Length of the prompt that was prefilled.
+    pub prompt_len: usize,
+}
+
+/// One in-flight sequence: its cache, its last token (the next decode
+/// input), and what it has produced so far.
+struct Seq {
+    id: u64,
+    cache: KvCache,
+    prompt_len: usize,
+    last: i32,
+    generated: Vec<i32>,
+    max_tokens: usize,
+}
+
+/// Continuous-batching scheduler; see the module docs.
+pub struct Scheduler {
+    backend: NativeBackend,
+    queue: VecDeque<GenRequest>,
+    active: Vec<Seq>,
+    max_batch: usize,
+}
+
+impl Scheduler {
+    /// Wrap a ready-to-serve backend (init'd, checkpoint loaded,
+    /// usually folded). `max_batch` is the number of concurrent decode
+    /// slots; queued requests wait for a free one.
+    pub fn new(backend: NativeBackend, max_batch: usize) -> Scheduler {
+        Scheduler {
+            backend,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    /// The wrapped backend (model card queries).
+    pub fn backend(&self) -> &NativeBackend {
+        &self.backend
+    }
+
+    /// Validate and enqueue. `max_tokens` is clamped so that
+    /// `prompt + generated` fits the preset's seq_len (rope tables and
+    /// the causal mask are sized to it); a prompt that leaves no room
+    /// to generate even one token is rejected.
+    pub fn submit(&mut self, mut req: GenRequest) -> Result<()> {
+        let p = self.backend.preset();
+        if req.prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if let Some(&t) = req.prompt.iter().find(|&&t| t < 0 || t as usize >= p.vocab) {
+            bail!("prompt token {t} out of vocab {}", p.vocab);
+        }
+        if req.prompt.len() >= p.seq_len {
+            bail!(
+                "prompt length {} leaves no room to generate (seq_len {})",
+                req.prompt.len(),
+                p.seq_len
+            );
+        }
+        if req.max_tokens == 0 {
+            bail!("max_tokens must be at least 1");
+        }
+        req.max_tokens = req.max_tokens.min(p.seq_len - req.prompt.len());
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Queued requests not yet admitted.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Sequences currently holding a decode slot.
+    pub fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// True when there is nothing queued and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// One scheduling round: admit into free slots (prefill), advance
+    /// every active sequence one token, evict and return the finished
+    /// ones. Returns an empty vec when idle.
+    pub fn step(&mut self) -> Result<Vec<GenResult>> {
+        // admit: prefill the whole prompt, producing the first token
+        while self.active.len() < self.max_batch {
+            let Some(req) = self.queue.pop_front() else { break };
+            let mut cache = self.backend.new_kv_cache();
+            let logits = self.backend.forward_incremental(&req.prompt, &mut cache)?;
+            let last_row = &logits.data[(logits.rows - 1) * logits.cols..];
+            let first = argmax(last_row);
+            self.active.push(Seq {
+                id: req.id,
+                cache,
+                prompt_len: req.prompt.len(),
+                last: first,
+                generated: vec![first],
+                max_tokens: req.max_tokens,
+            });
+        }
+
+        // decode: one token per active sequence (skip the ones the
+        // prefill already completed)
+        for seq in &mut self.active {
+            if seq.generated.len() >= seq.max_tokens {
+                continue;
+            }
+            let logits = self.backend.forward_incremental(&[seq.last], &mut seq.cache)?;
+            let row = &logits.data[(logits.rows - 1) * logits.cols..];
+            let tok = argmax(row);
+            seq.last = tok;
+            seq.generated.push(tok);
+        }
+
+        // evict finished sequences, preserving admission order among
+        // the survivors
+        let mut done = Vec::new();
+        self.active.retain_mut(|seq| {
+            let full = seq.cache.len() >= self.backend.preset().seq_len;
+            if seq.generated.len() >= seq.max_tokens || full {
+                done.push(GenResult {
+                    id: seq.id,
+                    tokens: std::mem::take(&mut seq.generated),
+                    prompt_len: seq.prompt_len,
+                });
+                false
+            } else {
+                true
+            }
+        });
+        Ok(done)
+    }
+
+    /// Run a single request to completion (test / bench convenience):
+    /// submit, then step until its result comes back.
+    pub fn generate(&mut self, prompt: &[i32], max_tokens: usize) -> Result<GenResult> {
+        let id = u64::MAX; // reserved: never collides with daemon ids
+        self.submit(GenRequest { id, prompt: prompt.to_vec(), max_tokens })?;
+        loop {
+            for r in self.step()? {
+                if r.id == id {
+                    return Ok(r);
+                }
+            }
+            if self.is_idle() {
+                bail!("request completed without a result (scheduler bug)");
+            }
+        }
+    }
+}
+
+/// Greedy argmax with lowest-index tie-break: deterministic for any
+/// logits row, independent of batching and thread count.
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::linalg::SupportPattern;
+
+    fn tiny_scheduler(max_batch: usize) -> Scheduler {
+        let mut be = NativeBackend::build(
+            preset("tiny").unwrap(),
+            "sltrain",
+            2,
+            3e-3,
+            100,
+            1,
+            32,
+            0,
+            SupportPattern::UniformRandom,
+        )
+        .unwrap();
+        be.init_state(11).unwrap();
+        be.drop_optimizer_state().unwrap();
+        be.fold_weights().unwrap();
+        Scheduler::new(be, max_batch)
+    }
+
+    #[test]
+    fn argmax_low_index_tie_break() {
+        assert_eq!(argmax(&[0.0, 1.0, 1.0]), 1);
+        assert_eq!(argmax(&[2.0, 2.0]), 0);
+    }
+
+    #[test]
+    fn submit_validates() {
+        let mut s = tiny_scheduler(2);
+        assert!(s.submit(GenRequest { id: 0, prompt: vec![], max_tokens: 4 }).is_err());
+        assert!(s.submit(GenRequest { id: 0, prompt: vec![-3], max_tokens: 4 }).is_err());
+        assert!(s.submit(GenRequest { id: 0, prompt: vec![99999], max_tokens: 4 }).is_err());
+        assert!(s.submit(GenRequest { id: 0, prompt: vec![1], max_tokens: 0 }).is_err());
+        let long = vec![1i32; s.backend().preset().seq_len];
+        assert!(s.submit(GenRequest { id: 0, prompt: long, max_tokens: 4 }).is_err());
+        assert!(s.submit(GenRequest { id: 0, prompt: vec![1, 2, 3], max_tokens: 4 }).is_ok());
+    }
+
+    #[test]
+    fn batching_does_not_change_outputs() {
+        // the same prompts served solo and interleaved produce
+        // identical continuations: each sequence carries its own
+        // cache, and per-row matmuls are independent of batch-mates
+        let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![7, 8], vec![4, 5, 6, 9]];
+        let mut solo = Vec::new();
+        for p in &prompts {
+            let mut s = tiny_scheduler(1);
+            solo.push(s.generate(p, 6).unwrap().tokens);
+        }
+        let mut s = tiny_scheduler(2); // fewer slots than requests: queueing
+        for (i, p) in prompts.iter().enumerate() {
+            s.submit(GenRequest { id: i as u64, prompt: p.clone(), max_tokens: 6 }).unwrap();
+        }
+        let mut batched: Vec<Option<Vec<i32>>> = vec![None; prompts.len()];
+        while !s.is_idle() {
+            for r in s.step().unwrap() {
+                batched[r.id as usize] = Some(r.tokens);
+            }
+        }
+        for (a, b) in solo.iter().zip(&batched) {
+            assert_eq!(b.as_ref(), Some(a));
+        }
+    }
+
+    #[test]
+    fn max_tokens_clamps_to_seq_len() {
+        let mut s = tiny_scheduler(1);
+        let seq_len = s.backend().preset().seq_len;
+        let prompt = vec![1i32; seq_len - 2];
+        let r = s.generate(&prompt, 100).unwrap();
+        assert_eq!(r.tokens.len(), 2); // only 2 positions left
+        assert!(s.is_idle());
+    }
+}

@@ -289,6 +289,13 @@ fn backend_spec_validation() {
 /// 200-step e2e training) concurrently in this binary, which poisons
 /// wall-clock ratios. CI runs it in a dedicated serial step:
 ///   cargo test -q --test native_backend -- --ignored --test-threads=1
+///
+/// Flake-proofing (the deadline-poll pattern, `tests/support/mod.rs`):
+/// a single timing sample is at the mercy of whatever the runner is
+/// doing that instant, so instead of asserting on one measurement the
+/// test re-measures until the expected relation holds, and only fails
+/// if a generous deadline expires without it *ever* holding — i.e.
+/// the speedup is genuinely absent, not merely masked by noise.
 #[test]
 #[ignore = "timing-sensitive: run serially (see doc comment)"]
 fn threaded_step_loop_beats_single_thread() {
@@ -325,16 +332,32 @@ fn threaded_step_loop_beats_single_thread() {
         }
         t0.elapsed().as_secs_f64()
     };
-    // best-of-two per thread count: robust to transient CI contention
-    // (the test harness may run other tests concurrently)
-    let t1 = time_threads(1).min(time_threads(1));
-    let t4 = time_threads(4).min(time_threads(4));
-    // the issue's contract is simply "4 threads beats 1 thread"; leave
-    // headroom so shared 4-vCPU runners don't flake on a clean commit
-    assert!(
-        t4 < t1 * 0.95,
-        "4 threads ({t4:.3}s) not faster than 1 thread ({t1:.3}s) over 8 steps"
-    );
+    // the issue's contract is simply "4 threads beats 1 thread"; the
+    // 0.95 factor leaves headroom so a near-tie doesn't count as a win
+    let deadline = std::time::Duration::from_secs(120);
+    let t0 = std::time::Instant::now();
+    let (mut best_t1, mut best_t4) = (f64::INFINITY, f64::INFINITY);
+    let mut rounds = 0;
+    loop {
+        best_t1 = best_t1.min(time_threads(1));
+        best_t4 = best_t4.min(time_threads(4));
+        rounds += 1;
+        if best_t4 < best_t1 * 0.95 {
+            eprintln!(
+                "4 threads beat 1 thread after {rounds} round(s): \
+                 {best_t4:.3}s vs {best_t1:.3}s"
+            );
+            return;
+        }
+        // keep re-measuring (best-of-N shrugs off transient runner
+        // contention) until the relation holds or the deadline says
+        // the speedup is genuinely absent
+        assert!(
+            t0.elapsed() <= deadline,
+            "4 threads ({best_t4:.3}s) never beat 1 thread ({best_t1:.3}s) \
+             over 8 steps in {rounds} rounds within {deadline:?}"
+        );
+    }
 }
 
 /// The per-layer fused refactor's acceptance contract: at

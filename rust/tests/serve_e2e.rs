@@ -1,0 +1,146 @@
+//! Black-box tests of the serving daemon: the real `sltrain serve`
+//! binary, spawned per test, spoken to over its Unix socket through
+//! `support::harness`. Everything asynchronous is awaited by
+//! deadline-poll (see `support/mod.rs`) — no fixed sleeps.
+
+mod support;
+
+use std::process::Command;
+
+use support::harness::{Client, Daemon};
+
+/// Full lifecycle: start → ping/info → prefill+decode (generate) →
+/// evict (second generate reuses the slot) → clean shutdown, exit 0,
+/// socket unlinked.
+#[test]
+fn daemon_lifecycle_start_generate_shutdown() {
+    let mut daemon = Daemon::spawn(&[]);
+    let mut c = daemon.connect();
+
+    let pong = c.request(r#"{"op":"ping"}"#);
+    assert_eq!(pong.get("ok").and_then(|o| o.as_bool()), Some(true));
+    assert_eq!(pong.get("op").and_then(|o| o.as_str()), Some("pong"));
+
+    let info = c.request(r#"{"op":"info"}"#);
+    assert_eq!(info.get("ok").and_then(|o| o.as_bool()), Some(true));
+    assert_eq!(info.get("preset").and_then(|o| o.as_str()), Some("tiny"));
+    assert_eq!(info.get("method").and_then(|o| o.as_str()), Some("sltrain"));
+    // the daemon serves the Table-5 folded weights by default
+    assert_eq!(info.get("folded").and_then(|o| o.as_bool()), Some(true));
+    let vocab = info.get("vocab").and_then(|o| o.as_i64()).unwrap();
+    assert!(vocab > 0);
+
+    // prefill + incremental decode
+    let r1 = c.generate(&[1, 2, 3], 5);
+    let toks1 = Client::tokens_of(&r1);
+    assert_eq!(toks1.len(), 5);
+    assert_eq!(r1.get("prompt_len").and_then(|o| o.as_i64()), Some(3));
+    assert!(toks1.iter().all(|&t| t >= 0 && t < vocab), "tokens out of vocab: {toks1:?}");
+
+    // the finished sequence was evicted; its slot serves the next one
+    let r2 = c.generate(&[4, 5], 3);
+    assert_eq!(Client::tokens_of(&r2).len(), 3);
+
+    // greedy decoding is deterministic: same prompt, same continuation
+    let r3 = c.generate(&[1, 2, 3], 5);
+    assert_eq!(Client::tokens_of(&r3), toks1, "same prompt must reproduce the continuation");
+
+    let bye = c.request(r#"{"op":"shutdown"}"#);
+    assert_eq!(bye.get("ok").and_then(|o| o.as_bool()), Some(true));
+    let status = daemon.wait_exit();
+    assert!(status.success(), "daemon did not exit cleanly: {status}");
+    assert!(!daemon.socket.exists(), "socket file not unlinked on shutdown");
+}
+
+/// Hostile input: malformed lines and invalid generates are answered
+/// with `{"ok":false,...}` on the same connection — the daemon and the
+/// connection both survive, and a valid request still works afterwards.
+#[test]
+fn malformed_requests_get_error_responses_not_a_dead_daemon() {
+    let mut daemon = Daemon::spawn(&[]);
+    let mut c = daemon.connect();
+
+    for bad in [
+        "this is not json",
+        r#"{"op":"warp_core_breach"}"#,
+        r#"{"op":"generate"}"#,
+        r#"{"op":"generate","prompt":"abc"}"#,
+        r#"{"op":"generate","prompt":[],"max_tokens":4}"#,
+        r#"{"op":"generate","prompt":[999999],"max_tokens":4}"#,
+        r#"{"op":"generate","prompt":[1],"max_tokens":0}"#,
+    ] {
+        let resp = c.request(bad);
+        assert_eq!(
+            resp.get("ok").and_then(|o| o.as_bool()),
+            Some(false),
+            "{bad:?} should have produced an error response, got {resp:?}"
+        );
+        assert!(resp.get("error").is_some(), "no error message for {bad:?}");
+    }
+
+    // the connection still serves valid traffic after every error
+    let ok = c.generate(&[1, 2], 2);
+    assert_eq!(Client::tokens_of(&ok).len(), 2);
+
+    c.request(r#"{"op":"shutdown"}"#);
+    assert!(daemon.wait_exit().success());
+}
+
+/// Continuous batching across connections: several clients in flight at
+/// once, each getting the same continuation it would get alone (each
+/// sequence has its own KV cache; batching cannot change outputs).
+#[test]
+fn concurrent_clients_share_the_decode_batch() {
+    let mut daemon = Daemon::spawn(&["--max-batch", "2"]);
+
+    // reference continuations, served solo
+    let mut c0 = daemon.connect();
+    let solo_a = Client::tokens_of(&c0.generate(&[1, 2, 3], 6));
+    let solo_b = Client::tokens_of(&c0.generate(&[7, 8], 6));
+
+    // now both at once from separate connections (2 slots: both admit)
+    let mut ca = daemon.connect();
+    let mut cb = daemon.connect();
+    ca.send_raw(r#"{"op":"generate","prompt":[1,2,3],"max_tokens":6,"id":1}"#);
+    cb.send_raw(r#"{"op":"generate","prompt":[7,8],"max_tokens":6,"id":2}"#);
+    let ra = ca.recv();
+    let rb = cb.recv();
+    assert_eq!(Client::tokens_of(&ra), solo_a, "batched run changed client A's tokens");
+    assert_eq!(Client::tokens_of(&rb), solo_b, "batched run changed client B's tokens");
+    assert_eq!(ra.get("id").and_then(|o| o.as_i64()), Some(1));
+    assert_eq!(rb.get("id").and_then(|o| o.as_i64()), Some(2));
+
+    c0.request(r#"{"op":"shutdown"}"#);
+    assert!(daemon.wait_exit().success());
+}
+
+/// The CI smoke (wired as a dedicated tier-1 step): train a short run
+/// to a real SLTCKPT1 checkpoint through the CLI, serve it, answer 3
+/// generate requests through the harness, shut down cleanly.
+#[test]
+fn serve_smoke_checkpoint_three_generates_clean_exit() {
+    let dir = std::env::temp_dir().join(format!("sltrain-servesmoke-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("smoke.ckpt");
+    let out = Command::new(env!("CARGO_BIN_EXE_sltrain"))
+        .args([
+            "train", "--backend", "native", "--config", "tiny", "--method", "sltrain",
+            "--batch", "2", "--steps", "2", "--eval-every", "0", "--log-every", "0",
+        ])
+        .arg("--checkpoint")
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "train failed:\n{}", String::from_utf8_lossy(&out.stderr));
+
+    let mut daemon = Daemon::spawn(&["--checkpoint", ckpt.to_str().unwrap()]);
+    let mut c = daemon.connect();
+    for prompt in [vec![1, 2, 3], vec![9], vec![4, 5, 6, 7]] {
+        let resp = c.generate(&prompt, 4);
+        let toks = Client::tokens_of(&resp);
+        assert_eq!(toks.len(), 4, "prompt {prompt:?}");
+    }
+    c.request(r#"{"op":"shutdown"}"#);
+    assert!(daemon.wait_exit().success(), "daemon did not exit cleanly after smoke");
+    std::fs::remove_dir_all(dir).ok();
+}

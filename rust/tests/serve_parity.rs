@@ -1,0 +1,306 @@
+//! Parity contracts behind the serving path:
+//!
+//! * `fold_weights` materializes exactly the Table-5 dense weights —
+//!   bitwise-equal to the reference formulas computed from the pre-fold
+//!   state tensors, for every method × support pattern, and
+//!   bit-identical at every thread count;
+//! * the folded forward matches the live factored forward up to f32
+//!   re-association (tolerance), and is itself bitwise-deterministic;
+//! * KV-cache incremental decode (`forward_incremental`) produces
+//!   logits bitwise-equal to a full-sequence recompute, at 1/2/4
+//!   threads, pre- and post-fold;
+//! * restoring a checkpoint after `drop_optimizer_state` yields the
+//!   exact same forward/eval as restoring it into a fresh backend
+//!   (regression: the dropped path used to refuse full checkpoints).
+
+use std::collections::BTreeMap;
+
+use sltrain::backend::native::NativeBackend;
+use sltrain::backend::{Backend, StateTensor};
+use sltrain::config::preset;
+use sltrain::linalg::{Matrix, SparseSupport, SupportPattern};
+
+const SEED: u32 = 11;
+
+fn build(method: &str, threads: usize, support: SupportPattern) -> NativeBackend {
+    let p = preset("tiny").expect("tiny preset");
+    let mut be = NativeBackend::build(p, method, 2, 3e-3, 100, threads, 32, 0, support)
+        .expect("build native backend");
+    be.init_state(SEED).expect("init");
+    be
+}
+
+/// Deterministic token stream covering the vocab (no RNG: the exact
+/// values are irrelevant, only that every run sees the same ones).
+fn tokens(n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|i| ((i * 37 + 11) % vocab) as i32).collect()
+}
+
+/// Two optimizer steps so B (zero-init for sltrain/relora) and the
+/// sparse values are all non-trivial before folding.
+fn warm_up(be: &mut NativeBackend) {
+    let p = be.preset().clone();
+    let toks = tokens(be.batch_size() * p.seq_len, p.vocab);
+    be.train_step(0, &toks).expect("train step 0");
+    be.train_step(1, &toks).expect("train step 1");
+}
+
+fn f32_map(ts: &[StateTensor]) -> BTreeMap<String, (Vec<usize>, Vec<f32>)> {
+    ts.iter()
+        .filter(|t| t.to_f32().is_ok())
+        .map(|t| (t.name.clone(), (t.shape.clone(), t.to_f32().unwrap())))
+        .collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at {i}: {x} vs {y}");
+    }
+}
+
+/// The effective dense weight a method's factors encode, computed from
+/// the interchange tensors with the public serial kernels (`matmul`,
+/// `fused_effective`) — the fold (which runs on the pool) must agree
+/// bit-for-bit, per the engine's thread-count determinism contract.
+fn reference_fold(
+    method: &str,
+    pre: &BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    idx: &BTreeMap<String, Vec<u32>>,
+    path: &str,
+    d_in: usize,
+    d_out: usize,
+    scale: f32,
+) -> Vec<f32> {
+    let mat = |name: String| {
+        let (shape, data) = pre.get(&name).unwrap_or_else(|| panic!("missing {name}"));
+        Matrix::from_vec(shape[0], shape[1], data.clone())
+    };
+    match method {
+        "full" | "galore" => pre[&format!("{path}.w")].1.clone(),
+        "lowrank" => {
+            let mut w = mat(format!("{path}.B")).matmul(&mat(format!("{path}.A")));
+            w.scale_mut(scale);
+            w.data
+        }
+        "sltrain" => {
+            let sup = SparseSupport::new(d_in, d_out, idx[&format!("{path}.idx")].clone());
+            let vals = &pre[&format!("{path}.vals")].1;
+            sup.fused_effective(&mat(format!("{path}.B")), &mat(format!("{path}.A")), vals, scale)
+                .data
+        }
+        "relora" => {
+            let ba = mat(format!("{path}.B")).matmul(&mat(format!("{path}.A")));
+            let mut w = pre[&format!("{path}.w0")].1.clone();
+            for (wi, x) in w.iter_mut().zip(&ba.data) {
+                *wi += scale * x;
+            }
+            w
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn folded_weights_match_reference_formulas_bitwise() {
+    let cases = [
+        ("full", SupportPattern::UniformRandom),
+        ("galore", SupportPattern::UniformRandom),
+        ("lowrank", SupportPattern::UniformRandom),
+        ("relora", SupportPattern::UniformRandom),
+        ("sltrain", SupportPattern::UniformRandom),
+        ("sltrain", SupportPattern::StructuredNM { n: 2, m: 4 }),
+    ];
+    for (method, support) in cases {
+        let tag = format!("{method}/{}", support.label());
+        let mut be = build(method, 2, support);
+        warm_up(&mut be);
+        let p = be.preset().clone();
+        let scale = (p.alpha / p.rank as f64) as f32;
+
+        let pre_ts = be.state_tensors().unwrap();
+        let pre = f32_map(&pre_ts);
+        let idx: BTreeMap<String, Vec<u32>> = pre_ts
+            .iter()
+            .filter(|t| t.name.ends_with(".idx"))
+            .map(|t| {
+                let ids = t.to_i32().unwrap().iter().map(|&i| i as u32).collect();
+                (t.name.clone(), ids)
+            })
+            .collect();
+
+        be.fold_weights().unwrap();
+        assert!(be.is_folded(), "{tag}: not marked folded");
+        let post = f32_map(&be.state_tensors().unwrap());
+
+        for (path, d_in, d_out) in p.linear_paths() {
+            let want = reference_fold(method, &pre, &idx, &path, d_in, d_out, scale);
+            let (shape, got) =
+                post.get(&format!("{path}.w")).unwrap_or_else(|| panic!("{tag}: no {path}.w"));
+            assert_eq!(shape, &vec![d_in, d_out], "{tag}: {path}.w shape");
+            assert_bits_eq(got, &want, &format!("{tag}: {path}.w"));
+            for gone in [".B", ".A", ".vals", ".w0"] {
+                assert!(
+                    !post.contains_key(&format!("{path}{gone}")),
+                    "{tag}: {path}{gone} survived the fold"
+                );
+            }
+        }
+        // folded state carries no supports and no optimizer moments
+        assert!(post.keys().all(|k| !k.starts_with("optim.")), "{tag}: moments survived");
+        assert!(
+            be.state_tensors().unwrap().iter().all(|t| !t.name.ends_with(".idx")),
+            "{tag}: support indices survived"
+        );
+        // and the engine refuses to train from here on
+        let toks = tokens(be.batch_size() * p.seq_len, p.vocab);
+        let err = be.train_step(2, &toks).unwrap_err().to_string();
+        assert!(err.contains("fold"), "{tag}: wrong refusal: {err}");
+    }
+}
+
+#[test]
+fn fold_and_folded_forward_are_bitwise_identical_across_thread_counts() {
+    let p = preset("tiny").unwrap();
+    let toks = tokens(p.seq_len, p.vocab);
+    let mut reference: Option<(BTreeMap<String, (Vec<usize>, Vec<f32>)>, Vec<f32>)> = None;
+    for threads in [1usize, 2, 4] {
+        let mut be = build("sltrain", threads, SupportPattern::UniformRandom);
+        warm_up(&mut be);
+        be.fold_weights().unwrap();
+        let state = f32_map(&be.state_tensors().unwrap());
+        let logits = be.forward(&toks).unwrap();
+        match &reference {
+            None => reference = Some((state, logits)),
+            Some((s1, l1)) => {
+                assert_eq!(s1.len(), state.len(), "{threads} threads: tensor count");
+                for (name, (_, data)) in &state {
+                    assert_bits_eq(data, &s1[name].1, &format!("{threads} threads: {name}"));
+                }
+                assert_bits_eq(&logits, l1, &format!("{threads} threads: folded logits"));
+            }
+        }
+    }
+}
+
+#[test]
+fn folded_forward_matches_live_forward_within_tolerance() {
+    let cases = [
+        ("sltrain", SupportPattern::UniformRandom),
+        ("sltrain", SupportPattern::StructuredNM { n: 2, m: 4 }),
+        ("lowrank", SupportPattern::UniformRandom),
+        ("relora", SupportPattern::UniformRandom),
+    ];
+    for (method, support) in cases {
+        let tag = format!("{method}/{}", support.label());
+        let mut live = build(method, 2, support);
+        warm_up(&mut live);
+        let mut folded = build(method, 2, support);
+        warm_up(&mut folded);
+        folded.fold_weights().unwrap();
+
+        let p = live.preset().clone();
+        let toks = tokens(p.seq_len, p.vocab);
+        let a = live.forward(&toks).unwrap();
+        let b = folded.forward(&toks).unwrap();
+        assert_eq!(a.len(), b.len());
+        // the fold only re-associates f32 sums (x·(BA) vs (x·B)·A);
+        // logits agree to well under any decode-relevant margin
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-3 + 1e-3 * y.abs(),
+                "{tag}: logit {i} diverged: live {x} vs folded {y}"
+            );
+        }
+    }
+}
+
+/// Row i of the incremental stream must be byte-identical to row i of
+/// one full-sequence forward — prefill of P tokens, then strictly
+/// one-token decode steps — at every thread count, before and after
+/// the fold. This is the contract that makes KV-cache serving safe to
+/// substitute for recompute.
+#[test]
+fn kv_cache_decode_is_bitwise_equal_to_full_recompute() {
+    for fold in [false, true] {
+        let mut per_thread: Option<Vec<f32>> = None;
+        for threads in [1usize, 2, 4] {
+            let mut be = build("sltrain", threads, SupportPattern::UniformRandom);
+            warm_up(&mut be);
+            if fold {
+                be.fold_weights().unwrap();
+            }
+            let p = be.preset().clone();
+            let toks = tokens(p.seq_len, p.vocab);
+            let tag = format!("fold={fold} threads={threads}");
+
+            let full = be.forward(&toks).unwrap();
+            assert_eq!(full.len(), p.seq_len * p.vocab);
+
+            let mut cache = be.new_kv_cache();
+            let prefill_len = p.seq_len / 3;
+            let mut inc = Vec::with_capacity(full.len());
+            let m = be.forward_incremental(&toks[..prefill_len], &mut cache).unwrap();
+            assert_eq!((m.rows, m.cols), (prefill_len, p.vocab), "{tag}: prefill shape");
+            inc.extend_from_slice(&m.data);
+            for i in prefill_len..p.seq_len {
+                let m = be.forward_incremental(&toks[i..i + 1], &mut cache).unwrap();
+                assert_eq!((m.rows, m.cols), (1, p.vocab), "{tag}: decode shape");
+                inc.extend_from_slice(&m.data);
+            }
+            assert_eq!(cache.len(), p.seq_len, "{tag}: cache length");
+            assert!(cache.bytes() > 0, "{tag}: cache claims zero bytes");
+
+            assert_bits_eq(&inc, &full, &format!("{tag}: incremental vs full logits"));
+            match &per_thread {
+                None => per_thread = Some(inc),
+                Some(l1) => assert_bits_eq(&inc, l1, &format!("{tag}: vs 1 thread")),
+            }
+        }
+    }
+}
+
+/// Regression (the dropped-state restore bug): a checkpoint written
+/// with full optimizer state must restore onto a backend whose state
+/// was dropped — weights/supports only — and the restored model must
+/// forward/eval bit-identically to the same checkpoint restored onto a
+/// fresh backend. Covers relora (frozen W0, no W0 moments), sltrain on
+/// structured 2:4 supports, and galore (projector tensors).
+#[test]
+fn restore_after_drop_matches_fresh_restore_bitwise() {
+    let cases = [
+        ("relora", SupportPattern::UniformRandom),
+        ("sltrain", SupportPattern::StructuredNM { n: 2, m: 4 }),
+        ("galore", SupportPattern::UniformRandom),
+    ];
+    for (method, support) in cases {
+        let tag = format!("{method}/{}", support.label());
+        let mut trained = build(method, 2, support);
+        warm_up(&mut trained);
+        let snap = trained.state_tensors().unwrap();
+        assert!(
+            snap.iter().any(|t| t.name.starts_with("optim.")),
+            "{tag}: snapshot carries no moments — the regression needs a full checkpoint"
+        );
+
+        let p = trained.preset().clone();
+        let toks = tokens(p.seq_len, p.vocab);
+
+        // fresh backend, full restore: the reference
+        let mut fresh = build(method, 2, support);
+        fresh.load_state_tensors(&snap).unwrap();
+        let want_logits = fresh.forward(&toks).unwrap();
+        let want_loss = fresh.eval_loss(&toks).unwrap();
+
+        // dropped backend, same checkpoint: weights-only restore must
+        // succeed (it used to bail) and match the reference exactly
+        let mut dropped = build(method, 2, support);
+        dropped.drop_optimizer_state().unwrap();
+        dropped.load_state_tensors(&snap).unwrap();
+        let got_logits = dropped.forward(&toks).unwrap();
+        let got_loss = dropped.eval_loss(&toks).unwrap();
+
+        assert_bits_eq(&got_logits, &want_logits, &format!("{tag}: restored logits"));
+        assert_eq!(got_loss.to_bits(), want_loss.to_bits(), "{tag}: restored eval loss");
+    }
+}

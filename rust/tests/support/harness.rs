@@ -1,0 +1,164 @@
+//! Black-box daemon harness: spawn the real binary, speak the
+//! newline-delimited JSON protocol, kill the child on drop.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use sltrain::Json;
+
+/// Generous ceiling for anything a healthy daemon does in milliseconds.
+/// A deadline this loose never slows a passing test (polls return as
+/// soon as the condition holds); it only bounds how long a broken one
+/// can hang.
+pub const DEADLINE: Duration = Duration::from_secs(60);
+
+/// Poll `check` every 10 ms until it returns `Some`, or panic after
+/// `deadline` naming `what` — the repo's flake-proof replacement for
+/// fixed sleeps (see the module docs in `support/mod.rs`).
+pub fn deadline_poll<T>(
+    what: &str,
+    deadline: Duration,
+    mut check: impl FnMut() -> Option<T>,
+) -> T {
+    let t0 = Instant::now();
+    loop {
+        if let Some(v) = check() {
+            return v;
+        }
+        assert!(
+            t0.elapsed() <= deadline,
+            "deadline ({deadline:?}) expired waiting for: {what}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+static NEXT_DAEMON: AtomicU64 = AtomicU64::new(0);
+
+/// A running `sltrain serve` child process bound to a temp socket.
+/// Killed (and its temp dir removed) on drop, so a failing test never
+/// leaks a daemon.
+pub struct Daemon {
+    child: Child,
+    /// The socket the daemon is serving on.
+    pub socket: PathBuf,
+    dir: PathBuf,
+}
+
+impl Daemon {
+    /// Spawn `sltrain serve --socket <tmp> <extra args>` and wait (by
+    /// deadline-poll, not sleep) until the socket accepts connections.
+    pub fn spawn(extra_args: &[&str]) -> Daemon {
+        let dir = std::env::temp_dir().join(format!(
+            "sltrain-serve-{}-{}",
+            std::process::id(),
+            NEXT_DAEMON.fetch_add(1, Ordering::SeqCst)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let socket = dir.join("serve.sock");
+        let child = Command::new(env!("CARGO_BIN_EXE_sltrain"))
+            .arg("serve")
+            .arg("--socket")
+            .arg(&socket)
+            .args(extra_args)
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawning sltrain serve");
+        let mut daemon = Daemon { child, socket, dir };
+        // connect-retry with deadline: model init can take a moment,
+        // and the socket file appears slightly before bind completes
+        deadline_poll("daemon socket to accept connections", DEADLINE, || {
+            if let Some(status) = daemon.child.try_wait().unwrap() {
+                panic!("daemon exited during startup: {status}");
+            }
+            UnixStream::connect(&daemon.socket).ok().map(drop)
+        });
+        daemon
+    }
+
+    /// Open a protocol connection to the daemon.
+    pub fn connect(&self) -> Client {
+        let stream = deadline_poll("connecting to the daemon socket", DEADLINE, || {
+            UnixStream::connect(&self.socket).ok()
+        });
+        Client::new(stream)
+    }
+
+    /// Deadline-poll until the child exits; returns its status.
+    pub fn wait_exit(&mut self) -> std::process::ExitStatus {
+        deadline_poll("daemon process exit", DEADLINE, || {
+            self.child.try_wait().expect("waiting on daemon child")
+        })
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        // kill is a no-op if the child already exited cleanly
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// One protocol connection: typed line-oriented send/recv with read
+/// timeouts, so a silent daemon fails the test instead of hanging it.
+pub struct Client {
+    reader: BufReader<UnixStream>,
+    writer: UnixStream,
+}
+
+impl Client {
+    fn new(stream: UnixStream) -> Client {
+        stream.set_read_timeout(Some(DEADLINE)).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { reader, writer: stream }
+    }
+
+    /// Send one raw request line (no trailing newline needed).
+    pub fn send_raw(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    /// Read one response line and parse it as JSON.
+    pub fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("reading daemon response");
+        assert!(n > 0, "daemon closed the connection mid-exchange");
+        Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"))
+    }
+
+    /// Send a raw line and read the one response it produces.
+    pub fn request(&mut self, line: &str) -> Json {
+        self.send_raw(line);
+        self.recv()
+    }
+
+    /// Typed `generate`: returns the response object (assert on
+    /// `ok` / `tokens` at the call site).
+    pub fn generate(&mut self, prompt: &[i32], max_tokens: usize) -> Json {
+        let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+        self.request(&format!(
+            r#"{{"op":"generate","prompt":[{}],"max_tokens":{max_tokens}}}"#,
+            toks.join(",")
+        ))
+    }
+
+    /// Extract the generated token ids from a `generate` response.
+    pub fn tokens_of(resp: &Json) -> Vec<i64> {
+        assert_eq!(resp.get("ok").and_then(|o| o.as_bool()), Some(true), "error: {resp:?}");
+        resp.get("tokens")
+            .and_then(|t| t.as_arr())
+            .unwrap_or_else(|| panic!("no tokens in {resp:?}"))
+            .iter()
+            .map(|t| t.as_i64().unwrap())
+            .collect()
+    }
+}

@@ -1,0 +1,30 @@
+//! Shared test-support layer for process-level (black-box) tests.
+//!
+//! `harness` spawns the real `sltrain` binary (via `CARGO_BIN_EXE`),
+//! talks to it over its Unix-socket protocol, and guarantees the child
+//! is killed when the test ends — pass or fail.
+//!
+//! ## The deadline-poll pattern (no fixed sleeps)
+//!
+//! Anything asynchronous in these tests — a daemon binding its socket,
+//! a child process exiting, a timing ratio stabilizing — is awaited
+//! with [`harness::deadline_poll`]: retry a cheap check every few
+//! milliseconds until it succeeds or a generous deadline expires.
+//! Never `sleep(500ms)` and hope:
+//!
+//! * a fixed sleep long enough for the slowest CI runner wastes that
+//!   time on every fast run, and is *still* a flake on an outlier;
+//! * a deadline-poll costs microseconds on a fast machine and only
+//!   ever fails when the awaited condition is genuinely broken —
+//!   and then it fails loudly, naming what it was waiting for.
+//!
+//! The same idea applies to timing assertions: measure repeatedly
+//! until the expected relation holds (or the deadline says it never
+//! will), instead of asserting on a single noisy sample — see
+//! `threaded_step_loop_beats_single_thread` in `native_backend.rs`.
+
+// each test binary compiles its own copy of this module and uses a
+// subset of it; unused helpers in one binary are not dead code
+#![allow(dead_code)]
+
+pub mod harness;
