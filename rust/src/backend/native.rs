@@ -1654,6 +1654,7 @@ impl Backend for NativeBackend {
         self.handles()?;
         self.not_folded()?;
         self.optim_ready()?;
+        crate::util::failpoint::hit("native.train_step")?;
         let hy = self.adam_hyper(step);
         let (loss, _grads) = self.step_impl(tokens, Some(&hy))?;
         Ok(loss as f32)
@@ -1953,6 +1954,7 @@ impl Backend for NativeBackend {
 
     fn load_state_tensors(&mut self, tensors: &[StateTensor]) -> Result<()> {
         self.handles()?;
+        crate::util::failpoint::hit("native.load_state_tensors")?;
         // Stage and validate everything BEFORE mutating, so a mismatched
         // or corrupt checkpoint leaves the backend untouched (and support
         // indices never reach SparseSupport::new's panicking asserts).

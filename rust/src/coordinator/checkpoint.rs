@@ -1,26 +1,155 @@
-//! Binary checkpoints: params + optimizer state + step counter.
+//! Binary checkpoints: params + optimizer state + step counter —
+//! crash-safe, checksummed, and rotated.
 //!
 //! Format: `SLTCKPT1` magic, u64 header length, JSON header describing
-//! each tensor (name, shape, dtype, byte offset/length), then raw
-//! little-endian tensor data. Self-describing, so `analyze` subcommands
-//! can load checkpoints without the original manifest.
+//! each tensor (name, shape, dtype, byte offset/length, crc32), then
+//! raw little-endian tensor data, then a `SLTCKSUM` footer carrying a
+//! whole-file CRC-32. Self-describing, so `analyze` subcommands can
+//! load checkpoints without the original manifest.
+//!
+//! ## Durability contract
+//!
+//! * **Atomic**: [`Checkpoint::save`] writes `<path>.tmp`, fsyncs it,
+//!   renames over `<path>`, and fsyncs the parent directory. A SIGKILL
+//!   (or power cut) at any instant leaves either the old checkpoint or
+//!   the new one at `<path>` — never a torn file.
+//! * **Checksummed**: every tensor carries its own CRC-32 in the
+//!   header, and the footer covers all preceding bytes. Loads verify
+//!   both and fail with a typed [`CheckpointError`] — never a panic.
+//!   The checksum fields are version-gated: pre-footer checkpoints
+//!   (older writers) still load, their integrity simply unverified.
+//! * **Rotated**: [`Checkpoint::save_rotated`] keeps the last K
+//!   checkpoints as `<path>` (newest), `<path>.1`, … `<path>.{K-1}`,
+//!   shifting by atomic renames. [`Checkpoint::load_newest_valid`]
+//!   walks that chain newest-first and returns the first candidate
+//!   that passes validation, warning about the ones that do not — a
+//!   corrupted newest checkpoint costs one save interval, not the run.
+//!
+//! The fail points threaded through the save windows
+//! (`checkpoint.save.{before_write,after_header,before_rotate,
+//! before_rename,after_rename}`) let the crash harness
+//! (`tests/crash_resume.rs`) kill a real training process inside each
+//! window and prove `--resume` recovers from all of them.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::backend::StateTensor;
 use crate::runtime::Dtype;
+use crate::util::crc::{crc32, Crc32};
+use crate::util::failpoint;
 use crate::util::json::{num, obj, s, Json};
 
 const MAGIC: &[u8; 8] = b"SLTCKPT1";
+/// Footer magic: 8 bytes + 4-byte LE CRC-32 of everything before it.
+const FOOTER_MAGIC: &[u8; 8] = b"SLTCKSUM";
+const FOOTER_LEN: usize = 12;
+/// How far past the primary `load_newest_valid` scans for history
+/// siblings — a ceiling on `--keep-checkpoints`, not a tuning knob.
+const MAX_HISTORY_SCAN: usize = 64;
+
+/// Typed checkpoint validation failures. `Checkpoint::load` returns
+/// these (wrapped in `anyhow`, downcastable) instead of panicking on
+/// any malformed input — a truncated, corrupted, or zero-byte file is
+/// an expected artifact of a crash, not a programming error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// Zero-byte file: the crash landed before any write reached disk.
+    Empty,
+    /// Magic bytes missing or wrong — not a SLTCKPT1 file at all.
+    NotACheckpoint,
+    /// The declared header extends past the end of the file.
+    TruncatedHeader {
+        /// Bytes actually present in the file.
+        have: usize,
+        /// Bytes the header length field claims to need.
+        need: usize,
+    },
+    /// The header is present but not parseable (bad utf-8/JSON/field).
+    BadHeader(String),
+    /// A tensor's declared byte range extends past the end of the file.
+    TruncatedTensor {
+        /// The tensor whose payload is cut short.
+        name: String,
+        /// Bytes actually present in the file.
+        have: usize,
+        /// File offset the tensor's payload runs to.
+        need: usize,
+    },
+    /// A CRC-32 check failed (`scope` is a tensor name, or "file" for
+    /// the whole-file footer).
+    CrcMismatch {
+        /// What the checksum covered: a tensor name or "file".
+        scope: String,
+        /// The checksum recorded at save time.
+        stored: u32,
+        /// The checksum recomputed from the bytes on disk.
+        computed: u32,
+    },
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Empty => {
+                write!(f, "zero-byte checkpoint (crash before any bytes reached disk)")
+            }
+            CheckpointError::NotACheckpoint => write!(f, "not a SLTCKPT1 checkpoint (bad magic)"),
+            CheckpointError::TruncatedHeader { have, need } => {
+                write!(f, "truncated header: file has {have} bytes, header needs {need}")
+            }
+            CheckpointError::BadHeader(msg) => write!(f, "bad checkpoint header: {msg}"),
+            CheckpointError::TruncatedTensor { name, have, need } => write!(
+                f,
+                "truncated tensor payload: {name:?} runs to byte {need}, file has {have}"
+            ),
+            CheckpointError::CrcMismatch { scope, stored, computed } => write!(
+                f,
+                "crc32 mismatch on {scope}: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
 
 pub struct Checkpoint {
     pub step: usize,
     /// name -> (shape, dtype, raw bytes)
     pub tensors: BTreeMap<String, (Vec<usize>, Dtype, Vec<u8>)>,
+}
+
+/// `<path>` with `suffix` appended to the full file name (keeps the
+/// original extension: `ckpt.bin` -> `ckpt.bin.1` / `ckpt.bin.tmp`).
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(suffix);
+    PathBuf::from(os)
+}
+
+/// The i-th rotated history sibling (1 = previous, 2 = older, ...).
+pub fn history_path(path: &Path, i: usize) -> PathBuf {
+    sibling(path, &format!(".{i}"))
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    sibling(path, ".tmp")
+}
+
+/// fsync the directory containing `path`, making a just-completed
+/// rename durable. Best-effort: opening a directory read-only works on
+/// the unix targets we ship on; elsewhere the rename is still atomic.
+fn sync_dir(path: &Path) {
+    if let Some(dir) = path.parent() {
+        let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
 }
 
 impl Checkpoint {
@@ -47,10 +176,50 @@ impl Checkpoint {
             .collect()
     }
 
+    /// Atomic, checksummed save (no rotation): write `<path>.tmp`,
+    /// fsync, rename over `<path>`, fsync the directory.
     pub fn save(&self, path: &Path) -> Result<()> {
+        self.save_rotated(path, 1)
+    }
+
+    /// Atomic save keeping the last `keep` checkpoints: the previous
+    /// `<path>` survives as `<path>.1`, and so on up to
+    /// `<path>.{keep-1}`. Every transition is a single rename, so a
+    /// kill at any instant leaves a chain `load_newest_valid` can
+    /// recover from (worst case: the newest entry is mid-shift and the
+    /// previous one is selected instead).
+    pub fn save_rotated(&self, path: &Path, keep: usize) -> Result<()> {
+        let keep = keep.max(1);
+        failpoint::hit("checkpoint.save.before_write")?;
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
+        // the new checkpoint becomes fully durable at <path>.tmp BEFORE
+        // anything existing is touched
+        let tmp = tmp_path(path);
+        self.write_file(&tmp).with_context(|| format!("writing {tmp:?}"))?;
+        failpoint::hit("checkpoint.save.before_rotate")?;
+        if keep > 1 && path.exists() {
+            let _ = std::fs::remove_file(history_path(path, keep - 1));
+            for i in (1..keep - 1).rev() {
+                let from = history_path(path, i);
+                if from.exists() {
+                    let _ = std::fs::rename(&from, history_path(path, i + 1));
+                }
+            }
+            let _ = std::fs::rename(path, history_path(path, 1));
+        }
+        failpoint::hit("checkpoint.save.before_rename")?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+        failpoint::hit("checkpoint.save.after_rename")?;
+        sync_dir(path);
+        Ok(())
+    }
+
+    /// Serialize to `tmp` and fsync it: magic, header (with per-tensor
+    /// CRCs), payload, whole-file CRC footer.
+    fn write_file(&self, tmp: &Path) -> Result<()> {
         let mut offset = 0u64;
         let mut entries: Vec<Json> = vec![];
         for (name, (shape, dtype, bytes)) in &self.tensors {
@@ -63,6 +232,9 @@ impl Checkpoint {
                 ("dtype", s(dtype_name(*dtype))),
                 ("offset", num(offset as f64)),
                 ("len", num(bytes.len() as f64)),
+                // per-tensor integrity: pinpoints WHICH tensor a
+                // flipped bit landed in (the footer only says "some")
+                ("crc32", num(crc32(bytes) as f64)),
             ]));
             offset += bytes.len() as u64;
         }
@@ -71,47 +243,177 @@ impl Checkpoint {
             ("tensors", Json::Arr(entries)),
         ])
         .to_string();
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
-        f.write_all(&(header.len() as u64).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
-        for (_, (_, _, bytes)) in &self.tensors {
+
+        let file = std::fs::File::create(tmp)?;
+        let mut f = std::io::BufWriter::new(file);
+        let mut crc = Crc32::new();
+        fn put(
+            f: &mut std::io::BufWriter<std::fs::File>,
+            crc: &mut Crc32,
+            bytes: &[u8],
+        ) -> std::io::Result<()> {
             f.write_all(bytes)?;
+            crc.update(bytes);
+            Ok(())
         }
+        put(&mut f, &mut crc, MAGIC)?;
+        put(&mut f, &mut crc, &(header.len() as u64).to_le_bytes())?;
+        put(&mut f, &mut crc, header.as_bytes())?;
+        failpoint::hit("checkpoint.save.after_header")?;
+        for (_, (_, _, bytes)) in &self.tensors {
+            put(&mut f, &mut crc, bytes)?;
+        }
+        // footer: covers magic + header + payload (not itself)
+        f.write_all(FOOTER_MAGIC)?;
+        f.write_all(&crc.finalize().to_le_bytes())?;
         f.flush()?;
+        // fsync BEFORE the rename: the atomic swap must only ever
+        // install bytes that are already durable
+        f.get_ref().sync_all()?;
         Ok(())
     }
 
+    /// Load and validate `<path>`. Any malformed input — truncated,
+    /// corrupted, empty, or foreign — yields a typed
+    /// [`CheckpointError`] (downcastable through the `anyhow` chain);
+    /// this function never panics on file content.
     pub fn load(path: &Path) -> Result<Checkpoint> {
+        failpoint::hit("checkpoint.load.before_read")?;
         let data = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
-        if data.len() < 16 || &data[..8] != MAGIC {
-            bail!("{path:?}: not a SLTCKPT1 checkpoint");
+        Self::from_bytes(&data).with_context(|| format!("loading {path:?}"))
+    }
+
+    /// Parse + validate the serialized form (the body of [`load`]).
+    pub fn from_bytes(data: &[u8]) -> Result<Checkpoint> {
+        if data.is_empty() {
+            return Err(CheckpointError::Empty.into());
         }
-        let hlen = u64::from_le_bytes(data[8..16].try_into()?) as usize;
-        let header = std::str::from_utf8(&data[16..16 + hlen])?;
-        let v = Json::parse(header).map_err(|e| anyhow!("checkpoint header: {e}"))?;
-        let step = v.req("step")?.as_usize().unwrap_or(0);
-        let base = 16 + hlen;
+        if data.len() < 16 || &data[..8] != MAGIC {
+            return Err(CheckpointError::NotACheckpoint.into());
+        }
+        let hlen = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
+        let hend = 16usize
+            .checked_add(hlen)
+            .ok_or(CheckpointError::TruncatedHeader { have: data.len(), need: usize::MAX })?;
+        let hbytes = data
+            .get(16..hend)
+            .ok_or(CheckpointError::TruncatedHeader { have: data.len(), need: hend })?;
+        let header = std::str::from_utf8(hbytes)
+            .map_err(|e| CheckpointError::BadHeader(format!("non-utf8 header: {e}")))?;
+        let v = Json::parse(header).map_err(|e| CheckpointError::BadHeader(e.to_string()))?;
+        let bad = |e: anyhow::Error| CheckpointError::BadHeader(format!("{e:#}"));
+        let step = v.req("step").map_err(bad)?.as_usize().unwrap_or(0);
+        let base = hend;
         let mut tensors = BTreeMap::new();
-        for e in v.req("tensors")?.as_arr().unwrap_or(&[]) {
-            let name = e.req("name")?.as_str().unwrap_or_default().to_string();
+        let mut payload_end = base;
+        for e in v.req("tensors").map_err(bad)?.as_arr().unwrap_or(&[]) {
+            let name = e.req("name").map_err(bad)?.as_str().unwrap_or_default().to_string();
             let shape: Vec<usize> = e
-                .req("shape")?
+                .req("shape")
+                .map_err(bad)?
                 .as_arr()
                 .unwrap_or(&[])
                 .iter()
                 .map(|d| d.as_usize().unwrap_or(0))
                 .collect();
-            let dtype = Dtype::parse(e.req("dtype")?.as_str().unwrap_or("f32"))?;
-            let off = base + e.req("offset")?.as_usize().unwrap_or(0);
-            let len = e.req("len")?.as_usize().unwrap_or(0);
+            let dtype = Dtype::parse(e.req("dtype").map_err(bad)?.as_str().unwrap_or("f32"))
+                .map_err(bad)?;
+            let off = base
+                .checked_add(e.req("offset").map_err(bad)?.as_usize().unwrap_or(0))
+                .ok_or_else(|| CheckpointError::BadHeader(format!("{name}: offset overflow")))?;
+            let len = e.req("len").map_err(bad)?.as_usize().unwrap_or(0);
+            let end = off
+                .checked_add(len)
+                .ok_or_else(|| CheckpointError::BadHeader(format!("{name}: length overflow")))?;
             let bytes = data
-                .get(off..off + len)
-                .ok_or_else(|| anyhow!("checkpoint truncated at {name}"))?
+                .get(off..end)
+                .ok_or_else(|| CheckpointError::TruncatedTensor {
+                    name: name.clone(),
+                    have: data.len(),
+                    need: end,
+                })?
                 .to_vec();
+            // version gate: pre-checksum checkpoints have no crc32
+            // field — they load, their integrity just unverified
+            if let Some(stored) = e.get("crc32").and_then(|c| c.as_f64()) {
+                let stored = stored as u32;
+                let computed = crc32(&bytes);
+                if stored != computed {
+                    return Err(CheckpointError::CrcMismatch {
+                        scope: name,
+                        stored,
+                        computed,
+                    }
+                    .into());
+                }
+            }
+            payload_end = payload_end.max(end);
             tensors.insert(name, (shape, dtype, bytes));
         }
+        // whole-file footer (also version-gated): catches corruption in
+        // the header itself, which per-tensor checks can miss
+        if let Some(footer) = data.get(payload_end..payload_end + FOOTER_LEN) {
+            if &footer[..8] == FOOTER_MAGIC {
+                let stored = u32::from_le_bytes(footer[8..12].try_into().unwrap());
+                let computed = crc32(&data[..payload_end]);
+                if stored != computed {
+                    return Err(CheckpointError::CrcMismatch {
+                        scope: "file".into(),
+                        stored,
+                        computed,
+                    }
+                    .into());
+                }
+            }
+        }
         Ok(Checkpoint { step, tensors })
+    }
+
+    /// Walk the rotation chain newest-first (`<path>`, `<path>.1`, …)
+    /// and return the first checkpoint that passes validation plus the
+    /// path it came from. Candidates that fail are warned about and
+    /// skipped — a torn newest checkpoint falls back to the previous
+    /// one instead of killing the run. `Ok(None)` when no candidate
+    /// file exists at all (a restartable job's first run); an error
+    /// only when candidates exist and none validates.
+    pub fn load_newest_valid(path: &Path) -> Result<Option<(Checkpoint, PathBuf)>> {
+        let mut candidates = vec![path.to_path_buf()];
+        for i in 1..=MAX_HISTORY_SCAN {
+            let h = history_path(path, i);
+            if !h.exists() {
+                break;
+            }
+            candidates.push(h);
+        }
+        let mut failures: Vec<String> = vec![];
+        for cand in &candidates {
+            if !cand.exists() {
+                continue;
+            }
+            match Checkpoint::load(cand) {
+                Ok(ck) => {
+                    if !failures.is_empty() {
+                        crate::warn_!(
+                            "resume: falling back to {cand:?} (step {})",
+                            ck.step
+                        );
+                    }
+                    return Ok(Some((ck, cand.clone())));
+                }
+                Err(e) => {
+                    crate::warn_!("checkpoint {cand:?} failed validation: {e:#}");
+                    failures.push(format!("{cand:?}: {e:#}"));
+                }
+            }
+        }
+        if failures.is_empty() {
+            Ok(None)
+        } else {
+            bail!(
+                "no valid checkpoint for {path:?} — every candidate failed validation: {}",
+                failures.join("; ")
+            )
+        }
     }
 
     /// Fetch one f32 tensor (analysis path).
@@ -152,13 +454,21 @@ mod tests {
         std::env::temp_dir().join(format!("sltrain-ckpt-{tag}-{}", std::process::id()))
     }
 
-    #[test]
-    fn save_load_roundtrip() {
+    fn small_ckpt(step: usize, seed: f32) -> Checkpoint {
         let tensors = vec![
-            StateTensor::f32("w", vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            StateTensor::f32("w", vec![2, 3], &[seed, 2.0, 3.0, 4.0, 5.0, 6.0]),
             StateTensor::i32("idx", vec![3], &[7, 8, 9]),
         ];
-        let ck = Checkpoint::from_tensors(tensors, 42);
+        Checkpoint::from_tensors(tensors, step)
+    }
+
+    fn kind(e: &anyhow::Error) -> Option<&CheckpointError> {
+        e.downcast_ref::<CheckpointError>()
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ck = small_ckpt(42, 1.0);
         let dir = tmp_dir("rt");
         let path = dir.join("test.ckpt");
         ck.save(&path).unwrap();
@@ -173,6 +483,8 @@ mod tests {
         let by_name = |n: &str| back.iter().find(|t| t.name == n).unwrap();
         assert_eq!(by_name("w").to_f32().unwrap(), w);
         assert_eq!(by_name("idx").to_i32().unwrap(), vec![7, 8, 9]);
+        // atomic save leaves no tmp residue
+        assert!(!tmp_path(&path).exists(), "tmp file left behind");
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -218,7 +530,146 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("junk.ckpt");
         std::fs::write(&path, b"not a checkpoint").unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert_eq!(kind(&err), Some(&CheckpointError::NotACheckpoint));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Each crash artifact class yields its typed error — never a panic.
+    #[test]
+    fn malformed_files_give_typed_errors() {
+        let dir = tmp_dir("malformed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("good.ckpt");
+        small_ckpt(3, 1.0).save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let put = |name: &str, bytes: &[u8]| {
+            let p = dir.join(name);
+            std::fs::write(&p, bytes).unwrap();
+            p
+        };
+
+        // zero-byte file
+        let e = Checkpoint::load(&put("empty.ckpt", b"")).unwrap_err();
+        assert_eq!(kind(&e), Some(&CheckpointError::Empty));
+
+        // truncated inside the magic/length prelude
+        let e = Checkpoint::load(&put("prelude.ckpt", &good[..10])).unwrap_err();
+        assert_eq!(kind(&e), Some(&CheckpointError::NotACheckpoint));
+
+        // truncated inside the header
+        let e = Checkpoint::load(&put("header.ckpt", &good[..20])).unwrap_err();
+        assert!(
+            matches!(kind(&e), Some(CheckpointError::TruncatedHeader { .. })),
+            "got {e:#}"
+        );
+
+        // truncated inside the tensor payload (cut the last 20 bytes:
+        // footer + part of the final tensor)
+        let e = Checkpoint::load(&put("payload.ckpt", &good[..good.len() - 20])).unwrap_err();
+        assert!(
+            matches!(kind(&e), Some(CheckpointError::TruncatedTensor { .. })),
+            "got {e:#}"
+        );
+
+        // flipped bit in a tensor payload -> per-tensor crc mismatch
+        // naming the tensor
+        let mut corrupt = good.clone();
+        let n = corrupt.len();
+        corrupt[n - FOOTER_LEN - 2] ^= 0x40;
+        let e = Checkpoint::load(&put("bitflip.ckpt", &corrupt)).unwrap_err();
+        match kind(&e) {
+            Some(CheckpointError::CrcMismatch { scope, .. }) => {
+                assert_ne!(scope, "file", "per-tensor check should fire first");
+            }
+            other => panic!("expected CrcMismatch, got {other:?} ({e:#})"),
+        }
+
+        // corrupted footer checksum -> whole-file mismatch
+        let mut corrupt = good.clone();
+        let n = corrupt.len();
+        corrupt[n - 1] ^= 0xFF;
+        let e = Checkpoint::load(&put("footer.ckpt", &corrupt)).unwrap_err();
+        assert!(
+            matches!(kind(&e), Some(CheckpointError::CrcMismatch { scope, .. }) if scope == "file"),
+            "got {e:#}"
+        );
+
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Pre-checksum checkpoints (no crc32 fields, no footer) still load
+    /// — the integrity layer is version-gated, not a format break.
+    #[test]
+    fn legacy_format_without_checksums_loads() {
+        let data: Vec<f32> = vec![1.5, -2.0, 0.25];
+        let payload: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let header = format!(
+            r#"{{"step":5,"tensors":[{{"name":"w","shape":[3],"dtype":"f32","offset":0,"len":{}}}]}}"#,
+            payload.len()
+        );
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&payload);
+        let ck = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(ck.step, 5);
+        assert_eq!(ck.tensor_f32("w").unwrap().1, data);
+    }
+
+    #[test]
+    fn save_rotated_keeps_history_and_caps_it() {
+        let dir = tmp_dir("rotate");
+        let path = dir.join("ckpt.bin");
+        for step in [1usize, 2, 3] {
+            small_ckpt(step, step as f32).save_rotated(&path, 2).unwrap();
+        }
+        // keep=2: primary (step 3) + one history slot (step 2); step 1 gone
+        assert_eq!(Checkpoint::load(&path).unwrap().step, 3);
+        assert_eq!(Checkpoint::load(&history_path(&path, 1)).unwrap().step, 2);
+        assert!(!history_path(&path, 2).exists(), "keep=2 must cap history at .1");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_newest_valid_prefers_primary_and_falls_back() {
+        let dir = tmp_dir("newest");
+        let path = dir.join("ckpt.bin");
+        small_ckpt(1, 1.0).save_rotated(&path, 3).unwrap();
+        small_ckpt(2, 2.0).save_rotated(&path, 3).unwrap();
+
+        // intact chain: primary wins
+        let (ck, from) = Checkpoint::load_newest_valid(&path).unwrap().unwrap();
+        assert_eq!((ck.step, from), (2, path.clone()));
+
+        // torn primary (simulated mid-write kill): previous one wins
+        std::fs::write(&path, &std::fs::read(&path).unwrap()[..30]).unwrap();
+        let (ck, from) = Checkpoint::load_newest_valid(&path).unwrap().unwrap();
+        assert_eq!((ck.step, from), (1, history_path(&path, 1)));
+
+        // every candidate corrupt: a hard, diagnostic error
+        std::fs::write(history_path(&path, 1), b"garbage").unwrap();
+        let err = Checkpoint::load_newest_valid(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("ckpt.bin"), "diagnostic must name the files: {msg}");
+
+        // no candidates at all: fresh start, not an error
+        let none = Checkpoint::load_newest_valid(&dir.join("absent.bin")).unwrap();
+        assert!(none.is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// A save over an existing (even corrupt) primary replaces it
+    /// atomically — the tmp+rename path never appends or half-writes.
+    #[test]
+    fn save_replaces_corrupt_primary_cleanly() {
+        let dir = tmp_dir("replace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        std::fs::write(&path, b"torn garbage from a crashed writer").unwrap();
+        small_ckpt(9, 1.0).save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().step, 9);
         std::fs::remove_dir_all(dir).ok();
     }
 }

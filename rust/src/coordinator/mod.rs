@@ -4,5 +4,5 @@ pub mod checkpoint;
 pub mod metrics;
 pub mod trainer;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, CheckpointError};
 pub use trainer::{train, TrainConfig, TrainResult};

@@ -6,8 +6,21 @@
 //! accounting, and checkpointing. The compute engine is fully abstract:
 //! everything here goes through `dyn Backend`, so the same loop drives
 //! the AOT/PJRT path and the pure-rust native path unchanged.
+//!
+//! Robustness layer (uniform across all five methods):
+//!
+//! * **Durable checkpoints** — every save is atomic + checksummed and
+//!   keeps the last `keep_checkpoints` files (`coordinator::checkpoint`).
+//! * **Divergence guard** — a non-finite loss (always) or a loss above
+//!   `loss_guard ×` the running EMA (opt-in) rolls the model back to
+//!   the newest valid checkpoint and continues past the offending data
+//!   window; `max_guard_trips` consecutive trips abort with a
+//!   diagnostic instead of looping forever.
+//! * **Graceful shutdown** — a SIGINT/SIGTERM (see `util::signal`)
+//!   finishes the current step, saves a resumable checkpoint, and
+//!   returns cleanly with `interrupted_at` set.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
@@ -17,6 +30,7 @@ use crate::backend::Backend;
 use crate::data::Pipeline;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::logging::MetricsWriter;
+use crate::util::{failpoint, signal};
 
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -30,11 +44,22 @@ pub struct TrainConfig {
     pub metrics_path: Option<PathBuf>,
     pub checkpoint_path: Option<PathBuf>,
     pub checkpoint_every: usize,
-    /// Resume from `checkpoint_path` when it exists: restore state and
-    /// the step counter, fast-forward the data stream, and continue to
-    /// `steps`. The resumed trajectory is bit-identical to an
-    /// uninterrupted run (the lr schedule is a pure function of the
-    /// absolute step, and relora merge seeds are step numbers).
+    /// How many checkpoints the rotation keeps on disk (min 1): the
+    /// newest at `checkpoint_path`, older ones as `.1`, `.2`, …
+    pub keep_checkpoints: usize,
+    /// Loss-spike guard factor: a step whose loss exceeds `ema × this`
+    /// counts as divergence and triggers rollback. `0.0` disables the
+    /// spike check; non-finite losses (NaN/Inf) always trip the guard.
+    pub loss_guard: f64,
+    /// Abort the run (nonzero exit) after this many *consecutive*
+    /// guard trips — a persistent divergence no rollback can outrun.
+    pub max_guard_trips: usize,
+    /// Resume from the newest valid checkpoint in the rotation chain
+    /// at `checkpoint_path`: restore state and the step counter,
+    /// fast-forward the data stream, and continue to `steps`. The
+    /// resumed trajectory is bit-identical to an uninterrupted run
+    /// (the lr schedule is a pure function of the absolute step, and
+    /// relora merge seeds are step numbers).
     pub resume: bool,
 }
 
@@ -50,6 +75,9 @@ impl Default for TrainConfig {
             metrics_path: None,
             checkpoint_path: None,
             checkpoint_every: 0,
+            keep_checkpoints: 2,
+            loss_guard: 0.0,
+            max_guard_trips: 3,
             resume: false,
         }
     }
@@ -66,6 +94,11 @@ pub struct TrainResult {
     pub peak_rss_bytes: u64,
     pub n_params: usize,
     pub relora_merges: usize,
+    /// Total divergence-guard trips (each one rolled the model back).
+    pub guard_trips: usize,
+    /// `Some(step)` when a shutdown signal stopped the run early; the
+    /// saved checkpoint makes it resumable at exactly that step.
+    pub interrupted_at: Option<usize>,
 }
 
 /// Run a full pretraining job on one backend.
@@ -80,22 +113,24 @@ pub fn train(
 
     backend.init_state(cfg.seed)?;
 
-    // --resume: restore state + step counter from the checkpoint, then
-    // consume the batches the original run already saw so the data
-    // stream lines up with an uninterrupted trajectory. A missing file
-    // degrades to a fresh start (first run of a restartable job).
+    // --resume: restore state + step counter from the newest VALID
+    // checkpoint in the rotation chain (a torn newest file falls back
+    // to the previous one), then consume the batches the original run
+    // already saw so the data stream lines up with an uninterrupted
+    // trajectory. No checkpoint at all degrades to a fresh start
+    // (first run of a restartable job).
     let mut start_step = 0usize;
     if cfg.resume {
         let Some(path) = &cfg.checkpoint_path else {
             bail!("--resume needs a checkpoint path");
         };
-        if path.exists() {
-            let ck = Checkpoint::load(path)?;
-            backend.load_state_tensors(&ck.to_state_tensors())?;
-            start_step = ck.step;
-            crate::info!("resumed {path:?} at step {start_step}");
-        } else {
-            crate::info!("resume: no checkpoint at {path:?}, starting fresh");
+        match Checkpoint::load_newest_valid(path)? {
+            Some((ck, from)) => {
+                backend.load_state_tensors(&ck.to_state_tensors())?;
+                start_step = ck.step;
+                crate::info!("resumed {from:?} at step {start_step}");
+            }
+            None => crate::info!("resume: no checkpoint at {path:?}, starting fresh"),
         }
     }
 
@@ -112,6 +147,9 @@ pub fn train(
     let mut thr = Throughput::start();
     let mut peak_rss = crate::runtime::current_rss_bytes();
     let mut relora_merges = 0usize;
+    let mut guard_trips = 0usize;
+    let mut consecutive_trips = 0usize;
+    let mut interrupted_at: Option<usize> = None;
     // set when the in-loop periodic save already covered the final step,
     // so the post-loop save doesn't write the same checkpoint twice
     let mut saved_at_final_step = false;
@@ -122,9 +160,79 @@ pub fn train(
         pipe.train.next_batch(batch, seq);
     }
 
-    for step in start_step..cfg.steps {
+    // while-loop (not a range for): the divergence guard rewinds `step`
+    // to a checkpoint, which a range iterator cannot express
+    let mut step = start_step;
+    while step < cfg.steps {
+        // graceful shutdown: the signal flag is polled at step
+        // boundaries, so the current optimizer step always completes
+        // before we save and leave
+        if signal::requested() {
+            if let Some(p) = &cfg.checkpoint_path {
+                save_checkpoint_rotated(backend, step, p, cfg.keep_checkpoints)?;
+            }
+            crate::info!("shutdown signal honored — resumable at step {step}");
+            interrupted_at = Some(step);
+            break;
+        }
+
         let tokens = pipe.train.next_batch(batch, seq);
         let loss = backend.train_step(step as i32, &tokens)? as f64;
+        failpoint::hit("train.after_step")?;
+
+        // divergence guard: NaN/Inf always trips; a finite spike trips
+        // only when loss_guard is armed and the EMA has a baseline
+        let spiked = cfg.loss_guard > 0.0
+            && matches!(ema.get(), Some(m) if loss > m * cfg.loss_guard);
+        if !loss.is_finite() || spiked {
+            guard_trips += 1;
+            consecutive_trips += 1;
+            crate::warn_!(
+                "divergence guard tripped at step {step}: loss {loss} \
+                 (trip {consecutive_trips}/{})",
+                cfg.max_guard_trips
+            );
+            if let Some(w) = metrics.as_mut() {
+                // loss serialized as a string: NaN has no JSON literal
+                w.emit(obj(vec![
+                    ("kind", s("guard")),
+                    ("step", num(step as f64)),
+                    ("loss", s(&loss.to_string())),
+                    ("trips", num(guard_trips as f64)),
+                ]))?;
+            }
+            if consecutive_trips >= cfg.max_guard_trips.max(1) {
+                bail!(
+                    "divergence guard: {consecutive_trips} consecutive trips \
+                     (last loss {loss} at step {step}) — rollback cannot outrun \
+                     this; check lr/seed/data or raise --loss-guard"
+                );
+            }
+            let Some(path) = &cfg.checkpoint_path else {
+                bail!(
+                    "divergence at step {step} (loss {loss}) and no checkpoint \
+                     path configured to roll back to"
+                );
+            };
+            let Some((ck, from)) = Checkpoint::load_newest_valid(path)? else {
+                bail!(
+                    "divergence at step {step} (loss {loss}) before the first \
+                     checkpoint was saved — nothing to roll back to"
+                );
+            };
+            backend.load_state_tensors(&ck.to_state_tensors())?;
+            crate::warn_!(
+                "rolled back to step {} from {from:?}; data stream stays \
+                 forward-only, so the offending window is skipped",
+                ck.step
+            );
+            step = ck.step;
+            // the spike poisoned the EMA baseline; restart smoothing
+            ema = Ema::new(0.1);
+            continue;
+        }
+        consecutive_trips = 0;
+
         thr.add_tokens((batch * seq) as u64);
         let smooth = ema.update(loss);
         train_curve.push(step, loss);
@@ -173,10 +281,12 @@ pub fn train(
 
         if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
             if let Some(p) = &cfg.checkpoint_path {
-                save_checkpoint(backend, step + 1, p)?;
+                save_checkpoint_rotated(backend, step + 1, p, cfg.keep_checkpoints)?;
                 saved_at_final_step = step + 1 == cfg.steps;
             }
         }
+
+        step += 1;
     }
 
     let final_eval_loss = match eval_curve.last() {
@@ -184,8 +294,9 @@ pub fn train(
         None => eval(backend, &valid_set)?,
     };
     if let Some(p) = &cfg.checkpoint_path {
-        if !saved_at_final_step {
-            save_checkpoint(backend, cfg.steps.max(start_step), p)?;
+        // the shutdown branch saved already; don't overwrite its step
+        if interrupted_at.is_none() && !saved_at_final_step {
+            save_checkpoint_rotated(backend, cfg.steps.max(start_step), p, cfg.keep_checkpoints)?;
         }
     }
 
@@ -199,6 +310,8 @@ pub fn train(
         peak_rss_bytes: peak_rss,
         n_params: backend.n_params(),
         relora_merges,
+        guard_trips,
+        interrupted_at,
     })
 }
 
@@ -212,10 +325,24 @@ pub fn eval(backend: &mut dyn Backend, valid_set: &[Vec<i32>]) -> Result<f64> {
 }
 
 /// Persist the backend's durable state (params + supports) to a
-/// self-contained checkpoint.
+/// self-contained checkpoint (atomic, checksummed, no rotation).
 pub fn save_checkpoint(backend: &dyn Backend, step: usize, path: &PathBuf) -> Result<()> {
     Checkpoint::from_tensors(backend.state_tensors()?, step).save(path)?;
     crate::info!("checkpoint @ {step} -> {path:?}");
+    Ok(())
+}
+
+/// Rotated variant used by the training loop: the previous checkpoint
+/// survives as `<path>.1` (and so on up to `keep`), giving the
+/// divergence guard and crash recovery a fallback generation.
+pub fn save_checkpoint_rotated(
+    backend: &dyn Backend,
+    step: usize,
+    path: &Path,
+    keep: usize,
+) -> Result<()> {
+    Checkpoint::from_tensors(backend.state_tensors()?, step).save_rotated(path, keep)?;
+    crate::info!("checkpoint @ {step} -> {path:?} (keep {})", keep.max(1));
     Ok(())
 }
 
@@ -248,5 +375,6 @@ pub fn summary_json(tag: &str, r: &TrainResult) -> Json {
         ("peak_rss_mb", num(r.peak_rss_bytes as f64 / 1e6)),
         ("n_params", num(r.n_params as f64)),
         ("relora_merges", num(r.relora_merges as f64)),
+        ("guard_trips", num(r.guard_trips as f64)),
     ])
 }

@@ -39,6 +39,7 @@ use sltrain::linalg::Matrix;
 use sltrain::mem::{estimate, MemEstimate, MemOptions};
 use sltrain::serve::ServeConfig;
 use sltrain::util::cli::{Args, Cli};
+use sltrain::util::signal;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -164,6 +165,22 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     .opt("metrics", "", "JSONL metrics output path")
     .opt("checkpoint", "", "checkpoint output path")
     .opt("checkpoint-every", "0", "checkpoint period (0 = end only)")
+    .opt(
+        "keep-checkpoints",
+        "2",
+        "checkpoints kept on disk: newest at --checkpoint, older as .1, .2, ...",
+    )
+    .opt(
+        "loss-guard",
+        "0",
+        "divergence guard factor: roll back to the last checkpoint when loss \
+         exceeds ema x this (0 = spike check off; NaN/Inf always guarded)",
+    )
+    .opt(
+        "max-guard-trips",
+        "3",
+        "abort (nonzero exit) after this many consecutive guard trips",
+    )
     .switch(
         "resume",
         "resume from --checkpoint if it exists: restore weights, optimizer \
@@ -173,6 +190,9 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     )
     .parse(argv);
 
+    // SIGINT/SIGTERM: finish the current step, save a resumable
+    // checkpoint, exit 0 (the loop polls the flag at step boundaries)
+    signal::install();
     let mut be = backend::open(backend_spec(&a)?)?;
     sltrain::info!(
         "backend {} | {} / {} ({:.2}M params, optimizer {})",
@@ -193,6 +213,9 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         metrics_path: non_empty(a.str("metrics")).map(PathBuf::from),
         checkpoint_path: non_empty(a.str("checkpoint")).map(PathBuf::from),
         checkpoint_every: a.usize("checkpoint-every"),
+        keep_checkpoints: a.usize("keep-checkpoints"),
+        loss_guard: a.f64("loss-guard"),
+        max_guard_trips: a.usize("max-guard-trips"),
         resume: a.flag("resume"),
     };
     let r = train(be.as_mut(), &mut pipe, &cfg)?;
@@ -204,6 +227,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         r.wall_secs,
         r.peak_rss_bytes as f64 / 1e6
     );
+    if r.guard_trips > 0 {
+        println!("divergence guard: {} trip(s), run recovered via rollback", r.guard_trips);
+    }
+    if let Some(step) = r.interrupted_at {
+        println!("interrupted by signal — resumable at step {step} (rerun with --resume)");
+    }
     if let Some(m) = be.mem_report() {
         println!(
             "mem: params {:.1} MB | optim {:.1} MB ({}-bit moments) | grad peak {:.1} MB \
@@ -443,6 +472,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     .opt("checkpoint", "", "SLTCKPT1 checkpoint to serve (empty = fresh init from --seed)")
     .opt("seed", "42", "init seed when no checkpoint is given")
     .opt("max-batch", "8", "concurrent decode slots (continuous-batching width)")
+    .opt(
+        "max-queue",
+        "64",
+        "admission cap: generates queued-or-running before new ones are shed \
+         with an overloaded response",
+    )
+    .opt(
+        "read-timeout",
+        "30",
+        "per-connection read timeout in seconds for mid-request stalls \
+         (idle connections are unaffected)",
+    )
     .switch(
         "no-fold",
         "serve the live factored/sparse weights instead of folding dense \
@@ -450,6 +491,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     )
     .parse(argv);
 
+    // SIGINT/SIGTERM: drain in-flight sequences and exit 0, exactly
+    // like a `shutdown` request
+    signal::install();
     let BackendSpec::Native {
         preset,
         method,
@@ -481,6 +525,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let cfg = ServeConfig {
         socket: PathBuf::from(a.str("socket")),
         max_batch: a.usize("max-batch"),
+        max_queue: a.usize("max-queue"),
+        read_timeout_secs: a.u64("read-timeout"),
     };
     sltrain::serve::run(be, &cfg)
 }

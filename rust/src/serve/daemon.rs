@@ -1,19 +1,41 @@
 //! The persistent serving process.
 //!
 //! One scheduler thread (the caller's) owns the backend and runs the
-//! admit/decode/evict loop; one accept thread polls the Unix listener;
-//! one lightweight thread per connection reads request lines, hands
-//! `generate`s to the scheduler through a shared queue, and writes the
-//! response when the scheduler completes them. Everything is std-only
-//! (`std::os::unix::net`, `std::sync::mpsc`).
+//! admit/decode/evict loop; one accept thread blocks on the Unix
+//! listener; one lightweight thread per connection reads request lines,
+//! hands `generate`s to the scheduler through a shared queue, and
+//! writes the response when the scheduler completes them. Everything is
+//! std-only (`std::os::unix::net`, `std::sync::mpsc`).
+//!
+//! No busy-waiting: the scheduler loop parks on a condvar while the
+//! queue is empty and no sequence is decoding (connection threads
+//! `notify_one` on every push), and the accept thread blocks in
+//! `accept(2)` (woken at shutdown by a dummy self-connect). The condvar
+//! wait is bounded at 100 ms only because a signal handler cannot
+//! notify a condvar — that bound is the SIGTERM reaction latency, not a
+//! polling interval doing work.
+//!
+//! Robustness:
+//!
+//! * **Admission control** — at most `max_queue` generates may be
+//!   queued-or-running; excess requests get an immediate
+//!   `{"ok":false,"overloaded":true}` shed response instead of
+//!   unbounded queue growth.
+//! * **Read timeouts** — each connection carries a read timeout; a
+//!   peer that stalls mid-request-line is dropped (its partial bytes
+//!   discarded), while an *idle* connection with no partial line stays
+//!   open indefinitely.
+//! * **Graceful shutdown** — SIGINT/SIGTERM (see `util::signal`) is
+//!   honored exactly like a `shutdown` request: stop admitting, finish
+//!   every in-flight sequence, answer stragglers with a clean error,
+//!   unlink the socket, exit 0.
 //!
 //! Lifecycle: `run` binds the socket (removing a stale file from a
-//! crashed predecessor), serves until a `shutdown` request arrives,
-//! finishes every in-flight sequence, stops admitting (late `generate`s
-//! get an error response), unlinks the socket, and returns `Ok` — the
-//! process exits 0. Malformed requests are answered with
-//! `{"ok":false,...}` on the same connection; they never terminate the
-//! daemon or the connection (tested black-box in `tests/serve_e2e.rs`).
+//! crashed predecessor), serves until a `shutdown` request or signal
+//! arrives, drains, unlinks the socket, and returns `Ok`. Malformed
+//! requests are answered with `{"ok":false,...}` on the same
+//! connection; they never terminate the daemon or the connection
+//! (tested black-box in `tests/serve_e2e.rs`).
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -21,7 +43,7 @@ use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -31,6 +53,7 @@ use crate::backend::Backend;
 use crate::serve::protocol::{self, Request};
 use crate::serve::scheduler::{GenRequest, GenResult, Scheduler};
 use crate::util::json::{num, obj, s, Json};
+use crate::util::signal;
 
 /// Daemon configuration (the `sltrain serve` flags).
 #[derive(Debug, Clone)]
@@ -39,6 +62,13 @@ pub struct ServeConfig {
     pub socket: PathBuf,
     /// Concurrent decode slots (continuous-batching width).
     pub max_batch: usize,
+    /// Admission cap: generates queued-or-running before new ones are
+    /// shed with an `overloaded` response.
+    pub max_queue: usize,
+    /// Per-connection read timeout in seconds: a peer stalled in the
+    /// middle of a request line is dropped after this long (idle
+    /// connections with no partial line are unaffected).
+    pub read_timeout_secs: u64,
 }
 
 /// A generate handed from a connection thread to the scheduler loop,
@@ -47,14 +77,32 @@ type Submission = (GenRequest, Sender<std::result::Result<GenResult, String>>);
 
 struct Shared {
     queue: Mutex<Vec<Submission>>,
+    /// Wakes the scheduler loop when a submission or shutdown arrives.
+    wake: Condvar,
     shutdown: AtomicBool,
     next_id: AtomicU64,
+    /// Generates admitted but not yet answered. Incremented under the
+    /// queue lock (so admission-cap checks cannot over-admit),
+    /// decremented lock-free only after the response bytes are written
+    /// — `run` waits for zero before exiting, so a drained request's
+    /// response cannot be lost to the process teardown.
+    inflight: AtomicU64,
+    max_inflight: u64,
+    read_timeout: Duration,
     info_line: String,
 }
 
-/// Serve `backend` on `cfg.socket` until a `shutdown` request drains
-/// the daemon. The backend should arrive ready: initialized,
-/// checkpoint loaded, optimizer state dropped, and (normally) folded.
+impl Shared {
+    /// True once shutdown began — via `shutdown` request or OS signal.
+    fn stopping(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || signal::requested()
+    }
+}
+
+/// Serve `backend` on `cfg.socket` until a `shutdown` request or a
+/// SIGINT/SIGTERM drains the daemon. The backend should arrive ready:
+/// initialized, checkpoint loaded, optimizer state dropped, and
+/// (normally) folded.
 pub fn run(backend: NativeBackend, cfg: &ServeConfig) -> Result<()> {
     let mut sched = Scheduler::new(backend, cfg.max_batch);
     if cfg.socket.exists() {
@@ -65,19 +113,23 @@ pub fn run(backend: NativeBackend, cfg: &ServeConfig) -> Result<()> {
     }
     let listener = UnixListener::bind(&cfg.socket)
         .with_context(|| format!("binding {:?}", cfg.socket))?;
-    listener.set_nonblocking(true)?;
     let shared = Arc::new(Shared {
         queue: Mutex::new(Vec::new()),
+        wake: Condvar::new(),
         shutdown: AtomicBool::new(false),
         next_id: AtomicU64::new(0),
+        inflight: AtomicU64::new(0),
+        max_inflight: cfg.max_queue.max(1) as u64,
+        read_timeout: Duration::from_secs(cfg.read_timeout_secs.max(1)),
         info_line: info_line(sched.backend()),
     });
     crate::info!(
-        "serve: {} / {} on {:?} ({} decode slots, folded: {})",
+        "serve: {} / {} on {:?} ({} decode slots, queue cap {}, folded: {})",
         sched.backend().preset().name,
         sched.backend().method(),
         cfg.socket,
         cfg.max_batch,
+        cfg.max_queue.max(1),
         sched.backend().is_folded()
     );
 
@@ -87,7 +139,25 @@ pub fn run(backend: NativeBackend, cfg: &ServeConfig) -> Result<()> {
     // the scheduler loop: drain submissions, step, dispatch results
     let mut waiters: HashMap<u64, Sender<std::result::Result<GenResult, String>>> = HashMap::new();
     loop {
-        let subs: Vec<Submission> = std::mem::take(&mut *shared.queue.lock().unwrap());
+        let subs: Vec<Submission> = {
+            let mut q = shared.queue.lock().unwrap();
+            // park until there is work (or shutdown): the bounded wait
+            // exists solely so an OS signal — which can only flip an
+            // atomic, never notify the condvar — is noticed promptly
+            while q.is_empty() && sched.is_idle() && !shared.stopping() {
+                let (guard, _) = shared
+                    .wake
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .unwrap();
+                q = guard;
+            }
+            std::mem::take(&mut *q)
+        };
+        if subs.is_empty() && sched.is_idle() && shared.stopping() {
+            // nothing queued, nothing decoding: every in-flight
+            // sequence has been drained — leave
+            break;
+        }
         for (req, tx) in subs {
             let rid = req.id;
             match sched.submit(req) {
@@ -98,13 +168,6 @@ pub fn run(backend: NativeBackend, cfg: &ServeConfig) -> Result<()> {
                     let _ = tx.send(Err(format!("{e:#}")));
                 }
             }
-        }
-        if sched.is_idle() {
-            if shared.shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            std::thread::sleep(Duration::from_millis(1));
-            continue;
         }
         for r in sched.step()? {
             if let Some(tx) = waiters.remove(&r.id) {
@@ -117,6 +180,17 @@ pub fn run(backend: NativeBackend, cfg: &ServeConfig) -> Result<()> {
     for (_, tx) in shared.queue.lock().unwrap().drain(..) {
         let _ = tx.send(Err("daemon is shutting down".into()));
     }
+    // connection threads are still flushing the responses for requests
+    // the drain just completed; exiting now would race those socket
+    // writes, so wait (bounded) for the in-flight counter to reach zero
+    let t0 = std::time::Instant::now();
+    while shared.inflight.load(Ordering::SeqCst) > 0 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // the accept thread blocks in accept(2); raise the flag it checks
+    // post-accept, then wake it with a throwaway self-connection
+    shared.shutdown.store(true, Ordering::SeqCst);
+    let _ = UnixStream::connect(&cfg.socket);
     let _ = accept_handle.join();
     let _ = std::fs::remove_file(&cfg.socket);
     crate::info!("serve: clean shutdown");
@@ -125,74 +199,157 @@ pub fn run(backend: NativeBackend, cfg: &ServeConfig) -> Result<()> {
 
 fn accept_loop(listener: UnixListener, shared: Arc<Shared>) {
     loop {
-        if shared.shutdown.load(Ordering::SeqCst) {
-            return;
-        }
         match listener.accept() {
             Ok((stream, _)) => {
-                // accepted sockets inherit the listener's non-blocking
-                // mode on some platforms; connection reads are blocking
-                if stream.set_nonblocking(false).is_err() {
-                    continue;
+                if shared.stopping() {
+                    // either the wake-up self-connect or a late client;
+                    // dropping the stream gives the client a clean EOF
+                    return;
                 }
                 let conn_shared = shared.clone();
                 std::thread::spawn(move || handle_conn(stream, conn_shared));
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
-            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
             Err(_) => return,
         }
     }
 }
 
-fn handle_conn(stream: UnixStream, shared: Arc<Shared>) {
-    let Ok(read_half) = stream.try_clone() else { return };
-    let reader = BufReader::new(read_half);
-    let mut writer = stream;
-    for line in reader.lines() {
-        let Ok(line) = line else { return };
-        if line.trim().is_empty() {
-            continue;
+/// Read one request line into `buf` (which may already hold partial
+/// bytes from a timed-out previous call — `read_until` keeps them).
+/// Returns `Some(eof)` when a line is ready (`eof`: the peer closed
+/// after it), `None` when the connection should be dropped.
+fn read_request_line(
+    reader: &mut BufReader<UnixStream>,
+    buf: &mut Vec<u8>,
+    shared: &Shared,
+) -> Option<bool> {
+    loop {
+        match reader.read_until(b'\n', buf) {
+            // no new bytes + clean EOF: final (possibly empty) line
+            Ok(0) => return Some(true),
+            Ok(_) => {
+                // EOF can also land mid-line; the bytes so far are the
+                // final request
+                return Some(buf.last() != Some(&b'\n'));
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // read timeout. A peer stalled MID-LINE is dead or
+                // hostile — drop it (partial bytes and all). An idle
+                // connection with no partial line keeps waiting, unless
+                // the daemon is draining.
+                if !buf.is_empty() || shared.stopping() {
+                    return None;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return None,
         }
-        let resp = match protocol::parse_request(&line) {
-            Err(e) => protocol::error_line(&Json::Null, &format!("{e:#}")),
-            Ok(Request::Ping) => protocol::pong_line(),
-            Ok(Request::Info) => shared.info_line.clone(),
-            Ok(Request::Shutdown) => {
-                // respond BEFORE raising the flag: once the scheduler
-                // loop sees it, the process may exit at any moment
-                if write_line(&mut writer, &protocol::shutdown_line()).is_err() {
-                    return;
-                }
-                shared.shutdown.store(true, Ordering::SeqCst);
-                continue;
-            }
-            Ok(Request::Generate { id, prompt, max_tokens }) => {
-                if shared.shutdown.load(Ordering::SeqCst) {
-                    protocol::error_line(&id, "daemon is shutting down")
-                } else {
-                    let rid = shared.next_id.fetch_add(1, Ordering::SeqCst);
-                    let (tx, rx) = channel();
-                    shared
-                        .queue
-                        .lock()
-                        .unwrap()
-                        .push((GenRequest { id: rid, prompt, max_tokens }, tx));
-                    match rx.recv() {
-                        Ok(Ok(r)) => protocol::generate_line(&id, r.prompt_len, &r.tokens),
-                        Ok(Err(msg)) => protocol::error_line(&id, &msg),
-                        Err(_) => {
-                            protocol::error_line(&id, "daemon exited before the request completed")
-                        }
+    }
+}
+
+fn handle_conn(stream: UnixStream, shared: Arc<Shared>) {
+    // bounded reads: without this a wedged peer pins the thread forever
+    let _ = stream.set_read_timeout(Some(shared.read_timeout));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        let Some(eof) = read_request_line(&mut reader, &mut buf, &shared) else { return };
+        let line = String::from_utf8_lossy(&buf).into_owned();
+        if !line.trim().is_empty() {
+            let resp = match protocol::parse_request(&line) {
+                Err(e) => protocol::error_line(&Json::Null, &format!("{e:#}")),
+                Ok(Request::Ping) => protocol::pong_line(),
+                Ok(Request::Info) => shared.info_line.clone(),
+                Ok(Request::Stats) => protocol::stats_line(
+                    shared.inflight.load(Ordering::SeqCst),
+                    shared.stopping(),
+                ),
+                Ok(Request::Shutdown) => {
+                    // respond BEFORE raising the flag: once the
+                    // scheduler loop sees it, the process may exit at
+                    // any moment
+                    if write_line(&mut writer, &protocol::shutdown_line()).is_err() {
+                        return;
                     }
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    shared.wake.notify_one();
+                    if eof {
+                        return;
+                    }
+                    continue;
                 }
+                Ok(Request::Generate { id, prompt, max_tokens }) => {
+                    // writes its own response (the inflight counter
+                    // must not drop until the bytes are out)
+                    if !handle_generate(&shared, id, prompt, max_tokens, &mut writer) {
+                        return;
+                    }
+                    if eof {
+                        return;
+                    }
+                    continue;
+                }
+            };
+            if write_line(&mut writer, &resp).is_err() {
+                return;
             }
-        };
-        if write_line(&mut writer, &resp).is_err() {
+        }
+        if eof {
             return;
         }
     }
+}
+
+/// Admit + await + answer one generate. Returns false when the
+/// connection should be dropped (write failure).
+fn handle_generate(
+    shared: &Shared,
+    id: Json,
+    prompt: Vec<i32>,
+    max_tokens: usize,
+    writer: &mut UnixStream,
+) -> bool {
+    if shared.stopping() {
+        let line = protocol::error_line(&id, "daemon is shutting down");
+        return write_line(writer, &line).is_ok();
+    }
+    // admission under the queue lock: the inflight increment and the
+    // push are atomic together, so the cap can never over-admit and a
+    // `stats` reading inflight >= 1 proves the submission is queued
+    let admitted = {
+        let mut q = shared.queue.lock().unwrap();
+        if shared.inflight.load(Ordering::SeqCst) >= shared.max_inflight {
+            None
+        } else {
+            shared.inflight.fetch_add(1, Ordering::SeqCst);
+            let rid = shared.next_id.fetch_add(1, Ordering::SeqCst);
+            let (tx, rx) = channel();
+            q.push((GenRequest { id: rid, prompt, max_tokens }, tx));
+            Some(rx)
+        }
+    };
+    let Some(rx) = admitted else {
+        let line = protocol::overloaded_line(&id, shared.max_inflight);
+        return write_line(writer, &line).is_ok();
+    };
+    shared.wake.notify_one();
+    let resp = match rx.recv() {
+        Ok(Ok(r)) => protocol::generate_line(&id, r.prompt_len, &r.tokens),
+        Ok(Err(msg)) => protocol::error_line(&id, &msg),
+        Err(_) => protocol::error_line(&id, "daemon exited before the request completed"),
+    };
+    let wrote = write_line(writer, &resp).is_ok();
+    // only after the response bytes are out: run()'s shutdown path
+    // waits on this counter before letting the process exit
+    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+    wrote
 }
 
 fn write_line(w: &mut UnixStream, line: &str) -> std::io::Result<()> {

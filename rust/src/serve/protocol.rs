@@ -27,6 +27,8 @@ pub enum Request {
         /// Tokens to generate (clamped to the seq_len budget).
         max_tokens: usize,
     },
+    /// Live counters: in-flight generates + whether a drain has begun.
+    Stats,
     /// Stop admitting, drain in-flight sequences, exit cleanly.
     Shutdown,
 }
@@ -42,6 +44,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
     match op {
         "ping" => Ok(Request::Ping),
         "info" => Ok(Request::Info),
+        "stats" => Ok(Request::Stats),
         "shutdown" => Ok(Request::Shutdown),
         "generate" => {
             let prompt_v = v.req("prompt")?;
@@ -64,7 +67,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
             let id = v.get("id").cloned().unwrap_or(Json::Null);
             Ok(Request::Generate { id, prompt, max_tokens })
         }
-        other => bail!("unknown op {other:?} (ping | info | generate | shutdown)"),
+        other => bail!("unknown op {other:?} (ping | info | stats | generate | shutdown)"),
     }
 }
 
@@ -75,6 +78,32 @@ pub fn error_line(id: &Json, msg: &str) -> String {
         pairs.push(("id", id.clone()));
     }
     obj(pairs).to_string()
+}
+
+/// The typed load-shed response: `{"ok":false,"overloaded":true,...}`.
+/// Clients distinguish it from hard failures by the `overloaded` flag
+/// (retry with backoff instead of giving up).
+pub fn overloaded_line(id: &Json, max_queue: u64) -> String {
+    let mut pairs = vec![
+        ("ok", Json::Bool(false)),
+        ("overloaded", Json::Bool(true)),
+        ("error", s(&format!("overloaded: admission queue is full (cap {max_queue})"))),
+    ];
+    if *id != Json::Null {
+        pairs.push(("id", id.clone()));
+    }
+    obj(pairs).to_string()
+}
+
+/// The `stats` response: in-flight generate count and drain state.
+pub fn stats_line(inflight: u64, shutting_down: bool) -> String {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", s("stats")),
+        ("inflight", num(inflight as f64)),
+        ("shutting_down", Json::Bool(shutting_down)),
+    ])
+    .to_string()
 }
 
 /// `{"ok":true,"op":"pong"}`.
@@ -108,6 +137,7 @@ mod tests {
     fn parses_every_op() {
         assert_eq!(parse_request(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
         assert_eq!(parse_request(r#"{"op":"info"}"#).unwrap(), Request::Info);
+        assert_eq!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
         assert_eq!(parse_request(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown);
         let g = parse_request(r#"{"op":"generate","prompt":[1,2],"max_tokens":3,"id":9}"#).unwrap();
         assert_eq!(
@@ -148,5 +178,21 @@ mod tests {
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(v.get("error").unwrap().as_str(), Some("nope"));
         assert!(v.get("id").is_none());
+    }
+
+    #[test]
+    fn overloaded_and_stats_lines_round_trip() {
+        let o = overloaded_line(&Json::Num(4.0), 64);
+        let v = Json::parse(&o).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("overloaded").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_i64(), Some(4));
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("cap 64"));
+
+        let st = stats_line(3, true);
+        let v = Json::parse(&st).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("inflight").unwrap().as_i64(), Some(3));
+        assert_eq!(v.get("shutting_down").unwrap().as_bool(), Some(true));
     }
 }

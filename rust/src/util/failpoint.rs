@@ -1,0 +1,185 @@
+//! Env-armed fault-injection points (the crash-test harness hooks).
+//!
+//! A fail point is a named site in a durability-critical code path
+//! (checkpoint save/load windows, the train-step loop). Unarmed — the
+//! normal case — a site costs one relaxed atomic load. Armed via the
+//! `SLTRAIN_FAILPOINT` environment variable, a site can inject a panic,
+//! a hard process abort (the in-process stand-in for SIGKILL), a clean
+//! exit, or an error return, optionally only on its Nth hit:
+//!
+//! ```text
+//! SLTRAIN_FAILPOINT=checkpoint.save.before_rename=abort
+//! SLTRAIN_FAILPOINT=checkpoint.save.after_header=abort@2   # 2nd hit only
+//! SLTRAIN_FAILPOINT=train.after_step=error@5,checkpoint.save.before_write=panic
+//! ```
+//!
+//! Actions: `panic` | `abort` | `exit:<code>` | `error` | `off`.
+//! A malformed spec panics at first use — a typo'd fault injection that
+//! silently never fires would make a crash test vacuously green (the
+//! same loud-typo policy as `SLTRAIN_SIMD`).
+//!
+//! The black-box crash tests (`tests/crash_resume.rs`) arm these in
+//! child processes to die deterministically inside each checkpoint
+//! durability window; CI additionally runs the whole suite with a
+//! never-firing point armed so the registry wiring itself stays live.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, Result};
+
+/// What an armed fail point does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// `panic!` at the site (unwinds; caught by test harnesses).
+    Panic,
+    /// `std::process::abort()` — no destructors, no flushes: the
+    /// closest in-process approximation of SIGKILL.
+    Abort,
+    /// `std::process::exit(code)` — skips destructors but flushes
+    /// nothing beyond what already reached the OS.
+    Exit(i32),
+    /// Return an `anyhow` error from the site (exercises error paths).
+    Error,
+    /// Registered but inert (arm the registry without firing anything).
+    Off,
+}
+
+struct Point {
+    action: Action,
+    /// Fire only on this 1-based hit number (None = every hit).
+    at: Option<u64>,
+    hits: AtomicU64,
+}
+
+fn registry() -> &'static HashMap<String, Point> {
+    static REG: OnceLock<HashMap<String, Point>> = OnceLock::new();
+    REG.get_or_init(|| parse_spec(&std::env::var("SLTRAIN_FAILPOINT").unwrap_or_default()))
+}
+
+/// True when `SLTRAIN_FAILPOINT` registered at least one point. The
+/// unarmed fast path of [`hit`] reduces to this one cached load.
+pub fn armed() -> bool {
+    static ANY: OnceLock<bool> = OnceLock::new();
+    *ANY.get_or_init(|| !registry().is_empty())
+}
+
+/// Execute the fail point `name`. No-op (and near zero cost) unless the
+/// process was started with a matching `SLTRAIN_FAILPOINT` entry.
+#[inline]
+pub fn hit(name: &str) -> Result<()> {
+    if !armed() {
+        return Ok(());
+    }
+    fire(name)
+}
+
+#[cold]
+fn fire(name: &str) -> Result<()> {
+    let Some(p) = registry().get(name) else {
+        return Ok(());
+    };
+    let n = p.hits.fetch_add(1, Ordering::SeqCst) + 1;
+    if let Some(at) = p.at {
+        if n != at {
+            return Ok(());
+        }
+    }
+    match p.action {
+        Action::Off => Ok(()),
+        Action::Panic => panic!("failpoint {name} tripped (hit {n})"),
+        Action::Abort => {
+            eprintln!("[FAILPOINT] {name}: abort (hit {n})");
+            std::process::abort();
+        }
+        Action::Exit(code) => {
+            eprintln!("[FAILPOINT] {name}: exit {code} (hit {n})");
+            std::process::exit(code);
+        }
+        Action::Error => Err(anyhow!("failpoint {name} injected error (hit {n})")),
+    }
+}
+
+fn parse_spec(spec: &str) -> HashMap<String, Point> {
+    let mut map = HashMap::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let Some((name, rhs)) = entry.split_once('=') else {
+            panic!("SLTRAIN_FAILPOINT entry {entry:?}: expected <name>=<action>[@N]");
+        };
+        let (action_str, at) = match rhs.split_once('@') {
+            Some((a, n)) => {
+                let n: u64 = n.parse().unwrap_or_else(|_| {
+                    panic!("SLTRAIN_FAILPOINT {entry:?}: @N must be a positive integer")
+                });
+                assert!(n >= 1, "SLTRAIN_FAILPOINT {entry:?}: hit numbers are 1-based");
+                (a, Some(n))
+            }
+            None => (rhs, None),
+        };
+        let action = match action_str {
+            "panic" => Action::Panic,
+            "abort" => Action::Abort,
+            "error" => Action::Error,
+            "off" => Action::Off,
+            other => match other.strip_prefix("exit:") {
+                Some(code) => Action::Exit(code.parse().unwrap_or_else(|_| {
+                    panic!("SLTRAIN_FAILPOINT {entry:?}: exit code must be an integer")
+                })),
+                None => panic!(
+                    "SLTRAIN_FAILPOINT {entry:?}: unknown action {action_str:?} \
+                     (panic | abort | exit:<code> | error | off)"
+                ),
+            },
+        };
+        map.insert(name.trim().to_string(), Point { action, at, hits: AtomicU64::new(0) });
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // registry() reads the env once per process, so these tests work on
+    // parse_spec directly; end-to-end arming is covered black-box in
+    // tests/crash_resume.rs through child-process environments.
+
+    #[test]
+    fn parses_actions_and_hit_counts() {
+        let m = parse_spec("a=panic,b=abort@3, c=exit:7 ,d=error,e=off");
+        assert_eq!(m.len(), 5);
+        assert_eq!(m["a"].action, Action::Panic);
+        assert_eq!(m["a"].at, None);
+        assert_eq!(m["b"].action, Action::Abort);
+        assert_eq!(m["b"].at, Some(3));
+        assert_eq!(m["c"].action, Action::Exit(7));
+        assert_eq!(m["d"].action, Action::Error);
+        assert_eq!(m["e"].action, Action::Off);
+    }
+
+    #[test]
+    fn empty_spec_is_empty() {
+        assert!(parse_spec("").is_empty());
+        assert!(parse_spec("  ").is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown action")]
+    fn typo_panics_loudly() {
+        parse_spec("a=pnaic");
+    }
+
+    #[test]
+    #[should_panic(expected = "expected <name>=<action>")]
+    fn missing_action_panics() {
+        parse_spec("just_a_name");
+    }
+
+    #[test]
+    fn unarmed_hit_is_ok() {
+        // the suite normally runs without SLTRAIN_FAILPOINT (or with a
+        // never-firing point in the CI armed pass): hit() must be Ok
+        assert!(hit("no.such.point").is_ok());
+    }
+}

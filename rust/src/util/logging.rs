@@ -54,6 +54,11 @@ macro_rules! debug {
 }
 
 /// Append-only JSONL sink for structured metrics.
+///
+/// Crash semantics: every `emit` flushes through to the OS, and `Drop`
+/// flushes again, so a dying process loses at most the line it was
+/// mid-writing — the tail of the metrics stream is exactly what a
+/// post-mortem needs, and it is the part plain buffering would drop.
 pub struct MetricsWriter {
     out: BufWriter<File>,
 }
@@ -72,8 +77,27 @@ impl MetricsWriter {
             m.insert("ts".into(), Json::Num(ts));
         }
         writeln!(self.out, "{}", record.to_string())?;
+        // per-record flush: a crashed run's metrics file ends at the
+        // last completed event, not wherever the 8 KiB buffer stood
         self.out.flush()?;
         Ok(())
+    }
+
+    /// Flush any buffered bytes to the OS (also runs on `Drop`; emit
+    /// already flushes per record — this exists for explicit callers).
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+impl Drop for MetricsWriter {
+    fn drop(&mut self) {
+        // BufWriter's own drop also flushes, but swallows errors
+        // invisibly; doing it here first keeps the contract explicit
+        // (errors at drop time still have nowhere to go, but the
+        // buffer is empty on every non-crash path because emit flushes)
+        let _ = self.out.flush();
     }
 }
 

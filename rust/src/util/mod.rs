@@ -1,6 +1,10 @@
-//! Shared substrates: JSON, RNG, CLI parsing, logging/metrics.
+//! Shared substrates: JSON, RNG, CLI parsing, logging/metrics,
+//! checksums, fault injection, and the shutdown-signal flag.
 
 pub mod cli;
+pub mod crc;
+pub mod failpoint;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod signal;

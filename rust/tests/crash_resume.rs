@@ -1,0 +1,514 @@
+//! Crash-safety tests: kill the real `sltrain train` binary inside
+//! every checkpoint durability window (deterministically, via
+//! `SLTRAIN_FAILPOINT`, and stochastically, via SIGKILL), then prove
+//! `--resume` always finds a validating checkpoint and finishes with a
+//! final checkpoint bit-identical to an uninterrupted run — the PR 6
+//! determinism contract, under crash fire.
+//!
+//! Also covers the divergence guard (in-process, with a NaN-injecting
+//! backend wrapper), graceful SIGTERM shutdown, and the typed errors
+//! every class of malformed checkpoint must produce.
+
+mod support;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use support::harness::{
+    deadline_poll, run_sltrain, signal_pid, spawn_sltrain, ChildGuard, DEADLINE,
+};
+
+use sltrain::backend::native::NativeBackend;
+use sltrain::backend::{Backend, StateTensor};
+use sltrain::config::{preset, ModelPreset};
+use sltrain::coordinator::trainer::train;
+use sltrain::coordinator::{Checkpoint, CheckpointError, TrainConfig};
+use sltrain::data::Pipeline;
+use sltrain::linalg::SupportPattern;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sltrain-crash-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The common fast CLI train invocation (tiny model, no eval/log noise).
+fn train_args(steps: usize, ckpt: &Path, every: usize, resume: bool) -> Vec<String> {
+    let mut v: Vec<String> = [
+        "train", "--backend", "native", "--config", "tiny", "--method", "sltrain",
+        "--batch", "2", "--eval-every", "0", "--log-every", "0",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    v.push("--steps".into());
+    v.push(steps.to_string());
+    v.push("--checkpoint".into());
+    v.push(ckpt.to_string_lossy().into_owned());
+    v.push("--checkpoint-every".into());
+    v.push(every.to_string());
+    if resume {
+        v.push("--resume".into());
+    }
+    v
+}
+
+fn run_train(
+    steps: usize,
+    ckpt: &Path,
+    every: usize,
+    resume: bool,
+    envs: &[(&str, &str)],
+) -> (std::process::ExitStatus, String, String) {
+    let args = train_args(steps, ckpt, every, resume);
+    let refs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    run_sltrain(&refs, envs)
+}
+
+/// Step recorded in the primary checkpoint, if it currently validates.
+fn ckpt_step(path: &Path) -> Option<usize> {
+    Checkpoint::load(path).ok().map(|c| c.step)
+}
+
+/// Deterministic crashes: abort the process inside EVERY failpoint
+/// window of the checkpoint save protocol (second save = mid-run), then
+/// resume. Each window must leave a recoverable chain, and the resumed
+/// final checkpoint must be byte-identical to the uninterrupted one.
+#[test]
+fn failpoint_abort_in_each_save_window_is_recoverable() {
+    let dir = tmp_dir("failpoints");
+    let ref_ckpt = dir.join("ref.ckpt");
+    let (st, _, err) = run_train(6, &ref_ckpt, 2, false, &[]);
+    assert!(st.success(), "reference run failed:\n{err}");
+    let want = std::fs::read(&ref_ckpt).unwrap();
+
+    for window in [
+        "checkpoint.save.before_write",
+        "checkpoint.save.after_header",
+        "checkpoint.save.before_rotate",
+        "checkpoint.save.before_rename",
+        "checkpoint.save.after_rename",
+    ] {
+        let ckpt = dir.join(format!("{}.ckpt", window.replace('.', "_")));
+        // crash on the SECOND save (step 4 of 6): history exists, the
+        // rotation machinery is fully engaged
+        let spec = format!("{window}=abort@2");
+        let (st, _, _) = run_train(6, &ckpt, 2, false, &[("SLTRAIN_FAILPOINT", &spec)]);
+        assert!(!st.success(), "{window}: armed abort did not kill the run");
+
+        let (st, _, err) = run_train(6, &ckpt, 2, true, &[]);
+        assert!(st.success(), "{window}: resume failed:\n{err}");
+        let got = std::fs::read(&ckpt).unwrap();
+        assert_eq!(
+            got, want,
+            "{window}: resumed final checkpoint is not bit-identical to the reference"
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Stochastic crashes: SIGKILL the training process twice at arbitrary
+/// points mid-run (timed off checkpoint progress, not sleeps), resume
+/// each time, and compare the final checkpoint byte-for-byte against an
+/// uninterrupted reference.
+#[test]
+fn sigkill_twice_then_resume_is_bit_identical() {
+    let dir = tmp_dir("sigkill");
+    let steps = 12usize;
+
+    let ref_ckpt = dir.join("ref.ckpt");
+    let (st, _, err) = run_train(steps, &ref_ckpt, 0, false, &[]);
+    assert!(st.success(), "reference run failed:\n{err}");
+    let want = std::fs::read(&ref_ckpt).unwrap();
+
+    let ckpt = dir.join("crash.ckpt");
+    for min_step in [3usize, 6] {
+        let args = train_args(steps, &ckpt, 1, true);
+        let refs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+        let mut child = ChildGuard(spawn_sltrain(&refs, &[]));
+        // wait until the run demonstrably passed `min_step`, then KILL —
+        // the signal can land mid-save, mid-rotation, anywhere. On a
+        // machine fast enough to finish first, skip the kill (the final
+        // bit-identity assertion below still holds).
+        let reached = deadline_poll(&format!("checkpoint to reach step {min_step}"), DEADLINE, || {
+            if let Some(st) = child.0.try_wait().unwrap() {
+                assert!(st.success(), "train exited early and unsuccessfully: {st}");
+                return Some(false);
+            }
+            Checkpoint::load_newest_valid(&ckpt)
+                .ok()
+                .flatten()
+                .filter(|(ck, _)| ck.step >= min_step)
+                .map(|_| true)
+        });
+        if !reached {
+            break;
+        }
+        signal_pid(child.0.id(), "KILL");
+        let st = child.wait_exit();
+        assert!(!st.success(), "SIGKILL'd process reported success");
+    }
+
+    // final resume runs to completion
+    let (st, _, err) = run_train(steps, &ckpt, 1, true, &[]);
+    assert!(st.success(), "final resume failed:\n{err}");
+    let got = std::fs::read(&ckpt).unwrap();
+    assert_eq!(got, want, "crash-resumed final checkpoint differs from uninterrupted run");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Graceful SIGTERM: the run saves a resumable checkpoint, announces
+/// the resume step, and exits 0 — then actually resumes to the same
+/// final bytes as an uninterrupted run.
+#[test]
+fn sigterm_saves_resumable_checkpoint_and_exits_zero() {
+    let dir = tmp_dir("sigterm");
+    let steps = 5000usize; // far more than will run; SIGTERM ends it
+
+    let ckpt = dir.join("graceful.ckpt");
+    let args = train_args(steps, &ckpt, 2, false);
+    let refs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    let mut child = ChildGuard(spawn_sltrain(&refs, &[]));
+    deadline_poll("first checkpoint to appear", DEADLINE, || {
+        if let Some(st) = child.0.try_wait().unwrap() {
+            panic!("train exited early: {st}");
+        }
+        ckpt_step(&ckpt)
+    });
+    signal_pid(child.0.id(), "TERM");
+    let out = child.take().wait_with_output().expect("waiting for SIGTERM'd train");
+    assert!(out.status.success(), "SIGTERM must exit 0, got {}", out.status);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("resumable at step"),
+        "no resumable-at-step notice in stdout:\n{stdout}"
+    );
+    let resumed_from = ckpt_step(&ckpt).expect("no valid checkpoint after SIGTERM");
+    assert!(resumed_from >= 2 && resumed_from < steps, "odd resume step {resumed_from}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Every malformed-checkpoint class yields a typed `CheckpointError`
+/// through the library API — never a panic, never a silent load.
+#[test]
+fn malformed_checkpoints_yield_typed_errors() {
+    let dir = tmp_dir("typed-errors");
+    let good_path = dir.join("good.ckpt");
+    let mut tensors = BTreeMap::new();
+    tensors.insert(
+        "w".to_string(),
+        (vec![4usize], sltrain::runtime::Dtype::F32, vec![0u8; 16]),
+    );
+    Checkpoint { step: 2, tensors }.save(&good_path).unwrap();
+    let good = std::fs::read(&good_path).unwrap();
+
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        ("zero-byte", vec![]),
+        ("foreign", b"PNG\x89not a checkpoint at all".to_vec()),
+        ("truncated-header", good[..20].to_vec()),
+        ("truncated-payload", good[..good.len() - 20].to_vec()),
+        ("flipped-payload-byte", {
+            let mut v = good.clone();
+            let n = v.len();
+            v[n - 14] ^= 0x01;
+            v
+        }),
+    ];
+    for (tag, bytes) in cases {
+        let p = dir.join(format!("{tag}.ckpt"));
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p)
+            .err()
+            .unwrap_or_else(|| panic!("{tag}: malformed checkpoint loaded successfully"));
+        assert!(
+            err.downcast_ref::<CheckpointError>().is_some(),
+            "{tag}: error is not a typed CheckpointError: {err:#}"
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// CLI surface of the same property: `--resume` against a corrupt
+/// checkpoint with no history fails nonzero and names the file and the
+/// reason; with a valid history sibling it falls back and succeeds.
+#[test]
+fn cli_resume_reports_corruption_and_uses_history_fallback() {
+    let dir = tmp_dir("cli-corrupt");
+
+    // corrupt primary, no history -> hard failure naming file + cause
+    let lone = dir.join("lone.ckpt");
+    std::fs::write(&lone, b"definitely not a checkpoint").unwrap();
+    let (st, _, err) = run_train(2, &lone, 0, true, &[]);
+    assert!(!st.success(), "resume from corrupt-with-no-history must fail");
+    assert!(err.contains("lone.ckpt"), "diagnostic must name the file:\n{err}");
+    assert!(
+        err.contains("not a SLTCKPT1 checkpoint"),
+        "diagnostic must say why it failed:\n{err}"
+    );
+
+    // corrupt primary + valid .1 -> warn, fall back, succeed
+    let chain = dir.join("chain.ckpt");
+    let (st, _, err) = run_train(4, &chain, 2, false, &[]);
+    assert!(st.success(), "setup run failed:\n{err}");
+    assert!(chain.exists() && dir.join("chain.ckpt.1").exists(), "no rotation history");
+    let full = std::fs::read(&chain).unwrap();
+    std::fs::write(&chain, &full[..40]).unwrap(); // torn primary
+    let (st, _, err) = run_train(6, &chain, 0, true, &[]);
+    assert!(st.success(), "resume with valid history must succeed:\n{err}");
+    assert!(
+        err.contains("failed validation") && err.contains("falling back"),
+        "resume must warn about the skipped candidate:\n{err}"
+    );
+    assert_eq!(ckpt_step(&chain), Some(6), "resumed run did not reach the final step");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// A `Backend` wrapper that delegates everything to `NativeBackend` but
+/// can replace the reported train-step loss with NaN — the in-process
+/// stand-in for a numerically diverging run.
+struct NanInjector {
+    inner: NativeBackend,
+    /// Return NaN on these 1-based train_step calls...
+    from_call: u64,
+    /// ...for this many calls (u64::MAX = forever).
+    count: u64,
+    calls: u64,
+}
+
+impl NanInjector {
+    fn new(from_call: u64, count: u64) -> NanInjector {
+        let p: ModelPreset = preset("tiny").unwrap();
+        let inner = NativeBackend::build(
+            p, "sltrain", 2, 3e-3, 100, 1, 32, 0, SupportPattern::UniformRandom,
+        )
+        .unwrap();
+        NanInjector { inner, from_call, count, calls: 0 }
+    }
+}
+
+impl Backend for NanInjector {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+    fn method(&self) -> &str {
+        self.inner.method()
+    }
+    fn preset(&self) -> &ModelPreset {
+        self.inner.preset()
+    }
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+    fn n_params(&self) -> usize {
+        self.inner.n_params()
+    }
+    fn init_state(&mut self, seed: u32) -> anyhow::Result<()> {
+        self.inner.init_state(seed)
+    }
+    fn train_step(&mut self, step: i32, tokens: &[i32]) -> anyhow::Result<f32> {
+        self.calls += 1;
+        let until = self.from_call.saturating_add(self.count);
+        if self.calls >= self.from_call && self.calls < until {
+            return Ok(f32::NAN);
+        }
+        self.inner.train_step(step, tokens)
+    }
+    fn eval_loss(&mut self, tokens: &[i32]) -> anyhow::Result<f32> {
+        self.inner.eval_loss(tokens)
+    }
+    fn forward(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.forward(tokens)
+    }
+    fn state_tensors(&self) -> anyhow::Result<Vec<StateTensor>> {
+        self.inner.state_tensors()
+    }
+    fn load_state_tensors(&mut self, tensors: &[StateTensor]) -> anyhow::Result<()> {
+        self.inner.load_state_tensors(tensors)
+    }
+}
+
+fn guard_cfg(dir: &Path, steps: usize) -> TrainConfig {
+    TrainConfig {
+        steps,
+        eval_every: 0,
+        eval_batches: 2,
+        log_every: 0,
+        checkpoint_path: Some(dir.join("guard.ckpt")),
+        checkpoint_every: 2,
+        ..Default::default()
+    }
+}
+
+/// One NaN step: the guard trips once, rolls back to the last
+/// checkpoint, and the run still completes successfully.
+#[test]
+fn guard_single_nan_recovers_via_rollback() {
+    let dir = tmp_dir("guard-recover");
+    let mut be = NanInjector::new(5, 1);
+    let mut pipe = Pipeline::build(be.preset().vocab, 7);
+    let cfg = guard_cfg(&dir, 8);
+    let r = train(&mut be, &mut pipe, &cfg).expect("guarded run should recover");
+    assert_eq!(r.guard_trips, 1, "expected exactly one guard trip");
+    assert!(r.interrupted_at.is_none());
+    assert!(r.final_eval_loss.is_finite());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Persistent NaN: consecutive trips exhaust `max_guard_trips` and the
+/// run fails with a diagnostic instead of looping forever.
+#[test]
+fn guard_persistent_nan_exhausts_trips_and_errors() {
+    let dir = tmp_dir("guard-exhaust");
+    let mut be = NanInjector::new(5, u64::MAX);
+    let mut pipe = Pipeline::build(be.preset().vocab, 7);
+    let cfg = guard_cfg(&dir, 8);
+    let err = train(&mut be, &mut pipe, &cfg).expect_err("persistent NaN must abort");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("consecutive"), "diagnostic should mention consecutive trips: {msg}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Divergence before any checkpoint exists (or with no checkpoint path
+/// at all) cannot roll back — it must fail with a clear error.
+#[test]
+fn guard_without_checkpoint_to_roll_back_to_errors() {
+    // no checkpoint path configured
+    let mut be = NanInjector::new(1, 1);
+    let mut pipe = Pipeline::build(be.preset().vocab, 7);
+    let cfg = TrainConfig { steps: 4, eval_every: 0, log_every: 0, ..Default::default() };
+    let err = train(&mut be, &mut pipe, &cfg).expect_err("no rollback target must error");
+    assert!(format!("{err:#}").contains("no checkpoint"), "got: {err:#}");
+
+    // checkpoint path configured but nothing saved yet (trip at call 1,
+    // first save would be after step 1)
+    let dir = tmp_dir("guard-nothing-saved");
+    let mut be = NanInjector::new(1, 1);
+    let mut pipe = Pipeline::build(be.preset().vocab, 7);
+    let cfg = guard_cfg(&dir, 4);
+    let err = train(&mut be, &mut pipe, &cfg).expect_err("nothing saved yet must error");
+    assert!(format!("{err:#}").contains("nothing to roll back"), "got: {err:#}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The loss-spike guard (finite losses): a spike above `ema × factor`
+/// trips the guard even though the loss is a normal number.
+#[test]
+fn guard_finite_spike_trips_with_loss_guard_factor() {
+    struct SpikeOnce {
+        inner: NanInjector,
+    }
+    impl Backend for SpikeOnce {
+        fn kind(&self) -> &'static str {
+            "native"
+        }
+        fn method(&self) -> &str {
+            self.inner.method()
+        }
+        fn preset(&self) -> &ModelPreset {
+            self.inner.preset()
+        }
+        fn batch_size(&self) -> usize {
+            self.inner.batch_size()
+        }
+        fn n_params(&self) -> usize {
+            self.inner.n_params()
+        }
+        fn init_state(&mut self, seed: u32) -> anyhow::Result<()> {
+            self.inner.init_state(seed)
+        }
+        fn train_step(&mut self, step: i32, tokens: &[i32]) -> anyhow::Result<f32> {
+            self.inner.calls += 1;
+            if self.inner.calls == 5 {
+                return Ok(1.0e6); // huge but finite
+            }
+            self.inner.inner.train_step(step, tokens)
+        }
+        fn eval_loss(&mut self, tokens: &[i32]) -> anyhow::Result<f32> {
+            self.inner.eval_loss(tokens)
+        }
+        fn forward(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+            self.inner.forward(tokens)
+        }
+        fn state_tensors(&self) -> anyhow::Result<Vec<StateTensor>> {
+            self.inner.state_tensors()
+        }
+        fn load_state_tensors(&mut self, tensors: &[StateTensor]) -> anyhow::Result<()> {
+            self.inner.load_state_tensors(tensors)
+        }
+    }
+
+    let dir = tmp_dir("guard-spike");
+    let mut be = SpikeOnce { inner: NanInjector::new(u64::MAX, 0) };
+    let mut pipe = Pipeline::build(be.preset().vocab, 7);
+    let mut cfg = guard_cfg(&dir, 8);
+    cfg.loss_guard = 10.0;
+    let r = train(&mut be, &mut pipe, &cfg).expect("spike-guarded run should recover");
+    assert_eq!(r.guard_trips, 1, "the finite spike should trip the guard exactly once");
+
+    // without the factor armed, the same spike sails through
+    let mut be = SpikeOnce { inner: NanInjector::new(u64::MAX, 0) };
+    let mut pipe = Pipeline::build(be.preset().vocab, 7);
+    let cfg2 = guard_cfg(&dir, 8);
+    let r = train(&mut be, &mut pipe, &cfg2).expect("unguarded spike is not an error");
+    assert_eq!(r.guard_trips, 0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Checkpoint saves stay atomic under concurrent readers: a loader
+/// polling the primary mid-training only ever sees valid checkpoints
+/// (rename-swapped), never a torn half-write.
+#[test]
+fn concurrent_reader_never_sees_a_torn_checkpoint() {
+    let dir = tmp_dir("atomic-reader");
+    let ckpt = dir.join("hot.ckpt");
+    let args = train_args(10, &ckpt, 1, false);
+    let refs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    let mut child = ChildGuard(spawn_sltrain(&refs, &[]));
+    let mut seen = 0usize;
+    deadline_poll("train to finish while we hammer-read the checkpoint", DEADLINE, || {
+        if ckpt.exists() {
+            // any readable primary must validate (CRCs and all); a torn
+            // file here means the save path is not atomic
+            match Checkpoint::load(&ckpt) {
+                Ok(_) => seen += 1,
+                Err(e) => {
+                    let transient = e
+                        .downcast_ref::<std::io::Error>()
+                        .map(|io| io.kind() == std::io::ErrorKind::NotFound)
+                        .unwrap_or(false);
+                    assert!(transient, "torn checkpoint observed mid-save: {e:#}");
+                }
+            }
+        }
+        child.0.try_wait().unwrap()
+    });
+    assert!(seen > 0, "never managed to read the checkpoint during the run");
+    assert!(child.wait_exit().success());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Guard against harness rot: spawning with an armed-but-never-firing
+/// failpoint must not perturb a run (this is the mode CI uses for its
+/// armed full-suite pass).
+#[test]
+fn armed_but_dormant_failpoint_changes_nothing() {
+    let dir = tmp_dir("dormant");
+    let a = dir.join("plain.ckpt");
+    let b = dir.join("armed.ckpt");
+    let (st, _, err) = run_train(4, &a, 0, false, &[]);
+    assert!(st.success(), "{err}");
+    let (st, _, err) = run_train(
+        4,
+        &b,
+        0,
+        false,
+        &[("SLTRAIN_FAILPOINT", "train.after_step=error@1000000000")],
+    );
+    assert!(st.success(), "{err}");
+    assert_eq!(
+        std::fs::read(&a).unwrap(),
+        std::fs::read(&b).unwrap(),
+        "a dormant failpoint altered the trajectory"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}

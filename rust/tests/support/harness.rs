@@ -95,6 +95,11 @@ impl Daemon {
             self.child.try_wait().expect("waiting on daemon child")
         })
     }
+
+    /// OS pid of the daemon child (for sending it real signals).
+    pub fn pid(&self) -> u32 {
+        self.child.id()
+    }
 }
 
 impl Drop for Daemon {
@@ -125,6 +130,55 @@ impl Client {
         self.writer.write_all(line.as_bytes()).unwrap();
         self.writer.write_all(b"\n").unwrap();
         self.writer.flush().unwrap();
+    }
+
+    /// Write raw bytes with NO trailing newline — a deliberately
+    /// half-sent request, for read-timeout/stall tests.
+    pub fn send_partial(&mut self, bytes: &str) {
+        self.writer.write_all(bytes.as_bytes()).unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    /// Block until the daemon closes this connection (clean EOF or a
+    /// reset). Returns true when it did; panics only on a read timeout.
+    pub fn wait_closed(&mut self) -> bool {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => true,
+            Ok(_) => false,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                panic!("daemon neither answered nor closed the connection")
+            }
+            Err(_) => true,
+        }
+    }
+
+    /// Try to read one response line within `dur`; `None` on timeout.
+    /// Restores the default (deadline-length) read timeout either way.
+    /// Responses are single short lines written in one syscall, so a
+    /// timeout never lands mid-line — asserted, not assumed.
+    pub fn try_recv_within(&mut self, dur: Duration) -> Option<Json> {
+        self.reader.get_ref().set_read_timeout(Some(dur)).unwrap();
+        let mut line = String::new();
+        let got = match self.reader.read_line(&mut line) {
+            Ok(0) => panic!("daemon closed the connection mid-exchange"),
+            Ok(_) => {
+                Some(Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad {line:?}: {e}")))
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                assert!(line.is_empty(), "read timed out mid-line: {line:?}");
+                None
+            }
+            Err(e) => panic!("reading daemon response: {e}"),
+        };
+        self.reader.get_ref().set_read_timeout(Some(DEADLINE)).unwrap();
+        got
     }
 
     /// Read one response line and parse it as JSON.
@@ -160,5 +214,68 @@ impl Client {
             .iter()
             .map(|t| t.as_i64().unwrap())
             .collect()
+    }
+}
+
+/// Spawn `sltrain <args>` with extra environment variables, stdout and
+/// stderr piped. Wrap the child in [`ChildGuard`] (or wait on it) so a
+/// failing test cannot leak the process.
+pub fn spawn_sltrain(args: &[&str], envs: &[(&str, &str)]) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sltrain"));
+    cmd.args(args).stdout(Stdio::piped()).stderr(Stdio::piped());
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.spawn().expect("spawning sltrain")
+}
+
+/// Run `sltrain <args>` to completion; (status, stdout, stderr).
+pub fn run_sltrain(
+    args: &[&str],
+    envs: &[(&str, &str)],
+) -> (std::process::ExitStatus, String, String) {
+    let out = spawn_sltrain(args, envs).wait_with_output().expect("waiting for sltrain");
+    (
+        out.status,
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+/// Send a POSIX signal ("TERM", "KILL", "INT", ...) to `pid` via the
+/// `kill` shell utility — std has no direct kill(2) binding.
+pub fn signal_pid(pid: u32, sig: &str) {
+    let status = Command::new("kill")
+        .arg(format!("-{sig}"))
+        .arg(pid.to_string())
+        .status()
+        .expect("running kill(1)");
+    assert!(status.success(), "kill -{sig} {pid} failed");
+}
+
+/// Kill-on-drop wrapper for ad-hoc child processes (train runs under
+/// crash tests): a panicking test never leaks a training process.
+pub struct ChildGuard(pub Child);
+
+impl ChildGuard {
+    /// Deadline-poll until the child exits; returns its status.
+    pub fn wait_exit(&mut self) -> std::process::ExitStatus {
+        deadline_poll("child process exit", DEADLINE, || {
+            self.0.try_wait().expect("waiting on child")
+        })
+    }
+
+    /// Take the real child out (e.g. for `wait_with_output`, which
+    /// consumes it), leaving a trivial finished process in the guard.
+    pub fn take(&mut self) -> Child {
+        let placeholder = Command::new("true").spawn().expect("spawning true");
+        std::mem::replace(&mut self.0, placeholder)
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
     }
 }
