@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
                     optim_bits: bits,
                     galore_every: a.usize("galore-every"),
                     support,
+                    workers: 0,
                 };
                 // any per-cell failure (open, init, step) skips the cell
                 // so one bad combo can't abort the whole trajectory run

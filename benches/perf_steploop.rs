@@ -1,17 +1,21 @@
 //! §Perf bench: the native step-loop cost model.
 //!
-//! Measures training tokens/sec per method × thread count through the
-//! `Backend` trait — the artifact-free default build runs it with no
-//! XLA and no Python, so the perf trajectory of the pure-rust engine is
-//! tracked from the same binary CI compiles anyway. Also reports the
-//! pure data-pipeline rate (tokens/sec the loader can produce) to show
-//! the host side is never the bottleneck.
+//! Measures training tokens/sec per method × thread count × worker
+//! count through the `Backend` trait — the artifact-free default build
+//! runs it with no XLA and no Python, so the perf trajectory of the
+//! pure-rust engine is tracked from the same binary CI compiles anyway.
+//! Also reports the pure data-pipeline rate (tokens/sec the loader can
+//! produce) to show the host side is never the bottleneck.
+//!
+//! `--workers 0` is the plain single-engine step loop; a nonzero count
+//! runs the data-parallel `ShardedBackend` (same losses bit for bit).
 //!
 //! Emits `BENCH_steploop.json` (machine-readable trajectory point) next
 //! to the CSV:
 //!
 //!   cargo bench --bench perf_steploop -- --steps 20
 //!   cargo bench --bench perf_steploop -- --threads 1,2,4,8 --methods sltrain
+//!   cargo bench --bench perf_steploop -- --workers 0,2,4 --methods full
 
 use sltrain::backend::{self, Backend, BackendSpec};
 use sltrain::bench::{fmt, Table};
@@ -27,6 +31,11 @@ fn main() -> anyhow::Result<()> {
         .opt("configs", "tiny", "comma-separated scale points")
         .opt("methods", "full,lowrank,sltrain,relora,galore", "comma-separated methods")
         .opt("threads", "1,2,4", "comma-separated thread counts")
+        .opt(
+            "workers",
+            "0",
+            "comma-separated data-parallel worker counts (0 = plain single engine)",
+        )
         .opt("batch", "8", "train batch rows")
         .opt("optim-bits", "0", "Adam moment precision: 32 | 8 (0 = auto)")
         .opt("galore-every", "0", "GaLore projector refresh period (0 = default)")
@@ -54,7 +63,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut t = Table::new(
         "§Perf — native step loop (tokens/sec, higher is better)",
-        &["config", "method", "threads", "tok/s", "step ms", "speedup vs first"],
+        &["config", "method", "threads", "workers", "tok/s", "step ms", "speedup vs first"],
     );
     let mut results: Vec<Json> = Vec::new();
     for cfgn in a.str("configs").split(',') {
@@ -77,60 +86,72 @@ fn main() -> anyhow::Result<()> {
                         continue;
                     }
                 };
-                let spec = BackendSpec::Native {
-                    preset: p.clone(),
-                    method: method.to_string(),
-                    batch,
-                    lr: 3e-3,
-                    total_steps: 2000,
-                    threads,
-                    optim_bits: a.usize("optim-bits"),
-                    galore_every: a.usize("galore-every"),
-                    support,
-                };
-                let mut be: Box<dyn Backend> = match backend::open(spec) {
-                    Ok(be) => be,
-                    Err(e) => {
-                        println!("[skip] {cfgn}/{method}: {e}");
-                        continue;
+                for workers_s in a.str("workers").split(',') {
+                    let workers: usize = match workers_s.trim().parse() {
+                        Ok(v) => v,
+                        Err(_) => {
+                            println!("[skip] bad worker count {workers_s:?}");
+                            continue;
+                        }
+                    };
+                    let spec = BackendSpec::Native {
+                        preset: p.clone(),
+                        method: method.to_string(),
+                        batch,
+                        lr: 3e-3,
+                        total_steps: 2000,
+                        threads,
+                        optim_bits: a.usize("optim-bits"),
+                        galore_every: a.usize("galore-every"),
+                        support,
+                        workers,
+                    };
+                    let mut be: Box<dyn Backend> = match backend::open(spec) {
+                        Ok(be) => be,
+                        Err(e) => {
+                            println!("[skip] {cfgn}/{method}: {e}");
+                            continue;
+                        }
+                    };
+                    be.init_state(42)?;
+                    let seq = be.seq_len();
+                    let mut pipe = Pipeline::build(be.preset().vocab, 7);
+                    for w in 0..2 {
+                        let toks = pipe.train.next_batch(batch, seq);
+                        be.train_step(w, &toks)?;
                     }
-                };
-                be.init_state(42)?;
-                let seq = be.seq_len();
-                let mut pipe = Pipeline::build(be.preset().vocab, 7);
-                for w in 0..2 {
-                    let toks = pipe.train.next_batch(batch, seq);
-                    be.train_step(w, &toks)?;
+                    let t1 = std::time::Instant::now();
+                    for st in 0..steps {
+                        let toks = pipe.train.next_batch(batch, seq);
+                        be.train_step(2 + st as i32, &toks)?;
+                    }
+                    let dt = t1.elapsed().as_secs_f64();
+                    let tps = (steps * batch * seq) as f64 / dt;
+                    let optim_bits = be.mem_report().map(|m| m.optim_bits).unwrap_or(0);
+                    if base_tps == 0.0 {
+                        base_tps = tps;
+                    }
+                    t.row(vec![
+                        cfgn.to_string(),
+                        method.to_string(),
+                        threads.to_string(),
+                        workers.to_string(),
+                        fmt(tps, 0),
+                        fmt(dt / steps as f64 * 1e3, 2),
+                        fmt(tps / base_tps, 2),
+                    ]);
+                    println!("  [{cfgn}/{method} x{threads}t w{workers}] {tps:.0} tok/s");
+                    results.push(obj(vec![
+                        ("config", s(cfgn)),
+                        ("method", s(method)),
+                        ("threads", num(threads as f64)),
+                        ("workers", num(workers as f64)),
+                        ("optim_bits", num(optim_bits as f64)),
+                        ("support", s(&support.label())),
+                        ("tokens_per_sec", num(tps)),
+                        ("step_ms", num(dt / steps as f64 * 1e3)),
+                    ]));
                 }
-                let t1 = std::time::Instant::now();
-                for st in 0..steps {
-                    let toks = pipe.train.next_batch(batch, seq);
-                    be.train_step(2 + st as i32, &toks)?;
-                }
-                let dt = t1.elapsed().as_secs_f64();
-                let tps = (steps * batch * seq) as f64 / dt;
-                let optim_bits = be.mem_report().map(|m| m.optim_bits).unwrap_or(0);
-                if base_tps == 0.0 {
-                    base_tps = tps;
-                }
-                t.row(vec![
-                    cfgn.to_string(),
-                    method.to_string(),
-                    threads.to_string(),
-                    fmt(tps, 0),
-                    fmt(dt / steps as f64 * 1e3, 2),
-                    fmt(tps / base_tps, 2),
-                ]);
-                println!("  [{cfgn}/{method} x{threads}] {tps:.0} tok/s");
-                results.push(obj(vec![
-                    ("config", s(cfgn)),
-                    ("method", s(method)),
-                    ("threads", num(threads as f64)),
-                    ("optim_bits", num(optim_bits as f64)),
-                    ("support", s(&support.label())),
-                    ("tokens_per_sec", num(tps)),
-                    ("step_ms", num(dt / steps as f64 * 1e3)),
-                ]));
             }
         }
     }

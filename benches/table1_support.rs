@@ -72,6 +72,7 @@ fn native_study(a: &Args) -> Result<()> {
             optim_bits: 0,
             galore_every: 0,
             support,
+            workers: 0,
         })?;
         let r = quick_train(be.as_mut(), steps, 7)?;
         Ok((r.final_ppl, r.tokens_per_sec, r.n_params))

@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
                         optim_bits: a.usize("optim-bits"),
                         galore_every: a.usize("galore-every"),
                         support,
+                        workers: 0,
                     }
                 }
             };

@@ -100,6 +100,7 @@ fn main() -> anyhow::Result<()> {
                 optim_bits: bits,
                 galore_every: 0,
                 support: SupportPattern::UniformRandom,
+                workers: 0,
             };
             let mut be: Box<dyn Backend> = backend::open(spec)?;
             be.init_state(42)?;

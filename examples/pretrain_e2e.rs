@@ -44,6 +44,7 @@ fn main() -> Result<()> {
         a.usize("optim-bits"),
         0, // galore refresh: unused (this example trains sltrain)
         "random",
+        0, // workers: single-engine (see `train --workers`)
     )?;
     let mut be = backend::open(spec)?;
     let p = be.preset().clone();

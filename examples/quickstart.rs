@@ -40,6 +40,7 @@ fn main() -> Result<()> {
         a.usize("optim-bits"),
         a.usize("galore-every"),
         &a.str("support"),
+        0, // workers: single-engine (see `train --workers`)
     )?;
     let mut be = backend::open(spec)?;
     println!(

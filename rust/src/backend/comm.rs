@@ -1,0 +1,759 @@
+//! Comm layer of the data-parallel sharded backend.
+//!
+//! Defines the command/event protocol between the parent
+//! [`super::sharded::ShardedBackend`] and its N replica workers, plus
+//! the two transports that carry it:
+//!
+//! * **threads** (default) — each replica lives on a worker thread in
+//!   this process; commands and events move over `std::sync::mpsc`
+//!   channels with no serialization.
+//! * **processes** (`SLTRAIN_WORKER_TRANSPORT=process`) — each replica
+//!   is a child OS process (the hidden `shard-worker` subcommand of the
+//!   own binary) connected over a Unix domain socket. Frames reuse the
+//!   serve daemon's idioms: one JSON header line, then a raw
+//!   little-endian byte payload, so every f32/f64 crosses the wire
+//!   bit-exactly and the determinism contract holds across transports.
+//!
+//! Both sides of a transport implement the same two small traits —
+//! [`ReplicaLink`] (parent → worker commands) and [`WorkerChannel`]
+//! (worker side: receive commands, emit events) — and all events from
+//! every worker funnel into ONE parent-side `mpsc` receiver tagged with
+//! the worker index, which is what lets the parent reduce gradients in
+//! arrival order while replicas are still walking their backward.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::StateTensor;
+use crate::mem::MemReport;
+use crate::runtime::Dtype;
+use crate::util::json::{num, obj, s, Json};
+
+/// Parent → worker commands. Token/gradient/parameter payloads ride as
+/// `(id, data)` pairs so a worker only ever sees the blocks and
+/// parameters the parent routed to it.
+#[derive(Debug)]
+pub(crate) enum Cmd {
+    /// Initialize replica state from the seed, then owner-shard moments.
+    Init { seed: u32 },
+    /// Run forward+backward on the listed `(block id, tokens)` blocks,
+    /// streaming one `Event::Grad` per finalized gradient.
+    Step { step: i32, blocks: Vec<(usize, Vec<i32>)> },
+    /// Apply the reduced gradients for the worker's owned parameters.
+    Apply { step: i32, grads: Vec<(usize, Vec<f32>)> },
+    /// Overwrite parameters updated by OTHER owners this step.
+    SetParams { params: Vec<(usize, Vec<f32>)> },
+    /// Held-out loss on a full batch (worker 0 only).
+    Eval { bsz: usize, tokens: Vec<i32> },
+    /// Raw forward logits (worker 0 only).
+    Forward { tokens: Vec<i32> },
+    /// ReLoRA merge-and-restart from the seed (all replicas).
+    Merge { seed: i32 },
+    /// Drop optimizer state (Table-5 inference footprint).
+    DropOptim,
+    /// Fold every adapted linear dense, in place.
+    Fold,
+    /// Snapshot the replica's state tensors.
+    GetState,
+    /// Restore a full flat-namespace state set, then re-shard moments.
+    LoadState { tensors: Vec<StateTensor> },
+    /// Report the replica's measured memory footprint.
+    MemReport,
+    /// Exit the worker loop.
+    Shutdown,
+}
+
+/// Worker → parent events, tagged with the worker index by the
+/// transport. `Err` carries any handler failure to the parent, which
+/// bails the in-flight operation.
+#[derive(Debug)]
+pub(crate) enum Event {
+    /// Replica initialized; parameter metadata for the parent's reducer
+    /// and state-merge bookkeeping.
+    Inited { names: Vec<String>, numels: Vec<usize>, frozen: Vec<bool> },
+    /// One finalized block gradient (the all-reduce overlap traffic).
+    Grad { block: usize, param: usize, grad: Vec<f32> },
+    /// All of this worker's blocks finished; per-block mean losses.
+    StepDone { losses: Vec<(usize, f64)> },
+    /// Owned parameters updated; their post-update data for broadcast.
+    Applied { updated: Vec<(usize, Vec<f32>)> },
+    /// `SetParams` absorbed.
+    SetDone,
+    /// `Eval` result.
+    EvalDone { loss: f64 },
+    /// `Forward` result.
+    ForwardDone { logits: Vec<f32> },
+    /// `Merge` finished (moments re-sharded).
+    Merged,
+    /// `DropOptim` finished.
+    Dropped,
+    /// `Fold` finished.
+    Folded,
+    /// `GetState` snapshot.
+    State { tensors: Vec<StateTensor> },
+    /// `LoadState` finished (moments re-sharded).
+    Loaded,
+    /// `MemReport` result.
+    Mem { report: MemReport },
+    /// A handler failed; the message carries the error chain.
+    Err { msg: String },
+}
+
+/// Parent-side handle to one replica: sends commands. Events arrive on
+/// the shared `(worker, Event)` receiver owned by the parent.
+pub(crate) trait ReplicaLink: Send {
+    /// Enqueue one command toward the replica.
+    fn send(&mut self, cmd: Cmd) -> Result<()>;
+}
+
+/// Worker-side endpoint: blocking command receive + event emit.
+pub(crate) trait WorkerChannel {
+    /// Block until the next command arrives.
+    fn recv(&mut self) -> Result<Cmd>;
+    /// Emit one event toward the parent.
+    fn send(&mut self, ev: Event) -> Result<()>;
+}
+
+// ------------------------------------------------ thread transport
+
+/// In-process link: commands over a private mpsc channel.
+pub(crate) struct ThreadLink {
+    pub tx: Sender<Cmd>,
+}
+
+impl ReplicaLink for ThreadLink {
+    fn send(&mut self, cmd: Cmd) -> Result<()> {
+        self.tx.send(cmd).map_err(|_| anyhow!("worker thread hung up"))
+    }
+}
+
+/// In-process worker endpoint: private command receiver, shared tagged
+/// event sender.
+pub(crate) struct ThreadWorkerChannel {
+    pub worker: usize,
+    pub rx: Receiver<Cmd>,
+    pub tx: Sender<(usize, Event)>,
+}
+
+impl WorkerChannel for ThreadWorkerChannel {
+    fn recv(&mut self) -> Result<Cmd> {
+        self.rx.recv().map_err(|_| anyhow!("parent hung up"))
+    }
+
+    fn send(&mut self, ev: Event) -> Result<()> {
+        self.tx.send((self.worker, ev)).map_err(|_| anyhow!("parent hung up"))
+    }
+}
+
+// ------------------------------------------------ socket framing
+//
+// One frame = one compact JSON header line (`{"op": ..., ...}\n`) +
+// `nbytes` raw payload bytes, little-endian — the serve daemon's
+// newline-delimited-JSON control plane with a binary data plane bolted
+// on. Integer metadata (ids, lengths) is exact in JSON below 2^53;
+// every float payload crosses as raw LE bytes, never as decimal text.
+
+fn dtype_name(d: &Dtype) -> &'static str {
+    match d {
+        Dtype::F32 => "f32",
+        Dtype::I32 => "i32",
+        Dtype::I8 => "i8",
+        Dtype::U32 => "u32",
+    }
+}
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn i32s_to_bytes(v: &[i32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn bytes_to_i32s(b: &[u8]) -> Vec<i32> {
+    b.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn arr_usize(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| num(x as f64)).collect())
+}
+
+fn get_usizes(h: &Json, key: &str) -> Result<Vec<usize>> {
+    h.req(key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{key}: not an array"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("{key}: not a number")))
+        .collect()
+}
+
+fn get_usize(h: &Json, key: &str) -> Result<usize> {
+    h.req(key)?.as_usize().ok_or_else(|| anyhow!("{key}: not a number"))
+}
+
+fn get_i64(h: &Json, key: &str) -> Result<i64> {
+    h.req(key)?.as_i64().ok_or_else(|| anyhow!("{key}: not a number"))
+}
+
+fn write_frame(w: &mut impl Write, header: &Json, payload: &[u8]) -> Result<()> {
+    let mut line = header.to_string();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn read_header(r: &mut impl BufRead) -> Result<Json> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        bail!("worker link closed");
+    }
+    Json::parse(line.trim_end()).map_err(|e| anyhow!("bad frame header: {e}"))
+}
+
+fn read_payload(r: &mut impl Read, nbytes: usize) -> Result<Vec<u8>> {
+    let mut b = vec![0u8; nbytes];
+    r.read_exact(&mut b)?;
+    Ok(b)
+}
+
+/// Encode `(id, f32 data)` pairs: ids+lens in the header object (under
+/// `ids`/`lens`), concatenated data in the returned payload.
+fn encode_pairs_f32(pairs: &[(usize, Vec<f32>)]) -> (Json, Json, Vec<u8>) {
+    let ids: Vec<usize> = pairs.iter().map(|(i, _)| *i).collect();
+    let lens: Vec<usize> = pairs.iter().map(|(_, d)| d.len()).collect();
+    let mut payload = Vec::with_capacity(lens.iter().sum::<usize>() * 4);
+    for (_, d) in pairs {
+        payload.extend(f32s_to_bytes(d));
+    }
+    (arr_usize(&ids), arr_usize(&lens), payload)
+}
+
+fn decode_pairs_f32(h: &Json, payload: &[u8]) -> Result<Vec<(usize, Vec<f32>)>> {
+    let ids = get_usizes(h, "ids")?;
+    let lens = get_usizes(h, "lens")?;
+    if ids.len() != lens.len() {
+        bail!("ids/lens length mismatch");
+    }
+    let mut out = Vec::with_capacity(ids.len());
+    let mut off = 0usize;
+    for (id, len) in ids.into_iter().zip(lens) {
+        let end = off + len * 4;
+        if end > payload.len() {
+            bail!("frame payload truncated");
+        }
+        out.push((id, bytes_to_f32s(&payload[off..end])));
+        off = end;
+    }
+    if off != payload.len() {
+        bail!("frame payload has trailing bytes");
+    }
+    Ok(out)
+}
+
+fn encode_tensors(tensors: &[StateTensor]) -> (Json, Vec<u8>) {
+    let mut metas = Vec::with_capacity(tensors.len());
+    let mut payload = Vec::new();
+    for t in tensors {
+        metas.push(obj(vec![
+            ("name", s(&t.name)),
+            ("shape", arr_usize(&t.shape)),
+            ("dtype", s(dtype_name(&t.dtype))),
+            ("nbytes", num(t.bytes.len() as f64)),
+        ]));
+        payload.extend_from_slice(&t.bytes);
+    }
+    (Json::Arr(metas), payload)
+}
+
+fn decode_tensors(h: &Json, payload: &[u8]) -> Result<Vec<StateTensor>> {
+    let metas = h
+        .req("tensors")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("tensors: not an array"))?;
+    let mut out = Vec::with_capacity(metas.len());
+    let mut off = 0usize;
+    for m in metas {
+        let name = m.req("name")?.as_str().ok_or_else(|| anyhow!("tensor name"))?;
+        let shape = get_usizes(m, "shape")?;
+        let dtype = Dtype::parse(m.req("dtype")?.as_str().ok_or_else(|| anyhow!("dtype"))?)?;
+        let nbytes = get_usize(m, "nbytes")?;
+        let end = off + nbytes;
+        if end > payload.len() {
+            bail!("tensor payload truncated at {name}");
+        }
+        out.push(StateTensor {
+            name: name.to_string(),
+            shape,
+            dtype,
+            bytes: payload[off..end].to_vec(),
+        });
+        off = end;
+    }
+    if off != payload.len() {
+        bail!("tensor payload has trailing bytes");
+    }
+    Ok(out)
+}
+
+fn write_cmd(w: &mut impl Write, cmd: &Cmd) -> Result<()> {
+    match cmd {
+        Cmd::Init { seed } => {
+            write_frame(w, &obj(vec![("op", s("init")), ("seed", num(*seed as f64))]), &[])
+        }
+        Cmd::Step { step, blocks } => {
+            let ids: Vec<usize> = blocks.iter().map(|(i, _)| *i).collect();
+            let lens: Vec<usize> = blocks.iter().map(|(_, t)| t.len()).collect();
+            let mut payload = Vec::with_capacity(lens.iter().sum::<usize>() * 4);
+            for (_, t) in blocks {
+                payload.extend(i32s_to_bytes(t));
+            }
+            let h = obj(vec![
+                ("op", s("step")),
+                ("step", num(*step as f64)),
+                ("ids", arr_usize(&ids)),
+                ("lens", arr_usize(&lens)),
+            ]);
+            write_frame(w, &h, &payload)
+        }
+        Cmd::Apply { step, grads } => {
+            let (ids, lens, payload) = encode_pairs_f32(grads);
+            let h = obj(vec![
+                ("op", s("apply")),
+                ("step", num(*step as f64)),
+                ("ids", ids),
+                ("lens", lens),
+            ]);
+            write_frame(w, &h, &payload)
+        }
+        Cmd::SetParams { params } => {
+            let (ids, lens, payload) = encode_pairs_f32(params);
+            let h = obj(vec![("op", s("set")), ("ids", ids), ("lens", lens)]);
+            write_frame(w, &h, &payload)
+        }
+        Cmd::Eval { bsz, tokens } => {
+            let h = obj(vec![
+                ("op", s("eval")),
+                ("bsz", num(*bsz as f64)),
+                ("n", num(tokens.len() as f64)),
+            ]);
+            write_frame(w, &h, &i32s_to_bytes(tokens))
+        }
+        Cmd::Forward { tokens } => {
+            let h = obj(vec![("op", s("forward")), ("n", num(tokens.len() as f64))]);
+            write_frame(w, &h, &i32s_to_bytes(tokens))
+        }
+        Cmd::Merge { seed } => {
+            write_frame(w, &obj(vec![("op", s("merge")), ("seed", num(*seed as f64))]), &[])
+        }
+        Cmd::DropOptim => write_frame(w, &obj(vec![("op", s("drop_optim"))]), &[]),
+        Cmd::Fold => write_frame(w, &obj(vec![("op", s("fold"))]), &[]),
+        Cmd::GetState => write_frame(w, &obj(vec![("op", s("get_state"))]), &[]),
+        Cmd::LoadState { tensors } => {
+            let (metas, payload) = encode_tensors(tensors);
+            write_frame(w, &obj(vec![("op", s("load_state")), ("tensors", metas)]), &payload)
+        }
+        Cmd::MemReport => write_frame(w, &obj(vec![("op", s("mem_report"))]), &[]),
+        Cmd::Shutdown => write_frame(w, &obj(vec![("op", s("shutdown"))]), &[]),
+    }
+}
+
+fn read_cmd(r: &mut (impl BufRead + Read)) -> Result<Cmd> {
+    let h = read_header(r)?;
+    let op = h.req("op")?.as_str().ok_or_else(|| anyhow!("op: not a string"))?.to_string();
+    Ok(match op.as_str() {
+        "init" => Cmd::Init { seed: get_i64(&h, "seed")? as u32 },
+        "step" => {
+            let ids = get_usizes(&h, "ids")?;
+            let lens = get_usizes(&h, "lens")?;
+            let payload = read_payload(r, lens.iter().sum::<usize>() * 4)?;
+            let mut blocks = Vec::with_capacity(ids.len());
+            let mut off = 0usize;
+            for (id, len) in ids.into_iter().zip(lens) {
+                blocks.push((id, bytes_to_i32s(&payload[off..off + len * 4])));
+                off += len * 4;
+            }
+            Cmd::Step { step: get_i64(&h, "step")? as i32, blocks }
+        }
+        "apply" => {
+            let lens = get_usizes(&h, "lens")?;
+            let payload = read_payload(r, lens.iter().sum::<usize>() * 4)?;
+            Cmd::Apply {
+                step: get_i64(&h, "step")? as i32,
+                grads: decode_pairs_f32(&h, &payload)?,
+            }
+        }
+        "set" => {
+            let lens = get_usizes(&h, "lens")?;
+            let payload = read_payload(r, lens.iter().sum::<usize>() * 4)?;
+            Cmd::SetParams { params: decode_pairs_f32(&h, &payload)? }
+        }
+        "eval" => {
+            let n = get_usize(&h, "n")?;
+            let payload = read_payload(r, n * 4)?;
+            Cmd::Eval { bsz: get_usize(&h, "bsz")?, tokens: bytes_to_i32s(&payload) }
+        }
+        "forward" => {
+            let n = get_usize(&h, "n")?;
+            let payload = read_payload(r, n * 4)?;
+            Cmd::Forward { tokens: bytes_to_i32s(&payload) }
+        }
+        "merge" => Cmd::Merge { seed: get_i64(&h, "seed")? as i32 },
+        "drop_optim" => Cmd::DropOptim,
+        "fold" => Cmd::Fold,
+        "get_state" => Cmd::GetState,
+        "load_state" => {
+            let nbytes: usize = h
+                .req("tensors")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("tensors: not an array"))?
+                .iter()
+                .map(|m| get_usize(m, "nbytes"))
+                .sum::<Result<Vec<usize>>>()?
+                .iter()
+                .sum();
+            let payload = read_payload(r, nbytes)?;
+            Cmd::LoadState { tensors: decode_tensors(&h, &payload)? }
+        }
+        "mem_report" => Cmd::MemReport,
+        "shutdown" => Cmd::Shutdown,
+        other => bail!("unknown command op {other:?}"),
+    })
+}
+
+fn write_event(w: &mut impl Write, ev: &Event) -> Result<()> {
+    match ev {
+        Event::Inited { names, numels, frozen } => {
+            let h = obj(vec![
+                ("op", s("inited")),
+                ("names", Json::Arr(names.iter().map(|n| s(n)).collect())),
+                ("numels", arr_usize(numels)),
+                (
+                    "frozen",
+                    Json::Arr(frozen.iter().map(|&f| Json::Bool(f)).collect()),
+                ),
+            ]);
+            write_frame(w, &h, &[])
+        }
+        Event::Grad { block, param, grad } => {
+            let h = obj(vec![
+                ("op", s("grad")),
+                ("block", num(*block as f64)),
+                ("param", num(*param as f64)),
+                ("n", num(grad.len() as f64)),
+            ]);
+            write_frame(w, &h, &f32s_to_bytes(grad))
+        }
+        Event::StepDone { losses } => {
+            let ids: Vec<usize> = losses.iter().map(|(b, _)| *b).collect();
+            let mut payload = Vec::with_capacity(losses.len() * 8);
+            for (_, l) in losses {
+                payload.extend(l.to_le_bytes());
+            }
+            write_frame(w, &obj(vec![("op", s("step_done")), ("ids", arr_usize(&ids))]), &payload)
+        }
+        Event::Applied { updated } => {
+            let (ids, lens, payload) = encode_pairs_f32(updated);
+            write_frame(w, &obj(vec![("op", s("applied")), ("ids", ids), ("lens", lens)]), &payload)
+        }
+        Event::SetDone => write_frame(w, &obj(vec![("op", s("set_done"))]), &[]),
+        Event::EvalDone { loss } => {
+            write_frame(w, &obj(vec![("op", s("eval_done"))]), &loss.to_le_bytes())
+        }
+        Event::ForwardDone { logits } => {
+            let h = obj(vec![("op", s("forward_done")), ("n", num(logits.len() as f64))]);
+            write_frame(w, &h, &f32s_to_bytes(logits))
+        }
+        Event::Merged => write_frame(w, &obj(vec![("op", s("merged"))]), &[]),
+        Event::Dropped => write_frame(w, &obj(vec![("op", s("dropped"))]), &[]),
+        Event::Folded => write_frame(w, &obj(vec![("op", s("folded"))]), &[]),
+        Event::State { tensors } => {
+            let (metas, payload) = encode_tensors(tensors);
+            write_frame(w, &obj(vec![("op", s("state")), ("tensors", metas)]), &payload)
+        }
+        Event::Loaded => write_frame(w, &obj(vec![("op", s("loaded"))]), &[]),
+        Event::Mem { report } => {
+            let h = obj(vec![
+                ("op", s("mem")),
+                ("param_bytes", num(report.param_bytes as f64)),
+                ("optim_bytes", num(report.optim_bytes as f64)),
+                ("proj_bytes", num(report.proj_bytes as f64)),
+                ("support_bytes", num(report.support_bytes as f64)),
+                ("grad_peak_bytes", num(report.grad_peak_bytes as f64)),
+                ("grad_all_bytes", num(report.grad_all_bytes as f64)),
+                ("optim_bits", num(report.optim_bits as f64)),
+                ("workers", num(report.workers as f64)),
+            ]);
+            write_frame(w, &h, &[])
+        }
+        Event::Err { msg } => write_frame(w, &obj(vec![("op", s("err")), ("msg", s(msg))]), &[]),
+    }
+}
+
+fn read_event(r: &mut (impl BufRead + Read)) -> Result<Event> {
+    let h = read_header(r)?;
+    let op = h.req("op")?.as_str().ok_or_else(|| anyhow!("op: not a string"))?.to_string();
+    Ok(match op.as_str() {
+        "inited" => {
+            let names = h
+                .req("names")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("names: not an array"))?
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| anyhow!("name: not a string"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let frozen = h
+                .req("frozen")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("frozen: not an array"))?
+                .iter()
+                .map(|v| v.as_bool().ok_or_else(|| anyhow!("frozen: not a bool")))
+                .collect::<Result<Vec<_>>>()?;
+            Event::Inited { names, numels: get_usizes(&h, "numels")?, frozen }
+        }
+        "grad" => {
+            let n = get_usize(&h, "n")?;
+            let payload = read_payload(r, n * 4)?;
+            Event::Grad {
+                block: get_usize(&h, "block")?,
+                param: get_usize(&h, "param")?,
+                grad: bytes_to_f32s(&payload),
+            }
+        }
+        "step_done" => {
+            let ids = get_usizes(&h, "ids")?;
+            let payload = read_payload(r, ids.len() * 8)?;
+            let losses = ids
+                .into_iter()
+                .zip(payload.chunks_exact(8))
+                .map(|(b, c)| (b, f64::from_le_bytes(c.try_into().unwrap())))
+                .collect();
+            Event::StepDone { losses }
+        }
+        "applied" => {
+            let lens = get_usizes(&h, "lens")?;
+            let payload = read_payload(r, lens.iter().sum::<usize>() * 4)?;
+            Event::Applied { updated: decode_pairs_f32(&h, &payload)? }
+        }
+        "set_done" => Event::SetDone,
+        "eval_done" => {
+            let payload = read_payload(r, 8)?;
+            Event::EvalDone { loss: f64::from_le_bytes(payload.as_slice().try_into().unwrap()) }
+        }
+        "forward_done" => {
+            let n = get_usize(&h, "n")?;
+            let payload = read_payload(r, n * 4)?;
+            Event::ForwardDone { logits: bytes_to_f32s(&payload) }
+        }
+        "merged" => Event::Merged,
+        "dropped" => Event::Dropped,
+        "folded" => Event::Folded,
+        "state" => {
+            let nbytes: usize = h
+                .req("tensors")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("tensors: not an array"))?
+                .iter()
+                .map(|m| get_usize(m, "nbytes"))
+                .sum::<Result<Vec<usize>>>()?
+                .iter()
+                .sum();
+            let payload = read_payload(r, nbytes)?;
+            Event::State { tensors: decode_tensors(&h, &payload)? }
+        }
+        "loaded" => Event::Loaded,
+        "mem" => Event::Mem {
+            report: MemReport {
+                param_bytes: get_i64(&h, "param_bytes")? as u64,
+                optim_bytes: get_i64(&h, "optim_bytes")? as u64,
+                proj_bytes: get_i64(&h, "proj_bytes")? as u64,
+                support_bytes: get_i64(&h, "support_bytes")? as u64,
+                grad_peak_bytes: get_i64(&h, "grad_peak_bytes")? as u64,
+                grad_all_bytes: get_i64(&h, "grad_all_bytes")? as u64,
+                optim_bits: get_i64(&h, "optim_bits")? as u32,
+                workers: get_i64(&h, "workers")? as u32,
+            },
+        },
+        "err" => Event::Err {
+            msg: h.req("msg")?.as_str().ok_or_else(|| anyhow!("msg: not a string"))?.to_string(),
+        },
+        other => bail!("unknown event op {other:?}"),
+    })
+}
+
+// ------------------------------------------------ socket transport
+
+/// Parent-side socket link: writes command frames to the child.
+pub(crate) struct SocketLink {
+    w: BufWriter<UnixStream>,
+}
+
+impl SocketLink {
+    /// Wrap the parent's half of an accepted worker connection.
+    pub fn new(stream: UnixStream) -> SocketLink {
+        SocketLink { w: BufWriter::new(stream) }
+    }
+}
+
+impl ReplicaLink for SocketLink {
+    fn send(&mut self, cmd: Cmd) -> Result<()> {
+        write_cmd(&mut self.w, &cmd)
+    }
+}
+
+/// Worker-side socket endpoint: reads command frames, writes events.
+pub(crate) struct SocketWorkerChannel {
+    r: BufReader<UnixStream>,
+    w: BufWriter<UnixStream>,
+}
+
+impl SocketWorkerChannel {
+    /// Connect to the parent's listener and identify this worker with a
+    /// hello frame.
+    pub fn connect(path: &std::path::Path, worker: usize) -> Result<SocketWorkerChannel> {
+        let stream = UnixStream::connect(path)?;
+        let r = BufReader::new(stream.try_clone()?);
+        let mut w = BufWriter::new(stream);
+        write_frame(&mut w, &obj(vec![("op", s("hello")), ("worker", num(worker as f64))]), &[])?;
+        Ok(SocketWorkerChannel { r, w })
+    }
+}
+
+impl WorkerChannel for SocketWorkerChannel {
+    fn recv(&mut self) -> Result<Cmd> {
+        read_cmd(&mut self.r)
+    }
+
+    fn send(&mut self, ev: Event) -> Result<()> {
+        write_event(&mut self.w, &ev)
+    }
+}
+
+/// Read the hello frame off a freshly-accepted worker connection and
+/// return the worker index it claims.
+pub(crate) fn read_hello(r: &mut BufReader<UnixStream>) -> Result<usize> {
+    let h = read_header(r)?;
+    if h.req("op")?.as_str() != Some("hello") {
+        bail!("expected hello frame from worker");
+    }
+    get_usize(&h, "worker")
+}
+
+/// Pump events from one worker's socket into the parent's shared
+/// receiver until the socket closes (normal at shutdown).
+pub(crate) fn spawn_socket_reader(
+    mut r: BufReader<UnixStream>,
+    worker: usize,
+    tx: Sender<(usize, Event)>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("shard-rx-{worker}"))
+        .spawn(move || {
+            loop {
+                match read_event(&mut r) {
+                    Ok(ev) => {
+                        if tx.send((worker, ev)).is_err() {
+                            return;
+                        }
+                    }
+                    // closed socket: the worker exited (shutdown or
+                    // crash); the parent notices on its next wait
+                    Err(_) => return,
+                }
+            }
+        })
+        .expect("spawn socket reader")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_cmd(cmd: &Cmd) -> Cmd {
+        let mut buf = Vec::new();
+        write_cmd(&mut buf, cmd).unwrap();
+        read_cmd(&mut std::io::BufReader::new(buf.as_slice())).unwrap()
+    }
+
+    fn roundtrip_event(ev: &Event) -> Event {
+        let mut buf = Vec::new();
+        write_event(&mut buf, ev).unwrap();
+        read_event(&mut std::io::BufReader::new(buf.as_slice())).unwrap()
+    }
+
+    #[test]
+    fn cmd_frames_roundtrip_bit_exactly() {
+        let got = roundtrip_cmd(&Cmd::Step {
+            step: -3,
+            blocks: vec![(0, vec![1, 2, 3]), (2, vec![4, 5, 6])],
+        });
+        match got {
+            Cmd::Step { step, blocks } => {
+                assert_eq!(step, -3);
+                assert_eq!(blocks, vec![(0, vec![1, 2, 3]), (2, vec![4, 5, 6])]);
+            }
+            other => panic!("wrong cmd {other:?}"),
+        }
+        // f32 payloads must survive bit-exactly, including non-finite
+        // and denormal values no decimal text round-trips reliably
+        let tricky = vec![f32::MIN_POSITIVE / 2.0, -0.0, 1.0e-42, 3.5];
+        let got = roundtrip_cmd(&Cmd::Apply { step: 7, grads: vec![(5, tricky.clone())] });
+        match got {
+            Cmd::Apply { step, grads } => {
+                assert_eq!(step, 7);
+                assert_eq!(grads.len(), 1);
+                assert_eq!(grads[0].0, 5);
+                let bits: Vec<u32> = grads[0].1.iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = tricky.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(bits, want);
+            }
+            other => panic!("wrong cmd {other:?}"),
+        }
+    }
+
+    #[test]
+    fn event_frames_roundtrip_bit_exactly() {
+        let loss = 2.302585092994046_f64;
+        match roundtrip_event(&Event::StepDone { losses: vec![(1, loss)] }) {
+            Event::StepDone { losses } => {
+                assert_eq!(losses[0].0, 1);
+                assert_eq!(losses[0].1.to_bits(), loss.to_bits());
+            }
+            other => panic!("wrong event {other:?}"),
+        }
+        match roundtrip_event(&Event::Err { msg: "boom\nwith newline".into() }) {
+            Event::Err { msg } => assert_eq!(msg, "boom\nwith newline"),
+            other => panic!("wrong event {other:?}"),
+        }
+    }
+
+    #[test]
+    fn state_tensor_frames_roundtrip() {
+        let tensors = vec![
+            StateTensor::f32("a.w", vec![2, 2], &[1.0, 2.0, 3.0, 4.0]),
+            StateTensor::i32("s.idx", vec![3], &[0, 5, 9]),
+            StateTensor::i8("optim.m.q8.a.w", vec![4], &[-1, 0, 1, 127]),
+        ];
+        match roundtrip_cmd(&Cmd::LoadState { tensors: tensors.clone() }) {
+            Cmd::LoadState { tensors: got } => {
+                assert_eq!(got.len(), tensors.len());
+                for (g, w) in got.iter().zip(&tensors) {
+                    assert_eq!(g.name, w.name);
+                    assert_eq!(g.shape, w.shape);
+                    assert_eq!(g.bytes, w.bytes);
+                }
+            }
+            other => panic!("wrong cmd {other:?}"),
+        }
+    }
+}

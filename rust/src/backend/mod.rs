@@ -24,7 +24,9 @@
 //! bench binaries is engine-agnostic.
 #![deny(missing_docs)]
 
+pub(crate) mod comm;
 pub mod native;
+pub mod sharded;
 
 #[cfg(feature = "xla")]
 pub mod xla_backend;
@@ -147,6 +149,13 @@ pub trait Backend {
     /// Sequence length of every token batch (the preset's `seq_len`).
     fn seq_len(&self) -> usize {
         self.preset().seq_len
+    }
+
+    /// Data-parallel worker count behind this engine: 1 for a
+    /// single-replica engine, N for `sharded::ShardedBackend` — a
+    /// logging/reporting hook, not a behavioral knob.
+    fn workers(&self) -> usize {
+        1
     }
 
     /// Trainable parameter count (paper Table 2 "Param").
@@ -274,6 +283,13 @@ pub enum BackendSpec {
         /// or SLoPe-style structured N:M (density n/m, vectorizable
         /// kernels). Ignored by methods without a sparse factor.
         support: SupportPattern,
+        /// Data-parallel worker count (`--workers`): 0 = auto (the
+        /// `SLTRAIN_WORKERS` env var, else single-engine). Any value
+        /// ≥ 1 opens the deterministic `sharded::ShardedBackend` —
+        /// including 1, the bitwise reference point of the worker-count
+        /// determinism axis. The effective count is clamped to a power
+        /// of two no larger than the batch's microbatch block count.
+        workers: usize,
     },
 }
 
@@ -294,6 +310,7 @@ impl BackendSpec {
         optim_bits: usize,
         galore_every: usize,
         support: &str,
+        workers: usize,
     ) -> Result<BackendSpec> {
         match backend {
             "xla" => {
@@ -323,6 +340,7 @@ impl BackendSpec {
                     optim_bits,
                     galore_every,
                     support,
+                    workers,
                 })
             }
             other => bail!("unknown backend {other:?} (expected xla | native)"),
@@ -330,9 +348,29 @@ impl BackendSpec {
     }
 }
 
+/// Resolve the `--workers` flag: `0` means "auto" — the
+/// `SLTRAIN_WORKERS` env var if set (so the whole test suite can run
+/// data-parallel without touching every call site), else 0 = the plain
+/// single-engine path.
+pub fn resolve_workers(requested: usize) -> Result<usize> {
+    if requested > 0 {
+        return Ok(requested);
+    }
+    match std::env::var("SLTRAIN_WORKERS") {
+        Ok(raw) => match raw.trim().parse::<usize>() {
+            Ok(n) => Ok(n),
+            Err(_) => bail!("SLTRAIN_WORKERS must be a worker count (got {raw:?})"),
+        },
+        Err(_) => Ok(0),
+    }
+}
+
 /// Open the backend a spec describes. The xla arm fails at runtime (not
 /// compile time) when the crate was built without the `xla` feature, so
-/// every binary stays artifact-free by default.
+/// every binary stays artifact-free by default. A native spec with
+/// `workers >= 1` (flag or `SLTRAIN_WORKERS`) opens the data-parallel
+/// [`sharded::ShardedBackend`]; `workers == 0` keeps the plain
+/// single-engine path, bit-for-bit unchanged.
 pub fn open(spec: BackendSpec) -> Result<Box<dyn Backend>> {
     match spec {
         BackendSpec::Xla { artifact_dir } => open_xla(artifact_dir),
@@ -346,17 +384,32 @@ pub fn open(spec: BackendSpec) -> Result<Box<dyn Backend>> {
             optim_bits,
             galore_every,
             support,
-        } => Ok(Box::new(native::NativeBackend::build(
-            preset,
-            &method,
-            batch,
-            lr,
-            total_steps,
-            threads,
-            optim_bits,
-            galore_every,
-            support,
-        )?)),
+            workers,
+        } => match resolve_workers(workers)? {
+            0 => Ok(Box::new(native::NativeBackend::build(
+                preset,
+                &method,
+                batch,
+                lr,
+                total_steps,
+                threads,
+                optim_bits,
+                galore_every,
+                support,
+            )?)),
+            n => Ok(Box::new(sharded::ShardedBackend::build(
+                preset,
+                &method,
+                batch,
+                lr,
+                total_steps,
+                threads,
+                optim_bits,
+                galore_every,
+                support,
+                n,
+            )?)),
+        },
     }
 }
 

@@ -360,6 +360,28 @@ struct FwdCache {
 /// not yet touched).
 type Grads = Vec<Vec<f32>>;
 
+/// Where a finalized gradient goes during the backward walk.
+///
+/// The walk produces each parameter's gradient exactly once, in a fixed
+/// order; the sink decides what happens at that moment:
+///
+/// * `Collect` — keep it in the returned `Grads` (gradcheck and the
+///   two-phase reference path).
+/// * `Fuse` — run the Adam update immediately and free the buffer (the
+///   streaming fused `train_step`).
+/// * `Stream` — hand the owned buffer to a callback, again immediately.
+///   This is the data-parallel overlap point: `backend::sharded`
+///   all-reduces layer k's gradient on the comm path while layer k-1's
+///   backward still runs on the compute pool.
+pub(crate) enum GradSink<'a> {
+    /// Accumulate every gradient into the returned `Grads`.
+    Collect,
+    /// Apply the Adam update as soon as each gradient finalizes.
+    Fuse(&'a AdamHyper),
+    /// Hand each finalized gradient `(param id, buffer)` to a callback.
+    Stream(&'a mut dyn FnMut(usize, Vec<f32>) -> Result<()>),
+}
+
 /// Move an owned gradient into its slot. Every parameter's gradient is
 /// produced exactly ONCE per backward walk — the streaming fused path
 /// depends on it (a second contribution after `finish_params` already
@@ -686,23 +708,7 @@ impl NativeBackend {
             self.lin_paths.push(path);
         }
 
-        let bits = self.optim_bits;
-        // Moment sizing per parameter: frozen parameters (relora W0)
-        // carry none, galore targets carry them at the projected size —
-        // the optimizer-byte win mem_report() measures.
-        let moment_sizes: Vec<usize> = (0..self.params.len())
-            .map(|idx| {
-                if self.frozen[idx] {
-                    return 0;
-                }
-                match (&self.galore[idx], &self.params[idx]) {
-                    (Some(gp), PTensor::Mat(m)) => gp.proj_numel(m.rows, m.cols),
-                    _ => self.params[idx].numel(),
-                }
-            })
-            .collect();
-        self.optim_m = moment_sizes.iter().map(|&n| Moments::zeros(bits, n)).collect();
-        self.optim_v = moment_sizes.iter().map(|&n| Moments::zeros(bits, n)).collect();
+        self.reset_full_moments();
         self.grad_peak.reset();
         let layers = (0..p.n_layers)
             .map(|l| {
@@ -1128,20 +1134,22 @@ impl NativeBackend {
 
     // ---------------------------------------------------- backward
 
-    /// The backward walk. With `fuse: Some(hyper)` this is the
-    /// *streaming per-layer fused backward+update*: as soon as a
-    /// parameter's gradient is finalized, its Adam update runs (on the
-    /// worker pool) and the buffer is released — peak gradient memory
-    /// is O(largest tensor), and because no parameter is read again
-    /// after its gradient completes, the result is bit-identical to the
-    /// two-phase loop at `--optim-bits 32`. With `fuse: None` the walk
-    /// collects every gradient into the returned `Grads` (gradcheck /
-    /// two-phase reference).
+    /// The backward walk. With `GradSink::Fuse` this is the *streaming
+    /// per-layer fused backward+update*: as soon as a parameter's
+    /// gradient is finalized, its Adam update runs (on the worker pool)
+    /// and the buffer is released — peak gradient memory is O(largest
+    /// tensor), and because no parameter is read again after its
+    /// gradient completes, the result is bit-identical to the two-phase
+    /// loop at `--optim-bits 32`. With `GradSink::Collect` the walk
+    /// keeps every gradient in the returned `Grads` (gradcheck /
+    /// two-phase reference); with `GradSink::Stream` each finalized
+    /// gradient leaves through the callback instead (the sharded
+    /// backend's all-reduce overlap).
     fn backward_impl(
         &mut self,
         cache: &FwdCache,
         dlogits: &Matrix,
-        fuse: Option<&AdamHyper>,
+        sink: &mut GradSink,
     ) -> Result<Grads> {
         let h = self.handles()?.clone();
         let (d, nh, hd) = (self.preset.d_model, self.preset.n_heads, self.head_dim());
@@ -1155,7 +1163,7 @@ impl NativeBackend {
         let dhead = cache.xnf.transpose().matmul_par(dlogits, &self.pool);
         acc_grad_vec(&mut grads, h.head, dhead.data);
         let dxnf = dlogits.matmul_transb_par(self.mat(h.head), &self.pool);
-        self.finish_params(&mut grads, &[h.head], fuse)?;
+        self.finish_params(&mut grads, &[h.head], sink)?;
         let mut dx;
         {
             let gf = self.vec1(h.lnf_g);
@@ -1163,7 +1171,7 @@ impl NativeBackend {
             dx = rmsnorm_bwd(&dxnf, &cache.xhatf, &cache.rf, gf, &mut dgf, &self.pool);
             acc_grad_vec(&mut grads, h.lnf_g, dgf);
         }
-        self.finish_params(&mut grads, &[h.lnf_g], fuse)?;
+        self.finish_params(&mut grads, &[h.lnf_g], sink)?;
         drop(dxnf);
 
         for (l, blk) in cache.blocks.iter().enumerate().rev() {
@@ -1179,7 +1187,7 @@ impl NativeBackend {
                 &mut grads,
             );
             drop(h_t);
-            self.finish_lin(&mut grads, lh.down, fuse)?;
+            self.finish_lin(&mut grads, lh.down, sink)?;
             let mut dg_pre = Matrix::zeros(dh.rows, dh.cols);
             let mut du = Matrix::zeros(dh.rows, dh.cols);
             for i in 0..dh.data.len() {
@@ -1198,7 +1206,7 @@ impl NativeBackend {
                 &dg_pre,
                 &mut grads,
             );
-            self.finish_lin(&mut grads, lh.gate, fuse)?;
+            self.finish_lin(&mut grads, lh.gate, sink)?;
             drop(dg_pre);
             add_into(
                 &mut dxn2,
@@ -1211,7 +1219,7 @@ impl NativeBackend {
                     &mut grads,
                 ),
             );
-            self.finish_lin(&mut grads, lh.up, fuse)?;
+            self.finish_lin(&mut grads, lh.up, sink)?;
             drop(du);
             drop(xn2_t);
             let dnorm2;
@@ -1221,7 +1229,7 @@ impl NativeBackend {
                 dnorm2 = rmsnorm_bwd(&dxn2, &blk.xhat2, &blk.r2, g2, &mut dg2, &self.pool);
                 acc_grad_vec(&mut grads, lh.ln2_g, dg2);
             }
-            self.finish_params(&mut grads, &[lh.ln2_g], fuse)?;
+            self.finish_params(&mut grads, &[lh.ln2_g], sink)?;
             let dx_mid = dx.add(&dnorm2);
 
             // ---- attention branch: x_mid = x_in + o(attn)
@@ -1235,7 +1243,7 @@ impl NativeBackend {
                 &mut grads,
             );
             drop(cat_t);
-            self.finish_lin(&mut grads, lh.o, fuse)?;
+            self.finish_lin(&mut grads, lh.o, sink)?;
             // per-(batch, head) softmax/rope backward, one task each
             let head_grads = self.pool.map(bsz * nh, |ai| {
                 let (bi, hi) = (ai / nh, ai % nh);
@@ -1280,7 +1288,7 @@ impl NativeBackend {
                 &dq,
                 &mut grads,
             );
-            self.finish_lin(&mut grads, lh.q, fuse)?;
+            self.finish_lin(&mut grads, lh.q, sink)?;
             add_into(
                 &mut dxn1,
                 &self.linear_bwd(
@@ -1292,7 +1300,7 @@ impl NativeBackend {
                     &mut grads,
                 ),
             );
-            self.finish_lin(&mut grads, lh.k, fuse)?;
+            self.finish_lin(&mut grads, lh.k, sink)?;
             add_into(
                 &mut dxn1,
                 &self.linear_bwd(
@@ -1304,7 +1312,7 @@ impl NativeBackend {
                     &mut grads,
                 ),
             );
-            self.finish_lin(&mut grads, lh.v, fuse)?;
+            self.finish_lin(&mut grads, lh.v, sink)?;
             let dnorm1;
             {
                 let g1 = self.vec1(lh.ln1_g);
@@ -1312,7 +1320,7 @@ impl NativeBackend {
                 dnorm1 = rmsnorm_bwd(&dxn1, &blk.xhat1, &blk.r1, g1, &mut dg1, &self.pool);
                 acc_grad_vec(&mut grads, lh.ln1_g, dg1);
             }
-            self.finish_params(&mut grads, &[lh.ln1_g], fuse)?;
+            self.finish_params(&mut grads, &[lh.ln1_g], sink)?;
             dx = dx_mid.add(&dnorm1);
         }
 
@@ -1348,47 +1356,56 @@ impl NativeBackend {
                 }
             });
         }
-        self.finish_params(&mut grads, &[h.embed], fuse)?;
+        self.finish_params(&mut grads, &[h.embed], sink)?;
         Ok(grads)
     }
 
-    /// Record the live-gradient high-water, then (fused mode) apply the
-    /// Adam update for each finalized parameter and free its buffer.
+    /// Record the live-gradient high-water, then route each finalized
+    /// parameter's gradient through the sink (Adam update, stream-out,
+    /// or keep for collection).
     fn finish_params(
         &mut self,
         grads: &mut Grads,
         ids: &[ParamId],
-        fuse: Option<&AdamHyper>,
+        sink: &mut GradSink,
     ) -> Result<()> {
         let live: u64 = grads.iter().map(|g| (g.len() * 4) as u64).sum();
         self.grad_peak.note(live);
-        if let Some(hy) = fuse {
-            for &id in ids {
-                let g = std::mem::take(&mut grads[id.0]);
-                if g.is_empty() {
-                    bail!("{}: fused update before gradient", self.param_names[id.0]);
+        match sink {
+            GradSink::Collect => {}
+            GradSink::Fuse(hy) => {
+                let hy = **hy;
+                for &id in ids {
+                    let g = std::mem::take(&mut grads[id.0]);
+                    if g.is_empty() {
+                        bail!("{}: fused update before gradient", self.param_names[id.0]);
+                    }
+                    self.apply_param_update(id.0, g, &hy)?;
                 }
-                self.apply_param_update(id.0, g, hy)?;
+            }
+            GradSink::Stream(f) => {
+                for &id in ids {
+                    let g = std::mem::take(&mut grads[id.0]);
+                    if g.is_empty() {
+                        bail!("{}: streamed before gradient", self.param_names[id.0]);
+                    }
+                    f(id.0, g)?;
+                }
             }
         }
         Ok(())
     }
 
     /// `finish_params` over every parameter of one linear.
-    fn finish_lin(
-        &mut self,
-        grads: &mut Grads,
-        lin: LinId,
-        fuse: Option<&AdamHyper>,
-    ) -> Result<()> {
+    fn finish_lin(&mut self, grads: &mut Grads, lin: LinId, sink: &mut GradSink) -> Result<()> {
         match self.lins[lin.0] {
-            LinKind::Full { w } => self.finish_params(grads, &[w], fuse),
-            LinKind::Factored { b, a, sparse: None } => self.finish_params(grads, &[b, a], fuse),
+            LinKind::Full { w } => self.finish_params(grads, &[w], sink),
+            LinKind::Factored { b, a, sparse: None } => self.finish_params(grads, &[b, a], sink),
             LinKind::Factored { b, a, sparse: Some(sh) } => {
-                self.finish_params(grads, &[b, a, sh.vals], fuse)
+                self.finish_params(grads, &[b, a, sh.vals], sink)
             }
             // w0 is frozen: only the adaptors finalize
-            LinKind::Relora { w0: _, b, a } => self.finish_params(grads, &[b, a], fuse),
+            LinKind::Relora { w0: _, b, a } => self.finish_params(grads, &[b, a], sink),
         }
     }
 
@@ -1397,18 +1414,18 @@ impl NativeBackend {
     /// One full forward + backward over a train batch: the shared body
     /// of the fused `train_step` and the collect-mode paths, so the
     /// tokenization/forward contract cannot drift between them.
-    fn step_impl(&mut self, tokens: &[i32], fuse: Option<&AdamHyper>) -> Result<(f64, Grads)> {
+    fn step_impl(&mut self, tokens: &[i32], sink: &mut GradSink) -> Result<(f64, Grads)> {
         let (inputs, targets, t_in) = split_next_token(tokens, self.batch, self.preset.seq_len)?;
         let (logits, cache) = self.forward_cached(&inputs, self.batch, t_in)?;
         let (loss, dlogits) = ce_loss_grad(&logits, &targets, &self.pool)?;
-        let grads = self.backward_impl(&cache, &dlogits, fuse)?;
+        let grads = self.backward_impl(&cache, &dlogits, sink)?;
         Ok((loss, grads))
     }
 
     /// Train-loss forward + backward (no update). The split from
     /// `adam_apply` keeps gradients observable for verification.
     fn loss_and_grads(&mut self, tokens: &[i32]) -> Result<(f64, Grads)> {
-        self.step_impl(tokens, None)
+        self.step_impl(tokens, &mut GradSink::Collect)
     }
 
     fn loss_only(&self, tokens: &[i32], bsz: usize) -> Result<f64> {
@@ -1602,6 +1619,136 @@ impl NativeBackend {
         self.adam_apply(step, grads)?;
         Ok(loss as f32)
     }
+
+    // ---------------------------------------------- data-parallel seams
+    //
+    // The pub(crate) surface `backend::sharded` drives: each replica
+    // runs the streaming backward with gradients exported instead of
+    // applied, applies externally-reduced gradients for the parameters
+    // it owns, and re-shapes its Adam moments around owner sharding.
+
+    /// Moment sizing per parameter: frozen parameters (relora W0) carry
+    /// none, galore targets carry them at the projected size — the
+    /// optimizer-byte win `mem_report()` measures.
+    fn moment_sizes(&self) -> Vec<usize> {
+        (0..self.params.len())
+            .map(|idx| {
+                if self.frozen[idx] {
+                    return 0;
+                }
+                match (&self.galore[idx], &self.params[idx]) {
+                    (Some(gp), PTensor::Mat(m)) => gp.proj_numel(m.rows, m.cols),
+                    _ => self.params[idx].numel(),
+                }
+            })
+            .collect()
+    }
+
+    /// Forward + streaming backward on one microbatch block, NO
+    /// optimizer update: every finalized gradient is handed to
+    /// `sink(param id, grad)` in the fixed backward-walk order. Returns
+    /// the block's mean next-token loss (serial f64).
+    pub(crate) fn shard_loss_grads_stream(
+        &mut self,
+        tokens: &[i32],
+        sink: &mut dyn FnMut(usize, Vec<f32>) -> Result<()>,
+    ) -> Result<f64> {
+        self.handles()?;
+        self.not_folded()?;
+        let (loss, _grads) = self.step_impl(tokens, &mut GradSink::Stream(sink))?;
+        Ok(loss)
+    }
+
+    /// Held-out loss at an explicit row count (the sharded backend's
+    /// worker-0 full-batch eval path; `loss_only` is bsz-parametric).
+    pub(crate) fn shard_eval_loss(&self, tokens: &[i32], bsz: usize) -> Result<f64> {
+        self.handles()?;
+        self.loss_only(tokens, bsz)
+    }
+
+    /// Apply externally-reduced gradients (the owner's share of the
+    /// step): one `apply_param_update` per `(param id, grad)` entry
+    /// with the step's shared Adam constants — the exact update the
+    /// single-engine fused path would have run for those parameters.
+    pub(crate) fn apply_reduced_grads(
+        &mut self,
+        step: i32,
+        grads: Vec<(usize, Vec<f32>)>,
+    ) -> Result<()> {
+        self.not_folded()?;
+        self.optim_ready()?;
+        let hy = self.adam_hyper(step);
+        for (idx, g) in grads {
+            self.apply_param_update(idx, g, &hy)?;
+        }
+        Ok(())
+    }
+
+    /// Drop the Adam moments of every trainable parameter NOT owned by
+    /// this worker (`owner(p) = p mod workers`): owner-sharded replicas
+    /// hold full moments only for their own parameters, the rest become
+    /// zero-length — the same convention frozen parameters already use,
+    /// so `optim_ready` still passes and `mem_report` sees the ~1/N
+    /// optimizer bytes.
+    /// No-op when the optimizer state was dropped (Table-5 inference).
+    pub(crate) fn shard_moments(&mut self, worker: usize, workers: usize) {
+        if self.optim_m.len() != self.params.len() {
+            return;
+        }
+        let bits = self.optim_bits;
+        for idx in 0..self.params.len() {
+            if self.frozen[idx] || idx % workers == worker {
+                continue;
+            }
+            self.optim_m[idx] = Moments::zeros(bits, 0);
+            self.optim_v[idx] = Moments::zeros(bits, 0);
+        }
+    }
+
+    /// Re-inflate every moment to its full (zeroed) size. The sharded
+    /// checkpoint-load path calls this before `load_state_tensors` so a
+    /// full flat-namespace checkpoint validates against full-size
+    /// moments; the non-owned ones are re-dropped afterwards.
+    pub(crate) fn reset_full_moments(&mut self) {
+        let bits = self.optim_bits;
+        let sizes = self.moment_sizes();
+        self.optim_m = sizes.iter().map(|&n| Moments::zeros(bits, n)).collect();
+        self.optim_v = sizes.iter().map(|&n| Moments::zeros(bits, n)).collect();
+    }
+
+    /// Parameter count of the interned store (0 before `init_state`).
+    pub(crate) fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Interchange name of parameter `idx`.
+    pub(crate) fn param_name(&self, idx: usize) -> &str {
+        &self.param_names[idx]
+    }
+
+    /// Flat f32 data of parameter `idx`.
+    pub(crate) fn param_data(&self, idx: usize) -> &[f32] {
+        self.params[idx].data()
+    }
+
+    /// True when parameter `idx` takes no updates (relora's W0).
+    pub(crate) fn param_frozen(&self, idx: usize) -> bool {
+        self.frozen[idx]
+    }
+
+    /// Overwrite parameter `idx` (the owner's post-update broadcast).
+    pub(crate) fn set_param_data(&mut self, idx: usize, data: &[f32]) -> Result<()> {
+        if self.params[idx].numel() != data.len() {
+            bail!(
+                "{}: set numel {} != param {}",
+                self.param_names[idx],
+                data.len(),
+                self.params[idx].numel()
+            );
+        }
+        self.params[idx].data_mut().copy_from_slice(data);
+        Ok(())
+    }
 }
 
 // ----------------------------------------------------- trait impl
@@ -1656,7 +1803,7 @@ impl Backend for NativeBackend {
         self.optim_ready()?;
         crate::util::failpoint::hit("native.train_step")?;
         let hy = self.adam_hyper(step);
-        let (loss, _grads) = self.step_impl(tokens, Some(&hy))?;
+        let (loss, _grads) = self.step_impl(tokens, &mut GradSink::Fuse(&hy))?;
         Ok(loss as f32)
     }
 
@@ -1887,6 +2034,7 @@ impl Backend for NativeBackend {
             grad_peak_bytes: self.grad_peak.peak_bytes(),
             grad_all_bytes,
             optim_bits: self.optim_bits.bits() as u32,
+            workers: 1,
         })
     }
 

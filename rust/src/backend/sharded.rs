@@ -1,0 +1,987 @@
+//! Deterministic data-parallel training: N native replicas behind one
+//! `Backend`.
+//!
+//! [`ShardedBackend`] wraps N [`super::native::NativeBackend`] replicas
+//! (worker threads by default; child processes over Unix sockets with
+//! `SLTRAIN_WORKER_TRANSPORT=process`, behind the same
+//! [`super::comm`] traits) and extends the repo's determinism contract
+//! to a fourth axis: **bit-identical losses and state at 1, 2 and 4
+//! workers**, on top of run-to-run, thread-count and SIMD-vs-scalar
+//! invariance. The mechanisms:
+//!
+//! * **Fixed microbatch blocks.** Every train batch splits into `B`
+//!   contiguous row blocks where `B` is the largest power of two ≤ 4
+//!   dividing the batch — a function of the batch alone, never of the
+//!   worker count. Each block is one independent microbatch on some
+//!   replica; worker `w` of `N` owns the contiguous range
+//!   `w·B/N .. (w+1)·B/N` (N is clamped to a power of two ≤ B).
+//! * **Fixed-tree all-reduce.** Per parameter, the B block gradients
+//!   land in block-indexed slots; once full they are combined by a
+//!   stride-doubling pairwise tree (`slot[i] += slot[i+s]`, serial f32
+//!   in ascending element order, on the parent thread) and scaled by
+//!   `1/B`. The tree's shape depends only on B, so the reduced gradient
+//!   — and everything downstream — is independent of N and of event
+//!   arrival order. The batch loss is the serial f64 sum of per-block
+//!   losses in block order, divided by B.
+//! * **Overlapped comm.** Replicas run the streaming fused backward
+//!   (`GradSink::Stream`): each finalized gradient is shipped the
+//!   moment the backward walk produces it, so the parent reduces layer
+//!   k's gradient while layer k-1's backward still runs on the
+//!   replicas' compute pools.
+//! * **Owner-sharded optimizer.** Parameter `p` is owned by worker
+//!   `p mod N`; only the owner holds its Adam moments (the rest hold
+//!   the zero-length moments frozen parameters already use) and applies
+//!   the update, then the updated weights are broadcast. Per-worker
+//!   optimizer bytes drop ~1/N — `mem_report()` shows the sharded view.
+//!
+//! A 1-worker sharded run is the bitwise reference point for the axis.
+//! It is *not* bit-identical to the plain single-engine path (B
+//! microbatch means + a `1/B` combine re-associate the loss/gradient
+//! sums differently than one full-batch mean) — the plain path keeps
+//! its own unchanged contract, and `--workers 0` (the default) keeps
+//! using it.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::io::{BufReader, ErrorKind};
+use std::os::unix::net::UnixListener;
+use std::path::PathBuf;
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::comm::{
+    read_hello, spawn_socket_reader, Cmd, Event, ReplicaLink, SocketLink, SocketWorkerChannel,
+    ThreadLink, ThreadWorkerChannel, WorkerChannel,
+};
+use super::native::NativeBackend;
+use super::{Backend, StateTensor};
+use crate::config::ModelPreset;
+use crate::linalg::parallel::resolve_worker_threads;
+use crate::linalg::SupportPattern;
+use crate::mem::MemReport;
+
+/// How long the parent waits for any single worker event before
+/// declaring the fleet wedged. Generous: events flow *during* each
+/// replica's backward, so real gaps are sub-second even on big presets.
+const EVENT_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// How long `process` transport waits for all children to dial back.
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Distinguishes concurrent sharded backends in one process when
+/// naming the process-transport socket directory.
+static SOCKET_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Largest power of two ≤ 4 dividing `batch` (the block count B), and
+/// the effective worker count: largest power of two ≤ min(requested,
+/// B). Both are pure functions of their inputs — B never depends on
+/// the worker count, which is what makes the reduction N-invariant.
+fn plan(batch: usize, requested: usize) -> (usize, usize) {
+    let mut blocks = 1usize;
+    while blocks < 4 && batch % (blocks * 2) == 0 {
+        blocks *= 2;
+    }
+    let mut workers = 1usize;
+    while workers * 2 <= requested.min(blocks) {
+        workers *= 2;
+    }
+    (blocks, workers)
+}
+
+/// Stride-doubling pairwise tree over the B block gradients of one
+/// parameter, then the `1/B` mean scale. Serial f32 on the calling
+/// thread, ascending element order inside every combine — the fixed
+/// reduction order of the determinism contract. The tree shape is a
+/// function of B alone.
+fn tree_reduce(mut bufs: Vec<Option<Vec<f32>>>) -> Result<Vec<f32>> {
+    let b = bufs.len();
+    let mut s = 1usize;
+    while s < b {
+        let mut i = 0usize;
+        while i + s < b {
+            let rhs = bufs[i + s].take().ok_or_else(|| anyhow!("reduce slot {} empty", i + s))?;
+            let lhs = bufs[i].as_mut().ok_or_else(|| anyhow!("reduce slot {i} empty"))?;
+            if lhs.len() != rhs.len() {
+                bail!("reduce slot length mismatch");
+            }
+            for (x, y) in lhs.iter_mut().zip(&rhs) {
+                *x += y;
+            }
+            i += 2 * s;
+        }
+        s *= 2;
+    }
+    let mut out = bufs[0].take().ok_or_else(|| anyhow!("reduce slot 0 empty"))?;
+    let inv = 1.0f32 / b as f32;
+    for x in &mut out {
+        *x *= inv;
+    }
+    Ok(out)
+}
+
+/// The parameter a flat-namespace `optim.*` tensor name belongs to
+/// (`optim.m.q8.embed.w` → `embed.w`), or `None` for non-optim names.
+fn optim_param_name(name: &str) -> Option<&str> {
+    let rest = name.strip_prefix("optim.")?;
+    if let Some(p) = rest.strip_prefix("proj.") {
+        return Some(p);
+    }
+    let rest = rest.strip_prefix("m.").or_else(|| rest.strip_prefix("v."))?;
+    Some(
+        rest.strip_prefix("q8.")
+            .or_else(|| rest.strip_prefix("scale."))
+            .unwrap_or(rest),
+    )
+}
+
+// --------------------------------------------------- worker side
+
+/// Serve one replica: receive commands, run them, emit events. Shared
+/// verbatim by both transports (a worker thread and a `shard-worker`
+/// child process run exactly this loop). Handler errors are reported as
+/// `Event::Err` and the loop continues; `Shutdown` or a dead parent
+/// link ends it.
+pub(crate) fn worker_loop(
+    mut be: NativeBackend,
+    mut ch: impl WorkerChannel,
+    worker: usize,
+    workers: usize,
+) {
+    loop {
+        let cmd = match ch.recv() {
+            Ok(Cmd::Shutdown) | Err(_) => return,
+            Ok(c) => c,
+        };
+        if let Err(e) = handle_cmd(&mut be, &mut ch, worker, workers, cmd) {
+            if ch.send(Event::Err { msg: format!("{e:#}") }).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+fn handle_cmd(
+    be: &mut NativeBackend,
+    ch: &mut impl WorkerChannel,
+    worker: usize,
+    workers: usize,
+    cmd: Cmd,
+) -> Result<()> {
+    match cmd {
+        Cmd::Init { seed } => {
+            be.init_state(seed)?;
+            be.shard_moments(worker, workers);
+            let n = be.param_count();
+            ch.send(Event::Inited {
+                names: (0..n).map(|i| be.param_name(i).to_string()).collect(),
+                numels: (0..n).map(|i| be.param_data(i).len()).collect(),
+                frozen: (0..n).map(|i| be.param_frozen(i)).collect(),
+            })?;
+        }
+        Cmd::Step { step: _, blocks } => {
+            // each block is one microbatch: stream its gradients out in
+            // the fixed backward-walk order, the overlap traffic the
+            // parent reduces while later blocks/layers still compute
+            let mut losses = Vec::with_capacity(blocks.len());
+            for (block, tokens) in blocks {
+                let loss = be.shard_loss_grads_stream(&tokens, &mut |param, grad| {
+                    ch.send(Event::Grad { block, param, grad })
+                })?;
+                losses.push((block, loss));
+            }
+            ch.send(Event::StepDone { losses })?;
+        }
+        Cmd::Apply { step, grads } => {
+            let ids: Vec<usize> = grads.iter().map(|(i, _)| *i).collect();
+            be.apply_reduced_grads(step, grads)?;
+            let updated = ids.into_iter().map(|i| (i, be.param_data(i).to_vec())).collect();
+            ch.send(Event::Applied { updated })?;
+        }
+        Cmd::SetParams { params } => {
+            for (i, d) in &params {
+                be.set_param_data(*i, d)?;
+            }
+            ch.send(Event::SetDone)?;
+        }
+        Cmd::Eval { bsz, tokens } => {
+            ch.send(Event::EvalDone { loss: be.shard_eval_loss(&tokens, bsz)? })?;
+        }
+        Cmd::Forward { tokens } => {
+            ch.send(Event::ForwardDone { logits: be.forward(&tokens)? })?;
+        }
+        Cmd::Merge { seed } => {
+            // the merge re-inflates the restarted adaptors' moments on
+            // every replica; re-drop the non-owned ones
+            be.merge(seed)?;
+            be.shard_moments(worker, workers);
+            ch.send(Event::Merged)?;
+        }
+        Cmd::DropOptim => {
+            be.drop_optimizer_state()?;
+            ch.send(Event::Dropped)?;
+        }
+        Cmd::Fold => {
+            be.fold_weights()?;
+            ch.send(Event::Folded)?;
+        }
+        Cmd::GetState => {
+            ch.send(Event::State { tensors: be.state_tensors()? })?;
+        }
+        Cmd::LoadState { tensors } => {
+            // a full flat-namespace checkpoint carries full-size moments;
+            // validate against full-size staging, then re-drop the
+            // non-owned ones — this is what lets a 4-worker checkpoint
+            // resume bit-identically on 1 worker and vice versa
+            let has_moments = tensors
+                .iter()
+                .any(|t| t.name.starts_with("optim.m.") || t.name.starts_with("optim.v."));
+            if has_moments {
+                be.reset_full_moments();
+            }
+            be.load_state_tensors(&tensors)?;
+            be.shard_moments(worker, workers);
+            ch.send(Event::Loaded)?;
+        }
+        Cmd::MemReport => {
+            let report =
+                be.mem_report().ok_or_else(|| anyhow!("native replica has no mem report"))?;
+            ch.send(Event::Mem { report })?;
+        }
+        Cmd::Shutdown => unreachable!("handled by worker_loop"),
+    }
+    Ok(())
+}
+
+/// Entry point of the hidden `shard-worker` CLI subcommand (the
+/// `process` transport's child side): rebuild the replica exactly as
+/// the parent would have in-process, dial the parent's socket, and
+/// serve [`worker_loop`] until `Shutdown`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_worker_process(
+    socket: &std::path::Path,
+    worker: usize,
+    workers: usize,
+    preset: ModelPreset,
+    method: &str,
+    rows_per_block: usize,
+    lr: f32,
+    total_steps: usize,
+    threads: usize,
+    optim_bits: usize,
+    galore_every: usize,
+    support: SupportPattern,
+) -> Result<()> {
+    let be = NativeBackend::build(
+        preset,
+        method,
+        rows_per_block,
+        lr,
+        total_steps,
+        threads,
+        optim_bits,
+        galore_every,
+        support,
+    )?;
+    let ch = SocketWorkerChannel::connect(socket, worker)?;
+    worker_loop(be, ch, worker, workers);
+    Ok(())
+}
+
+// --------------------------------------------------- parent side
+
+/// Data-parallel `Backend`: N native replicas, deterministic fixed-tree
+/// all-reduce, owner-sharded Adam. See the module docs for the design.
+pub struct ShardedBackend {
+    preset: ModelPreset,
+    method: String,
+    optimizer: &'static str,
+    /// Full train-batch rows (what the coordinator sees).
+    batch: usize,
+    n_workers: usize,
+    n_blocks: usize,
+    rows_per_block: usize,
+    /// Pool threads per replica (the global budget split N ways).
+    threads_per_worker: usize,
+    /// Command links, worker-indexed. RefCell: the `Backend` trait
+    /// exposes read-only entrypoints (`state_tensors`, `mem_report`)
+    /// that still need to talk to the replicas.
+    links: RefCell<Vec<Box<dyn ReplicaLink>>>,
+    /// All workers' events, tagged with the worker index.
+    events: Receiver<(usize, Event)>,
+    /// Parameter metadata from `init_state` (worker 0's, verified equal
+    /// across replicas). Empty before init.
+    names: Vec<String>,
+    numels: Vec<usize>,
+    frozen: Vec<bool>,
+    worker_threads: Vec<JoinHandle<()>>,
+    reader_threads: Vec<JoinHandle<()>>,
+    children: Vec<Child>,
+    sock_dir: Option<PathBuf>,
+}
+
+impl ShardedBackend {
+    /// Construct an (uninitialized) N-worker engine. `workers` is the
+    /// requested count; the effective count is clamped to a power of
+    /// two ≤ the batch's block count (see module docs) with an info log
+    /// when that changes it. `SLTRAIN_WORKER_TRANSPORT` picks `thread`
+    /// (default) or `process` replicas.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        preset: ModelPreset,
+        method: &str,
+        batch: usize,
+        lr: f32,
+        total_steps: usize,
+        threads: usize,
+        optim_bits: usize,
+        galore_every: usize,
+        support: SupportPattern,
+        workers: usize,
+    ) -> Result<ShardedBackend> {
+        let batch = batch.max(1);
+        let (n_blocks, n_workers) = plan(batch, workers.max(1));
+        if n_workers != workers.max(1) {
+            crate::info!(
+                "workers clamped {} -> {n_workers} (batch {batch} splits into \
+                 {n_blocks} blocks; workers must be a power of two dividing that)",
+                workers.max(1)
+            );
+        }
+        let rows_per_block = batch / n_blocks;
+        let threads_per_worker = resolve_worker_threads(threads, n_workers);
+        let optimizer = match (method, crate::optim::resolve_optim_bits(optim_bits)?) {
+            ("galore", _) => "galore",
+            (_, crate::optim::OptimBits::F32) => "adam",
+            (_, crate::optim::OptimBits::Q8) => "adam8bit",
+        };
+
+        let transport = std::env::var("SLTRAIN_WORKER_TRANSPORT")
+            .unwrap_or_else(|_| "thread".to_string());
+        let (tx, events) = channel::<(usize, Event)>();
+        let mut be = ShardedBackend {
+            preset: preset.clone(),
+            method: method.to_string(),
+            optimizer,
+            batch,
+            n_workers,
+            n_blocks,
+            rows_per_block,
+            threads_per_worker,
+            links: RefCell::new(Vec::new()),
+            events,
+            names: Vec::new(),
+            numels: Vec::new(),
+            frozen: Vec::new(),
+            worker_threads: Vec::new(),
+            reader_threads: Vec::new(),
+            children: Vec::new(),
+            sock_dir: None,
+        };
+        match transport.trim() {
+            "" | "thread" => be.spawn_thread_workers(
+                tx, lr, total_steps, optim_bits, galore_every, support,
+            )?,
+            "process" => be.spawn_process_workers(
+                tx, lr, total_steps, optim_bits, galore_every, support,
+            )?,
+            other => bail!("SLTRAIN_WORKER_TRANSPORT must be thread | process (got {other:?})"),
+        }
+        Ok(be)
+    }
+
+    fn build_replica(
+        &self,
+        lr: f32,
+        total_steps: usize,
+        optim_bits: usize,
+        galore_every: usize,
+        support: SupportPattern,
+    ) -> Result<NativeBackend> {
+        NativeBackend::build(
+            self.preset.clone(),
+            &self.method,
+            self.rows_per_block,
+            lr,
+            total_steps,
+            self.threads_per_worker,
+            optim_bits,
+            galore_every,
+            support,
+        )
+    }
+
+    fn spawn_thread_workers(
+        &mut self,
+        tx: Sender<(usize, Event)>,
+        lr: f32,
+        total_steps: usize,
+        optim_bits: usize,
+        galore_every: usize,
+        support: SupportPattern,
+    ) -> Result<()> {
+        let mut links = self.links.borrow_mut();
+        for w in 0..self.n_workers {
+            let replica =
+                self.build_replica(lr, total_steps, optim_bits, galore_every, support.clone())?;
+            let (ctx, crx) = channel::<Cmd>();
+            let ch = ThreadWorkerChannel { worker: w, rx: crx, tx: tx.clone() };
+            let workers = self.n_workers;
+            self.worker_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("shard-worker-{w}"))
+                    .spawn(move || worker_loop(replica, ch, w, workers))
+                    .map_err(|e| anyhow!("spawn worker thread: {e}"))?,
+            );
+            links.push(Box::new(ThreadLink { tx: ctx }));
+        }
+        Ok(())
+    }
+
+    fn spawn_process_workers(
+        &mut self,
+        tx: Sender<(usize, Event)>,
+        lr: f32,
+        total_steps: usize,
+        optim_bits: usize,
+        galore_every: usize,
+        support: SupportPattern,
+    ) -> Result<()> {
+        let dir = std::env::temp_dir().join(format!(
+            "sltrain-shard-{}-{}",
+            std::process::id(),
+            SOCKET_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)?;
+        self.sock_dir = Some(dir.clone());
+        let sock = dir.join("workers.sock");
+        let listener = UnixListener::bind(&sock)?;
+        listener.set_nonblocking(true)?;
+
+        let exe = std::env::current_exe()?;
+        for w in 0..self.n_workers {
+            // lr crosses as Rust's shortest round-trip f32 text, so the
+            // child reparses the identical bits
+            let child = Command::new(&exe)
+                .arg("shard-worker")
+                .args(["--socket", &sock.to_string_lossy()])
+                .args(["--worker", &w.to_string()])
+                .args(["--workers", &self.n_workers.to_string()])
+                .args(["--config", &self.preset.name])
+                .args(["--method", &self.method])
+                .args(["--batch", &self.rows_per_block.to_string()])
+                .args(["--lr", &lr.to_string()])
+                .args(["--total-steps", &total_steps.to_string()])
+                .args(["--threads", &self.threads_per_worker.to_string()])
+                .args(["--optim-bits", &optim_bits.to_string()])
+                .args(["--galore-every", &galore_every.to_string()])
+                .args(["--support", &support.label()])
+                .spawn()
+                .map_err(|e| anyhow!("spawn shard-worker {w}: {e}"))?;
+            self.children.push(child);
+        }
+        if let Err(e) = self.accept_workers(&listener, tx) {
+            for c in &mut self.children {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Accept one connection per child, match them to worker indices by
+    /// the hello frame, and start an event-reader thread per socket.
+    /// Polls with a deadline and watches for children that died before
+    /// dialing in (bad flags, missing preset, …).
+    fn accept_workers(&mut self, listener: &UnixListener, tx: Sender<(usize, Event)>) -> Result<()> {
+        let mut links: Vec<Option<Box<dyn ReplicaLink>>> =
+            (0..self.n_workers).map(|_| None).collect();
+        let deadline = Instant::now() + ACCEPT_TIMEOUT;
+        let mut accepted = 0usize;
+        while accepted < self.n_workers {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    let mut reader = BufReader::new(stream.try_clone()?);
+                    let w = read_hello(&mut reader)?;
+                    if w >= self.n_workers || links[w].is_some() {
+                        bail!("bad hello from shard worker: index {w}");
+                    }
+                    links[w] = Some(Box::new(SocketLink::new(stream)));
+                    self.reader_threads.push(spawn_socket_reader(reader, w, tx.clone()));
+                    accepted += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        bail!(
+                            "shard workers: {accepted}/{} connected within {:?}",
+                            self.n_workers,
+                            ACCEPT_TIMEOUT
+                        );
+                    }
+                    for (w, c) in self.children.iter_mut().enumerate() {
+                        if let Some(status) = c.try_wait()? {
+                            bail!("shard worker {w} exited before connecting: {status}");
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        *self.links.borrow_mut() =
+            links.into_iter().map(|l| l.expect("all workers accepted")).collect();
+        Ok(())
+    }
+
+    fn send_to(&self, w: usize, cmd: Cmd) -> Result<()> {
+        self.links.borrow_mut()[w].send(cmd)
+    }
+
+    fn recv_event(&self) -> Result<(usize, Event)> {
+        self.events
+            .recv_timeout(EVENT_TIMEOUT)
+            .map_err(|e| anyhow!("waiting for shard worker events: {e}"))
+    }
+
+    /// Drain exactly one expected acknowledgment per worker;
+    /// `take(worker, event)` returns true when the event was the one
+    /// awaited. `Err` events abort.
+    fn collect_acks(
+        &self,
+        n: usize,
+        mut take: impl FnMut(usize, Event) -> Result<bool>,
+    ) -> Result<()> {
+        let mut got = 0usize;
+        while got < n {
+            let (w, ev) = self.recv_event()?;
+            if let Event::Err { msg } = ev {
+                bail!("shard worker {w}: {msg}");
+            }
+            if take(w, ev)? {
+                got += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn require_init(&self) -> Result<()> {
+        if self.names.is_empty() {
+            bail!("sharded backend: state not initialized (call init_state)");
+        }
+        Ok(())
+    }
+
+    fn merged_state(&self) -> Result<Vec<StateTensor>> {
+        self.require_init()?;
+        for w in 0..self.n_workers {
+            self.send_to(w, Cmd::GetState)?;
+        }
+        let mut states: Vec<Option<Vec<StateTensor>>> = vec![None; self.n_workers];
+        self.collect_acks(self.n_workers, |w, ev| match ev {
+            Event::State { tensors } => {
+                states[w] = Some(tensors);
+                Ok(true)
+            }
+            other => bail!("unexpected event {other:?} while snapshotting"),
+        })?;
+        let states: Vec<Vec<StateTensor>> =
+            states.into_iter().map(|s| s.expect("collected")).collect();
+
+        // Merge into the plain engine's exact flat namespace and tensor
+        // order: worker 0's non-optim tensors (params in name order,
+        // then supports — identical on every replica), then per
+        // parameter IN WORKER 0'S EMISSION ORDER the owner's `optim.*`
+        // tensors (projector, m, v — the owner holds the live moments;
+        // everyone else serializes zero-length placeholders, dropped
+        // here). The result is byte-comparable with any other worker
+        // count's snapshot — the sharded-checkpoint portability
+        // contract.
+        let id_of: HashMap<&str, usize> =
+            self.names.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
+        let mut merged: Vec<StateTensor> = Vec::new();
+        let mut order: Vec<String> = Vec::new();
+        let mut groups: Vec<HashMap<String, Vec<StateTensor>>> = Vec::new();
+        for (w, tensors) in states.iter().enumerate() {
+            let mut g: HashMap<String, Vec<StateTensor>> = HashMap::new();
+            for t in tensors {
+                if !t.name.starts_with("optim.") {
+                    if w == 0 {
+                        merged.push(t.clone());
+                    }
+                    continue;
+                }
+                let pname = optim_param_name(&t.name)
+                    .ok_or_else(|| anyhow!("{}: unrecognized optim tensor", t.name))?;
+                if w == 0 && !g.contains_key(pname) {
+                    if !id_of.contains_key(pname) {
+                        bail!("{}: unknown parameter", t.name);
+                    }
+                    order.push(pname.to_string());
+                }
+                g.entry(pname.to_string()).or_default().push(t.clone());
+            }
+            groups.push(g);
+        }
+        for pname in order {
+            let pname = pname.as_str();
+            let &id = id_of.get(pname).ok_or_else(|| anyhow!("{pname}: unknown parameter"))?;
+            let owner = id % self.n_workers;
+            let g = groups[owner]
+                .remove(pname)
+                .ok_or_else(|| anyhow!("{pname}: owner {owner} has no optim tensors"))?;
+            merged.extend(g);
+        }
+        Ok(merged)
+    }
+}
+
+impl Backend for ShardedBackend {
+    fn kind(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn method(&self) -> &str {
+        &self.method
+    }
+
+    fn preset(&self) -> &ModelPreset {
+        &self.preset
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn optimizer(&self) -> &str {
+        self.optimizer
+    }
+
+    fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn n_params(&self) -> usize {
+        if self.numels.is_empty() {
+            return self.preset.param_count(&self.method);
+        }
+        self.numels.iter().sum()
+    }
+
+    fn init_state(&mut self, seed: u32) -> Result<()> {
+        for w in 0..self.n_workers {
+            self.send_to(w, Cmd::Init { seed })?;
+        }
+        let mut metas: Vec<Option<(Vec<String>, Vec<usize>, Vec<bool>)>> =
+            vec![None; self.n_workers];
+        self.collect_acks(self.n_workers, |w, ev| match ev {
+            Event::Inited { names, numels, frozen } => {
+                metas[w] = Some((names, numels, frozen));
+                Ok(true)
+            }
+            other => bail!("unexpected event {other:?} during init"),
+        })?;
+        let metas: Vec<_> = metas.into_iter().map(|m| m.expect("collected")).collect();
+        for m in &metas[1..] {
+            if m.0 != metas[0].0 {
+                bail!("replicas disagree on the parameter set — nondeterministic init?");
+            }
+        }
+        let (names, numels, frozen) = metas.into_iter().next().expect("n_workers >= 1");
+        self.names = names;
+        self.numels = numels;
+        self.frozen = frozen;
+        Ok(())
+    }
+
+    fn train_step(&mut self, step: i32, tokens: &[i32]) -> Result<f32> {
+        self.require_init()?;
+        let seq = self.preset.seq_len;
+        if tokens.len() != self.batch * seq {
+            bail!(
+                "train_step expects batch*seq = {} tokens (got {})",
+                self.batch * seq,
+                tokens.len()
+            );
+        }
+        let np = self.names.len();
+        let block_tokens = self.rows_per_block * seq;
+        let blocks_per_worker = self.n_blocks / self.n_workers;
+
+        // fan the contiguous blocks out to their owners
+        for w in 0..self.n_workers {
+            let blocks = (w * blocks_per_worker..(w + 1) * blocks_per_worker)
+                .map(|b| (b, tokens[b * block_tokens..(b + 1) * block_tokens].to_vec()))
+                .collect();
+            self.send_to(w, Cmd::Step { step, blocks })?;
+        }
+
+        // overlapped reduce: gradients stream in while replicas are
+        // still walking their backwards; each parameter reduces the
+        // moment its B'th block arrives
+        let mut slots: Vec<Vec<Option<Vec<f32>>>> =
+            (0..np).map(|_| vec![None; self.n_blocks]).collect();
+        let mut filled = vec![0usize; np];
+        let mut reduced: Vec<Option<Vec<f32>>> = (0..np).map(|_| None).collect();
+        let mut awaiting = self.frozen.iter().filter(|&&f| !f).count();
+        let mut losses: Vec<Option<f64>> = vec![None; self.n_blocks];
+        let mut stepdones = 0usize;
+        while stepdones < self.n_workers || awaiting > 0 {
+            let (w, ev) = self.recv_event()?;
+            match ev {
+                Event::Grad { block, param, grad } => {
+                    if param >= np || block >= self.n_blocks {
+                        bail!("worker {w}: gradient for unknown param {param} block {block}");
+                    }
+                    if self.frozen[param] || grad.len() != self.numels[param] {
+                        bail!("worker {w}: malformed gradient for param {param}");
+                    }
+                    if slots[param][block].replace(grad).is_some() {
+                        bail!("worker {w}: duplicate gradient param {param} block {block}");
+                    }
+                    filled[param] += 1;
+                    if filled[param] == self.n_blocks {
+                        reduced[param] = Some(tree_reduce(std::mem::take(&mut slots[param]))?);
+                        awaiting -= 1;
+                    }
+                }
+                Event::StepDone { losses: ls } => {
+                    for (b, l) in ls {
+                        if b >= self.n_blocks || losses[b].replace(l).is_some() {
+                            bail!("worker {w}: bad or duplicate loss for block {b}");
+                        }
+                    }
+                    stepdones += 1;
+                }
+                Event::Err { msg } => bail!("shard worker {w}: {msg}"),
+                other => bail!("unexpected event {other:?} during step"),
+            }
+        }
+        // serial f64 sum in block order: the N-invariant batch loss
+        let mut sum = 0f64;
+        for b in 0..self.n_blocks {
+            sum += losses[b].ok_or_else(|| anyhow!("block {b} reported no loss"))?;
+        }
+        let loss = sum / self.n_blocks as f64;
+
+        // owner-sharded Adam: each worker applies its own parameters...
+        let mut owned: Vec<Vec<(usize, Vec<f32>)>> =
+            (0..self.n_workers).map(|_| Vec::new()).collect();
+        for (idx, g) in reduced.iter_mut().enumerate() {
+            if let Some(g) = g.take() {
+                owned[idx % self.n_workers].push((idx, g));
+            }
+        }
+        for (w, grads) in owned.into_iter().enumerate() {
+            self.send_to(w, Cmd::Apply { step, grads })?;
+        }
+        let mut updated: Vec<(usize, Vec<f32>)> = Vec::new();
+        self.collect_acks(self.n_workers, |w, ev| match ev {
+            Event::Applied { updated: u } => {
+                updated.extend(u);
+                Ok(true)
+            }
+            other => bail!("unexpected event {other:?} during apply (worker {w})"),
+        })?;
+        // ...then every replica absorbs the other owners' updates
+        for w in 0..self.n_workers {
+            let params: Vec<(usize, Vec<f32>)> = updated
+                .iter()
+                .filter(|(i, _)| i % self.n_workers != w)
+                .cloned()
+                .collect();
+            self.send_to(w, Cmd::SetParams { params })?;
+        }
+        self.collect_acks(self.n_workers, |w, ev| match ev {
+            Event::SetDone => Ok(true),
+            other => bail!("unexpected event {other:?} during broadcast (worker {w})"),
+        })?;
+        Ok(loss as f32)
+    }
+
+    fn eval_loss(&mut self, tokens: &[i32]) -> Result<f32> {
+        self.require_init()?;
+        // replicas hold identical parameters between steps; worker 0
+        // evaluates the full batch at the full-batch row count
+        self.send_to(0, Cmd::Eval { bsz: self.batch, tokens: tokens.to_vec() })?;
+        let mut loss = 0f64;
+        self.collect_acks(1, |w, ev| match ev {
+            Event::EvalDone { loss: l } => {
+                loss = l;
+                Ok(true)
+            }
+            other => bail!("unexpected event {other:?} during eval (worker {w})"),
+        })?;
+        Ok(loss as f32)
+    }
+
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.require_init()?;
+        self.send_to(0, Cmd::Forward { tokens: tokens.to_vec() })?;
+        let mut out = Vec::new();
+        self.collect_acks(1, |w, ev| match ev {
+            Event::ForwardDone { logits } => {
+                out = logits;
+                Ok(true)
+            }
+            other => bail!("unexpected event {other:?} during forward (worker {w})"),
+        })?;
+        Ok(out)
+    }
+
+    fn merge(&mut self, seed: i32) -> Result<()> {
+        self.require_init()?;
+        // deterministic from the seed, so every replica restarts its
+        // adaptors identically — no broadcast needed
+        for w in 0..self.n_workers {
+            self.send_to(w, Cmd::Merge { seed })?;
+        }
+        self.collect_acks(self.n_workers, |w, ev| match ev {
+            Event::Merged => Ok(true),
+            other => bail!("unexpected event {other:?} during merge (worker {w})"),
+        })
+    }
+
+    fn drop_optimizer_state(&mut self) -> Result<()> {
+        for w in 0..self.n_workers {
+            self.send_to(w, Cmd::DropOptim)?;
+        }
+        self.collect_acks(self.n_workers, |w, ev| match ev {
+            Event::Dropped => Ok(true),
+            other => bail!("unexpected event {other:?} during drop (worker {w})"),
+        })
+    }
+
+    fn fold_weights(&mut self) -> Result<()> {
+        self.require_init()?;
+        for w in 0..self.n_workers {
+            self.send_to(w, Cmd::Fold)?;
+        }
+        self.collect_acks(self.n_workers, |w, ev| match ev {
+            Event::Folded => Ok(true),
+            other => bail!("unexpected event {other:?} during fold (worker {w})"),
+        })
+    }
+
+    fn mem_report(&self) -> Option<MemReport> {
+        let fetch = || -> Result<MemReport> {
+            for w in 0..self.n_workers {
+                self.send_to(w, Cmd::MemReport)?;
+            }
+            let mut reports: Vec<Option<MemReport>> = vec![None; self.n_workers];
+            self.collect_acks(self.n_workers, |w, ev| match ev {
+                Event::Mem { report } => {
+                    reports[w] = Some(report);
+                    Ok(true)
+                }
+                other => bail!("unexpected event {other:?} during mem report (worker {w})"),
+            })?;
+            // params/supports/projectors are replicated (same bytes
+            // everywhere); moments are owner-sharded, so the honest
+            // per-worker figure is the max across replicas — ~1/N of
+            // the single-engine optimizer bytes
+            let mut out = reports[0].take().expect("collected");
+            for r in reports.into_iter().flatten() {
+                out.optim_bytes = out.optim_bytes.max(r.optim_bytes);
+                out.grad_peak_bytes = out.grad_peak_bytes.max(r.grad_peak_bytes);
+            }
+            out.workers = self.n_workers as u32;
+            Ok(out)
+        };
+        fetch().ok()
+    }
+
+    fn state_tensors(&self) -> Result<Vec<StateTensor>> {
+        self.merged_state()
+    }
+
+    fn load_state_tensors(&mut self, tensors: &[StateTensor]) -> Result<()> {
+        self.require_init()?;
+        for w in 0..self.n_workers {
+            self.send_to(w, Cmd::LoadState { tensors: tensors.to_vec() })?;
+        }
+        self.collect_acks(self.n_workers, |w, ev| match ev {
+            Event::Loaded => Ok(true),
+            other => bail!("unexpected event {other:?} during load (worker {w})"),
+        })
+    }
+}
+
+impl Drop for ShardedBackend {
+    fn drop(&mut self) {
+        {
+            let mut links = self.links.borrow_mut();
+            for l in links.iter_mut() {
+                let _ = l.send(Cmd::Shutdown);
+            }
+        }
+        for h in self.worker_threads.drain(..) {
+            let _ = h.join();
+        }
+        for mut c in self.children.drain(..) {
+            let _ = c.wait();
+        }
+        for h in self.reader_threads.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(d) = self.sock_dir.take() {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_plan_is_a_pure_function_of_the_batch() {
+        // B = largest power of two <= 4 dividing batch
+        assert_eq!(plan(1, 4), (1, 1));
+        assert_eq!(plan(2, 4), (2, 2));
+        assert_eq!(plan(3, 4), (1, 1));
+        assert_eq!(plan(4, 4), (4, 4));
+        assert_eq!(plan(6, 4), (2, 2));
+        assert_eq!(plan(8, 4), (4, 4));
+        assert_eq!(plan(12, 2), (4, 2));
+        // workers clamp to a power of two <= min(requested, B)
+        assert_eq!(plan(4, 3), (4, 2));
+        assert_eq!(plan(4, 1), (4, 1));
+        assert_eq!(plan(8, 16), (4, 4));
+    }
+
+    #[test]
+    fn tree_reduce_is_block_order_invariant_of_worker_assignment() {
+        // the tree reads slots by block index, so HOW blocks were
+        // distributed across workers cannot matter; check the 4-block
+        // tree does ((b0+b1)+(b2+b3))/4 exactly
+        let mk = |v: [f32; 2]| Some(v.to_vec());
+        let got = tree_reduce(vec![mk([1.0, -2.0]), mk([0.5, 4.0]), mk([2.0, 8.0]), mk([4.0, 16.0])])
+            .unwrap();
+        let want0 = (((1.0f32 + 0.5) + (2.0 + 4.0)) * 0.25).to_bits();
+        let want1 = ((((-2.0f32) + 4.0) + (8.0 + 16.0)) * 0.25).to_bits();
+        assert_eq!(got[0].to_bits(), want0);
+        assert_eq!(got[1].to_bits(), want1);
+    }
+
+    #[test]
+    fn optim_names_parse_back_to_their_parameter() {
+        for (name, want) in [
+            ("optim.m.embed.w", Some("embed.w")),
+            ("optim.v.layers.0.attn.q.B", Some("layers.0.attn.q.B")),
+            ("optim.m.q8.head.w", Some("head.w")),
+            ("optim.v.scale.head.w", Some("head.w")),
+            ("optim.proj.layers.1.mlp.up.w", Some("layers.1.mlp.up.w")),
+            ("layers.0.attn.q.B", None),
+            ("optim.bogus.x", None),
+        ] {
+            assert_eq!(optim_param_name(name), want, "{name}");
+        }
+    }
+}

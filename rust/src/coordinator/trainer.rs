@@ -112,6 +112,13 @@ pub fn train(
     let method = backend.method().to_string();
 
     backend.init_state(cfg.seed)?;
+    if backend.workers() > 1 {
+        crate::info!(
+            "data-parallel: {} workers x {} rows/step (losses bit-identical to 1 worker)",
+            backend.workers(),
+            batch
+        );
+    }
 
     // --resume: restore state + step counter from the newest VALID
     // checkpoint in the rotation chain (a torn newest file falls back

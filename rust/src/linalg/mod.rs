@@ -9,6 +9,7 @@
 pub mod parallel;
 pub mod simd;
 pub mod sparse;
+pub(crate) mod sparse_simd;
 pub mod svd;
 
 pub use parallel::ThreadPool;

@@ -55,6 +55,15 @@ pub fn resolve_threads(requested: usize) -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Per-replica pool size for an N-worker data-parallel run: the
+/// resolved global budget split evenly, floor 1 — so `--threads 8
+/// --workers 4` runs four replicas of two pool threads each instead of
+/// oversubscribing the machine 4×. Determinism is unaffected: the
+/// native engine is bit-identical at every pool size.
+pub fn resolve_worker_threads(requested: usize, workers: usize) -> usize {
+    (resolve_threads(requested) / workers.max(1)).max(1)
+}
+
 /// Lifetime-erased pointer to the current job's task closure.
 struct RawTask(*const (dyn Fn(usize) + Sync));
 // SAFETY: the pointee is `Sync` (shared calls are fine) and the pool

@@ -21,10 +21,14 @@
 //! kernels walk fixed-trip-count groups with contiguous value blocks
 //! and byte-sized in-group offsets instead of per-entry u32 column
 //! gathers — same entry order, so results are bit-identical to the
-//! generic CSR path; only speed differs.
+//! generic CSR path; only speed differs. On AVX2/NEON hosts the
+//! structured inner loops additionally run through the vectorized
+//! window kernels in `sparse_simd` (same `simd::active_path`
+//! dispatch as the GEBP tile), still bit-for-bit equal.
 
 use super::parallel::{self, ThreadPool};
-use super::Matrix;
+use super::simd::{self, Path};
+use super::{sparse_simd, Matrix};
 use crate::util::rng::Rng;
 
 /// How the fixed support of the sparse factor is chosen and laid out.
@@ -303,8 +307,23 @@ impl SparseSupport {
     /// loops, contiguous value blocks, byte offsets into an m-wide
     /// window — no per-entry u32 column gather. Entry order (ascending
     /// k) is identical to the generic path, so results are bitwise equal.
+    /// On a detected SIMD path the uniform per-row entry count lets the
+    /// inner loop run vectorized (`sparse_simd`), still bit-for-bit.
     fn spmm_row_nm(&self, nm: &NmLayout, x_row: &[f32], vals: &[f32], y_row: &mut [f32]) {
         let per_row = nm.per_row();
+        let path = simd::active_path();
+        if path != Path::Scalar {
+            for i in 0..self.d_in {
+                let xv = x_row[i];
+                if xv == 0.0 {
+                    continue;
+                }
+                let k = i * per_row;
+                let kn = k + per_row;
+                sparse_simd::spmm_row(path, xv, &self.cols[k..kn], &vals[k..kn], y_row);
+            }
+            return;
+        }
         for i in 0..self.d_in {
             let xv = x_row[i];
             if xv == 0.0 {
@@ -341,8 +360,19 @@ impl SparseSupport {
 
     /// `spmm_t_row` on the structured-N:M layout (same entry order as
     /// the generic path — bitwise-equal results, vectorizable loops).
+    /// On a detected SIMD path the gathers + products vectorize while
+    /// the accumulation chain stays scalar in entry order (`sparse_simd`).
     fn spmm_t_row_nm(&self, nm: &NmLayout, dy_row: &[f32], vals: &[f32], dx_row: &mut [f32]) {
         let per_row = nm.per_row();
+        let path = simd::active_path();
+        if path != Path::Scalar {
+            for (i, dx) in dx_row.iter_mut().enumerate().take(self.d_in) {
+                let k = i * per_row;
+                let kn = k + per_row;
+                *dx += sparse_simd::spmm_t_row(path, dy_row, &self.cols[k..kn], &vals[k..kn]);
+            }
+            return;
+        }
         for (i, dx) in dx_row.iter_mut().enumerate().take(self.d_in) {
             let mut acc = 0.0f32;
             let mut k = i * per_row;
@@ -458,6 +488,24 @@ impl SparseSupport {
         acc
     }
 
+    /// Entries `k0 .. k0 + out.len()` of the eq.-(2) gradient. On a
+    /// structured support with a detected SIMD path the range runs
+    /// through the vectorized window kernel (one accumulator lane per
+    /// entry, scalar per-entry chains — bitwise equal); otherwise it is
+    /// the plain per-entry loop.
+    fn scatter_grad_range(&self, x: &Matrix, dy: &Matrix, k0: usize, out: &mut [f32]) {
+        if let Some(nm) = &self.nm {
+            let path = simd::active_path();
+            if path != Path::Scalar {
+                sparse_simd::scatter_grad_range(path, x, dy, nm.per_row(), &self.cols, k0, out);
+                return;
+            }
+        }
+        for (kk, d) in out.iter_mut().enumerate() {
+            *d = self.scatter_grad_at(x, dy, k0 + kk);
+        }
+    }
+
     /// Sparse value gradient of eq. (2): `dvals[k] = (x^T dy)[idx[k]]`
     /// computed as `Σ_n x[n, row_k] · dy[n, col_k]` — the dense d_in×d_out
     /// gradient is never formed.
@@ -465,7 +513,9 @@ impl SparseSupport {
         assert_eq!(x.cols, self.d_in);
         assert_eq!(dy.cols, self.d_out);
         assert_eq!(x.rows, dy.rows);
-        (0..self.nnz()).map(|k| self.scatter_grad_at(x, dy, k)).collect()
+        let mut dvals = vec![0.0f32; self.nnz()];
+        self.scatter_grad_range(x, dy, 0, &mut dvals);
+        dvals
     }
 
     /// `scatter_grad`, support entries partitioned over the pool. Every
@@ -479,10 +529,7 @@ impl SparseSupport {
         let mut dvals = vec![0.0f32; self.nnz()];
         let chunk = parallel::chunk_len_for(pool, dvals.len());
         parallel::par_chunks_mut(pool, &mut dvals, chunk, |ci, dchunk| {
-            let k0 = ci * chunk;
-            for (kk, d) in dchunk.iter_mut().enumerate() {
-                *d = self.scatter_grad_at(x, dy, k0 + kk);
-            }
+            self.scatter_grad_range(x, dy, ci * chunk, dchunk);
         });
         dvals
     }

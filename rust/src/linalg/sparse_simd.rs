@@ -1,0 +1,356 @@
+//! Runtime-dispatched SIMD inner loops for the structured-N:M sparse
+//! kernels, sharing the GEBP microkernel's dispatch (`simd::active_path`)
+//! and its determinism discipline.
+//!
+//! The structured layout guarantees a uniform entry count per support
+//! row, so each row's entries form one contiguous `cols`/`vals` slice —
+//! these kernels walk that slice in 8-wide (AVX2) or 4-wide (NEON)
+//! windows with a scalar remainder. Windows never cross a support-row
+//! boundary (the callers slice per row), and each window uses the
+//! *entry-aligned column array* as gather indices, so any `n:m` pattern
+//! vectorizes — not just 2:4.
+//!
+//! **Determinism contract.** Bitwise equality with the scalar group
+//! loops in `sparse.rs` holds by construction:
+//!
+//!   * products use unfused multiply (never FMA), one IEEE-754 rounding
+//!     per element, exactly like the scalar `xv * vals[k]`;
+//!   * every accumulation *chain* stays serial and in ascending entry /
+//!     batch-row order: `spmm_t_row` stores the vector products to a
+//!     stack temp and adds them scalar in order, `scatter_grad` keeps
+//!     one lane per support entry so each lane's chain is the scalar
+//!     chain, and `spmm_row`'s scatter-adds are scalar in entry order.
+//!
+//! `SLTRAIN_SIMD=off` never reaches this module: `sparse.rs` keeps its
+//! scalar group loops on `Path::Scalar`.
+
+use super::simd::Path;
+use super::Matrix;
+
+/// One support row of `y_row[cols[k]] += xv * vals[k]`: products are
+/// vectorized, scatter-adds stay scalar in ascending entry order.
+/// `cols`/`vals` are the row's entry slices; every column is < y_row.len()
+/// (the `SparseSupport::new` range invariant).
+pub(crate) fn spmm_row(path: Path, xv: f32, cols: &[u32], vals: &[f32], y_row: &mut [f32]) {
+    debug_assert_eq!(cols.len(), vals.len());
+    debug_assert!(cols.iter().all(|&c| (c as usize) < y_row.len()));
+    #[cfg(target_arch = "x86_64")]
+    if path == Path::Avx2 {
+        // SAFETY: Avx2 is only produced by runtime cpuid detection.
+        unsafe { avx2_spmm_row(xv, cols, vals, y_row) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path == Path::Neon {
+        // SAFETY: NEON is a baseline feature of every aarch64 target.
+        unsafe { neon_spmm_row(xv, cols, vals, y_row) };
+        return;
+    }
+    let _ = path;
+    for (c, v) in cols.iter().zip(vals) {
+        y_row[*c as usize] += xv * v;
+    }
+}
+
+/// One support row of `Σ_k dy_row[cols[k]] · vals[k]`: gathers and
+/// products are vectorized, the accumulation chain stays scalar in
+/// ascending entry order (the caller adds the result onto `dx_row[i]`).
+pub(crate) fn spmm_t_row(path: Path, dy_row: &[f32], cols: &[u32], vals: &[f32]) -> f32 {
+    debug_assert_eq!(cols.len(), vals.len());
+    debug_assert!(cols.iter().all(|&c| (c as usize) < dy_row.len()));
+    #[cfg(target_arch = "x86_64")]
+    if path == Path::Avx2 {
+        // SAFETY: Avx2 is only produced by runtime cpuid detection, and
+        // every gather index is < dy_row.len() (support range invariant).
+        return unsafe { avx2_spmm_t_row(dy_row, cols, vals) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path == Path::Neon {
+        // SAFETY: NEON is baseline on aarch64; gather indices in range.
+        return unsafe { neon_spmm_t_row(dy_row, cols, vals) };
+    }
+    let _ = path;
+    let mut acc = 0.0f32;
+    for (c, v) in cols.iter().zip(vals) {
+        acc += dy_row[*c as usize] * v;
+    }
+    acc
+}
+
+/// Entries `k0 .. k0 + out.len()` of eq.-(2)'s sparse gradient on a
+/// structured support: `out[kk] = Σ_n x[n, row] · dy[n, col]` with the
+/// scalar per-entry chain (ascending batch row `n`). Row boundaries are
+/// arithmetic (`k / per_row`), so the range — which may start and end
+/// mid-row when the pool partitions entries — is split per row and each
+/// row's entries run through the vector window kernel, one lane per
+/// entry.
+pub(crate) fn scatter_grad_range(
+    path: Path,
+    x: &Matrix,
+    dy: &Matrix,
+    per_row: usize,
+    cols: &[u32],
+    k0: usize,
+    out: &mut [f32],
+) {
+    let end = k0 + out.len();
+    let mut k = k0;
+    let mut o = 0usize;
+    while k < end {
+        let i = k / per_row;
+        let row_end = ((i + 1) * per_row).min(end);
+        let len = row_end - k;
+        scatter_grad_row(path, x, dy, i, &cols[k..row_end], &mut out[o..o + len]);
+        k = row_end;
+        o += len;
+    }
+}
+
+/// A same-row span of support entries: every lane shares the x column
+/// `i`, so the batch loop broadcasts `x[n, i]`, gathers `dy[n, cols]`,
+/// and keeps one accumulator lane per entry.
+fn scatter_grad_row(path: Path, x: &Matrix, dy: &Matrix, i: usize, cols: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(cols.len(), out.len());
+    debug_assert!(i < x.cols);
+    debug_assert!(cols.iter().all(|&c| (c as usize) < dy.cols));
+    let mut k = 0usize;
+    #[cfg(target_arch = "x86_64")]
+    if path == Path::Avx2 {
+        while k + 8 <= cols.len() {
+            // SAFETY: Avx2 runtime-detected; gather indices < dy.cols.
+            unsafe { avx2_scatter_win(x, dy, i, &cols[k..k + 8], &mut out[k..k + 8]) };
+            k += 8;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path == Path::Neon {
+        while k + 4 <= cols.len() {
+            // SAFETY: NEON is baseline on aarch64; indices in range.
+            unsafe { neon_scatter_win(x, dy, i, &cols[k..k + 4], &mut out[k..k + 4]) };
+            k += 4;
+        }
+    }
+    let _ = path;
+    for (kk, d) in out.iter_mut().enumerate().skip(k) {
+        let c = cols[kk] as usize;
+        let mut acc = 0.0f32;
+        for n in 0..x.rows {
+            acc += x.data[n * x.cols + i] * dy.data[n * dy.cols + c];
+        }
+        *d = acc;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_spmm_row(xv: f32, cols: &[u32], vals: &[f32], y_row: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = vals.len();
+    let xvv = _mm256_set1_ps(xv);
+    let mut t = [0.0f32; 8];
+    let mut k = 0usize;
+    while k + 8 <= n {
+        // unfused mul — one rounding per product, same as the scalar
+        // `xv * vals[k]`; the += below is the scalar second rounding
+        let prod = _mm256_mul_ps(xvv, _mm256_loadu_ps(vals.as_ptr().add(k)));
+        _mm256_storeu_ps(t.as_mut_ptr(), prod);
+        for (e, &tv) in t.iter().enumerate() {
+            *y_row.get_unchecked_mut(*cols.get_unchecked(k + e) as usize) += tv;
+        }
+        k += 8;
+    }
+    while k < n {
+        *y_row.get_unchecked_mut(*cols.get_unchecked(k) as usize) += xv * vals.get_unchecked(k);
+        k += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_spmm_t_row(dy_row: &[f32], cols: &[u32], vals: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = vals.len();
+    let mut acc = 0.0f32;
+    let mut t = [0.0f32; 8];
+    let mut k = 0usize;
+    while k + 8 <= n {
+        let idx = _mm256_loadu_si256(cols.as_ptr().add(k) as *const __m256i);
+        let g = _mm256_i32gather_ps::<4>(dy_row.as_ptr(), idx);
+        // unfused mul, then a scalar in-order accumulation chain — the
+        // exact rounding sequence of the scalar group loop
+        _mm256_storeu_ps(t.as_mut_ptr(), _mm256_mul_ps(g, _mm256_loadu_ps(vals.as_ptr().add(k))));
+        for &tv in &t {
+            acc += tv;
+        }
+        k += 8;
+    }
+    while k < n {
+        acc += dy_row.get_unchecked(*cols.get_unchecked(k) as usize) * vals.get_unchecked(k);
+        k += 1;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_scatter_win(x: &Matrix, dy: &Matrix, i: usize, cols: &[u32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let idx = _mm256_loadu_si256(cols.as_ptr() as *const __m256i);
+    let mut acc = _mm256_setzero_ps();
+    let xp = x.data.as_ptr();
+    let dyp = dy.data.as_ptr();
+    for n in 0..x.rows {
+        let xv = _mm256_set1_ps(*xp.add(n * x.cols + i));
+        let dyv = _mm256_i32gather_ps::<4>(dyp.add(n * dy.cols), idx);
+        // unfused mul + add — two roundings per batch row per lane,
+        // ascending n: each lane replays the scalar per-entry chain
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, dyv));
+    }
+    _mm256_storeu_ps(out.as_mut_ptr(), acc);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn neon_spmm_row(xv: f32, cols: &[u32], vals: &[f32], y_row: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let n = vals.len();
+    let xvv = vdupq_n_f32(xv);
+    let mut t = [0.0f32; 4];
+    let mut k = 0usize;
+    while k + 4 <= n {
+        // unfused mul (never vfmaq) — one rounding per product
+        let prod = vmulq_f32(xvv, vld1q_f32(vals.as_ptr().add(k)));
+        vst1q_f32(t.as_mut_ptr(), prod);
+        for (e, &tv) in t.iter().enumerate() {
+            *y_row.get_unchecked_mut(*cols.get_unchecked(k + e) as usize) += tv;
+        }
+        k += 4;
+    }
+    while k < n {
+        *y_row.get_unchecked_mut(*cols.get_unchecked(k) as usize) += xv * vals.get_unchecked(k);
+        k += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn neon_spmm_t_row(dy_row: &[f32], cols: &[u32], vals: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    let n = vals.len();
+    let mut acc = 0.0f32;
+    let mut t = [0.0f32; 4];
+    let mut k = 0usize;
+    while k + 4 <= n {
+        // manual 4-wide gather (no NEON gather instruction)
+        let g = [
+            *dy_row.get_unchecked(*cols.get_unchecked(k) as usize),
+            *dy_row.get_unchecked(*cols.get_unchecked(k + 1) as usize),
+            *dy_row.get_unchecked(*cols.get_unchecked(k + 2) as usize),
+            *dy_row.get_unchecked(*cols.get_unchecked(k + 3) as usize),
+        ];
+        // unfused mul, scalar in-order accumulation chain
+        let prod = vmulq_f32(vld1q_f32(g.as_ptr()), vld1q_f32(vals.as_ptr().add(k)));
+        vst1q_f32(t.as_mut_ptr(), prod);
+        for &tv in &t {
+            acc += tv;
+        }
+        k += 4;
+    }
+    while k < n {
+        acc += dy_row.get_unchecked(*cols.get_unchecked(k) as usize) * vals.get_unchecked(k);
+        k += 1;
+    }
+    acc
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn neon_scatter_win(x: &Matrix, dy: &Matrix, i: usize, cols: &[u32], out: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let mut acc = vdupq_n_f32(0.0);
+    let xp = x.data.as_ptr();
+    let dyp = dy.data.as_ptr();
+    let c = [
+        *cols.get_unchecked(0) as usize,
+        *cols.get_unchecked(1) as usize,
+        *cols.get_unchecked(2) as usize,
+        *cols.get_unchecked(3) as usize,
+    ];
+    for n in 0..x.rows {
+        let xv = vdupq_n_f32(*xp.add(n * x.cols + i));
+        let row = dyp.add(n * dy.cols);
+        let g = [*row.add(c[0]), *row.add(c[1]), *row.add(c[2]), *row.add(c[3])];
+        // unfused mul + add (never vfmaq): each lane replays the scalar
+        // per-entry chain in ascending n
+        acc = vaddq_f32(acc, vmulq_f32(xv, vld1q_f32(g.as_ptr())));
+    }
+    vst1q_f32(out.as_mut_ptr(), acc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::simd::active_path;
+    use crate::util::rng::Rng;
+
+    // Each kernel run on the detected path must match its own scalar
+    // fallback bit for bit — ragged lengths exercise window + remainder.
+    // (End-to-end SIMD-vs-scalar coverage of the full N:M kernels lives
+    // in sparse.rs's `nm_kernels_bitwise_match_generic_csr`.)
+
+    #[test]
+    fn vector_spmm_row_bitwise_matches_scalar() {
+        let mut rng = Rng::new(21);
+        for len in [0usize, 1, 3, 4, 7, 8, 9, 16, 19] {
+            let cols: Vec<u32> = (0..len).map(|_| rng.below(24) as u32).collect();
+            let vals: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            let start: Vec<f32> = (0..24).map(|_| rng.gaussian() as f32).collect();
+            let xv = rng.gaussian() as f32;
+            let mut got = start.clone();
+            spmm_row(active_path(), xv, &cols, &vals, &mut got);
+            let mut want = start;
+            spmm_row(Path::Scalar, xv, &cols, &vals, &mut want);
+            assert_eq!(got, want, "len {len}");
+        }
+    }
+
+    #[test]
+    fn vector_spmm_t_row_bitwise_matches_scalar() {
+        let mut rng = Rng::new(22);
+        let dy: Vec<f32> = (0..32).map(|_| rng.gaussian() as f32).collect();
+        for len in [0usize, 1, 4, 7, 8, 11, 16, 23] {
+            let cols: Vec<u32> = (0..len).map(|_| rng.below(32) as u32).collect();
+            let vals: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            let got = spmm_t_row(active_path(), &dy, &cols, &vals);
+            let want = spmm_t_row(Path::Scalar, &dy, &cols, &vals);
+            assert_eq!(got.to_bits(), want.to_bits(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn vector_scatter_grad_bitwise_matches_scalar_at_any_split() {
+        let mut rng = Rng::new(23);
+        let (d_in, d_out, per_row) = (5usize, 20usize, 9usize);
+        let x = Matrix::random(6, d_in, &mut rng);
+        let dy = Matrix::random(6, d_out, &mut rng);
+        let cols: Vec<u32> =
+            (0..d_in * per_row).map(|_| rng.below(d_out as u64) as u32).collect();
+        let nnz = cols.len();
+        let mut want = vec![0.0f32; nnz];
+        scatter_grad_range(Path::Scalar, &x, &dy, per_row, &cols, 0, &mut want);
+        // whole range, and mid-row chunked ranges (pool partitions)
+        let mut got = vec![0.0f32; nnz];
+        scatter_grad_range(active_path(), &x, &dy, per_row, &cols, 0, &mut got);
+        assert_eq!(got, want, "whole range");
+        for chunk in [1usize, 4, 7, 13] {
+            let mut got = vec![0.0f32; nnz];
+            let mut k0 = 0;
+            while k0 < nnz {
+                let end = (k0 + chunk).min(nnz);
+                scatter_grad_range(active_path(), &x, &dy, per_row, &cols, k0, &mut got[k0..end]);
+                k0 = end;
+            }
+            assert_eq!(got, want, "chunk {chunk}");
+        }
+    }
+}

@@ -54,6 +54,9 @@ fn main() {
         "inference" => cmd_inference(&rest),
         "serve" => cmd_serve(&rest),
         "prop1" => cmd_prop1(&rest),
+        // hidden: data-parallel replica child, spawned by ShardedBackend
+        // under SLTRAIN_WORKER_TRANSPORT=process — not a user command
+        "shard-worker" => cmd_shard_worker(&rest),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -121,6 +124,13 @@ fn backend_flags(c: Cli) -> Cli {
              (paper, density = preset delta) | n:m (SLoPe-style \
              structured, e.g. 2:4, density n/m)",
         )
+        .opt(
+            "workers",
+            "0",
+            "data-parallel worker replicas, native backend (0 = single \
+             engine; losses are bit-identical at every worker count; \
+             SLTRAIN_WORKERS env when 0)",
+        )
 }
 
 fn backend_spec(a: &Args) -> Result<BackendSpec> {
@@ -147,6 +157,7 @@ fn backend_spec(a: &Args) -> Result<BackendSpec> {
         a.usize("optim-bits"),
         a.usize("galore-every"),
         &a.str("support"),
+        a.usize("workers"),
     )
 }
 
@@ -234,9 +245,17 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         println!("interrupted by signal — resumable at step {step} (rerun with --resume)");
     }
     if let Some(m) = be.mem_report() {
+        let sharded = if m.workers > 1 {
+            format!(
+                " | optimizer sharded over {} workers (~1/{} moments each)",
+                m.workers, m.workers
+            )
+        } else {
+            String::new()
+        };
         println!(
             "mem: params {:.1} MB | optim {:.1} MB ({}-bit moments) | grad peak {:.1} MB \
-             (two-phase loop would hold {:.1} MB)",
+             (two-phase loop would hold {:.1} MB){sharded}",
             m.param_bytes as f64 / 1e6,
             m.optim_bytes as f64 / 1e6,
             m.optim_bits,
@@ -504,10 +523,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         optim_bits,
         galore_every,
         support,
+        workers,
     } = backend_spec(&a)?
     else {
         bail!("serve runs on the native engine only (drop --backend xla / --artifact)");
     };
+    // explicit flag only: the SLTRAIN_WORKERS env auto-default targets
+    // the training suite and is deliberately ignored by the daemon
+    if workers > 0 {
+        bail!("serve is single-engine: drop --workers (inference has no gradients to all-reduce)");
+    }
     let mut be = NativeBackend::build(
         preset, &method, batch, lr, total_steps, threads, optim_bits, galore_every, support,
     )?;
@@ -529,6 +554,45 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         read_timeout_secs: a.u64("read-timeout"),
     };
     sltrain::serve::run(be, &cfg)
+}
+
+/// Process-transport replica child (`SLTRAIN_WORKER_TRANSPORT=process`):
+/// build one `NativeBackend` over the replica's share of the batch,
+/// connect to the parent's unix socket, and serve `Cmd` frames until
+/// shutdown. Spawned by `ShardedBackend`; not part of the public CLI.
+fn cmd_shard_worker(argv: &[String]) -> Result<()> {
+    let a = Cli::new("sltrain shard-worker", "internal data-parallel replica (spawned by train)")
+        .req("socket", "parent unix socket path")
+        .opt("worker", "0", "replica index")
+        .opt("workers", "1", "replica count")
+        .opt("config", "tiny", "model preset")
+        .opt("method", "sltrain", "weight parameterization")
+        .opt("batch", "1", "replica batch rows (one block)")
+        .opt("lr", "0.003", "base learning rate")
+        .opt("total-steps", "2000", "lr-schedule horizon")
+        .opt("threads", "1", "per-replica pool threads")
+        .opt("optim-bits", "0", "Adam moment precision")
+        .opt("galore-every", "0", "GaLore projector refresh period")
+        .opt("support", "random", "sparse-support pattern")
+        .parse(argv);
+    let name = a.str("config");
+    let p = preset(&name).ok_or_else(|| anyhow!("shard-worker: unknown preset {name:?}"))?;
+    let support = sltrain::linalg::SupportPattern::parse(&a.str("support"))
+        .map_err(|e| anyhow!("shard-worker: {e}"))?;
+    sltrain::backend::sharded::run_worker_process(
+        Path::new(&a.str("socket")),
+        a.usize("worker"),
+        a.usize("workers"),
+        p,
+        &a.str("method"),
+        a.usize("batch"),
+        a.f64("lr") as f32,
+        a.usize("total-steps"),
+        a.usize("threads"),
+        a.usize("optim-bits"),
+        a.usize("galore-every"),
+        support,
+    )
 }
 
 fn cmd_prop1(argv: &[String]) -> Result<()> {

@@ -85,6 +85,11 @@ pub struct MemReport {
     pub grad_all_bytes: u64,
     /// Adam moment precision actually in use (32 or 8).
     pub optim_bits: u32,
+    /// Data-parallel worker count behind this report. 1 for a plain
+    /// engine. For a sharded engine the byte fields are the PER-WORKER
+    /// footprint (optimizer moments owner-sharded ~1/N; params
+    /// replicated), reduced across replicas by max.
+    pub workers: u32,
 }
 
 impl MemReport {
@@ -336,6 +341,7 @@ mod tests {
             grad_peak_bytes: 5,
             grad_all_bytes: 40,
             optim_bits: 8,
+            workers: 1,
         };
         assert_eq!(r.total_bytes(), 42);
     }

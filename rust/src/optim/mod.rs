@@ -25,6 +25,13 @@
 //! bias-corrected direction — the GaLore path, whose moments live in a
 //! projected space of a different shape than the parameter, so the
 //! caller projects the direction back before touching the weights.
+//!
+//! Owner sharding (`train --workers N`): the data-parallel backend
+//! assigns each parameter one owner replica; only the owner keeps that
+//! parameter's moments and applies its Adam step. Non-owners hold
+//! zero-length [`Moments::zeros`]`(bits, 0)` placeholders — the same
+//! convention frozen parameters use — so every kernel and serializer
+//! here works unchanged, and per-replica optimizer bytes drop to ~1/N.
 #![deny(missing_docs)]
 
 pub mod quant;

@@ -279,6 +279,7 @@ fn native_and_xla_loss_parity_smoke() {
         optim_bits: 0,
         galore_every: 0,
         support: sltrain::linalg::SupportPattern::UniformRandom,
+        workers: 0,
     })
     .unwrap();
     let (nf, nl) = run(native);

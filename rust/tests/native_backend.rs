@@ -21,6 +21,7 @@ fn native_spec(method: &str, batch: usize, steps: usize) -> BackendSpec {
         optim_bits: 0,  // auto (SLTRAIN_OPTIM_BITS env matrix flows through)
         galore_every: 5, // short refresh so small runs cross boundaries
         support: SupportPattern::UniformRandom,
+        workers: 0,
     }
 }
 
@@ -241,14 +242,14 @@ fn native_checkpoint_is_analyzable() {
 #[test]
 fn backend_spec_validation() {
     // unknown engine and missing artifact are caught early
-    assert!(BackendSpec::from_flags("tpu", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random").is_err());
-    assert!(BackendSpec::from_flags("xla", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random").is_err());
+    assert!(BackendSpec::from_flags("tpu", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random", 0).is_err());
+    assert!(BackendSpec::from_flags("xla", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random", 0).is_err());
     assert!(
-        BackendSpec::from_flags("native", "", "nope", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random").is_err()
+        BackendSpec::from_flags("native", "", "nope", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random", 0).is_err()
     );
     // --artifact with the native engine is a misdirected run, not a no-op
     let misdirected =
-        BackendSpec::from_flags("native", "a/dir", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random");
+        BackendSpec::from_flags("native", "a/dir", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "random", 0);
     assert!(misdirected.is_err());
     // every method of the paper's comparison set opens natively
     for method in ["full", "lowrank", "sltrain", "relora", "galore"] {
@@ -267,15 +268,16 @@ fn backend_spec_validation() {
         optim_bits: 16,
         galore_every: 0,
         support: SupportPattern::UniformRandom,
+        workers: 0,
     };
     assert!(backend::open(bad_bits).is_err());
     // support-pattern strings are validated in from_flags
     assert!(BackendSpec::from_flags(
-        "native", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "3:2"
+        "native", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "3:2", 0
     )
     .is_err());
     assert!(BackendSpec::from_flags(
-        "native", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "2:4"
+        "native", "", "tiny", "sltrain", 8, 3e-3, 100, 0, 0, 0, "2:4", 0
     )
     .is_ok());
 }
@@ -315,6 +317,7 @@ fn threaded_step_loop_beats_single_thread() {
             optim_bits: 0,
             galore_every: 0,
             support: SupportPattern::UniformRandom,
+            workers: 0,
         })
         .unwrap();
         let mut pipe = Pipeline::build(be.preset().vocab, 7);

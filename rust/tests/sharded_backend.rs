@@ -1,0 +1,260 @@
+//! End-to-end tests of the data-parallel `ShardedBackend`: the fourth
+//! determinism axis (worker count), owner-sharded optimizer state,
+//! cross-worker-count checkpoint portability, and the process transport
+//! through the real CLI binary.
+//!
+//! The bitwise reference for this axis is the 1-worker sharded engine:
+//! `--workers 1..N` are bit-identical to each other at every thread
+//! count (the fixed-block tree reduction depends only on the batch).
+//! The plain `--workers 0` engine computes the same math with a
+//! different f32 re-association and is deliberately *not* compared here.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use sltrain::backend::{self, Backend, BackendSpec};
+use sltrain::config::preset;
+use sltrain::coordinator::{train, Checkpoint, TrainConfig};
+use sltrain::data::Pipeline;
+use sltrain::linalg::SupportPattern;
+
+fn spec(method: &str, batch: usize, threads: usize, workers: usize) -> BackendSpec {
+    BackendSpec::Native {
+        preset: preset("tiny").unwrap(),
+        method: method.to_string(),
+        batch,
+        lr: 3e-3,
+        total_steps: 50,
+        threads,
+        optim_bits: 0,
+        galore_every: 3, // refresh inside short runs
+        support: SupportPattern::UniformRandom,
+        workers,
+    }
+}
+
+fn open(method: &str, batch: usize, threads: usize, workers: usize) -> Box<dyn Backend> {
+    backend::open(spec(method, batch, threads, workers)).unwrap()
+}
+
+/// Full state snapshot in comparable form (name, shape, dtype, bytes).
+fn snapshot(be: &mut dyn Backend) -> Vec<(String, Vec<usize>, String, Vec<u8>)> {
+    be.state_tensors()
+        .unwrap()
+        .into_iter()
+        .map(|t| (t.name, t.shape, format!("{:?}", t.dtype), t.bytes))
+        .collect()
+}
+
+/// Train `steps` fresh steps and return (loss bit patterns, final state).
+fn run(
+    method: &str,
+    batch: usize,
+    threads: usize,
+    workers: usize,
+    steps: usize,
+) -> (Vec<u64>, Vec<(String, Vec<usize>, String, Vec<u8>)>) {
+    let mut be = open(method, batch, threads, workers);
+    be.init_state(42).unwrap();
+    let mut pipe = Pipeline::build(be.preset().vocab, 7);
+    let mut losses = Vec::new();
+    for step in 0..steps {
+        let toks = pipe.train.next_batch(be.batch_size(), be.seq_len());
+        losses.push(be.train_step(step as i32, &toks).unwrap().to_bits());
+    }
+    (losses, snapshot(be.as_mut()))
+}
+
+/// The tentpole contract: 1, 2 and 4 workers produce bit-identical
+/// losses AND bit-identical full state snapshots (weights + owner-merged
+/// optimizer moments), at 1 and 2 pool threads each.
+#[test]
+fn worker_count_never_changes_a_bit_sltrain() {
+    let (ref_losses, ref_state) = run("sltrain", 8, 1, 1, 5);
+    for threads in [1usize, 2] {
+        for workers in [1usize, 2, 4] {
+            let (losses, state) = run("sltrain", 8, threads, workers, 5);
+            assert_eq!(losses, ref_losses, "losses @ {workers}w {threads}t");
+            assert_eq!(state, ref_state, "state @ {workers}w {threads}t");
+        }
+    }
+}
+
+/// Same contract for the full-rank and galore methods — galore
+/// exercises owner-local projector refresh (`optim.proj.*` merges from
+/// the owner replica).
+#[test]
+fn worker_count_never_changes_a_bit_full_and_galore() {
+    for method in ["full", "galore"] {
+        let (ref_losses, ref_state) = run(method, 8, 1, 1, 5);
+        for workers in [2usize, 4] {
+            let (losses, state) = run(method, 8, 1, workers, 5);
+            assert_eq!(losses, ref_losses, "{method} losses @ {workers}w");
+            assert_eq!(state, ref_state, "{method} state @ {workers}w");
+        }
+    }
+}
+
+/// The coordinator path: a relora run (restart merges broadcast to all
+/// replicas) and its eval losses match bitwise at 1 vs 2 workers.
+#[test]
+fn trainer_relora_run_is_worker_count_invariant() {
+    let mut curves = Vec::new();
+    for workers in [1usize, 2] {
+        let mut be = open("relora", 8, 1, workers);
+        let mut pipe = Pipeline::build(be.preset().vocab, 7);
+        let cfg = TrainConfig {
+            steps: 8,
+            eval_every: 0,
+            eval_batches: 2,
+            log_every: 0,
+            relora_every: 4,
+            ..Default::default()
+        };
+        let r = train(be.as_mut(), &mut pipe, &cfg).unwrap();
+        assert_eq!(r.relora_merges, 2, "@{workers}w");
+        let bits: Vec<(usize, u64)> =
+            r.train_curve.points.iter().map(|&(s, l)| (s, l.to_bits())).collect();
+        curves.push((bits, r.final_eval_loss.to_bits()));
+    }
+    assert_eq!(curves[0], curves[1], "1 vs 2 workers through the trainer");
+}
+
+/// Satellite: a checkpoint written by an N-worker run resumes bit-
+/// identically on an M-worker engine (owner-sharded moments serialize
+/// into the flat `optim.*` namespace, so the snapshot is worker-count
+/// agnostic). Covers 4 -> 1 and 1 -> 4.
+#[test]
+fn sharded_checkpoint_resumes_bitwise_on_a_different_worker_count() {
+    for (w_save, w_resume) in [(4usize, 1usize), (1, 4)] {
+        // run A: 3 steps, snapshot, then 3 more steps uninterrupted
+        let mut a = open("sltrain", 8, 1, w_save);
+        a.init_state(42).unwrap();
+        let mut pipe_a = Pipeline::build(a.preset().vocab, 7);
+        for step in 0..3 {
+            let toks = pipe_a.train.next_batch(a.batch_size(), a.seq_len());
+            a.train_step(step, &toks).unwrap();
+        }
+        let saved = a.state_tensors().unwrap();
+        let mut tail_a = Vec::new();
+        for step in 3..6 {
+            let toks = pipe_a.train.next_batch(a.batch_size(), a.seq_len());
+            tail_a.push(a.train_step(step, &toks).unwrap().to_bits());
+        }
+        let state_a = snapshot(a.as_mut());
+
+        // run B: different worker count, restore the snapshot, fast-
+        // forward the stream, replay the tail
+        let mut b = open("sltrain", 8, 1, w_resume);
+        b.init_state(42).unwrap();
+        b.load_state_tensors(&saved).unwrap();
+        let mut pipe_b = Pipeline::build(b.preset().vocab, 7);
+        for _ in 0..3 {
+            pipe_b.train.next_batch(b.batch_size(), b.seq_len());
+        }
+        let mut tail_b = Vec::new();
+        for step in 3..6 {
+            let toks = pipe_b.train.next_batch(b.batch_size(), b.seq_len());
+            tail_b.push(b.train_step(step, &toks).unwrap().to_bits());
+        }
+        assert_eq!(tail_b, tail_a, "resumed losses, {w_save}w -> {w_resume}w");
+        assert_eq!(snapshot(b.as_mut()), state_a, "final state, {w_save}w -> {w_resume}w");
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("sltrain-sharded-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn cli_train(ckpt: &PathBuf, transport: &str) {
+    let out = Command::new(env!("CARGO_BIN_EXE_sltrain"))
+        .args([
+            "train",
+            "--backend",
+            "native",
+            "--config",
+            "tiny",
+            "--method",
+            "sltrain",
+            "--batch",
+            "8",
+            "--workers",
+            "2",
+            "--steps",
+            "5",
+            "--eval-every",
+            "0",
+            "--eval-batches",
+            "1",
+            "--log-every",
+            "0",
+            "--checkpoint",
+            ckpt.to_str().unwrap(),
+        ])
+        .env("SLTRAIN_WORKER_TRANSPORT", transport)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train --workers 2 ({transport}) failed:\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// Satellite: the process transport (replicas as `shard-worker` child
+/// processes over a unix socket) is a drop-in for the thread transport —
+/// the 5-step CLI checkpoints match tensor for tensor, bit for bit.
+#[test]
+fn process_transport_matches_thread_transport_through_the_cli() {
+    let dir = tmp_dir("transport");
+    let ck_thread = dir.join("thread.ckpt");
+    let ck_process = dir.join("process.ckpt");
+    cli_train(&ck_thread, "thread");
+    cli_train(&ck_process, "process");
+    let a = Checkpoint::load(&ck_thread).unwrap();
+    let b = Checkpoint::load(&ck_process).unwrap();
+    assert_eq!(a.step, b.step);
+    assert_eq!(a.tensors, b.tensors, "thread vs process transport state");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance smoke (ignored by default — needs a quiet >= 4-core box):
+/// with the same total thread budget, 4 data-parallel workers finish
+/// more full-rank steps than 1 worker inside a fixed deadline.
+#[test]
+#[ignore = "perf smoke: run on a quiet >= 4-core machine"]
+fn four_workers_beat_one_worker_on_full_rank() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores < 4 {
+        eprintln!("[skip] only {cores} cores");
+        return;
+    }
+    let deadline = std::time::Duration::from_secs(3);
+    let mut done = Vec::new();
+    for workers in [1usize, 4] {
+        let mut be = open("full", 8, 4, workers);
+        be.init_state(42).unwrap();
+        let mut pipe = Pipeline::build(be.preset().vocab, 7);
+        // warmup
+        let toks = pipe.train.next_batch(be.batch_size(), be.seq_len());
+        be.train_step(0, &toks).unwrap();
+        let t0 = std::time::Instant::now();
+        let mut steps = 0usize;
+        while t0.elapsed() < deadline {
+            let toks = pipe.train.next_batch(be.batch_size(), be.seq_len());
+            be.train_step(1 + steps as i32, &toks).unwrap();
+            steps += 1;
+        }
+        println!("  {workers} worker(s): {steps} steps in {:?}", t0.elapsed());
+        done.push(steps);
+    }
+    assert!(
+        done[1] > done[0],
+        "4 workers ({} steps) should beat 1 worker ({} steps)",
+        done[1],
+        done[0]
+    );
+}

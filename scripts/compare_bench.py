@@ -7,8 +7,10 @@ Gate: any matched row whose tokens_per_sec drops more than --max-drop-pct
 footprints move with config changes by design and are reviewed by hand.
 
 Rows are matched on the identity keys present in both records:
-(config, method, threads, optim_bits, support). Rows only present on one
-side are reported, not failed, so adding a bench cell never breaks CI.
+(config, method, threads, workers, optim_bits, support). Rows only
+present on one side are reported, not failed, so adding a bench cell
+(e.g. a new worker count) never breaks CI; old baselines without a
+"workers" field still match because absent keys are skipped per row.
 
 A baseline with a top-level "bootstrap": true marker (or zeroed
 tokens_per_sec values) is a schema placeholder committed before any
@@ -26,7 +28,7 @@ import argparse
 import json
 import sys
 
-IDENTITY_KEYS = ("config", "method", "threads", "optim_bits", "support")
+IDENTITY_KEYS = ("config", "method", "threads", "workers", "optim_bits", "support")
 
 
 def row_key(row):
