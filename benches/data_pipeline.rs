@@ -1,0 +1,183 @@
+//! §Perf bench: the production data path.
+//!
+//! Measures every stage that feeds the step loop — BPE merge training,
+//! byte-exact tokenization (serial and on the worker pool, with a
+//! bit-identity assertion at every thread count), checksummed shard
+//! writing, and the memory-mapped `ShardStream` read path — so data
+//! never starves the step loop silently: `perf_steploop` reports the
+//! consumer rate, this bench reports the producer rate.
+//!
+//! Emits `BENCH_data.json` (machine-readable trajectory point) next to
+//! the CSV:
+//!
+//!   cargo bench --bench data_pipeline -- --words 40000
+//!   cargo bench --bench data_pipeline -- --threads 1,2,4,8
+//!
+//! Shards are written under a scratch directory inside the target temp
+//! dir and removed afterwards.
+
+use sltrain::bench::{fmt, Table};
+use sltrain::data::{build_shards, Bpe, CorpusConfig, ShardSet, ShardStream, SynthCorpus};
+use sltrain::linalg::ThreadPool;
+use sltrain::util::cli::Cli;
+use sltrain::util::json::{num, obj, s, Json};
+
+fn main() -> anyhow::Result<()> {
+    let a = Cli::new("data_pipeline", "data-path throughput: BPE, tokenize, shard write/read")
+        .opt("words", "40000", "corpus words tokenized per measurement")
+        .opt("vocab", "1024", "BPE vocab cap")
+        .opt("threads", "1,2,4", "comma-separated worker-pool thread counts")
+        .opt("shards", "3", "shards written for the write/read measurement")
+        .opt("shard-tokens", "50000", "tokens per shard")
+        .opt("json", "BENCH_data.json", "machine-readable output path")
+        .opt("csv", "results/data_pipeline.csv", "output CSV")
+        .parse_env();
+    let words = a.usize("words").max(1000);
+    let vocab = a.usize("vocab").max(256);
+    let corpus = SynthCorpus::new(CorpusConfig { seed: 42, ..Default::default() });
+    let sample = corpus.generate_text(words, u64::MAX);
+    let data = sample.as_bytes();
+    println!("corpus sample: {} bytes ({} words)", data.len(), words);
+
+    let mut t = Table::new(
+        "§Perf — data path (tokens/sec and bytes/sec, higher is better)",
+        &["stage", "threads", "tokens", "secs", "rate"],
+    );
+    let mut results: Vec<Json> = Vec::new();
+
+    // 1. BPE merge training (serial by construction: merge order is a
+    // sequential greedy argmax)
+    let t0 = std::time::Instant::now();
+    let bpe = Bpe::train(&sample, vocab);
+    let bpe_secs = t0.elapsed().as_secs_f64();
+    let bytes_per_sec = data.len() as f64 / bpe_secs;
+    t.row(vec![
+        "bpe train".into(),
+        "1".into(),
+        format!("{} vocab", bpe.vocab_size()),
+        fmt(bpe_secs, 3),
+        format!("{} B/s", fmt(bytes_per_sec, 0)),
+    ]);
+    results.push(obj(vec![
+        ("stage", s("bpe_train")),
+        ("threads", num(1.0)),
+        ("vocab", num(bpe.vocab_size() as f64)),
+        ("bytes_per_sec", num(bytes_per_sec)),
+    ]));
+
+    // 2. byte-exact tokenization: serial reference, then the worker
+    // pool at each thread count — output must be bit-identical
+    let t0 = std::time::Instant::now();
+    let reference = bpe.encode_bytes(data);
+    let serial_secs = t0.elapsed().as_secs_f64();
+    let serial_tps = reference.len() as f64 / serial_secs;
+    t.row(vec![
+        "tokenize serial".into(),
+        "1".into(),
+        reference.len().to_string(),
+        fmt(serial_secs, 3),
+        format!("{} tok/s", fmt(serial_tps, 0)),
+    ]);
+    results.push(obj(vec![
+        ("stage", s("tokenize_serial")),
+        ("threads", num(1.0)),
+        ("tokens", num(reference.len() as f64)),
+        ("tokens_per_sec", num(serial_tps)),
+    ]));
+    for threads_s in a.str("threads").split(',') {
+        let threads: usize = match threads_s.trim().parse() {
+            Ok(v) => v,
+            Err(_) => {
+                println!("[skip] bad thread count {threads_s:?}");
+                continue;
+            }
+        };
+        let pool = ThreadPool::new(threads.max(1));
+        let t0 = std::time::Instant::now();
+        let toks = bpe.encode_bytes_par(data, &pool);
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            toks, reference,
+            "encode_bytes_par({threads} threads) diverged from serial encode_bytes"
+        );
+        let tps = toks.len() as f64 / dt;
+        t.row(vec![
+            "tokenize pool".into(),
+            threads.to_string(),
+            toks.len().to_string(),
+            fmt(dt, 3),
+            format!("{} tok/s", fmt(tps, 0)),
+        ]);
+        println!("  [tokenize x{threads}t] {tps:.0} tok/s (bit-identical to serial)");
+        results.push(obj(vec![
+            ("stage", s("tokenize_pool")),
+            ("threads", num(threads as f64)),
+            ("tokens", num(toks.len() as f64)),
+            ("tokens_per_sec", num(tps)),
+        ]));
+    }
+
+    // 3. shard write: full `build_shards` (generate + tokenize + CRC +
+    // fsync'd atomic writes)
+    let dir = std::env::temp_dir().join(format!("sltrain_data_bench_{}", std::process::id()));
+    let n_shards = a.usize("shards").max(1);
+    let shard_tokens = a.usize("shard-tokens").max(1000);
+    let report = build_shards(&dir, n_shards, shard_tokens, vocab, 42, 1)?;
+    t.row(vec![
+        "shard write".into(),
+        "1".into(),
+        report.tokens.to_string(),
+        fmt(report.wall_secs, 3),
+        format!("{} tok/s", fmt(report.tokens_per_sec, 0)),
+    ]);
+    results.push(obj(vec![
+        ("stage", s("shard_write")),
+        ("threads", num(1.0)),
+        ("tokens", num(report.tokens as f64)),
+        ("tokens_per_sec", num(report.tokens_per_sec)),
+    ]));
+
+    // 4. shard read: mmap-open the set and drain one full epoch through
+    // the deterministic `ShardStream`
+    let set = ShardSet::open(&dir)?;
+    let total: usize = set.readers.iter().map(|r| r.len()).sum();
+    let mut stream = ShardStream::new(set.readers, 7, vocab)?;
+    let t0 = std::time::Instant::now();
+    let mut sink = 0i64;
+    for _ in 0..total {
+        sink += stream.next_token() as i64;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let read_tps = total as f64 / dt;
+    t.row(vec![
+        "shard read".into(),
+        "1".into(),
+        total.to_string(),
+        fmt(dt, 3),
+        format!("{} tok/s", fmt(read_tps, 0)),
+    ]);
+    println!("  [shard read] {read_tps:.0} tok/s (checksum {sink})");
+    results.push(obj(vec![
+        ("stage", s("shard_read")),
+        ("threads", num(1.0)),
+        ("tokens", num(total as f64)),
+        ("tokens_per_sec", num(read_tps)),
+    ]));
+    std::fs::remove_dir_all(&dir).ok();
+
+    t.print();
+    t.save_csv(&a.str("csv"))?;
+    let report = obj(vec![
+        ("bench", s("data_pipeline")),
+        ("words", num(words as f64)),
+        ("vocab", num(vocab as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(a.str("json"), report.to_string())?;
+    println!("\n[json saved to {}]", a.str("json"));
+    println!(
+        "target: every tokenize row is bit-identical to serial (asserted), and\n\
+         shard read stays orders of magnitude above the step-loop consumer rate."
+    );
+    Ok(())
+}

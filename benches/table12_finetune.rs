@@ -1,160 +1,200 @@
-//! Table 12 (Appendix G): fine-tuning with W = W0 + BA + S (SLTrain-FT)
-//! vs LoRA vs full fine-tuning.
+//! Table 12 (Appendix G): fine-tuning a pretrained model vs training
+//! from scratch — SLTrain-FT vs LoRA-FT vs full FT.
+//!
+//! Artifact-free: everything runs through the `Backend` trait on the
+//! pure-rust native engine (like `perf_steploop`), so CI measures it
+//! from the default build with no XLA and no Python.
 //!
 //! Substitution (DESIGN.md §3): instead of RoBERTa/GLUE we pretrain a
-//! tiny LM on corpus A, then "fine-tune" on corpus B (a different
-//! synthetic distribution — new seed ⇒ new vocabulary statistics and new
-//! Markov chain). The paper's claim is relational: SLTrain-FT ≈ LoRA ≈
-//! full FT; that relation is what this bench measures.
+//! tiny LM per method on corpus A, then fine-tune on corpus B (a
+//! different synthetic distribution — new seed ⇒ new vocabulary
+//! statistics and new Markov chain). Each method is fine-tuned two
+//! ways:
 //!
-//!   cargo bench --bench table12_finetune -- --pretrain-steps 300 --ft-steps 150
+//! * **live** — continue the same parameterization (B, A, S, … keep
+//!   training) with a fresh optimizer, via `TrainConfig::init_tensors`;
+//! * **folded** — fold W = scale·B·A (+S / +W0) dense first
+//!   (SLoPe-style), then fine-tune the dense model as `full`.
+//!
+//! The paper's claim is relational (GLUE avg: full 86.28, LoRA 85.93,
+//! SLTrain-FT 85.91 — all within 0.5%): fine-tuned rows should land
+//! well below both the zero-shot and the from-scratch-on-B baselines,
+//! and near each other. That relation is what this bench measures.
+//!
+//!   cargo bench --bench table12_finetune -- --pretrain-steps 150 --ft-steps 80
+//!   cargo bench --bench table12_finetune -- --methods sltrain,full
 
-use std::path::Path;
-
-use anyhow::Result;
+use sltrain::backend::{self, native::NativeBackend, Backend, BackendSpec};
 use sltrain::bench::{fmt, Table};
-use sltrain::coordinator::metrics::perplexity;
+use sltrain::config::{preset, METHODS};
+use sltrain::coordinator::{train, trainer, TrainConfig};
 use sltrain::data::Pipeline;
-use sltrain::runtime::{lit_f32, Artifact, Runtime, State};
+use sltrain::linalg::SupportPattern;
 use sltrain::util::cli::Cli;
+use sltrain::util::json::{num, obj, s, Json};
 
 const PRETRAIN_SEED: u64 = 7;
 const FT_SEED: u64 = 1234; // the paper's fine-tuning seed, fittingly
 
-fn main() -> Result<()> {
-    let a = Cli::new("table12_finetune", "Table 12 fine-tuning comparison")
-        .opt("pretrain-steps", "150", "pretraining steps (corpus A)")
-        .opt("ft-steps", "80", "fine-tuning steps (corpus B)")
-        .opt("csv", "results/table12.csv", "output CSV")
-        .parse_env();
-    let rt = Runtime::cpu()?;
+fn main() -> anyhow::Result<()> {
+    let a = Cli::new(
+        "table12_finetune",
+        "Table 12 fine-tuning comparison (native engine, artifact-free)",
+    )
+    .opt("config", "tiny", "model preset")
+    .opt("methods", "full,lowrank,sltrain,relora,galore", "comma-separated methods")
+    .opt("pretrain-steps", "60", "pretraining steps (corpus A)")
+    .opt("ft-steps", "40", "fine-tuning steps (corpus B)")
+    .opt("batch", "8", "train batch rows")
+    .opt("threads", "1", "worker-pool threads (0 = auto)")
+    .opt("eval-batches", "4", "held-out batches per evaluation")
+    .opt("json", "BENCH_table12.json", "machine-readable output path")
+    .opt("csv", "results/table12.csv", "output CSV")
+    .parse_env();
+    let p = preset(&a.str("config"))
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {:?}", a.str("config")))?;
+    let batch = a.usize("batch").max(1);
+    let threads = a.usize("threads");
+    let pre_steps = a.usize("pretrain-steps").max(1);
+    let ft_steps = a.usize("ft-steps").max(1);
+    let eval_batches = a.usize("eval-batches").max(1);
+    let support = SupportPattern::parse("random").map_err(anyhow::Error::msg)?;
 
-    // 1. pretrain the base model (full-rank, corpus A)
-    println!("[1/3] pretraining base model on corpus A...");
-    let mut base = Artifact::load(Path::new("artifacts/tiny_full"))?;
-    let mut pipe_a = Pipeline::build(base.manifest.preset.vocab, PRETRAIN_SEED);
-    let mut base_state = base.init_state(&rt, 42)?;
-    let batch = base.entry("train_step")?.batch;
-    let seq = base.manifest.seq_len();
-    for step in 0..a.usize("pretrain-steps") {
-        let toks = pipe_a.train.next_batch(batch, seq);
-        base.train_step(&rt, &mut base_state, step as i32, &toks)?;
-    }
+    let spec = |method: &str| BackendSpec::Native {
+        preset: p.clone(),
+        method: method.to_string(),
+        batch,
+        lr: 3e-3,
+        total_steps: 2000,
+        threads,
+        optim_bits: 0,
+        galore_every: 0,
+        support,
+        workers: 0,
+    };
+    let cfg = |steps: usize, init: Option<Vec<sltrain::backend::StateTensor>>| TrainConfig {
+        steps,
+        eval_every: 0,
+        eval_batches,
+        log_every: 0,
+        seed: 42,
+        init_tensors: init,
+        ..Default::default()
+    };
 
-    // held-out set from the DOWNSTREAM corpus
-    let mut pipe_b = Pipeline::build(base.manifest.preset.vocab, FT_SEED);
-    let valid_b = pipe_b.valid_set(6, batch, seq);
-    let zero_shot = eval_mean(&rt, &mut base, &mut base_state, &valid_b)?;
-    println!("    zero-shot ppl on corpus B: {:.2}", perplexity(zero_shot));
-
-    // snapshot pretrained weights for injection
-    let pretrained: Vec<(String, Vec<usize>, Vec<f32>)> = base
-        .manifest
-        .params
-        .iter()
-        .map(|t| (t.name.clone(), t.shape.clone(), base_state.to_f32(&t.name).unwrap()))
-        .collect();
-
-    // 2. fine-tune three ways on corpus B
-    println!("[2/3] fine-tuning on corpus B...");
     let mut t = Table::new(
-        "Table 12 — fine-tuning on the downstream corpus",
-        &["method", "ppl (corpus B)", "trainable focus"],
+        "Table 12 — fine-tune on corpus B after pretraining on corpus A (ppl, lower is better)",
+        &["method", "zero-shot", "FT live", "FT folded", "scratch on B"],
     );
-    t.row(vec!["zero-shot (no FT)".into(), fmt(perplexity(zero_shot), 2), "-".into()]);
+    let mut results: Vec<Json> = Vec::new();
+    let methods_s = a.str("methods");
+    let methods: Vec<&str> = if methods_s.is_empty() {
+        METHODS.to_vec()
+    } else {
+        methods_s.split(',').map(str::trim).collect()
+    };
+    for method in methods {
+        // 1. pretrain this method on corpus A
+        println!("[{method}] pretraining {pre_steps} steps on corpus A...");
+        let mut be = backend::open(spec(method))?;
+        let mut pipe_a = Pipeline::build(be.preset().vocab, PRETRAIN_SEED);
+        train(be.as_mut(), &mut pipe_a, &cfg(pre_steps, None))?;
+        let seq = be.seq_len();
+        // fresh-optimizer warm start: weights only, no pretrain moments
+        let base: Vec<_> = be
+            .state_tensors()?
+            .into_iter()
+            .filter(|st| !st.name.starts_with("optim."))
+            .collect();
 
-    // full fine-tuning: continue the full artifact on corpus B
-    {
-        let mut art = Artifact::load(Path::new("artifacts/tiny_full"))?;
-        let mut st = art.init_state(&rt, 42)?;
-        inject(&mut st, &pretrained, "w", "w")?;
-        inject_rest(&mut st, &pretrained)?;
-        let ppl = finetune(&rt, &mut art, &mut st, &mut pipe_b, a.usize("ft-steps"), &valid_b)?;
-        t.row(vec!["Full-rank FT".into(), fmt(ppl, 2), "all params".into()]);
+        // 2. zero-shot on corpus B (no fine-tuning at all)
+        let mut pipe_b = Pipeline::build(be.preset().vocab, FT_SEED);
+        let valid_b = pipe_b.valid_set(eval_batches, batch, seq);
+        let zero_shot = trainer::eval(be.as_mut(), &valid_b)?;
+        drop(be);
+
+        // 3a. fine-tune LIVE: same parameterization keeps training
+        println!("[{method}] fine-tuning live, {ft_steps} steps on corpus B...");
+        let mut live = backend::open(spec(method))?;
+        let mut pipe_live = Pipeline::build(live.preset().vocab, FT_SEED);
+        let r_live = train(live.as_mut(), &mut pipe_live, &cfg(ft_steps, Some(base.clone())))?;
+        drop(live);
+
+        // 3b. fine-tune FOLDED: materialize W = scale·B·A (+S / +W0)
+        // dense, then fine-tune the dense model as `full`
+        println!("[{method}] folding dense + fine-tuning, {ft_steps} steps...");
+        let mut conv = NativeBackend::build(
+            p.clone(),
+            method,
+            batch,
+            3e-3,
+            2000,
+            threads,
+            0,
+            0,
+            support,
+        )?;
+        conv.init_state(42)?;
+        conv.load_state_tensors(&base)?;
+        conv.fold_weights()?;
+        let folded = conv.state_tensors()?;
+        drop(conv);
+        let mut dense = backend::open(spec("full"))?;
+        let mut pipe_fold = Pipeline::build(dense.preset().vocab, FT_SEED);
+        let r_fold = train(dense.as_mut(), &mut pipe_fold, &cfg(ft_steps, Some(folded)))?;
+        drop(dense);
+
+        // 3c. from scratch on corpus B for the same step budget — the
+        // "was pretraining worth anything" control
+        let mut scratch = backend::open(spec(method))?;
+        let mut pipe_scr = Pipeline::build(scratch.preset().vocab, FT_SEED);
+        let r_scr = train(scratch.as_mut(), &mut pipe_scr, &cfg(ft_steps, None))?;
+        drop(scratch);
+
+        t.row(vec![
+            method.to_string(),
+            fmt(zero_shot.exp(), 2),
+            fmt(r_live.final_ppl, 2),
+            fmt(r_fold.final_ppl, 2),
+            fmt(r_scr.final_ppl, 2),
+        ]);
+        println!(
+            "  [{method}] zero-shot {:.2} | live {:.2} | folded {:.2} | scratch {:.2}",
+            zero_shot.exp(),
+            r_live.final_ppl,
+            r_fold.final_ppl,
+            r_scr.final_ppl
+        );
+        results.push(obj(vec![
+            ("config", s(&p.name)),
+            ("method", s(method)),
+            ("zero_shot_loss", num(zero_shot)),
+            ("zero_shot_ppl", num(zero_shot.exp())),
+            ("ft_live_loss", num(r_live.final_eval_loss)),
+            ("ft_live_ppl", num(r_live.final_ppl)),
+            ("ft_fold_loss", num(r_fold.final_eval_loss)),
+            ("ft_fold_ppl", num(r_fold.final_ppl)),
+            ("scratch_loss", num(r_scr.final_eval_loss)),
+            ("scratch_ppl", num(r_scr.final_ppl)),
+        ]));
     }
 
-    // LoRA FT: relora artifact (w0 frozen via trainable mask, no merges)
-    for (label, dir, focus) in [
-        ("LoRA FT", "artifacts/tiny_relora_ft", "B, A (+head)"),
-        ("SLTrain FT", "artifacts/tiny_sltrain_ft", "B, A, vals (+head)"),
-    ] {
-        let p = Path::new(dir);
-        if !p.exists() {
-            println!("[skip] {dir}");
-            continue;
-        }
-        let mut art = Artifact::load(p)?;
-        let mut st = art.init_state(&rt, 42)?;
-        // inject pretrained dense weights as the frozen W0
-        inject(&mut st, &pretrained, "w", "w0")?;
-        inject_rest(&mut st, &pretrained)?;
-        let ppl = finetune(&rt, &mut art, &mut st, &mut pipe_b, a.usize("ft-steps"), &valid_b)?;
-        t.row(vec![label.into(), fmt(ppl, 2), focus.into()]);
-    }
-
-    println!("[3/3] results");
     t.print();
     t.save_csv(&a.str("csv"))?;
-    println!("\npaper shape (GLUE avg): full 86.28, LoRA 85.93, SLTrain-FT 85.91 — all\nwithin 0.5%; here all FT rows should land well below zero-shot and near\neach other.");
+    let report = obj(vec![
+        ("bench", s("table12_finetune")),
+        ("config", s(&p.name)),
+        ("pretrain_steps", num(pre_steps as f64)),
+        ("ft_steps", num(ft_steps as f64)),
+        ("batch", num(batch as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(a.str("json"), report.to_string())?;
+    println!("\n[json saved to {}]", a.str("json"));
+    println!(
+        "paper shape (GLUE avg): full 86.28, LoRA 85.93, SLTrain-FT 85.91 — all\n\
+         within 0.5%; here every FT column should land below zero-shot, and the\n\
+         live and folded columns should track each other per method."
+    );
     Ok(())
-}
-
-/// Copy pretrained `layers.*.{from}` weights into `layers.*.{to}`.
-fn inject(
-    st: &mut State,
-    pretrained: &[(String, Vec<usize>, Vec<f32>)],
-    from: &str,
-    to: &str,
-) -> Result<()> {
-    for (name, shape, data) in pretrained {
-        if name.starts_with("layers.") && name.ends_with(&format!(".{from}")) {
-            let target = format!("{}.{to}", name.trim_end_matches(&format!(".{from}")));
-            if st.tensors.contains_key(&target) {
-                st.put(&target, lit_f32(shape, data)?);
-            }
-        }
-    }
-    Ok(())
-}
-
-/// Copy embed/head/norm weights verbatim.
-fn inject_rest(st: &mut State, pretrained: &[(String, Vec<usize>, Vec<f32>)]) -> Result<()> {
-    for (name, shape, data) in pretrained {
-        if !name.starts_with("layers.") || name.ends_with(".g") {
-            if st.tensors.contains_key(name) {
-                st.put(name, lit_f32(shape, data)?);
-            }
-        }
-    }
-    Ok(())
-}
-
-fn finetune(
-    rt: &Runtime,
-    art: &mut Artifact,
-    st: &mut State,
-    pipe: &mut Pipeline,
-    steps: usize,
-    valid: &[Vec<i32>],
-) -> Result<f64> {
-    let batch = art.entry("train_step")?.batch;
-    let seq = art.manifest.seq_len();
-    for step in 0..steps {
-        let toks = pipe.train.next_batch(batch, seq);
-        art.train_step(rt, st, step as i32, &toks)?;
-    }
-    Ok(perplexity(eval_mean(rt, art, st, valid)?))
-}
-
-fn eval_mean(
-    rt: &Runtime,
-    art: &mut Artifact,
-    state: &mut State,
-    valid: &[Vec<i32>],
-) -> Result<f64> {
-    let mut total = 0.0;
-    for b in valid {
-        total += art.eval_loss(rt, state, b)? as f64;
-    }
-    Ok(total / valid.len() as f64)
 }

@@ -61,6 +61,12 @@ pub struct TrainConfig {
     /// (the lr schedule is a pure function of the absolute step, and
     /// relora merge seeds are step numbers).
     pub resume: bool,
+    /// Fine-tune warm start: tensors loaded into the backend right
+    /// after `init_state`, BEFORE the `--resume` restore (so resuming a
+    /// fine-tune run correctly overrides the warm start with the run's
+    /// own newest checkpoint). `optim.*` entries should be filtered out
+    /// by the caller when a fresh optimizer is wanted.
+    pub init_tensors: Option<Vec<crate::backend::StateTensor>>,
 }
 
 impl Default for TrainConfig {
@@ -79,6 +85,7 @@ impl Default for TrainConfig {
             loss_guard: 0.0,
             max_guard_trips: 3,
             resume: false,
+            init_tensors: None,
         }
     }
 }
@@ -112,6 +119,10 @@ pub fn train(
     let method = backend.method().to_string();
 
     backend.init_state(cfg.seed)?;
+    if let Some(ts) = &cfg.init_tensors {
+        backend.load_state_tensors(ts)?;
+        crate::info!("warm start: {} tensors loaded over the fresh init", ts.len());
+    }
     if backend.workers() > 1 {
         crate::info!(
             "data-parallel: {} workers x {} rows/step (losses bit-identical to 1 worker)",

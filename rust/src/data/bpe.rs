@@ -132,6 +132,105 @@ impl Bpe {
         String::from_utf8_lossy(&bytes).into_owned()
     }
 
+    // ---- byte-exact path (production shards) -------------------------
+    //
+    // `encode` above is whitespace-normalizing (split_whitespace), which
+    // is fine for the synthetic corpus but cannot round-trip arbitrary
+    // bytes. The shard pipeline uses this byte-exact segmentation
+    // instead: every input byte lands in exactly one segment, so
+    // `decode_bytes(encode_bytes(x)) == x` for ANY byte string — the
+    // property tests in tests/properties.rs hold the identity over
+    // random bytes including pathological whitespace runs.
+
+    /// Byte-exact encode. Segmentation: each ASCII-whitespace byte is
+    /// its own single-byte segment, except a single space directly
+    /// followed by a non-whitespace run, which prefixes that run
+    /// (GPT-2's leading-space convention, same as `encode`). Merges are
+    /// word-bounded exactly as in training, so learned merges apply to
+    /// `" word"`-shaped segments identically on both paths.
+    pub fn encode_bytes(&self, data: &[u8]) -> Vec<u32> {
+        let mut out = Vec::with_capacity(data.len() / 3);
+        let mut i = 0;
+        while i < data.len() {
+            let b = data[i];
+            if b.is_ascii_whitespace() {
+                let attach = b == b' '
+                    && i + 1 < data.len()
+                    && !data[i + 1].is_ascii_whitespace();
+                if !attach {
+                    out.push(b as u32);
+                    i += 1;
+                    continue;
+                }
+            }
+            // segment: optional leading space + maximal non-ws run
+            let start = i;
+            if data[i] == b' ' {
+                i += 1;
+            }
+            while i < data.len() && !data[i].is_ascii_whitespace() {
+                i += 1;
+            }
+            let mut toks: Vec<u32> =
+                data[start..i].iter().map(|&b| b as u32).collect();
+            self.merge_word(&mut toks);
+            out.extend_from_slice(&toks);
+        }
+        out
+    }
+
+    /// Inverse of [`encode_bytes`]: plain vocab concatenation. All 256
+    /// single bytes are in the vocab and merged tokens concatenate
+    /// their parts, so this is a strict byte-level inverse.
+    pub fn decode_bytes(&self, ids: &[u32]) -> Vec<u8> {
+        let mut bytes = Vec::with_capacity(ids.len() * 2);
+        for &id in ids {
+            bytes.extend_from_slice(&self.vocab[id as usize]);
+        }
+        bytes
+    }
+
+    /// Chunk size target for [`encode_bytes_par`]. A constant (never
+    /// derived from the thread count) so the chunk boundaries — and
+    /// therefore the output — are identical on every pool size.
+    const PAR_CHUNK: usize = 16 * 1024;
+
+    /// Parallel [`encode_bytes`] on the worker pool, bit-identical to
+    /// the serial path at every thread count: the input splits into
+    /// fixed-size-target chunks whose boundaries land only immediately
+    /// after a `\n` byte. A newline is always its own single-byte
+    /// segment, so no segment straddles a boundary and concatenating
+    /// the per-chunk encodings equals the serial encoding exactly.
+    /// (`ThreadPool::map` preserves index order.)
+    pub fn encode_bytes_par(
+        &self,
+        data: &[u8],
+        pool: &crate::linalg::ThreadPool,
+    ) -> Vec<u32> {
+        let mut bounds: Vec<(usize, usize)> = Vec::new();
+        let mut start = 0;
+        while start < data.len() {
+            let mut end = (start + Self::PAR_CHUNK).min(data.len());
+            if end < data.len() {
+                match data[end..].iter().position(|&b| b == b'\n') {
+                    Some(off) => end += off + 1,
+                    None => end = data.len(),
+                }
+            }
+            bounds.push((start, end));
+            start = end;
+        }
+        let chunks = pool.map(bounds.len(), |c| {
+            let (a, b) = bounds[c];
+            self.encode_bytes(&data[a..b])
+        });
+        let mut out = Vec::with_capacity(data.len() / 3);
+        for c in chunks {
+            out.extend_from_slice(&c);
+        }
+        out
+    }
+
     pub fn vocab_size(&self) -> usize {
         self.vocab.len()
     }

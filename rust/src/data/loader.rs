@@ -6,13 +6,29 @@
 //! `Batcher` that packs the stream into `[batch, seq]` i32 matrices for
 //! the train-step artifact. Also supports a fixed held-out validation
 //! split, regenerated identically across runs for comparable perplexity.
+//!
+//! Two sources sit behind the same [`TokenStream`] API:
+//! - **Synth**: text generated on the fly and BPE-encoded per chunk
+//!   (the original path; zero setup, unbounded fresh tokens).
+//! - **Shards**: pre-tokenized memory-mapped shard files from
+//!   `sltrain data --make-shards` ([`crate::data::shard`]) — the
+//!   production path, with deterministic per-epoch shard shuffling.
+//!
+//! Both sources are pure functions of their seeds and the absolute
+//! stream position, so the trainer's replay-based `--resume` works
+//! identically on either.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
 
 use super::bpe::Bpe;
+use super::shard::{ShardSet, ShardStream};
 use super::synth::{CorpusConfig, SynthCorpus};
 
-/// Streams tokens generated on the fly: corpus text -> BPE ids, chunked
-/// so memory stays bounded regardless of how many tokens are consumed.
-pub struct TokenStream {
+/// On-the-fly synthetic source: corpus text -> BPE ids, chunked so
+/// memory stays bounded regardless of how many tokens are consumed.
+struct SynthSource {
     corpus: SynthCorpus,
     bpe: Bpe,
     shard: u64,
@@ -21,24 +37,9 @@ pub struct TokenStream {
     pos: usize,
     chunk_idx: u64,
     vocab_cap: u32,
-    pub tokens_served: u64,
 }
 
-impl TokenStream {
-    pub fn new(corpus: SynthCorpus, bpe: Bpe, shard: u64, vocab_cap: usize) -> Self {
-        TokenStream {
-            corpus,
-            bpe,
-            shard,
-            chunk_words: 8192,
-            buf: vec![],
-            pos: 0,
-            chunk_idx: 0,
-            vocab_cap: vocab_cap as u32,
-            tokens_served: 0,
-        }
-    }
-
+impl SynthSource {
     fn refill(&mut self) {
         // stream id mixes shard and chunk so shards never overlap
         let stream_seed = self.shard.wrapping_mul(0x1_0000_0000) + self.chunk_idx;
@@ -53,14 +54,55 @@ impl TokenStream {
         self.chunk_idx += 1;
     }
 
-    pub fn next_token(&mut self) -> u32 {
+    fn next_token(&mut self) -> u32 {
         if self.pos >= self.buf.len() {
             self.refill();
         }
         let t = self.buf[self.pos];
         self.pos += 1;
-        self.tokens_served += 1;
         t
+    }
+}
+
+enum Source {
+    Synth(SynthSource),
+    Shards(ShardStream),
+}
+
+/// Streams tokens from either source behind one deterministic API.
+pub struct TokenStream {
+    src: Source,
+    pub tokens_served: u64,
+}
+
+impl TokenStream {
+    pub fn new(corpus: SynthCorpus, bpe: Bpe, shard: u64, vocab_cap: usize) -> Self {
+        TokenStream {
+            src: Source::Synth(SynthSource {
+                corpus,
+                bpe,
+                shard,
+                chunk_words: 8192,
+                buf: vec![],
+                pos: 0,
+                chunk_idx: 0,
+                vocab_cap: vocab_cap as u32,
+            }),
+            tokens_served: 0,
+        }
+    }
+
+    /// Stream over pre-tokenized mmap shards (production path).
+    pub fn from_shards(stream: ShardStream) -> Self {
+        TokenStream { src: Source::Shards(stream), tokens_served: 0 }
+    }
+
+    pub fn next_token(&mut self) -> u32 {
+        self.tokens_served += 1;
+        match &mut self.src {
+            Source::Synth(s) => s.next_token(),
+            Source::Shards(s) => s.next_token() as u32,
+        }
     }
 
     /// Fill a [batch, seq] row-major i32 buffer.
@@ -90,6 +132,35 @@ impl Pipeline {
         let train = TokenStream::new(corpus, bpe.clone(), 0, vocab_cap);
         let valid = TokenStream::new(corpus2, bpe.clone(), u64::MAX / 2, vocab_cap);
         Pipeline { train, valid, bpe_vocab: bpe.vocab_size() }
+    }
+
+    /// Production pair from a shard directory built by
+    /// `sltrain data --make-shards`: the LAST shard (by name) is the
+    /// fixed held-out validation split, all earlier shards form the
+    /// train stream with `(shuffle_seed, epoch)`-pure shard shuffling.
+    /// Needs >= 2 shards so train and valid stay disjoint.
+    pub fn from_shard_dir(dir: &Path, vocab_cap: usize, shuffle_seed: u64) -> Result<Pipeline> {
+        let set = ShardSet::open(dir)
+            .with_context(|| format!("opening shard dir {}", dir.display()))?;
+        if set.readers.len() < 2 {
+            bail!(
+                "shard dir {} has {} shard(s); need >= 2 (last is the held-out valid split)",
+                dir.display(),
+                set.readers.len()
+            );
+        }
+        let bpe_vocab = set.bpe.vocab_size();
+        let mut readers = set.readers;
+        let valid_reader = readers.pop().expect("len checked above");
+        let train = TokenStream::from_shards(ShardStream::new(readers, shuffle_seed, vocab_cap)?);
+        // single shard: the epoch permutation is trivially [0], so the
+        // valid stream is a fixed byte sequence across runs and seeds
+        let valid = TokenStream::from_shards(ShardStream::new(
+            vec![valid_reader],
+            shuffle_seed,
+            vocab_cap,
+        )?);
+        Ok(Pipeline { train, valid, bpe_vocab })
     }
 
     /// A fixed validation set: `n_batches` of [batch, seq], always equal

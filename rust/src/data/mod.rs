@@ -1,10 +1,14 @@
 //! Data pipeline: synthetic C4 stand-in, byte-level BPE tokenizer,
-//! deterministic sharded token streams (see DESIGN.md §3 substitutions).
+//! deterministic sharded token streams (see DESIGN.md §3 substitutions),
+//! and the production path: checksummed memory-mapped token shards
+//! ([`shard`]) built with parallel BPE tokenization.
 
 pub mod bpe;
 pub mod loader;
+pub mod shard;
 pub mod synth;
 
 pub use bpe::Bpe;
 pub use loader::{Pipeline, TokenStream};
+pub use shard::{build_shards, ShardError, ShardReader, ShardSet, ShardStream};
 pub use synth::{CorpusConfig, SynthCorpus};

@@ -1,0 +1,551 @@
+//! Memory-mapped token shards: the production data path.
+//!
+//! A shard file (`shard-NNNNN.slt`) is an immutable block of BPE token
+//! ids with a checksummed header, written atomically and read through a
+//! read-only `mmap(2)` (heap fallback on non-unix targets, on mapping
+//! failure, or under `SLTRAIN_MMAP=off`). The layout mirrors the
+//! SLTCKPT1 checkpoint container byte-for-byte in spirit:
+//!
+//! ```text
+//! [ 8B magic "SLTSHRD1" ][ u64 LE header len ][ JSON header ][ u32 LE tokens... ]
+//! ```
+//!
+//! The JSON header carries `n_tokens`, the tokenizer vocab size, the
+//! corpus seed, the shard index, and a CRC-32 of the token payload, so
+//! every corruption class (truncated header, bad magic, CRC mismatch,
+//! truncated token block) surfaces as a typed [`ShardError`] — never a
+//! panic — and the loader names the failing file.
+//!
+//! [`ShardStream`] extends the repo's bitwise determinism contract to
+//! the data path: the shard visit order each epoch is a pure function
+//! of `(seed, epoch)` (a seeded Fisher-Yates permutation, no RNG state
+//! carried across epochs), so the token at absolute stream position `k`
+//! is a pure function of `(seed, k)` — `--resume` replays to the same
+//! byte, and thread/worker counts never touch the stream.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::bpe::Bpe;
+use crate::data::synth::{CorpusConfig, SynthCorpus};
+use crate::linalg::parallel::{resolve_threads, ThreadPool};
+use crate::util::crc::crc32;
+use crate::util::json::{num, obj, Json};
+use crate::util::rng::Rng;
+
+/// File magic, 8 bytes, version-suffixed like `SLTCKPT1`.
+pub const MAGIC: &[u8; 8] = b"SLTSHRD1";
+/// Current shard format version (stored in the JSON header).
+pub const VERSION: u64 = 1;
+
+/// Typed shard-validation failures. Each corruption class maps to one
+/// variant so tests (and operators) can tell truncation from bit rot;
+/// the reader attaches the shard path as anyhow context on top.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ShardError {
+    /// Zero-length file (e.g. a crash between create and write).
+    Empty,
+    /// Too short for the fixed preamble, or the magic doesn't match.
+    NotAShard,
+    /// The header length field points past the end of the file.
+    TruncatedHeader {
+        /// Bytes actually present after the preamble.
+        have: usize,
+        /// Bytes the header length field claims.
+        need: usize,
+    },
+    /// The JSON header doesn't parse or is missing required fields.
+    BadHeader(String),
+    /// The token block is shorter than `n_tokens` promises.
+    TruncatedTokens {
+        /// Payload bytes actually present.
+        have: usize,
+        /// Payload bytes required for `n_tokens` u32 ids.
+        need: usize,
+    },
+    /// The token block's CRC-32 doesn't match the header.
+    CrcMismatch {
+        /// Checksum recorded in the header.
+        stored: u32,
+        /// Checksum computed over the payload on disk.
+        computed: u32,
+    },
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardError::Empty => write!(f, "empty file"),
+            ShardError::NotAShard => write!(f, "not a token shard (bad magic)"),
+            ShardError::TruncatedHeader { have, need } => {
+                write!(f, "truncated header: have {have} bytes, need {need}")
+            }
+            ShardError::BadHeader(m) => write!(f, "bad header: {m}"),
+            ShardError::TruncatedTokens { have, need } => {
+                write!(f, "truncated token block: have {have} bytes, need {need}")
+            }
+            ShardError::CrcMismatch { stored, computed } => write!(
+                f,
+                "token block CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+/// Header metadata of a validated shard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMeta {
+    /// Shard index within its corpus build.
+    pub shard: u64,
+    /// Corpus seed the shard was generated from.
+    pub seed: u64,
+    /// Tokenizer vocab size at build time (ids are `< vocab`).
+    pub vocab: u64,
+    /// Number of u32 token ids in the payload.
+    pub n_tokens: usize,
+}
+
+// ---------------------------------------------------------------------
+// read-only backing: mmap with a heap fallback
+// ---------------------------------------------------------------------
+
+/// Direct syscall binding, no libc crate — same std-only FFI idiom as
+/// `util/signal.rs`. 64-bit unix targets only (off_t == i64), which is
+/// everything this repo runs on; everything else takes the heap path.
+#[cfg(unix)]
+mod mm {
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    /// Map `len` bytes of `f` read-only. `None` on failure (caller
+    /// falls back to a heap read; a shard must load either way).
+    pub fn map(f: &std::fs::File, len: usize) -> Option<*mut u8> {
+        if len == 0 {
+            return None;
+        }
+        use std::os::unix::io::AsRawFd;
+        let p = unsafe {
+            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, f.as_raw_fd(), 0)
+        };
+        if p.is_null() || p as usize == usize::MAX {
+            None
+        } else {
+            Some(p)
+        }
+    }
+
+    pub fn unmap(ptr: *mut u8, len: usize) {
+        unsafe {
+            munmap(ptr, len);
+        }
+    }
+}
+
+/// `SLTRAIN_MMAP=off` forces the heap path (both backings are covered
+/// by tests); any other non-empty value besides `on` is a loud error,
+/// matching the `SLTRAIN_SIMD` typo policy.
+fn mmap_enabled() -> bool {
+    match std::env::var("SLTRAIN_MMAP") {
+        Err(_) => true,
+        Ok(v) if v.is_empty() || v == "on" => true,
+        Ok(v) if v == "off" => false,
+        Ok(v) => panic!("SLTRAIN_MMAP must be `on` or `off`, got {v:?}"),
+    }
+}
+
+/// The bytes behind a reader: a private read-only mapping, or a plain
+/// heap copy where mapping is unavailable or disabled.
+enum Backing {
+    #[cfg(unix)]
+    Mapped { ptr: *mut u8, len: usize },
+    Heap(Vec<u8>),
+}
+
+// The mapping is PROT_READ/MAP_PRIVATE and never mutated after open.
+#[cfg(unix)]
+unsafe impl Send for Backing {}
+#[cfg(unix)]
+unsafe impl Sync for Backing {}
+
+impl Backing {
+    fn open(path: &Path) -> Result<Backing> {
+        let f = fs::File::open(path)?;
+        let len = f.metadata()?.len() as usize;
+        #[cfg(unix)]
+        if mmap_enabled() {
+            if let Some(ptr) = mm::map(&f, len) {
+                return Ok(Backing::Mapped { ptr, len });
+            }
+        }
+        let mut buf = Vec::with_capacity(len);
+        let mut f = f;
+        f.read_to_end(&mut buf)?;
+        Ok(Backing::Heap(buf))
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            Backing::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            Backing::Heap(v) => v,
+        }
+    }
+}
+
+impl Drop for Backing {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = *self {
+            mm::unmap(ptr, len);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// validation + reader
+// ---------------------------------------------------------------------
+
+fn header_u64(h: &BTreeMap<String, Json>, key: &str) -> Result<u64, ShardError> {
+    match h.get(key) {
+        Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as u64),
+        _ => Err(ShardError::BadHeader(format!("missing or non-integer `{key}`"))),
+    }
+}
+
+/// Validate a shard image. Returns the payload offset and the parsed
+/// metadata; every failure is a typed [`ShardError`].
+fn validate(data: &[u8]) -> Result<(usize, ShardMeta), ShardError> {
+    if data.is_empty() {
+        return Err(ShardError::Empty);
+    }
+    if data.len() < MAGIC.len() + 8 || &data[..MAGIC.len()] != MAGIC {
+        return Err(ShardError::NotAShard);
+    }
+    let hlen = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
+    let hend = 16 + hlen;
+    if data.len() < hend {
+        return Err(ShardError::TruncatedHeader { have: data.len() - 16, need: hlen });
+    }
+    let htext = std::str::from_utf8(&data[16..hend])
+        .map_err(|e| ShardError::BadHeader(format!("header is not utf-8: {e}")))?;
+    let hjson = Json::parse(htext).map_err(|e| ShardError::BadHeader(e.to_string()))?;
+    let Json::Obj(h) = hjson else {
+        return Err(ShardError::BadHeader("header is not a JSON object".into()));
+    };
+    let meta = ShardMeta {
+        shard: header_u64(&h, "shard")?,
+        seed: header_u64(&h, "seed")?,
+        vocab: header_u64(&h, "vocab")?,
+        n_tokens: header_u64(&h, "n_tokens")? as usize,
+    };
+    let stored_crc = header_u64(&h, "crc32")? as u32;
+    let need = meta.n_tokens * 4;
+    let have = data.len() - hend;
+    if have < need {
+        return Err(ShardError::TruncatedTokens { have, need });
+    }
+    let computed = crc32(&data[hend..hend + need]);
+    if computed != stored_crc {
+        return Err(ShardError::CrcMismatch { stored: stored_crc, computed });
+    }
+    Ok((hend, meta))
+}
+
+/// A validated, memory-mapped (or heap-backed) token shard.
+pub struct ShardReader {
+    /// Path the shard was opened from (error reporting / debugging).
+    pub path: PathBuf,
+    /// Parsed header metadata.
+    pub meta: ShardMeta,
+    backing: Backing,
+    base: usize,
+}
+
+impl ShardReader {
+    /// Open and fully validate a shard file. Corruption surfaces as a
+    /// typed [`ShardError`] wrapped with the shard's path, so the
+    /// failing file is always named.
+    pub fn open(path: &Path) -> Result<ShardReader> {
+        let backing = Backing::open(path)
+            .with_context(|| format!("loading token shard {}", path.display()))?;
+        let (base, meta) = validate(backing.bytes())
+            .map_err(anyhow::Error::from)
+            .with_context(|| format!("loading token shard {}", path.display()))?;
+        Ok(ShardReader { path: path.to_path_buf(), meta, backing, base })
+    }
+
+    /// Number of tokens in this shard.
+    pub fn len(&self) -> usize {
+        self.meta.n_tokens
+    }
+
+    /// True when the shard holds no tokens.
+    pub fn is_empty(&self) -> bool {
+        self.meta.n_tokens == 0
+    }
+
+    /// Token id at position `i` (unaligned LE read off the mapping).
+    pub fn token(&self, i: usize) -> u32 {
+        let at = self.base + i * 4;
+        let b = &self.backing.bytes()[at..at + 4];
+        u32::from_le_bytes(b.try_into().unwrap())
+    }
+}
+
+// ---------------------------------------------------------------------
+// atomic writer
+// ---------------------------------------------------------------------
+
+fn sync_dir(path: &Path) {
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+}
+
+/// Write one shard atomically: serialize to `<path>.tmp`, fsync, rename
+/// into place, fsync the directory — the same durability ladder as
+/// `Checkpoint::save`, so a crash mid-write never leaves a half shard
+/// under the final name.
+pub fn write_shard(path: &Path, tokens: &[u32], shard: u64, seed: u64, vocab: u64) -> Result<()> {
+    let mut payload = Vec::with_capacity(tokens.len() * 4);
+    for t in tokens {
+        payload.extend_from_slice(&t.to_le_bytes());
+    }
+    let header = obj(vec![
+        ("version", num(VERSION as f64)),
+        ("shard", num(shard as f64)),
+        ("seed", num(seed as f64)),
+        ("vocab", num(vocab as f64)),
+        ("n_tokens", num(tokens.len() as f64)),
+        ("crc32", num(crc32(&payload) as f64)),
+    ])
+    .to_string();
+    let tmp = path.with_extension("slt.tmp");
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        f.write_all(&payload)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    sync_dir(path);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// corpus builder: synthetic text -> parallel BPE -> shard files
+// ---------------------------------------------------------------------
+
+/// Canonical shard file name for index `i`.
+pub fn shard_name(i: usize) -> String {
+    format!("shard-{i:05}.slt")
+}
+
+/// Tokenizer file name inside a shard directory.
+pub const TOKENIZER_FILE: &str = "tokenizer.bin";
+
+/// Throughput report from [`build_shards`].
+pub struct BuildReport {
+    /// Shard files written.
+    pub shards: usize,
+    /// Total tokens across all shards.
+    pub tokens: usize,
+    /// Trained tokenizer vocab size.
+    pub bpe_vocab: usize,
+    /// Wall seconds spent tokenizing + writing (excludes BPE training).
+    pub wall_secs: f64,
+    /// Tokenization+write throughput in tokens/sec.
+    pub tokens_per_sec: f64,
+}
+
+/// Build a shard directory from the synthetic corpus: train the BPE
+/// tokenizer exactly as `Pipeline::build` does (same 40k-word sample,
+/// same vocab clamp, so token ids line up with the live-synthetic
+/// path), then tokenize each shard's text in parallel on the worker
+/// pool (`Bpe::encode_bytes_par` — bit-identical at every thread
+/// count) and write `shard-NNNNN.slt` files plus `tokenizer.bin`.
+///
+/// Shard `i` draws from chunk streams `i * 2^32 + chunk`, so shards are
+/// disjoint and each is a pure function of `(corpus seed, i)`.
+pub fn build_shards(
+    dir: &Path,
+    n_shards: usize,
+    tokens_per_shard: usize,
+    vocab_cap: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<BuildReport> {
+    if n_shards == 0 {
+        bail!("--shards must be >= 1");
+    }
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let corpus = SynthCorpus::new(CorpusConfig { seed, ..Default::default() });
+    let sample = corpus.generate_text(40_000, u64::MAX);
+    let bpe = Bpe::train(&sample, vocab_cap.min(8192).max(256));
+    bpe.save(&dir.join(TOKENIZER_FILE))?;
+    let pool = ThreadPool::new(resolve_threads(threads));
+    let cap = vocab_cap.max(1) as u32;
+
+    let t0 = std::time::Instant::now();
+    let mut total = 0usize;
+    for i in 0..n_shards {
+        let mut toks: Vec<u32> = Vec::with_capacity(tokens_per_shard + 1024);
+        let mut chunk = 0u64;
+        while toks.len() < tokens_per_shard {
+            let stream_seed = (i as u64).wrapping_mul(0x1_0000_0000) + chunk;
+            let text = corpus.generate_text(8192, stream_seed);
+            toks.extend(
+                bpe.encode_bytes_par(text.as_bytes(), &pool).iter().map(|&t| t.min(cap - 1)),
+            );
+            chunk += 1;
+        }
+        toks.truncate(tokens_per_shard);
+        write_shard(&dir.join(shard_name(i)), &toks, i as u64, seed, bpe.vocab_size() as u64)?;
+        total += toks.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(BuildReport {
+        shards: n_shards,
+        tokens: total,
+        bpe_vocab: bpe.vocab_size(),
+        wall_secs: wall,
+        tokens_per_sec: total as f64 / wall.max(1e-9),
+    })
+}
+
+// ---------------------------------------------------------------------
+// shard set + deterministic stream
+// ---------------------------------------------------------------------
+
+/// All shards of a directory, sorted by file name, plus the tokenizer.
+pub struct ShardSet {
+    /// Validated readers in name order (`shard-00000.slt`, ...).
+    pub readers: Vec<ShardReader>,
+    /// The tokenizer the shards were encoded with.
+    pub bpe: Bpe,
+}
+
+impl ShardSet {
+    /// Open every `shard-*.slt` in `dir` (sorted, fully validated) and
+    /// the `tokenizer.bin` beside them.
+    pub fn open(dir: &Path) -> Result<ShardSet> {
+        let mut names: Vec<PathBuf> = fs::read_dir(dir)
+            .with_context(|| format!("reading shard dir {}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("shard-") && n.ends_with(".slt"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        names.sort();
+        if names.is_empty() {
+            bail!(
+                "no shard-*.slt files in {} (build them with `sltrain data --make-shards`)",
+                dir.display()
+            );
+        }
+        let readers =
+            names.iter().map(|p| ShardReader::open(p)).collect::<Result<Vec<_>>>()?;
+        let bpe = Bpe::load(&dir.join(TOKENIZER_FILE))
+            .with_context(|| format!("loading {}/{}", dir.display(), TOKENIZER_FILE))?;
+        Ok(ShardSet { readers, bpe })
+    }
+}
+
+/// Epoch-`e` visit order over `n` shards: a seeded Fisher-Yates
+/// permutation that is a **pure function** of `(seed, epoch)` — no RNG
+/// state survives an epoch boundary, so resume never has to replay
+/// shuffles and every worker computes the identical order.
+pub fn epoch_order(seed: u64, epoch: u64, n: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    Rng::new(seed).fork(0x5EED_0000 ^ epoch).shuffle(&mut idx);
+    idx
+}
+
+/// Sequential token stream over a set of shards with deterministic
+/// per-epoch shard shuffling. The token at absolute position `k` is a
+/// pure function of `(shards, seed, k)`.
+pub struct ShardStream {
+    readers: Vec<ShardReader>,
+    seed: u64,
+    vocab_cap: u32,
+    epoch: u64,
+    order: Vec<usize>,
+    slot: usize,
+    pos: usize,
+}
+
+impl ShardStream {
+    /// Stream over `readers` with shuffle seed `seed`; ids are clamped
+    /// to `vocab_cap` like the synthetic path (model vocab may be
+    /// smaller than the tokenizer's).
+    pub fn new(readers: Vec<ShardReader>, seed: u64, vocab_cap: usize) -> Result<ShardStream> {
+        if readers.iter().all(|r| r.is_empty()) {
+            bail!("shard stream has no tokens");
+        }
+        let n = readers.len();
+        Ok(ShardStream {
+            readers,
+            seed,
+            vocab_cap: vocab_cap.max(1) as u32,
+            epoch: 0,
+            order: epoch_order(seed, 0, n),
+            slot: 0,
+            pos: 0,
+        })
+    }
+
+    /// Current epoch (number of completed full passes over the set).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Next token id, advancing across shard and epoch boundaries.
+    pub fn next_token(&mut self) -> i32 {
+        loop {
+            if self.slot >= self.order.len() {
+                self.epoch += 1;
+                self.order = epoch_order(self.seed, self.epoch, self.readers.len());
+                self.slot = 0;
+                self.pos = 0;
+            }
+            let r = &self.readers[self.order[self.slot]];
+            if self.pos < r.len() {
+                let t = r.token(self.pos).min(self.vocab_cap - 1);
+                self.pos += 1;
+                return t as i32;
+            }
+            self.slot += 1;
+            self.pos = 0;
+        }
+    }
+}

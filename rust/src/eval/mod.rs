@@ -1,0 +1,163 @@
+//! Quality-eval harness: held-out perplexity plus a small deterministic
+//! synthetic task suite, reported per method so quality claims (paper
+//! Tables 2/12) regress in CI alongside speed (BENCH_steploop) and
+//! memory (BENCH_memory).
+//!
+//! Everything here is a pure function of the backend state and fixed
+//! seeds — no wall clock, no thread-count dependence — so the numbers
+//! are bit-comparable across runs and machines with the same weights.
+//!
+//! The suite:
+//! - **eval_loss / ppl**: mean cross-entropy over the held-out valid
+//!   set, and `exp` of it (the standard pretraining quality number).
+//! - **next_token_acc**: top-1 next-token accuracy from `forward`
+//!   logits over the same valid set (an accuracy-shaped stand-in for
+//!   the paper's downstream Table 12 scores).
+//! - **induction_gap**: a copy-task probe. Rows are `[prefix ‖ prefix]`
+//!   with a fixed-seed random prefix; the gap is the mean CE on the
+//!   first (unpredictable) half minus the mean CE on the second
+//!   (copyable) half. A model with working attention scores a positive
+//!   gap that grows with training; a bigram-only model scores ~0.
+
+use anyhow::Result;
+
+use crate::backend::Backend;
+use crate::coordinator::metrics::perplexity;
+use crate::util::rng::Rng;
+
+/// One backend's quality numbers (see module docs for the tasks).
+#[derive(Debug, Clone, Copy)]
+pub struct QualityReport {
+    /// Mean cross-entropy over the held-out valid set (nats/token).
+    pub eval_loss: f64,
+    /// `exp(eval_loss)` — held-out perplexity.
+    pub ppl: f64,
+    /// Top-1 next-token accuracy over the valid set, in [0, 1].
+    pub next_token_acc: f64,
+    /// Copy-task CE gap (first half minus second half), nats/token.
+    pub induction_gap: f64,
+}
+
+/// Numerically-stable host-side log-sum-exp over one vocab row, f64.
+fn logsumexp(row: &[f32]) -> f64 {
+    let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let sum: f64 = row.iter().map(|&x| ((x as f64) - mx).exp()).sum();
+    mx + sum.ln()
+}
+
+/// Argmax index of one vocab row (first max wins — deterministic).
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean CE and top-1 accuracy for a [rows, seq] token block from the
+/// flattened [rows, seq, vocab] logits.
+fn block_acc(tokens: &[i32], logits: &[f32], rows: usize, seq: usize, vocab: usize) -> (u64, u64) {
+    let mut hits = 0u64;
+    let mut total = 0u64;
+    for r in 0..rows {
+        for t in 0..seq - 1 {
+            let at = (r * seq + t) * vocab;
+            let pred = argmax(&logits[at..at + vocab]);
+            if pred as i32 == tokens[r * seq + t + 1] {
+                hits += 1;
+            }
+            total += 1;
+        }
+    }
+    (hits, total)
+}
+
+/// Deterministic induction-probe row `r`: a random prefix of length
+/// `seq/2` (pure function of `r`), repeated to fill `seq`.
+fn induction_row(r: u64, seq: usize, vocab: usize) -> Vec<i32> {
+    let mut rng = Rng::new(0x1DC0DE).fork(r);
+    let half = (seq / 2).max(1);
+    let prefix: Vec<i32> = (0..half).map(|_| rng.below(vocab as u64) as i32).collect();
+    (0..seq).map(|t| prefix[t % half]).collect()
+}
+
+/// Run the full quality suite: `valid` is a fixed held-out set of
+/// `[batch, seq]` blocks (as produced by `Pipeline::valid_set` with the
+/// backend's batch size); `induction_batches` forward batches of copy
+/// rows are probed on top.
+pub fn evaluate(
+    be: &mut dyn Backend,
+    valid: &[Vec<i32>],
+    induction_batches: usize,
+) -> Result<QualityReport> {
+    let batch = be.batch_size();
+    let fwd_b = be.forward_batch_size();
+    let seq = be.seq_len();
+    let vocab = be.preset().vocab;
+
+    // held-out CE -> perplexity
+    let mut loss_sum = 0.0f64;
+    for b in valid {
+        loss_sum += be.eval_loss(b)? as f64;
+    }
+    let eval_loss = loss_sum / valid.len().max(1) as f64;
+
+    // top-1 next-token accuracy over the same rows, re-grouped to the
+    // forward entrypoint's batch size (the last group repeat-pads with
+    // its final row; padded rows are not counted)
+    let rows: Vec<&[i32]> =
+        valid.iter().flat_map(|b| b.chunks(seq).take(batch)).collect();
+    let mut hits = 0u64;
+    let mut total = 0u64;
+    for group in rows.chunks(fwd_b) {
+        let mut block: Vec<i32> = Vec::with_capacity(fwd_b * seq);
+        let last = *group.last().expect("non-empty group");
+        for r in 0..fwd_b {
+            block.extend_from_slice(group.get(r).copied().unwrap_or(last));
+        }
+        let logits = be.forward(&block)?;
+        let (h, t) = block_acc(&block, &logits, group.len(), seq, vocab);
+        hits += h;
+        total += t;
+    }
+    let next_token_acc = hits as f64 / total.max(1) as f64;
+
+    // induction probe: CE on the unpredictable first half vs the
+    // copyable second half
+    let half = (seq / 2).max(1);
+    let (mut ce_first, mut n_first) = (0.0f64, 0u64);
+    let (mut ce_second, mut n_second) = (0.0f64, 0u64);
+    for k in 0..induction_batches {
+        let mut block: Vec<i32> = Vec::with_capacity(fwd_b * seq);
+        for r in 0..fwd_b {
+            block.extend(induction_row((k * fwd_b + r) as u64, seq, vocab));
+        }
+        let logits = be.forward(&block)?;
+        for r in 0..fwd_b {
+            for t in 0..seq - 1 {
+                let at = (r * seq + t) * vocab;
+                let target = block[r * seq + t + 1] as usize;
+                let row = &logits[at..at + vocab];
+                let ce = logsumexp(row) - row[target] as f64;
+                if t + 1 < half {
+                    ce_first += ce;
+                    n_first += 1;
+                } else {
+                    ce_second += ce;
+                    n_second += 1;
+                }
+            }
+        }
+    }
+    let induction_gap =
+        ce_first / n_first.max(1) as f64 - ce_second / n_second.max(1) as f64;
+
+    Ok(QualityReport {
+        eval_loss,
+        ppl: perplexity(eval_loss),
+        next_token_acc,
+        induction_gap,
+    })
+}

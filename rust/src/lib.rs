@@ -24,6 +24,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod eval;
 pub mod linalg;
 pub mod mem;
 pub mod optim;

@@ -2,9 +2,14 @@
 //!
 //! Subcommands:
 //!   train         pretrain (native pure-rust engine, or an AOT artifact)
+//!   finetune      continue training from a pretrain checkpoint (live
+//!                 parameterization or folded dense), fresh optimizer
+//!   eval          quality suite: held-out perplexity + synthetic tasks,
+//!                 per method or per checkpoint (BENCH_quality.json)
 //!   estimate-mem  Appendix-F memory tables for any preset × method
 //!   analyze       Fig-2/10/11 spectrum + residual analysis of a checkpoint
-//!   data          inspect / dump the synthetic corpus + tokenizer
+//!   data          inspect / dump the synthetic corpus + tokenizer, or
+//!                 build mmap token shards (--make-shards)
 //!   throughput    Table-3 style tokens/sec measurement
 //!   inference     Table-5 style forward-only memory + throughput
 //!   serve         fold-for-inference daemon (KV cache, continuous batching)
@@ -33,12 +38,14 @@ use sltrain::backend::native::NativeBackend;
 use sltrain::backend::{self, Backend, BackendSpec};
 use sltrain::bench::{fmt, Table};
 use sltrain::config::{preset, METHODS};
-use sltrain::coordinator::{train, Checkpoint, TrainConfig};
-use sltrain::data::{CorpusConfig, Pipeline, SynthCorpus};
+use sltrain::coordinator::{train, trainer, Checkpoint, TrainConfig};
+use sltrain::data::{build_shards, CorpusConfig, Pipeline, SynthCorpus};
+use sltrain::eval::evaluate;
 use sltrain::linalg::Matrix;
 use sltrain::mem::{estimate, MemEstimate, MemOptions};
 use sltrain::serve::ServeConfig;
 use sltrain::util::cli::{Args, Cli};
+use sltrain::util::json::{num, obj, s, Json};
 use sltrain::util::signal;
 
 fn main() {
@@ -47,6 +54,8 @@ fn main() {
     let rest = if argv.is_empty() { vec![] } else { argv[1..].to_vec() };
     let result = match cmd {
         "train" => cmd_train(&rest),
+        "finetune" => cmd_finetune(&rest),
+        "eval" => cmd_eval(&rest),
         "estimate-mem" => cmd_estimate_mem(&rest),
         "analyze" => cmd_analyze(&rest),
         "data" => cmd_data(&rest),
@@ -77,9 +86,14 @@ sltrain — sparse plus low-rank pretraining (NeurIPS 2024), reproduced
 
 subcommands:
   train         pretrain (--backend native needs no artifacts)
+  finetune      continue from a pretrain checkpoint on a downstream
+                corpus (optionally folded dense first), fresh optimizer
+  eval          quality suite: held-out ppl + synthetic tasks per
+                method/checkpoint, emits BENCH_quality.json
   estimate-mem  Appendix-F memory tables (any preset x method)
   analyze       spectrum/residual analysis of a checkpoint
-  data          synthetic corpus + tokenizer inspection
+  data          synthetic corpus + tokenizer inspection; --make-shards
+                builds checksummed mmap token shards
   throughput    training tokens/sec (Table 3)
   inference     forward-only memory + tokens/sec (Table 5)
   serve         persistent inference daemon on a unix socket (fold +
@@ -173,6 +187,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     .opt("relora-every", "100", "ReLoRA restart period (--method relora, either backend)")
     .opt("seed", "42", "init + data seed")
     .opt("data-seed", "7", "synthetic corpus seed")
+    .opt(
+        "data",
+        "",
+        "token-shard directory from `sltrain data --make-shards` (empty = \
+         on-the-fly synthetic stream); --data-seed seeds the shard shuffle",
+    )
     .opt("metrics", "", "JSONL metrics output path")
     .opt("checkpoint", "", "checkpoint output path")
     .opt("checkpoint-every", "0", "checkpoint period (0 = end only)")
@@ -213,7 +233,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         be.n_params() as f64 / 1e6,
         be.optimizer()
     );
-    let mut pipe = Pipeline::build(be.preset().vocab, a.u64("data-seed"));
+    let mut pipe = build_pipeline(&a.str("data"), be.preset().vocab, a.u64("data-seed"))?;
     let cfg = TrainConfig {
         steps: a.usize("steps"),
         eval_every: a.usize("eval-every"),
@@ -228,6 +248,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         loss_guard: a.f64("loss-guard"),
         max_guard_trips: a.usize("max-guard-trips"),
         resume: a.flag("resume"),
+        init_tensors: None,
     };
     let r = train(be.as_mut(), &mut pipe, &cfg)?;
     println!(
@@ -262,6 +283,330 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             m.grad_peak_bytes as f64 / 1e6,
             m.grad_all_bytes as f64 / 1e6
         );
+    }
+    Ok(())
+}
+
+/// Data source shared by train/finetune/eval: a shard directory when
+/// `--data` is set, else the on-the-fly synthetic stream.
+fn build_pipeline(data: &str, vocab_cap: usize, data_seed: u64) -> Result<Pipeline> {
+    match non_empty(data.to_string()) {
+        Some(dir) => Pipeline::from_shard_dir(Path::new(&dir), vocab_cap, data_seed),
+        None => Ok(Pipeline::build(vocab_cap, data_seed)),
+    }
+}
+
+fn cmd_finetune(argv: &[String]) -> Result<()> {
+    let a = backend_flags(Cli::new(
+        "sltrain finetune",
+        "continue training from a pretrain SLTCKPT1 checkpoint on a downstream \
+         corpus: fresh optimizer + lr schedule, optionally folding the sparse + \
+         low-rank parameterization dense first (SLoPe-style fine-tuning)",
+    ))
+    .req("checkpoint", "pretrain SLTCKPT1 checkpoint to start from")
+    .opt("steps", "100", "fine-tune optimizer steps")
+    .opt("eval-every", "50", "evaluation period (0 = only final)")
+    .opt("eval-batches", "4", "validation batches per evaluation")
+    .opt("log-every", "10", "train-loss log period")
+    .opt("relora-every", "100", "ReLoRA restart period (--method relora, live only)")
+    .opt("seed", "42", "init seed for non-checkpoint tensors (e.g. a reset head)")
+    .opt("ft-data-seed", "1234", "downstream corpus seed (disjoint from pretrain's)")
+    .opt(
+        "data",
+        "",
+        "token-shard directory from `sltrain data --make-shards` (empty = \
+         synthetic downstream corpus from --ft-data-seed)",
+    )
+    .opt("metrics", "", "JSONL metrics output path")
+    .opt("out-checkpoint", "", "fine-tune checkpoint output path")
+    .opt("checkpoint-every", "0", "fine-tune checkpoint period (0 = end only)")
+    .opt("keep-checkpoints", "2", "fine-tune checkpoints kept on disk")
+    .opt("json", "", "write a machine-readable summary (full-precision losses) here")
+    .switch(
+        "fold",
+        "fold the pretrained parameterization dense first (Table 5's scale.B.A \
+         (+S / +W0) fold), then fine-tune the dense model (--method full applies \
+         downstream)",
+    )
+    .switch(
+        "reset-head",
+        "drop the pretrained lm head and re-init it from --seed (the fresh-\
+         objective variant)",
+    )
+    .switch("resume", "resume an interrupted fine-tune from --out-checkpoint")
+    .parse(argv);
+
+    signal::install();
+    let ck_path = a.str("checkpoint");
+    let ck = Checkpoint::load(Path::new(&ck_path))?;
+    let reset_head = a.flag("reset-head");
+    // fresh optimizer on the downstream objective: drop the pretrain
+    // moments + galore projectors; optionally drop the head for re-init
+    let base: Vec<_> = ck
+        .to_state_tensors()
+        .into_iter()
+        .filter(|t| !t.name.starts_with("optim."))
+        .filter(|t| !(reset_head && t.name == "head.w"))
+        .collect();
+    let seed = a.u64("seed") as u32;
+    let fold = a.flag("fold");
+    let (mut be, init_tensors) = if fold {
+        let BackendSpec::Native {
+            preset,
+            method,
+            batch,
+            lr,
+            total_steps,
+            threads,
+            optim_bits,
+            galore_every,
+            support,
+            workers,
+        } = backend_spec(&a)?
+        else {
+            bail!("finetune runs on the native engine only (drop --backend xla / --artifact)");
+        };
+        // converter engine: restore the pretrain parameterization, fold
+        // it dense in place, snapshot the dense `.w` tensors, then
+        // fine-tune them as a plain full-method model
+        let mut conv = NativeBackend::build(
+            preset.clone(),
+            &method,
+            batch,
+            lr,
+            total_steps,
+            threads,
+            optim_bits,
+            galore_every,
+            support,
+        )?;
+        conv.init_state(seed)?;
+        conv.load_state_tensors(&base)?;
+        conv.fold_weights()?;
+        let folded = conv.state_tensors()?;
+        drop(conv);
+        let spec = BackendSpec::Native {
+            preset,
+            method: "full".into(),
+            batch,
+            lr,
+            total_steps,
+            threads,
+            optim_bits,
+            galore_every,
+            support,
+            workers,
+        };
+        (backend::open(spec)?, folded)
+    } else {
+        (backend::open(backend_spec(&a)?)?, base)
+    };
+    sltrain::info!(
+        "finetune: {ck_path} (pretrain step {}) -> {} / {}{}",
+        ck.step,
+        be.preset().name,
+        be.method(),
+        if fold { " (folded dense)" } else { "" }
+    );
+
+    let batch = be.batch_size();
+    let seq = be.seq_len();
+    let eval_batches = a.usize("eval-batches");
+    // zero-shot baseline on the downstream corpus, from a SEPARATE
+    // pipeline so the training pipeline's valid stream is untouched
+    // (same seed => the trainer sees the identical valid set)
+    let zero_shot = {
+        let mut zpipe =
+            build_pipeline(&a.str("data"), be.preset().vocab, a.u64("ft-data-seed"))?;
+        let vs = zpipe.valid_set(eval_batches, batch, seq);
+        be.init_state(seed)?;
+        be.load_state_tensors(&init_tensors)?;
+        trainer::eval(be.as_mut(), &vs)?
+    };
+    println!(
+        "zero-shot on downstream corpus: eval loss {:.4} ppl {:.2}",
+        zero_shot,
+        zero_shot.exp()
+    );
+
+    let mut pipe = build_pipeline(&a.str("data"), be.preset().vocab, a.u64("ft-data-seed"))?;
+    let cfg = TrainConfig {
+        steps: a.usize("steps"),
+        eval_every: a.usize("eval-every"),
+        eval_batches,
+        log_every: a.usize("log-every"),
+        relora_every: a.usize("relora-every"),
+        seed,
+        metrics_path: non_empty(a.str("metrics")).map(PathBuf::from),
+        checkpoint_path: non_empty(a.str("out-checkpoint")).map(PathBuf::from),
+        checkpoint_every: a.usize("checkpoint-every"),
+        keep_checkpoints: a.usize("keep-checkpoints"),
+        loss_guard: 0.0,
+        max_guard_trips: 3,
+        resume: a.flag("resume"),
+        init_tensors: Some(init_tensors),
+    };
+    let r = train(be.as_mut(), &mut pipe, &cfg)?;
+    println!(
+        "finetune final: eval loss {:.4} ppl {:.2} (zero-shot ppl {:.2}) | {:.0} tok/s",
+        r.final_eval_loss,
+        r.final_ppl,
+        zero_shot.exp(),
+        r.tokens_per_sec
+    );
+    if let Some(step) = r.interrupted_at {
+        println!("interrupted by signal — resumable at step {step} (rerun with --resume)");
+    }
+    if let Some(path) = non_empty(a.str("json")) {
+        // full-precision f64 repr (Json::Num round-trips shortest form)
+        let report = obj(vec![
+            ("bench", s("finetune")),
+            ("config", s(&be.preset().name)),
+            ("method", s(be.method())),
+            ("fold", Json::Bool(fold)),
+            ("pretrain_step", num(ck.step as f64)),
+            ("steps", num(a.usize("steps") as f64)),
+            ("zero_shot_loss", num(zero_shot)),
+            ("zero_shot_ppl", num(zero_shot.exp())),
+            ("final_eval_loss", num(r.final_eval_loss)),
+            ("final_ppl", num(r.final_ppl)),
+        ]);
+        std::fs::write(&path, report.to_string())?;
+        println!("[json saved to {path}]");
+    }
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let a = backend_flags(Cli::new(
+        "sltrain eval",
+        "quality suite: held-out perplexity + deterministic synthetic tasks \
+         (top-1 next-token accuracy, induction-copy CE gap). Grid mode \
+         pretrains each --methods entry for --steps and evaluates it; \
+         --checkpoint evaluates one saved run instead",
+    ))
+    .opt("checkpoint", "", "evaluate this SLTCKPT1 (empty = grid mode over --methods)")
+    .opt("methods", "", "comma list for grid mode (default: all five)")
+    .opt("steps", "50", "pretrain steps per method in grid mode")
+    .opt("seed", "42", "init seed")
+    .opt("data-seed", "7", "corpus seed")
+    .opt(
+        "data",
+        "",
+        "token-shard directory for the held-out eval stream (empty = synthetic)",
+    )
+    .opt("eval-batches", "4", "held-out batches for loss/accuracy")
+    .opt("induction-batches", "2", "forward batches of the induction-copy probe")
+    .opt("json", "", "write BENCH_quality.json-style report here")
+    .opt("csv", "", "write the table as CSV here")
+    .parse(argv);
+
+    let seed = a.u64("seed") as u32;
+    let eval_batches = a.usize("eval-batches");
+    let induction = a.usize("induction-batches");
+    let mut t = Table::new(
+        "Quality eval — held-out ppl + synthetic task suite",
+        &["method", "eval loss", "ppl", "next-tok acc", "induction gap"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    let mut run_one = |be: &mut dyn Backend, method: &str| -> Result<()> {
+        let mut epipe =
+            build_pipeline(&a.str("data"), be.preset().vocab, a.u64("data-seed"))?;
+        let vs = epipe.valid_set(eval_batches, be.batch_size(), be.seq_len());
+        let q = evaluate(be, &vs, induction)?;
+        t.row(vec![
+            method.to_string(),
+            fmt(q.eval_loss, 4),
+            fmt(q.ppl, 2),
+            fmt(q.next_token_acc, 4),
+            fmt(q.induction_gap, 4),
+        ]);
+        rows.push(obj(vec![
+            ("config", s(&be.preset().name)),
+            ("method", s(method)),
+            ("eval_loss", num(q.eval_loss)),
+            ("ppl", num(q.ppl)),
+            ("next_token_acc", num(q.next_token_acc)),
+            ("induction_gap", num(q.induction_gap)),
+        ]));
+        Ok(())
+    };
+
+    if let Some(ck_path) = non_empty(a.str("checkpoint")) {
+        let ck = Checkpoint::load(Path::new(&ck_path))?;
+        let mut be = backend::open(backend_spec(&a)?)?;
+        be.init_state(seed)?;
+        be.load_state_tensors(&ck.to_state_tensors())?;
+        sltrain::info!("eval: checkpoint {ck_path} (step {})", ck.step);
+        let method = be.method().to_string();
+        run_one(be.as_mut(), &method)?;
+    } else {
+        let methods: Vec<String> = match non_empty(a.str("methods")) {
+            Some(m) => m.split(',').map(|x| x.trim().to_string()).collect(),
+            None => METHODS.iter().map(|m| m.to_string()).collect(),
+        };
+        let BackendSpec::Native {
+            preset,
+            batch,
+            lr,
+            total_steps,
+            threads,
+            optim_bits,
+            galore_every,
+            support,
+            workers,
+            ..
+        } = backend_spec(&a)?
+        else {
+            bail!("eval grid mode runs on the native engine only");
+        };
+        for m in &methods {
+            let spec = BackendSpec::Native {
+                preset: preset.clone(),
+                method: m.clone(),
+                batch,
+                lr,
+                total_steps,
+                threads,
+                optim_bits,
+                galore_every,
+                support,
+                workers,
+            };
+            let mut be = backend::open(spec)?;
+            let mut pipe =
+                build_pipeline(&a.str("data"), be.preset().vocab, a.u64("data-seed"))?;
+            let cfg = TrainConfig {
+                steps: a.usize("steps"),
+                eval_every: 0,
+                eval_batches,
+                log_every: 0,
+                seed,
+                ..Default::default()
+            };
+            train(be.as_mut(), &mut pipe, &cfg)?;
+            run_one(be.as_mut(), m)?;
+        }
+    }
+    t.print();
+    if let Some(path) = non_empty(a.str("csv")) {
+        t.save_csv(&path)?;
+        println!("[csv saved to {path}]");
+    }
+    if let Some(path) = non_empty(a.str("json")) {
+        let report = obj(vec![
+            ("bench", s("quality_eval")),
+            ("steps", num(a.usize("steps") as f64)),
+            ("eval_batches", num(eval_batches as f64)),
+            (
+                "data",
+                s(&non_empty(a.str("data")).unwrap_or_else(|| "synthetic".into())),
+            ),
+            ("results", Json::Arr(rows)),
+        ]);
+        std::fs::write(&path, report.to_string())?;
+        println!("[json saved to {path}]");
     }
     Ok(())
 }
@@ -385,13 +730,41 @@ fn cmd_analyze(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_data(argv: &[String]) -> Result<()> {
-    let a = Cli::new("sltrain data", "synthetic corpus / tokenizer inspection")
+    let a = Cli::new("sltrain data", "synthetic corpus / tokenizer inspection + shard building")
         .opt("seed", "7", "corpus seed")
         .opt("words", "200", "words of sample text to show")
         .opt("vocab", "256", "tokenizer vocab size")
         .opt("dump", "", "write N tokens to this file as i32-LE")
         .opt("dump-tokens", "100000", "token count for --dump")
+        .opt(
+            "make-shards",
+            "",
+            "build checksummed mmap token shards + tokenizer.bin in this \
+             directory (parallel BPE on the worker pool), then exit",
+        )
+        .opt("shards", "4", "shard files to build (last one is the held-out valid split)")
+        .opt("shard-tokens", "100000", "tokens per shard file")
+        .opt("threads", "0", "tokenizer worker threads (0 = auto; output is identical)")
         .parse(argv);
+    if let Some(dir) = non_empty(a.str("make-shards")) {
+        let rep = build_shards(
+            Path::new(&dir),
+            a.usize("shards"),
+            a.usize("shard-tokens"),
+            a.usize("vocab"),
+            a.u64("seed"),
+            a.usize("threads"),
+        )?;
+        println!(
+            "built {} shards x {} tokens (bpe vocab {}) in {:.2}s — {:.0} tokens/sec -> {dir}",
+            rep.shards,
+            rep.tokens / rep.shards.max(1),
+            rep.bpe_vocab,
+            rep.wall_secs,
+            rep.tokens_per_sec
+        );
+        return Ok(());
+    }
     let corpus = SynthCorpus::new(CorpusConfig { seed: a.u64("seed"), ..Default::default() });
     let sample = corpus.generate_text(a.usize("words"), 0);
     println!("--- corpus sample (seed {}) ---\n{}\n", a.u64("seed"), &sample);

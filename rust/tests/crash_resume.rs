@@ -487,6 +487,82 @@ fn concurrent_reader_never_sees_a_torn_checkpoint() {
     std::fs::remove_dir_all(dir).ok();
 }
 
+/// Data-stream resume on the mmap-shard path: kill a shard-backed
+/// `finetune` mid-epoch via the `train.after_step` failpoint, resume,
+/// and require the final fine-tune checkpoint byte-identical to an
+/// uninterrupted run. Any drift in the replayed token-stream position
+/// (shard order, epoch counter, intra-shard offset) would change every
+/// subsequent weight, so bit-identity here proves the stream replays
+/// to the exact token.
+#[test]
+fn finetune_shard_stream_failpoint_resume_is_bit_identical() {
+    let dir = tmp_dir("ft-shards");
+    let shards = dir.join("corpus");
+    // 3 shards x 600 tokens => 1200-token train split per epoch, so 10
+    // steps x 2 rows x 64 seq cross shard AND epoch boundaries — the
+    // post-crash replay must fast-forward through both exactly
+    let (st, _, err) = run_sltrain(
+        &[
+            "data", "--make-shards", shards.to_str().unwrap(),
+            "--shards", "3", "--shard-tokens", "600", "--vocab", "256", "--seed", "11",
+        ],
+        &[],
+    );
+    assert!(st.success(), "make-shards failed:\n{err}");
+    let pre = dir.join("pre.ckpt");
+    let (st, _, err) = run_train(4, &pre, 0, false, &[]);
+    assert!(st.success(), "pretrain failed:\n{err}");
+
+    let ft_args = |out: &Path, resume: bool| -> Vec<String> {
+        let mut v: Vec<String> = [
+            "finetune", "--backend", "native", "--config", "tiny", "--method", "sltrain",
+            "--batch", "2", "--eval-every", "0", "--log-every", "0", "--steps", "10",
+            "--checkpoint-every", "2",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        for (flag, val) in [
+            ("--checkpoint", pre.to_str().unwrap()),
+            ("--data", shards.to_str().unwrap()),
+            ("--out-checkpoint", out.to_str().unwrap()),
+        ] {
+            v.push(flag.into());
+            v.push(val.into());
+        }
+        if resume {
+            v.push("--resume".into());
+        }
+        v
+    };
+    let run_ft = |out: &Path, resume: bool, envs: &[(&str, &str)]| {
+        let args = ft_args(out, resume);
+        let refs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+        run_sltrain(&refs, envs)
+    };
+
+    // uninterrupted reference
+    let ref_ckpt = dir.join("ref.ckpt");
+    let (st, _, err) = run_ft(&ref_ckpt, false, &[]);
+    assert!(st.success(), "reference finetune failed:\n{err}");
+    let want = std::fs::read(&ref_ckpt).unwrap();
+
+    // crash after the 6th train step (past the 1200-token epoch edge),
+    // then resume to completion
+    let crash = dir.join("crash.ckpt");
+    let (st, _, _) =
+        run_ft(&crash, false, &[("SLTRAIN_FAILPOINT", "train.after_step=abort@6")]);
+    assert!(!st.success(), "armed abort did not kill the finetune");
+    let (st, _, err) = run_ft(&crash, true, &[]);
+    assert!(st.success(), "finetune resume failed:\n{err}");
+    assert_eq!(
+        std::fs::read(&crash).unwrap(),
+        want,
+        "resumed shard-stream finetune is not bit-identical to the uninterrupted run"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
 /// Guard against harness rot: spawning with an armed-but-never-firing
 /// failpoint must not perturb a run (this is the mode CI uses for its
 /// armed full-suite pass).

@@ -1,0 +1,185 @@
+//! Token-shard format tests: byte-exact write/read roundtrip, one typed
+//! [`ShardError`] per corruption class (mirroring the SLTCKPT1
+//! checkpoint corruption suite), purity of the epoch shuffle, stream
+//! determinism across runs / worker counts / the mmap-vs-heap backing,
+//! and the `Pipeline::from_shard_dir` train/valid split.
+
+use std::path::{Path, PathBuf};
+
+use sltrain::data::shard::{build_shards, epoch_order, shard_name, write_shard};
+use sltrain::data::{Pipeline, ShardError, ShardReader, ShardSet, ShardStream};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sltrain-shard-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn write_read_roundtrip_is_byte_exact() {
+    let dir = tmp_dir("roundtrip");
+    let path = dir.join(shard_name(3));
+    let tokens: Vec<u32> = (0..5000u32).map(|i| i.wrapping_mul(2654435761) % 911).collect();
+    write_shard(&path, &tokens, 3, 42, 911).unwrap();
+    let r = ShardReader::open(&path).unwrap();
+    assert_eq!(r.meta.shard, 3);
+    assert_eq!(r.meta.seed, 42);
+    assert_eq!(r.meta.vocab, 911);
+    assert_eq!(r.len(), tokens.len());
+    let got: Vec<u32> = (0..r.len()).map(|i| r.token(i)).collect();
+    assert_eq!(got, tokens, "tokens did not roundtrip byte-exactly");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Every malformed-shard class yields the right typed [`ShardError`]
+/// variant — never a panic — and the error chain names the failing
+/// shard file.
+#[test]
+fn malformed_shards_yield_typed_errors_naming_the_file() {
+    let dir = tmp_dir("typed-errors");
+    let good_path = dir.join(shard_name(0));
+    let tokens: Vec<u32> = (0..256u32).collect();
+    write_shard(&good_path, &tokens, 0, 7, 256).unwrap();
+    let good = std::fs::read(&good_path).unwrap();
+
+    let truncated_header = good[..20].to_vec(); // mid-JSON-header
+    let truncated_tokens = good[..good.len() - 12].to_vec();
+    let flipped_payload = {
+        let mut v = good.clone();
+        let n = v.len();
+        v[n - 3] ^= 0x01;
+        v
+    };
+    let cases: Vec<(&str, Vec<u8>, fn(&ShardError) -> bool)> = vec![
+        ("zero-byte", vec![], |e| matches!(e, ShardError::Empty)),
+        ("foreign", b"PNG\x89this is not a shard".to_vec(), |e| {
+            matches!(e, ShardError::NotAShard)
+        }),
+        ("truncated-header", truncated_header, |e| {
+            matches!(e, ShardError::TruncatedHeader { .. })
+        }),
+        ("truncated-tokens", truncated_tokens, |e| {
+            matches!(e, ShardError::TruncatedTokens { .. })
+        }),
+        ("flipped-payload-byte", flipped_payload, |e| {
+            matches!(e, ShardError::CrcMismatch { .. })
+        }),
+    ];
+    for (tag, bytes, is_right_class) in cases {
+        let p = dir.join(format!("{tag}.slt"));
+        std::fs::write(&p, &bytes).unwrap();
+        let err = ShardReader::open(&p)
+            .err()
+            .unwrap_or_else(|| panic!("{tag}: malformed shard loaded successfully"));
+        let typed = err
+            .downcast_ref::<ShardError>()
+            .unwrap_or_else(|| panic!("{tag}: error is not a typed ShardError: {err:#}"));
+        assert!(is_right_class(typed), "{tag}: wrong error class: {typed:?}");
+        let chain = format!("{err:#}");
+        assert!(chain.contains(&format!("{tag}.slt")), "{tag}: failing file not named: {chain}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The epoch shuffle is a pure function of `(seed, epoch)`: identical
+/// on recomputation, a permutation, seed-sensitive, and epoch-varying.
+#[test]
+fn epoch_order_is_a_pure_seeded_permutation() {
+    let n = 16;
+    for epoch in 0..4u64 {
+        let a = epoch_order(7, epoch, n);
+        let b = epoch_order(7, epoch, n);
+        assert_eq!(a, b, "epoch {epoch} order not pure");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "epoch {epoch} not a permutation");
+    }
+    let orders: Vec<Vec<usize>> = (0..4).map(|e| epoch_order(7, e, n)).collect();
+    assert!(
+        orders.windows(2).any(|w| w[0] != w[1]),
+        "four consecutive epochs produced the identical order"
+    );
+    assert_ne!(epoch_order(7, 0, n), epoch_order(8, 0, n), "seed does not change the order");
+}
+
+fn drain(dir: &Path, seed: u64, n: usize) -> Vec<i32> {
+    let set = ShardSet::open(dir).unwrap();
+    let mut stream = ShardStream::new(set.readers, seed, 4096).unwrap();
+    (0..n).map(|_| stream.next_token()).collect()
+}
+
+/// One `build_shards` corpus, read many ways: repeated opens, a
+/// different builder worker count, and the heap (non-mmap) backing all
+/// produce the identical token stream.
+#[test]
+fn stream_is_deterministic_across_runs_workers_and_backings() {
+    let dir1 = tmp_dir("stream-det-1");
+    let dir4 = tmp_dir("stream-det-4");
+    let r1 = build_shards(&dir1, 3, 4000, 512, 42, 1).unwrap();
+    let r4 = build_shards(&dir4, 3, 4000, 512, 42, 4).unwrap();
+    assert_eq!(r1.tokens, r4.tokens);
+    for i in 0..3 {
+        assert_eq!(
+            std::fs::read(dir1.join(shard_name(i))).unwrap(),
+            std::fs::read(dir4.join(shard_name(i))).unwrap(),
+            "shard {i} differs between 1-thread and 4-thread builds"
+        );
+    }
+
+    // enough to cross shard AND epoch boundaries (3 x 4000 tokens)
+    let n = 3 * 4000 + 500;
+    let a = drain(&dir1, 7, n);
+    let b = drain(&dir1, 7, n);
+    assert_eq!(a, b, "same-seed streams differ across opens");
+    // pick a seed whose epoch-0 permutation provably differs (with only
+    // 3 shards two seeds can coincide by chance)
+    let seed2 = (8u64..).find(|&s| epoch_order(s, 0, 3) != epoch_order(7, 0, 3)).unwrap();
+    let c = drain(&dir1, seed2, n);
+    assert_ne!(a, c, "shuffle seed does not affect the stream");
+
+    // heap backing must be bit-identical to the mmap backing
+    std::env::set_var("SLTRAIN_MMAP", "off");
+    let heap = drain(&dir1, 7, n);
+    std::env::remove_var("SLTRAIN_MMAP");
+    assert_eq!(a, heap, "heap backing diverges from mmap backing");
+
+    std::fs::remove_dir_all(dir1).ok();
+    std::fs::remove_dir_all(dir4).ok();
+}
+
+#[test]
+fn from_shard_dir_splits_train_valid_and_is_deterministic() {
+    let dir = tmp_dir("pipeline");
+    build_shards(&dir, 3, 3000, 512, 42, 1).unwrap();
+    let mut p1 = Pipeline::from_shard_dir(&dir, 512, 7).unwrap();
+    let mut p2 = Pipeline::from_shard_dir(&dir, 512, 7).unwrap();
+    let a1 = p1.train.next_batch(2, 64);
+    assert_eq!(a1.len(), 2 * 64);
+    assert_eq!(a1, p2.train.next_batch(2, 64), "same-seed shard pipelines differ");
+    assert!(a1.iter().all(|&t| (0..512).contains(&t)), "token id out of vocab range");
+    let v = p1.valid.next_batch(2, 64);
+    assert_ne!(v, a1, "train/valid splits overlap");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn single_shard_dir_is_rejected_needing_a_valid_split() {
+    let dir = tmp_dir("one-shard");
+    build_shards(&dir, 1, 1000, 512, 42, 1).unwrap();
+    let err = Pipeline::from_shard_dir(&dir, 512, 7)
+        .err()
+        .expect("a 1-shard dir cannot provide a held-out split");
+    assert!(format!("{err:#}").contains("valid"), "unhelpful error: {err:#}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn empty_dir_error_mentions_make_shards() {
+    let dir = tmp_dir("empty");
+    let err = ShardSet::open(&dir).err().expect("empty dir must not open");
+    assert!(
+        format!("{err:#}").contains("--make-shards"),
+        "error should point at the builder command: {err:#}"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}

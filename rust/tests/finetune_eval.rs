@@ -1,0 +1,232 @@
+//! Fine-tune + eval harness tests through the REAL binary: a pinned-seed
+//! golden trajectory (pretrain → finetune → eval) that must be bitwise
+//! identical at 1/2/4 threads and match an in-process library replay;
+//! every method fine-tuning both live and post-fold with the downstream
+//! loss decreasing; and the shard-backed data path end to end.
+
+mod support;
+
+use std::path::{Path, PathBuf};
+
+use support::harness::run_sltrain;
+
+use sltrain::backend::{self, BackendSpec};
+use sltrain::config::{preset, METHODS};
+use sltrain::coordinator::{train, Checkpoint, TrainConfig};
+use sltrain::data::Pipeline;
+use sltrain::linalg::SupportPattern;
+use sltrain::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sltrain-ft-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let (st, out, err) = run_sltrain(args, &[]);
+    assert!(st.success(), "`sltrain {}` failed:\n{out}\n{err}", args.join(" "));
+    out
+}
+
+fn pretrain(ckpt: &Path, method: &str, steps: usize) {
+    run_ok(&[
+        "train", "--backend", "native", "--config", "tiny", "--method", method,
+        "--batch", "2", "--eval-every", "0", "--log-every", "0",
+        "--steps", &steps.to_string(),
+        "--checkpoint", ckpt.to_str().unwrap(),
+    ]);
+}
+
+/// Parse a `finetune --json` / `eval --json` report from disk.
+fn load_json(path: &Path) -> Json {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    Json::parse(&text).unwrap_or_else(|e| panic!("bad json in {}: {e}", path.display()))
+}
+
+fn f64_of(j: &Json, key: &str) -> f64 {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("no numeric `{key}` in {j:?}"))
+}
+
+/// Golden trajectory: pinned-seed 50-step pretrain → 20-step finetune →
+/// eval, through the real binary. The full-precision final loss must be
+/// BIT-identical at 1/2/4 threads, bit-identical to an in-process
+/// library replay of the same run, below the zero-shot baseline, and
+/// inside a sane absolute band.
+#[test]
+fn golden_trajectory_is_bitwise_across_threads_and_matches_library() {
+    let dir = tmp_dir("golden");
+    let pre = dir.join("pre.ckpt");
+    pretrain(&pre, "sltrain", 50);
+
+    let ft_ckpt = dir.join("ft.ckpt");
+    let mut finals: Vec<(f64, f64)> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let json = dir.join(format!("ft{threads}.json"));
+        run_ok(&[
+            "finetune", "--backend", "native", "--config", "tiny", "--method", "sltrain",
+            "--batch", "2", "--eval-every", "0", "--log-every", "0",
+            "--checkpoint", pre.to_str().unwrap(),
+            "--steps", "20",
+            "--threads", &threads.to_string(),
+            "--out-checkpoint", ft_ckpt.to_str().unwrap(),
+            "--json", json.to_str().unwrap(),
+        ]);
+        let r = load_json(&json);
+        let final_loss = f64_of(&r, "final_eval_loss");
+        let zero_loss = f64_of(&r, "zero_shot_loss");
+        let final_ppl = f64_of(&r, "final_ppl");
+        let zero_ppl = f64_of(&r, "zero_shot_ppl");
+        assert!(
+            final_ppl < zero_ppl,
+            "{threads}t: finetune did not beat zero-shot ({final_ppl} vs {zero_ppl})"
+        );
+        // absolute band: a 70-step tiny model sits far below the
+        // untrained ~vocab(256) ppl but can't reach ~1
+        assert!(
+            final_ppl.is_finite() && final_ppl > 1.5 && final_ppl < 200.0,
+            "{threads}t: final ppl {final_ppl} outside the golden band (1.5, 200)"
+        );
+        finals.push((final_loss, zero_loss));
+    }
+    for (i, threads) in [2usize, 4].iter().enumerate() {
+        assert_eq!(
+            finals[0],
+            finals[i + 1],
+            "losses at {threads} threads differ bitwise from 1 thread"
+        );
+    }
+
+    // in-process library replay of the same fine-tune (same ops, same
+    // seeds) — the CLI value must be the library value, bit for bit
+    let ck = Checkpoint::load(&pre).unwrap();
+    let base: Vec<_> = ck
+        .to_state_tensors()
+        .into_iter()
+        .filter(|t| !t.name.starts_with("optim."))
+        .collect();
+    let spec = BackendSpec::Native {
+        preset: preset("tiny").unwrap(),
+        method: "sltrain".into(),
+        batch: 2,
+        lr: 3e-3,
+        total_steps: 2000,
+        threads: 1,
+        optim_bits: 0,
+        galore_every: 0,
+        support: SupportPattern::UniformRandom,
+        workers: 0,
+    };
+    let mut be = backend::open(spec).unwrap();
+    let mut pipe = Pipeline::build(be.preset().vocab, 1234);
+    let cfg = TrainConfig {
+        steps: 20,
+        eval_every: 0,
+        eval_batches: 4,
+        log_every: 0,
+        seed: 42,
+        init_tensors: Some(base),
+        ..Default::default()
+    };
+    let r = train(be.as_mut(), &mut pipe, &cfg).unwrap();
+    assert_eq!(
+        r.final_eval_loss, finals[0].0,
+        "CLI finetune loss differs from the in-process library replay"
+    );
+
+    // eval the fine-tuned checkpoint on the same downstream corpus: the
+    // held-out loss must reproduce the trainer's final number
+    let eval_json = dir.join("eval.json");
+    run_ok(&[
+        "eval", "--backend", "native", "--config", "tiny", "--method", "sltrain",
+        "--batch", "2", "--data-seed", "1234",
+        "--checkpoint", ft_ckpt.to_str().unwrap(),
+        "--json", eval_json.to_str().unwrap(),
+    ]);
+    let rep = load_json(&eval_json);
+    let rows = rep.get("results").and_then(|r| r.as_arr()).expect("results array");
+    assert_eq!(rows.len(), 1);
+    let eval_loss = f64_of(&rows[0], "eval_loss");
+    assert!(
+        (eval_loss - finals[0].0).abs() < 1e-9,
+        "eval harness loss {eval_loss} != trainer final loss {}",
+        finals[0].0
+    );
+    assert!(f64_of(&rows[0], "next_token_acc") > 0.0, "dead next-token accuracy");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Every method resumes from its pretrain checkpoint and fine-tunes on
+/// the downstream corpus both LIVE (same parameterization) and FOLDED
+/// (dense after `fold_weights`), with the held-out loss ending below the
+/// zero-shot baseline in both modes.
+#[test]
+fn all_methods_finetune_live_and_folded_decrease_downstream_loss() {
+    let dir = tmp_dir("methods");
+    for method in METHODS {
+        let pre = dir.join(format!("pre-{method}.ckpt"));
+        pretrain(&pre, method, 10);
+        for fold in [false, true] {
+            let tag = if fold { "fold" } else { "live" };
+            let json = dir.join(format!("ft-{method}-{tag}.json"));
+            let mut args = vec![
+                "finetune", "--backend", "native", "--config", "tiny", "--method", method,
+                "--batch", "2", "--eval-every", "0", "--log-every", "0",
+                "--checkpoint", pre.to_str().unwrap(),
+                "--steps", "10",
+                "--json", json.to_str().unwrap(),
+            ];
+            if fold {
+                args.push("--fold");
+            }
+            run_ok(&args);
+            let r = load_json(&json);
+            assert_eq!(r.get("fold").and_then(|f| f.as_bool()), Some(fold));
+            let final_loss = f64_of(&r, "final_eval_loss");
+            let zero_loss = f64_of(&r, "zero_shot_loss");
+            assert!(
+                final_loss < zero_loss,
+                "{method}/{tag}: downstream loss did not decrease \
+                 ({final_loss} vs zero-shot {zero_loss})"
+            );
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The shard-backed data path end to end: build shards via the CLI,
+/// fine-tune on them, and beat the zero-shot baseline on the shard
+/// corpus' held-out split.
+#[test]
+fn finetune_on_shard_corpus_decreases_loss() {
+    let dir = tmp_dir("shards");
+    let shards = dir.join("corpus");
+    run_ok(&[
+        "data",
+        "--make-shards", shards.to_str().unwrap(),
+        "--shards", "3",
+        "--shard-tokens", "3000",
+        "--vocab", "256",
+        "--seed", "11",
+    ]);
+    let pre = dir.join("pre.ckpt");
+    pretrain(&pre, "sltrain", 10);
+    let json = dir.join("ft.json");
+    run_ok(&[
+        "finetune", "--backend", "native", "--config", "tiny", "--method", "sltrain",
+        "--batch", "2", "--eval-every", "0", "--log-every", "0",
+        "--checkpoint", pre.to_str().unwrap(),
+        "--steps", "10",
+        "--data", shards.to_str().unwrap(),
+        "--json", json.to_str().unwrap(),
+    ]);
+    let r = load_json(&json);
+    assert!(
+        f64_of(&r, "final_eval_loss") < f64_of(&r, "zero_shot_loss"),
+        "shard-corpus finetune did not beat zero-shot: {r:?}"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -94,6 +94,91 @@ fn prop_bpe_roundtrip_random_corpora() {
 }
 
 #[test]
+fn prop_bpe_byte_roundtrip_arbitrary_byte_strings() {
+    // the byte-exact path (unlike `encode`, which normalizes
+    // whitespace) must invert on ARBITRARY bytes: invalid UTF-8,
+    // control characters, whitespace runs, NULs — everything
+    forall(20, |rng| {
+        let corpus = SynthCorpus::new(CorpusConfig {
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let bpe = Bpe::train(&corpus.generate_text(800, 0), 256 + rng.below(300) as usize);
+        let len = rng.below(2000) as usize;
+        let data: Vec<u8> = (0..len)
+            .map(|_| {
+                if rng.f64() < 0.3 {
+                    // bias toward whitespace + ASCII to stress the
+                    // word-segmentation boundaries
+                    *[b' ', b'\n', b'\t', b'\r', b'a', b'e'][rng.below(6) as usize]
+                } else {
+                    rng.below(256) as u8
+                }
+            })
+            .collect();
+        let ids = bpe.encode_bytes(&data);
+        let back = bpe.decode_bytes(&ids);
+        if back != data {
+            return Err(format!(
+                "byte roundtrip mismatch at len {len}: {} bytes back",
+                back.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bpe_train_deterministic_across_runs() {
+    // two trainings on the same text must pick the identical merge
+    // sequence: same vocab table, same encodings of unseen text
+    forall(5, |rng| {
+        let corpus = SynthCorpus::new(CorpusConfig {
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let text = corpus.generate_text(600, 0);
+        let vocab = 256 + rng.below(300) as usize;
+        let b1 = Bpe::train(&text, vocab);
+        let b2 = Bpe::train(&text, vocab);
+        if b1.vocab != b2.vocab {
+            return Err("vocab tables differ between identical trainings".into());
+        }
+        let other = corpus.generate_text(300, 1);
+        if b1.encode_bytes(other.as_bytes()) != b2.encode_bytes(other.as_bytes()) {
+            return Err("encodings differ between identical trainings".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bpe_parallel_tokenize_bit_identical_across_thread_counts() {
+    // encode_bytes_par chunks at 16 KiB (split only after '\n'), so use
+    // a corpus big enough for several chunks; the pool output must be
+    // bit-identical to serial at every thread count
+    forall(4, |rng| {
+        let corpus = SynthCorpus::new(CorpusConfig {
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let bpe = Bpe::train(&corpus.generate_text(800, 0), 512);
+        let text = corpus.generate_text(9000, 1); // ~50 KiB, several chunks
+        let data = text.as_bytes();
+        assert!(data.len() > 32 * 1024, "sample too small to exercise chunking");
+        let serial = bpe.encode_bytes(data);
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let par = bpe.encode_bytes_par(data, &pool);
+            if par != serial {
+                return Err(format!("pool({threads}) output diverges from serial"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_loader_shards_disjoint_and_deterministic() {
     forall(6, |rng| {
         let seed = rng.next_u64() % 1000;

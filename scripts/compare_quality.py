@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_quality.json against the committed baseline.
+
+Gate: any matched (config, method) row whose held-out perplexity RISES
+more than --max-rise-pct (default 2%) vs the baseline fails the run
+(exit 1) — quality regressions gate just like throughput regressions
+(compare_bench.py), but in the opposite direction: lower ppl is better,
+so only increases fail. next_token_acc and induction_gap are reported
+informationally; they are noisier at smoke-test step counts and are
+reviewed by hand.
+
+Rows are matched on the identity keys present in both records:
+(config, method). Rows only present on one side are reported, not
+failed, so adding a method or preset never breaks CI.
+
+A baseline with a top-level "bootstrap": true marker (or non-positive
+ppl values) is a schema placeholder committed before any runner
+measured real numbers: the comparison is printed but the gate is
+skipped. Refresh the snapshot per BENCH_baseline/README.md to arm it.
+
+Usage:
+  python3 scripts/compare_quality.py BENCH_baseline/BENCH_quality.json BENCH_quality.json
+  python3 scripts/compare_quality.py --max-rise-pct 5 <baseline.json> <new.json>
+
+stdlib only; exit 0 = pass (or unarmed baseline), exit 1 = regression.
+"""
+
+import argparse
+import json
+import sys
+
+IDENTITY_KEYS = ("config", "method")
+
+
+def row_key(row):
+    return tuple((k, row[k]) for k in IDENTITY_KEYS if k in row)
+
+
+def fmt_key(key):
+    return "/".join(f"{k}={v}" for k, v in key)
+
+
+def load_rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("results", [])
+    if not isinstance(rows, list):
+        sys.exit(f"error: {path}: 'results' is not a list")
+    return doc, {row_key(r): r for r in rows if isinstance(r, dict)}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed snapshot JSON (BENCH_baseline/...)")
+    ap.add_argument("new", help="freshly emitted quality JSON")
+    ap.add_argument(
+        "--max-rise-pct",
+        type=float,
+        default=2.0,
+        help="max tolerated held-out perplexity rise vs baseline (default 2)",
+    )
+    args = ap.parse_args()
+
+    base_doc, base_rows = load_rows(args.baseline)
+    _, new_rows = load_rows(args.new)
+    bootstrap = bool(base_doc.get("bootstrap"))
+
+    failures = []
+    for key, new in sorted(new_rows.items()):
+        base = base_rows.get(key)
+        label = fmt_key(key) or "<unkeyed>"
+        if base is None:
+            print(f"  [new]  {label}: no baseline row")
+            continue
+        if "ppl" in new and "ppl" in base:
+            b, n = float(base["ppl"]), float(new["ppl"])
+            if b <= 0.0:
+                print(f"  [skip] {label}: baseline ppl not armed ({b})")
+            else:
+                delta = 100.0 * (n - b) / b
+                status = "ok"
+                if delta > args.max_rise_pct:
+                    status = "FAIL"
+                    failures.append((label, b, n, delta))
+                print(f"  [{status:>4}] {label}: ppl {b:.2f} -> {n:.2f} ({delta:+.2f}%)")
+        for extra in ("next_token_acc", "induction_gap"):
+            if extra in new and extra in base and float(base[extra]) != 0.0:
+                b, n = float(base[extra]), float(new[extra])
+                print(f"  [info] {label}: {extra} {b:.4f} -> {n:.4f}")
+    for key in sorted(set(base_rows) - set(new_rows)):
+        print(f"  [gone] {fmt_key(key)}: baseline row not re-measured")
+
+    if failures and bootstrap:
+        print("\nbootstrap baseline: regressions reported but not gating")
+        return 0
+    if failures:
+        print(f"\n{len(failures)} row(s) regressed beyond +{args.max_rise_pct:.0f}% ppl:")
+        for label, b, n, delta in failures:
+            print(f"  {label}: ppl {b:.2f} -> {n:.2f} ({delta:+.2f}%)")
+        return 1
+    print(
+        "\nquality comparison passed"
+        + (" (bootstrap baseline, gate unarmed)" if bootstrap else "")
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
